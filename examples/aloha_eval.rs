@@ -1,0 +1,20 @@
+//! Mobile-ALOHA real-world suite evaluation (paper Figure 3).
+//!
+//! ```bash
+//! cargo run --release --example aloha_eval -- [--episodes 50]
+//! ```
+
+use hbvla::eval::figures::fig3_aloha;
+use hbvla::eval::tables::EvalBudget;
+use hbvla::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let budget = EvalBudget {
+        episodes_per_task: args.usize_or("episodes", 10),
+        n_demos: args.usize_or("demos", 128),
+        seed: args.u64_or("seed", 2026),
+        threads: args.usize_or("threads", hbvla::util::threadpool::default_threads()),
+    };
+    println!("{}", fig3_aloha(&budget).render());
+}

@@ -1,0 +1,21 @@
+//! LIBERO benchmark evaluation (paper Table 2), reduced budget by default.
+//!
+//! ```bash
+//! cargo run --release --example libero_eval -- [--episodes 50] [--demos 256]
+//! ```
+
+use hbvla::eval::tables::{table2_libero, EvalBudget};
+use hbvla::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let budget = EvalBudget {
+        episodes_per_task: args.usize_or("episodes", 10),
+        n_demos: args.usize_or("demos", 128),
+        seed: args.u64_or("seed", 2026),
+        threads: args.usize_or("threads", hbvla::util::threadpool::default_threads()),
+    };
+    for t in table2_libero(&budget) {
+        println!("{}", t.render());
+    }
+}

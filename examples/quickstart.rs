@@ -1,0 +1,52 @@
+//! Quickstart: quantize a MiniVLA checkpoint with HBVLA and inspect the
+//! result — the five-minute tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hbvla::calib::capture::{capture_calibration, CaptureConfig};
+use hbvla::calib::demos::collect_demos;
+use hbvla::coordinator::scheduler::quantize_model;
+use hbvla::methods::{by_name, paper_methods};
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::quant::packed::PackedBits;
+use hbvla::sim::tasks::libero_suite;
+use hbvla::train::bc::fit_policy;
+
+fn main() {
+    // 1. Build a MiniVLA "checkpoint": structured weights + BC-fit head.
+    let mut model = MiniVla::new(VlaConfig::base(HeadKind::Chunk));
+    let tasks = libero_suite("object");
+    let demos = collect_demos(&model, &tasks, 32, 7);
+    let fit = fit_policy(&mut model, &demos, 1.0);
+    println!("checkpoint: {} params, BC action MSE {:.4}", model.store.total_weights(), fit.train_metric);
+
+    // 2. Calibrate: standard + policy-aware rectified Hessians per layer.
+    let calib = capture_calibration(&model, &demos, &CaptureConfig::default());
+    println!("calibrated {} layers", calib.len());
+
+    // 3. Quantize the vision + language backbones with every method.
+    let comps = hbvla::eval::paper_components();
+    for method in paper_methods() {
+        let (_, rep) = quantize_model(&model, &calib, method.as_ref(), &comps, 4);
+        println!(
+            "{:<8} mean rel err {:.4}  bits/weight {:.3}  ({:.2}s)",
+            rep.method,
+            rep.mean_rel_err,
+            rep.bits_per_weight(),
+            rep.wall_secs
+        );
+    }
+
+    // 4. Deploy-path storage: pack a layer to true 1-bit bitplanes.
+    let (qm, _) = quantize_model(&model, &calib, by_name("hbvla").unwrap().as_ref(), &comps, 4);
+    let w = qm.store.get("lm.0.wv");
+    let packed = PackedBits::pack(w, 128);
+    println!(
+        "lm.0.wv packed: {} B vs {} B dense (×{:.1} smaller)",
+        packed.storage_bytes(),
+        packed.dense_bytes(),
+        packed.compression_ratio()
+    );
+}

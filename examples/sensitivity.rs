@@ -1,0 +1,24 @@
+//! Component-wise quantization sensitivity (paper Figure 4) plus the
+//! dual-dominance statistics (Figure 1).
+//!
+//! ```bash
+//! cargo run --release --example sensitivity -- [--episodes 50]
+//! ```
+
+use hbvla::eval::figures::{fig1_dual_dominance, fig4_sensitivity};
+use hbvla::eval::tables::EvalBudget;
+use hbvla::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let budget = EvalBudget {
+        episodes_per_task: args.usize_or("episodes", 10),
+        n_demos: args.usize_or("demos", 128),
+        seed: args.u64_or("seed", 2026),
+        threads: args.usize_or("threads", hbvla::util::threadpool::default_threads()),
+    };
+    let s = fig1_dual_dominance(&budget);
+    println!("## Figure 1 — dual dominance");
+    println!("max |activation| {:.1}, kurtosis {:.1}, visual:instr {}:1\n", s.max_abs, s.kurtosis, s.visual_token_ratio);
+    println!("{}", fig4_sensitivity(&budget).render());
+}

@@ -1,0 +1,62 @@
+//! Serving-router demo: batched policy inference with latency stats, and
+//! (when `artifacts/` exist) the PJRT path executing the AOT-lowered
+//! JAX/Pallas policy graph — proving Python never runs at request time.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+
+use hbvla::calib::demos::collect_demos;
+use hbvla::coordinator::server::{PolicyServer, ServeConfig};
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::runtime::{artifacts_dir, PolicyRuntime};
+use hbvla::sim::observe::{observe, ObsParams};
+use hbvla::sim::tasks::libero_suite;
+use hbvla::train::bc::fit_policy;
+use hbvla::util::rng::Rng;
+
+fn main() {
+    let mut model = MiniVla::new(VlaConfig::base(HeadKind::Chunk));
+    let tasks = libero_suite("object");
+    let demos = collect_demos(&model, &tasks, 32, 7);
+    fit_policy(&mut model, &demos, 1.0);
+    let model = Arc::new(model);
+
+    // --- Rust-native serving ---
+    let server = PolicyServer::start(Arc::clone(&model), ServeConfig::default());
+    let mut rng = Rng::new(9);
+    let scene = tasks[0].instantiate(&mut rng);
+    let obs = observe(&scene, tasks[0].stages[0].instr(), 100, &model, &ObsParams::clean(), &mut rng);
+    let n = 500;
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let _ = server.submit(obs.clone());
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!("native serving: {n} requests in {el:.3}s ({:.0} req/s)", n as f64 / el);
+    println!("  latency {}", server.latency_stats().summary());
+    server.shutdown();
+
+    // --- PJRT path (AOT JAX/Pallas graph) ---
+    match PolicyRuntime::load(&artifacts_dir()) {
+        Ok(rt) => {
+            let t1 = std::time::Instant::now();
+            let reps = 50;
+            let mut last = Vec::new();
+            for _ in 0..reps {
+                last = rt.step(&model, &obs.visual_raw, obs.instr_id, &obs.proprio).expect("pjrt step");
+            }
+            let per = t1.elapsed().as_secs_f64() / reps as f64;
+            // Parity check against the native forward.
+            let native = model.act(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut rng);
+            let mut max_diff = 0.0f32;
+            for (a, b) in last.iter().flatten().zip(native.iter().flatten()) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+            println!("pjrt serving:  {:.2} ms/step, max action diff vs native = {max_diff:.5}", per * 1e3);
+        }
+        Err(e) => println!("pjrt path skipped ({e}); run `make artifacts` first"),
+    }
+}

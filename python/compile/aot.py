@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+  policy_step.hlo.txt / policy_step.inputs.txt  — the L2 policy graph
+  binary_linear.hlo.txt                          — L1 binary-GEMV kernel
+  haar_fwd.hlo.txt                               — L1 Haar kernel
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.binary_matmul import binary_matmul
+from compile.kernels.haar import haar_fwd
+from compile.model import Config, policy_step, weight_names
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_shapes(cfg: Config):
+    """Shapes for each entry of weight_names(cfg) (rows, cols)."""
+    hid_v = cfg.mlp_mult * cfg.d_vision
+    hid_m = cfg.mlp_mult * cfg.d_model
+    shapes = {"vis.embed": (cfg.d_vision, cfg.d_vis_in)}
+    for b in range(cfg.vision_blocks):
+        shapes[f"vis.{b}.wq"] = (cfg.d_vision, cfg.d_vision)
+        shapes[f"vis.{b}.wk"] = (cfg.d_vision, cfg.d_vision)
+        shapes[f"vis.{b}.wv"] = (cfg.d_vision, cfg.d_vision)
+        shapes[f"vis.{b}.wo"] = (cfg.d_vision, cfg.d_vision)
+        shapes[f"vis.{b}.w1"] = (hid_v, cfg.d_vision)
+        shapes[f"vis.{b}.w2"] = (cfg.d_vision, hid_v)
+    shapes["proj"] = (cfg.d_model, cfg.d_vision)
+    shapes["lm.embed_instr"] = (cfg.d_model, cfg.vocab)
+    shapes["lm.embed_proprio"] = (cfg.d_model, cfg.d_proprio)
+    for b in range(cfg.lm_blocks):
+        shapes[f"lm.{b}.wq"] = (cfg.d_model, cfg.d_model)
+        shapes[f"lm.{b}.wk"] = (cfg.d_model, cfg.d_model)
+        shapes[f"lm.{b}.wv"] = (cfg.d_model, cfg.d_model)
+        shapes[f"lm.{b}.wo"] = (cfg.d_model, cfg.d_model)
+        shapes[f"lm.{b}.w1"] = (hid_m, cfg.d_model)
+        shapes[f"lm.{b}.w2"] = (cfg.d_model, hid_m)
+    shapes["head.expand"] = (cfg.head_hidden, cfg.feat_dim)
+    shapes["head.norm"] = (2, cfg.head_in_dim)
+    shapes["head.main"] = (cfg.chunk * cfg.act_dim, cfg.head_in_dim)
+    return shapes
+
+
+def lower_policy(cfg: Config):
+    names = weight_names(cfg)
+    shapes = weight_shapes(cfg)
+    spec = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    args = [
+        spec((cfg.d_vis_in, cfg.n_visual)),
+        spec((cfg.vocab,)),
+        spec((cfg.d_proprio,)),
+    ] + [spec(shapes[n]) for n in names]
+    fn = functools.partial(policy_step, cfg)
+    return jax.jit(fn).lower(*args), names
+
+
+def lower_binary_linear():
+    rows, cols, gs = 128, 256, 128
+    groups = cols // gs
+
+    def fn(signs, alpha, mu, x):
+        return (binary_matmul(signs, alpha, mu, x, group_size=gs, block_rows=128),)
+
+    spec = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    return jax.jit(fn).lower(spec((rows, cols)), spec((rows, groups)), spec((rows, groups)), spec((cols,)))
+
+
+def lower_haar():
+    def fn(w):
+        return (haar_fwd(w, block_rows=64),)
+
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((64, 128), jnp.float32))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = Config()
+
+    lowered, names = lower_policy(cfg)
+    with open(os.path.join(args.out_dir, "policy_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(os.path.join(args.out_dir, "policy_step.inputs.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+    print(f"wrote policy_step ({len(names)} weight inputs)")
+
+    with open(os.path.join(args.out_dir, "binary_linear.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lower_binary_linear()))
+    print("wrote binary_linear")
+
+    with open(os.path.join(args.out_dir, "haar_fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lower_haar()))
+    print("wrote haar_fwd")
+
+
+if __name__ == "__main__":
+    main()

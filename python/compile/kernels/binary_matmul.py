@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: group-dequantized binary matmul (the deploy-path GEMV).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): signs are fed as ±1-valued
+f32/bf16 blocks so the MXU multiplies them natively; the per-group (α, μ)
+dequantization is a VPU epilogue fused after the systolic pass:
+
+    y[r] = Σ_g  μ[r,g]·Σ_{j∈g} x_j  +  α[r,g]·Σ_{j∈g} signs[r,j]·x_j
+
+BlockSpec tiles rows; the full K dimension of one row block plus its scale
+vectors fit comfortably in VMEM at the paper's layer sizes (§Perf
+estimates the footprint). On this image the kernel runs under
+`interpret=True` — the CPU PJRT client cannot execute Mosaic custom calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(signs_ref, alpha_ref, mu_ref, x_ref, o_ref, *, group_size):
+    signs = signs_ref[...]  # (block_rows, cols)
+    x = x_ref[...]  # (cols,)
+    alpha = alpha_ref[...]  # (block_rows, groups)
+    mu = mu_ref[...]
+    rows, cols = signs.shape
+    groups = alpha.shape[1]
+    # Signed partial sums per group: reshape K into (groups, group_size).
+    sx = (signs * x[None, :]).reshape(rows, groups, group_size).sum(axis=2)
+    gs = x.reshape(groups, group_size).sum(axis=1)  # per-group Σx (shared)
+    o_ref[...] = (alpha * sx).sum(axis=1) + (mu * gs[None, :]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_rows"))
+def binary_matmul(signs, alpha, mu, x, group_size=128, block_rows=128):
+    """y = (μ + α·signs) x with per-group scales. cols must be a multiple
+    of group_size and rows a multiple of block_rows (pad upstream)."""
+    rows, cols = signs.shape
+    groups = cols // group_size
+    assert cols % group_size == 0, "pad cols to the group size"
+    assert rows % block_rows == 0, "pad rows to the row block"
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, groups), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, groups), lambda r: (r, 0)),
+            pl.BlockSpec((cols,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(signs, alpha, mu, x)

@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: one-level Haar analysis (row-wise, stride-2 pairs).
+
+Bandwidth-bound; expressed as a reshape-to-pairs + axis reduction so the
+TPU lowering is pure VPU adds (DESIGN.md §Hardware-Adaptation). Runs under
+interpret=True on this image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref):
+    w = w_ref[...]  # (block_rows, cols)
+    rows, cols = w.shape
+    pairs = w.reshape(rows, cols // 2, 2)
+    lo = 0.5 * (pairs[:, :, 0] + pairs[:, :, 1])
+    hi = 0.5 * (pairs[:, :, 0] - pairs[:, :, 1])
+    o_ref[...] = jnp.concatenate([lo, hi], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def haar_fwd(w, block_rows=64):
+    """Row-wise one-level Haar transform; cols must be even, rows a
+    multiple of block_rows (pad upstream)."""
+    rows, cols = w.shape
+    assert cols % 2 == 0
+    assert rows % block_rows == 0
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(w)

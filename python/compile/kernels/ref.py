@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact jnp counterpart here;
+pytest sweeps shapes/dtypes with hypothesis and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def binary_matmul_ref(signs, alpha, mu, x, group_size):
+    """Group-dequantized binary GEMV: y = Ŵ x.
+
+    Ŵ[r, j] = mu[r, g] + alpha[r, g] * signs[r, j]   with g = j // group_size.
+
+    signs: (rows, cols) ±1 values; alpha, mu: (rows, n_groups); x: (cols,).
+    """
+    rows, cols = signs.shape
+    groups = -(-cols // group_size)
+    # Broadcast group scales up to per-column resolution.
+    gidx = jnp.arange(cols) // group_size
+    a = alpha[:, gidx]  # (rows, cols)
+    m = mu[:, gidx]
+    w_hat = m + a * signs
+    return w_hat.astype(jnp.float32) @ x.astype(jnp.float32)
+
+
+def haar_fwd_ref(w):
+    """One-level Haar analysis along the last axis (even length):
+    output [lo | hi] with lo = (even+odd)/2, hi = (even−odd)/2 —
+    the paper's h_lo=[.5,.5], h_hi=[.5,−.5] stride-2 convolutions."""
+    even = w[..., 0::2]
+    odd = w[..., 1::2]
+    lo = 0.5 * (even + odd)
+    hi = 0.5 * (even - odd)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def haar_inv_ref(c):
+    """Inverse of haar_fwd_ref: pairwise reconstruction."""
+    j = c.shape[-1] // 2
+    lo = c[..., :j]
+    hi = c[..., j:]
+    even = lo + hi
+    odd = lo - hi
+    out = jnp.stack([even, odd], axis=-1)
+    return out.reshape(*c.shape[:-1], 2 * j)

@@ -1,0 +1,121 @@
+"""L2: the MiniVLA policy-step graph in JAX, mirroring `rust/src/model`
+operation-for-operation (RMS-norm floor, tanh-GELU, attention layout with
+tokens as columns, head expansion + scale normalization, chunk decode).
+
+Weights arrive as *inputs* (a flat ordered list), so the Rust runtime can
+feed FP or quantized tensors per call without recompiling. The parameter
+order is defined by `weight_names()` and written to
+`artifacts/policy_step.inputs.txt` by aot.py; `rust/src/runtime/pjrt.rs`
+reads the manifest and feeds its ParamStore in the same order.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Config:
+    """Mirror of `VlaConfig::base(HeadKind::Chunk)` in rust/src/model."""
+
+    d_vision: int = 48
+    vision_blocks: int = 2
+    d_model: int = 64
+    lm_blocks: int = 3
+    heads: int = 4
+    mlp_mult: int = 2
+    d_vis_in: int = 24
+    n_visual: int = 10
+    vocab: int = 64
+    d_proprio: int = 12
+    act_dim: int = 3
+    chunk: int = 4
+    head_hidden: int = 96
+
+    @property
+    def feat_dim(self):
+        return 2 * (self.d_model + self.d_proprio)
+
+    @property
+    def head_in_dim(self):
+        return self.feat_dim + self.head_hidden
+
+
+def weight_names(cfg: Config):
+    """Flat weight-input order — must match the Rust ParamStore names."""
+    names = ["vis.embed"]
+    for b in range(cfg.vision_blocks):
+        names += [f"vis.{b}.{w}" for w in ("wq", "wk", "wv", "wo", "w1", "w2")]
+    names += ["proj", "lm.embed_instr", "lm.embed_proprio"]
+    for b in range(cfg.lm_blocks):
+        names += [f"lm.{b}.{w}" for w in ("wq", "wk", "wv", "wo", "w1", "w2")]
+    names += ["head.expand", "head.norm", "head.main"]
+    return names
+
+
+def rmsnorm_cols(x):
+    """Column (token) RMS norm with the 0.05 floor (see rust layers.rs)."""
+    ms = jnp.mean(x * x, axis=0, keepdims=True)
+    return x / jnp.sqrt(ms + 0.05)
+
+
+def gelu_tanh(x):
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def attn(wq, wk, wv, wo, heads, x):
+    """Multi-head self-attention, tokens as columns: returns x + MHSA(x)."""
+    d, n = x.shape
+    dh = d // heads
+    q = wq @ x
+    k = wk @ x
+    v = wv @ x
+    ctx_parts = []
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        s = (q[sl].T @ k[sl]) / jnp.sqrt(jnp.float32(dh))
+        p = jnp.exp(s - s.max(axis=1, keepdims=True))
+        p = p / p.sum(axis=1, keepdims=True)
+        ctx_parts.append(v[sl] @ p.T)
+    ctx = jnp.concatenate(ctx_parts, axis=0)
+    return x + wo @ ctx
+
+
+def block(params, prefix, heads, x):
+    h = attn(params[f"{prefix}.wq"], params[f"{prefix}.wk"], params[f"{prefix}.wv"],
+             params[f"{prefix}.wo"], heads, x)
+    h = rmsnorm_cols(h)
+    out = h + params[f"{prefix}.w2"] @ gelu_tanh(params[f"{prefix}.w1"] @ h)
+    return rmsnorm_cols(out)
+
+
+def policy_step(cfg: Config, visual_raw, instr_onehot, proprio, *weights):
+    """Full policy step: observation → action chunk (chunk × act_dim),
+    flattened. Mirrors MiniVla::features + decode (Chunk head)."""
+    params = dict(zip(weight_names(cfg), weights))
+
+    xv = rmsnorm_cols(params["vis.embed"] @ visual_raw)
+    for b in range(cfg.vision_blocks):
+        xv = block(params, f"vis.{b}", cfg.heads, xv)
+
+    xp = rmsnorm_cols(params["proj"] @ xv)
+
+    instr_col = params["lm.embed_instr"] @ instr_onehot
+    prop_col = params["lm.embed_proprio"] @ proprio
+    seq = jnp.concatenate([xp, instr_col[:, None], prop_col[:, None]], axis=1)
+    seq = rmsnorm_cols(seq)
+    for b in range(cfg.lm_blocks):
+        seq = block(params, f"lm.{b}", cfg.heads, seq)
+
+    held = proprio[3]
+    base = jnp.concatenate([seq[:, cfg.n_visual], proprio])
+    feat = jnp.concatenate([base, held * base])
+
+    # Head: tanh expansion, scale normalization, linear chunk decode.
+    expand = jnp.tanh(params["head.expand"] @ feat)
+    hf = jnp.concatenate([feat, expand])
+    norm = params["head.norm"]  # (2, head_in): row0 mean (0), row1 scale
+    hf = (hf - norm[0]) / jnp.maximum(norm[1], 1e-4)
+    out = params["head.main"] @ hf
+    return (jnp.clip(out, -1.0, 1.0),)

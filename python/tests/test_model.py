@@ -1,0 +1,96 @@
+"""L2 checks: the JAX MiniVLA policy-step graph — shapes, invariances and
+numeric properties the Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_policy, weight_shapes
+from compile.model import Config, gelu_tanh, policy_step, rmsnorm_cols, weight_names
+
+
+CFG = Config()
+
+
+def make_weights(rng, cfg=CFG, scale=0.1):
+    shapes = weight_shapes(cfg)
+    ws = []
+    for n in weight_names(cfg):
+        w = jnp.asarray(rng.standard_normal(shapes[n]), dtype=jnp.float32) * scale
+        if n == "head.norm":
+            w = jnp.ones(shapes[n], dtype=jnp.float32).at[0].set(0.0)
+        ws.append(w)
+    return ws
+
+
+def make_obs(rng, cfg=CFG):
+    visual = jnp.asarray(rng.standard_normal((cfg.d_vis_in, cfg.n_visual)), dtype=jnp.float32)
+    onehot = jnp.zeros((cfg.vocab,), dtype=jnp.float32).at[5].set(1.0)
+    prop = jnp.asarray(rng.standard_normal((cfg.d_proprio,)), dtype=jnp.float32)
+    return visual, onehot, prop
+
+
+def test_policy_step_shape_and_range():
+    rng = np.random.default_rng(0)
+    (out,) = policy_step(CFG, *make_obs(rng), *make_weights(rng))
+    assert out.shape == (CFG.chunk * CFG.act_dim,)
+    assert bool(jnp.all(jnp.abs(out) <= 1.0))
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_policy_step_deterministic():
+    rng = np.random.default_rng(1)
+    obs = make_obs(rng)
+    ws = make_weights(rng)
+    (a,) = policy_step(CFG, *obs, *ws)
+    (b,) = policy_step(CFG, *obs, *ws)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weights_are_inputs_not_constants():
+    rng = np.random.default_rng(2)
+    obs = make_obs(rng)
+    ws = make_weights(rng)
+    (a,) = policy_step(CFG, *obs, *ws)
+    ws2 = list(ws)
+    ws2[-1] = ws2[-1] * 2.0  # head.main
+    (b,) = policy_step(CFG, *obs, *ws2)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_rmsnorm_floor_keeps_silent_tokens_small():
+    x = jnp.full((64, 1), 0.01, dtype=jnp.float32)
+    y = rmsnorm_cols(x)
+    assert float(jnp.abs(y).max()) < 0.1
+    x2 = jnp.asarray(np.random.default_rng(3).standard_normal((64, 4)) * 4.0, dtype=jnp.float32)
+    y2 = rmsnorm_cols(x2)
+    ms = np.asarray(jnp.mean(y2 * y2, axis=0))
+    assert np.all(np.abs(ms - 1.0) < 0.05)
+
+
+def test_gelu_matches_rust_constants():
+    x = jnp.array([0.0, 1.0, -1.0, 3.0], dtype=jnp.float32)
+    y = np.asarray(gelu_tanh(x))
+    np.testing.assert_allclose(y, [0.0, 0.8412, -0.1588, 2.9964], atol=1e-3)
+
+
+def test_lowering_produces_hlo_text():
+    lowered, names = lower_policy(CFG)
+    from compile.aot import to_hlo_text
+
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(names) == 1 + 6 * CFG.vision_blocks + 3 + 6 * CFG.lm_blocks + 3
+    # 3 obs inputs + weights; parameter count appears in the text.
+    assert text.count("parameter(") >= len(names)
+
+
+def test_weight_manifest_matches_rust_store_layout():
+    names = weight_names(CFG)
+    assert names[0] == "vis.embed"
+    assert "lm.0.wq" in names
+    assert names[-1] == "head.main"
+    assert names[-2] == "head.norm"
+    # No duplicates.
+    assert len(set(names)) == len(names)

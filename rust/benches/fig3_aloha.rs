@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 3 (Mobile-ALOHA suite) end-to-end.
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    bench("fig3_aloha (end-to-end)", 0, 1, || {
+        println!("{}", hbvla::eval::figures::fig3_aloha(&budget).render());
+    });
+}

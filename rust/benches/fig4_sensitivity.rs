@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 4 (component sensitivity) + Figure 1 stats.
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    let s = hbvla::eval::figures::fig1_dual_dominance(&budget);
+    println!("fig1: max|act|={:.1} kurtosis={:.1} visual:instr={}:1", s.max_abs, s.kurtosis, s.visual_token_ratio);
+    bench("fig4_sensitivity (end-to-end)", 0, 1, || {
+        println!("{}", hbvla::eval::figures::fig4_sensitivity(&budget).render());
+    });
+}

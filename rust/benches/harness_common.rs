@@ -1,0 +1,33 @@
+// Shared mini-harness for the benches (criterion is unavailable offline):
+// wall-clock a closure with warmup, report mean/min over iterations.
+// Included into each bench via `include!`.
+
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("[bench] {label:<40} mean {mean:>9.4}s  min {min:>9.4}s  (n={iters})");
+}
+
+#[allow(dead_code)]
+pub fn smoke_budget() -> hbvla::eval::tables::EvalBudget {
+    let mut b = hbvla::eval::tables::EvalBudget::smoke();
+    b.episodes_per_task = std::env::var("HBVLA_BENCH_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    b.n_demos = std::env::var("HBVLA_BENCH_DEMOS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    b
+}

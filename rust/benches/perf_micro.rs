@@ -1,0 +1,40 @@
+//! Micro/perf benches: PTQ throughput, packed vs dense GEMV, GEMM,
+//! rollout and serving — the §Perf numbers of EXPERIMENTS.md.
+include!("harness_common.rs");
+
+use hbvla::quant::packed::PackedBits;
+use hbvla::tensor::ops::{matmul, matmul_mt, matvec};
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4242);
+    // GEMM kernels.
+    let a = Matrix::gauss(256, 256, 1.0, &mut rng);
+    let b = Matrix::gauss(256, 256, 1.0, &mut rng);
+    bench("gemm 256^3 single-thread", 3, 20, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    let a2 = Matrix::gauss(1024, 1024, 1.0, &mut rng);
+    let b2 = Matrix::gauss(1024, 1024, 1.0, &mut rng);
+    bench("gemm 1024^3 multi-thread", 1, 5, || {
+        std::hint::black_box(matmul_mt(&a2, &b2, 8));
+    });
+    // Packed vs dense GEMV.
+    let w = Matrix::gauss(512, 2048, 1.0, &mut rng);
+    let x: Vec<f32> = (0..2048).map(|_| rng.gauss() as f32).collect();
+    let packed = PackedBits::pack(&w, 128);
+    let gsums = packed.group_sums(&x);
+    let mut y = vec![0.0f32; 512];
+    bench("dense GEMV 512x2048", 5, 200, || {
+        std::hint::black_box(matvec(&w, &x));
+    });
+    bench("packed 1-bit GEMV 512x2048", 5, 200, || {
+        packed.matvec(&x, &gsums, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!("packed memory ratio: ×{:.1}", packed.compression_ratio());
+    // Full §Perf driver.
+    let rep = hbvla::eval::perf::run_perf(hbvla::util::threadpool::default_threads(), 11);
+    println!("{}", rep.render());
+}

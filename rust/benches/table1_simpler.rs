@@ -1,0 +1,12 @@
+//! Bench: regenerate Table 1 (SIMPLER, CogACT-mini) end-to-end at bench
+//! budget; tune with HBVLA_BENCH_EPISODES / HBVLA_BENCH_DEMOS.
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    bench("table1_simpler (end-to-end)", 0, 1, || {
+        for t in hbvla::eval::tables::table1_simpler(&budget) {
+            println!("{}", t.render());
+        }
+    });
+}

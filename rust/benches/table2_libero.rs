@@ -1,0 +1,11 @@
+//! Bench: regenerate Table 2 (LIBERO, OpenVLA-mini + OFT-mini) end-to-end.
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    bench("table2_libero (end-to-end)", 0, 1, || {
+        for t in hbvla::eval::tables::table2_libero(&budget) {
+            println!("{}", t.render());
+        }
+    });
+}

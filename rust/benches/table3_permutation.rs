@@ -1,0 +1,9 @@
+//! Bench: Table 3 ablation (permutation column-norm criterion ℓ1 vs ℓ2).
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    bench("table3_permutation", 0, 1, || {
+        println!("{}", hbvla::eval::ablation::table3_permutation(&budget).render());
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Table 4 ablation (standard vs policy-aware Hessian).
+include!("harness_common.rs");
+
+fn main() {
+    let budget = smoke_budget();
+    bench("table4_hessian", 0, 1, || {
+        println!("{}", hbvla::eval::ablation::table4_hessian(&budget).render());
+    });
+    let (transform, obq) = hbvla::eval::ablation::ablation_obq(&budget);
+    println!("extra ablation — Fig-2 transform {transform:.2}% vs Eq-28 OBQ {obq:.2}% (error ↓)");
+}

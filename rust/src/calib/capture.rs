@@ -1,0 +1,271 @@
+//! Activation capture → per-layer calibration Hessians.
+//!
+//! Pass A: stream every demo step through the FP model with a hook that
+//! accumulates the standard Hessian H = XXᵀ per quantizable layer, while
+//! caching layer inputs at a step subsample for the probe pass.
+//!
+//! Pass B (policy-aware): for each LM block, run the block-wise gradient
+//! probe (FP vs provisionally binarized block) on the cached block inputs
+//! to get per-token importance (Eqs. 4–9), then accumulate the rectified
+//! Hessian H̃ = XSXᵀ over the cached inputs. Vision-side layers use the
+//! visual-token slice of block 0's mean importance (the probe is defined
+//! on the action pathway; this extension is documented in DESIGN.md).
+
+use std::collections::HashMap;
+
+use crate::methods::traits::CalibData;
+use crate::model::MiniVla;
+use crate::quant::group::{quantize_matrix, GroupSpec};
+use crate::quant::hessian::HessianAccum;
+use crate::quant::probe::{probe_token_importance_focused, AttnBlock, TokenImportance};
+use crate::sim::episode::DemoStep;
+use crate::tensor::matrix::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct CaptureConfig {
+    /// Cache layer inputs every `subsample`-th step for the probe pass.
+    pub subsample: usize,
+    /// Maximum cached steps (bounds memory).
+    pub max_cached: usize,
+    /// Compute the policy-aware rectified Hessians.
+    pub policy_aware: bool,
+    /// Rectification strength β: S = (1−β)·1 + β·S_probe. Full β=1 lets a
+    /// single dominant token crush every other column's statistics; the
+    /// default softening keeps the instruction-conditioned boost while
+    /// preserving usable energy estimates for the rest of the layer.
+    pub beta: f32,
+}
+
+impl Default for CaptureConfig {
+    fn default() -> Self {
+        CaptureConfig { subsample: 4, max_cached: 192, policy_aware: true, beta: 0.5 }
+    }
+}
+
+/// Provisional binarization of an attention block for the probe (RTN —
+/// the probe only needs a representative quantization noise pattern).
+fn provisional_block(model: &MiniVla, prefix: &str) -> (AttnBlock, AttnBlock) {
+    let spec = GroupSpec { group_size: 128, shared_mean: false, adaptive_split: false };
+    let get = |w: &str| model.store.get(&format!("{prefix}.{w}")).clone();
+    let fp = AttnBlock { wq: get("wq"), wk: get("wk"), wv: get("wv"), wo: get("wo"), heads: model.cfg.heads };
+    let q = AttnBlock {
+        wq: quantize_matrix(&fp.wq, &spec).0,
+        wk: quantize_matrix(&fp.wk, &spec).0,
+        wv: quantize_matrix(&fp.wv, &spec).0,
+        wo: quantize_matrix(&fp.wo, &spec).0,
+        heads: fp.heads,
+    };
+    (fp, q)
+}
+
+/// Run capture over a demonstration corpus. Returns per-layer
+/// [`CalibData`] keyed by parameter name, with rectified Hessians attached
+/// when `cfg.policy_aware`.
+pub fn capture_calibration(
+    model: &MiniVla,
+    demos: &[Vec<DemoStep>],
+    cfg: &CaptureConfig,
+) -> HashMap<String, CalibData> {
+    let layer_names = model.store.quantizable_layers(None);
+    let mut std_acc: HashMap<String, HessianAccum> = HashMap::new();
+    let mut cached: HashMap<String, Vec<Matrix>> = HashMap::new();
+    for name in &layer_names {
+        let dim = model.store.get(name).cols;
+        std_acc.insert(name.clone(), HessianAccum::new(dim));
+    }
+
+    // ---- Pass A: standard Hessians + input cache ----
+    let mut step_idx = 0usize;
+    let mut n_cached = 0usize;
+    for demo in demos {
+        for step in demo {
+            let cache_this = step_idx % cfg.subsample == 0 && n_cached < cfg.max_cached;
+            {
+                let mut hook_fn = |name: &str, x: &Matrix| {
+                    if let Some(acc) = std_acc.get_mut(name) {
+                        acc.add(x);
+                        if cache_this {
+                            cached.entry(name.to_string()).or_default().push(x.clone());
+                        }
+                    }
+                };
+                let mut hook: Option<crate::model::layers::Hook> = Some(&mut hook_fn);
+                let _ = model.features(&step.obs.visual_raw, step.obs.instr_id, &step.obs.proprio, &mut hook);
+            }
+            if cache_this {
+                n_cached += 1;
+            }
+            step_idx += 1;
+        }
+    }
+
+    // ---- Pass B: probe → rectified Hessians ----
+    let mut rect_acc: HashMap<String, HessianAccum> = HashMap::new();
+    if cfg.policy_aware {
+        // Per-LM-block token importance, averaged over cached inputs.
+        let mut block_importance: Vec<TokenImportance> = Vec::new();
+        for b in 0..model.cfg.lm_blocks {
+            let prefix = format!("lm.{b}");
+            let (fp, q) = provisional_block(model, &prefix);
+            let inputs = cached.get(&format!("{prefix}.wq")).cloned().unwrap_or_default();
+            let n = model.cfg.seq_len();
+            let mut avg = TokenImportance {
+                q: vec![0.0; n],
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+                o: vec![0.0; n],
+                mean: vec![0.0; n],
+            };
+            let m = inputs.len().max(1) as f32;
+            for x in &inputs {
+                // Focus the block loss on the readout (instruction) token —
+                // the action pathway (see probe docs re dual dominance).
+                let imp = probe_token_importance_focused(&fp, &q, x, Some(model.cfg.n_visual));
+                for t in 0..n {
+                    avg.q[t] += imp.q[t] / m;
+                    avg.k[t] += imp.k[t] / m;
+                    avg.v[t] += imp.v[t] / m;
+                    avg.o[t] += imp.o[t] / m;
+                    avg.mean[t] += imp.mean[t] / m;
+                }
+            }
+            if inputs.is_empty() {
+                for t in 0..n {
+                    avg.mean[t] = 1.0;
+                    avg.q[t] = 1.0;
+                    avg.k[t] = 1.0;
+                    avg.v[t] = 1.0;
+                    avg.o[t] = 1.0;
+                }
+            }
+            block_importance.push(avg);
+        }
+
+        // Importance vector applicable to a given layer's token axis.
+        let importance_for = |name: &str, tokens: usize| -> Vec<f32> {
+            if let Some(rest) = name.strip_prefix("lm.") {
+                let mut it = rest.splitn(2, '.');
+                let b: usize = it.next().unwrap().parse().unwrap();
+                let proj = it.next().unwrap_or("");
+                let imp = &block_importance[b];
+                let v = match proj {
+                    "wq" => &imp.q,
+                    "wk" => &imp.k,
+                    "wv" => &imp.v,
+                    "wo" => &imp.o,
+                    _ => &imp.mean,
+                };
+                return v[..tokens.min(v.len())].to_vec();
+            }
+            // Vision / projector layers: visual-token slice of block 0's
+            // mean importance (these positions map 1:1 to visual tokens).
+            let imp = &block_importance[0].mean;
+            if tokens <= model.cfg.n_visual {
+                imp[..tokens].to_vec()
+            } else {
+                vec![1.0; tokens]
+            }
+        };
+
+        for name in &layer_names {
+            let dim = model.store.get(name).cols;
+            let mut acc = HessianAccum::new(dim);
+            if let Some(inputs) = cached.get(name) {
+                for x in inputs {
+                    let mut s = importance_for(name, x.cols);
+                    for v in s.iter_mut() {
+                        *v = (1.0 - cfg.beta) + cfg.beta * *v;
+                    }
+                    if s.len() == x.cols {
+                        acc.add_weighted(x, &s);
+                    } else {
+                        acc.add(x);
+                    }
+                }
+            }
+            rect_acc.insert(name.clone(), acc);
+        }
+    }
+
+    // ---- Assemble CalibData ----
+    let mut out = HashMap::new();
+    for name in &layer_names {
+        let comp = model.store.component_of(name);
+        let std_h = std_acc[name].finalize();
+        let mut cd = CalibData::from_hessian(std_h, comp);
+        if cfg.policy_aware {
+            let r = &rect_acc[name];
+            if r.tokens > 0 {
+                cd = cd.with_rectified(r.finalize());
+            }
+        }
+        out.insert(name.clone(), cd);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::demos::collect_demos;
+    use crate::model::{HeadKind, MiniVla, VlaConfig};
+    use crate::sim::tasks::libero_suite;
+
+    fn quick_calib(policy_aware: bool) -> (MiniVla, HashMap<String, CalibData>) {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let tasks = libero_suite("object");
+        let demos = collect_demos(&model, &tasks, 2, 3);
+        let cfg = CaptureConfig { subsample: 8, max_cached: 16, policy_aware, beta: 0.5 };
+        let calib = capture_calibration(&model, &demos, &cfg);
+        (model, calib)
+    }
+
+    #[test]
+    fn covers_every_quantizable_layer() {
+        let (model, calib) = quick_calib(false);
+        for name in model.store.quantizable_layers(None) {
+            let cd = calib.get(&name).expect("missing layer");
+            assert_eq!(cd.hessian.rows, model.store.get(&name).cols, "{name}");
+            assert!(cd.hessian.is_finite(), "{name}");
+        }
+    }
+
+    #[test]
+    fn rectified_present_when_policy_aware() {
+        let (model, calib) = quick_calib(true);
+        let mut with_rect = 0;
+        for name in model.store.quantizable_layers(None) {
+            if calib[&name].hessian_rect.is_some() {
+                with_rect += 1;
+            }
+        }
+        // All trunk layers that see tokens should have a rectified Hessian.
+        assert!(with_rect > model.cfg.lm_blocks * 4, "only {with_rect} rectified");
+    }
+
+    #[test]
+    fn hessians_are_psd_diagonal_nonneg() {
+        let (_, calib) = quick_calib(true);
+        for (name, cd) in &calib {
+            for (i, &d) in cd.hessian.diag().iter().enumerate() {
+                assert!(d >= -1e-4, "{name} diag[{i}]={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn rectified_differs_from_standard() {
+        let (model, calib) = quick_calib(true);
+        // On at least some LM layers the rectified Hessian must actually
+        // rebalance token contributions.
+        let mut any_diff = false;
+        for name in model.store.quantizable_layers(None) {
+            if let Some(hr) = &calib[&name].hessian_rect {
+                if hr.dist_sq(&calib[&name].hessian) > 1e-8 {
+                    any_diff = true;
+                }
+            }
+        }
+        assert!(any_diff);
+    }
+}

@@ -1,0 +1,83 @@
+//! Demonstration collection: expert rollouts across a task list, used both
+//! as the behavioural-cloning corpus and as the calibration set (the paper
+//! samples 256 trajectories from the benchmark's training distribution).
+
+use crate::model::MiniVla;
+use crate::sim::episode::DemoStep;
+use crate::sim::observe::ObsParams;
+use crate::sim::tasks::Task;
+use crate::util::rng::Rng;
+
+/// DART noise level used for the BC corpus (executed = expert + noise,
+/// label = expert) — covers the drift states the cloned policy visits.
+pub const DEMO_NOISE: f64 = 0.2;
+
+/// Collect `n_traj` expert trajectories, cycling through `tasks`. Only
+/// successful expert episodes are kept (the expert solves every task even
+/// under injection noise; the filter guards demo quality).
+pub fn collect_demos(
+    model: &MiniVla,
+    tasks: &[Task],
+    n_traj: usize,
+    seed: u64,
+) -> Vec<Vec<DemoStep>> {
+    collect_demos_noisy(model, tasks, n_traj, seed, DEMO_NOISE)
+}
+
+pub fn collect_demos_noisy(
+    model: &MiniVla,
+    tasks: &[Task],
+    n_traj: usize,
+    seed: u64,
+    noise: f64,
+) -> Vec<Vec<DemoStep>> {
+    let mut rng = Rng::with_stream(seed, 0xDE30);
+    let mut demos = Vec::with_capacity(n_traj);
+    let mut attempt = 0u64;
+    while demos.len() < n_traj {
+        let task = &tasks[(attempt as usize) % tasks.len()];
+        let ep_seed = rng.next_u64() ^ attempt;
+        let (res, steps) =
+            crate::sim::episode::run_expert_episode_noisy(model, task, &ObsParams::clean(), ep_seed, noise);
+        attempt += 1;
+        if res.success && !steps.is_empty() {
+            demos.push(steps);
+        }
+        assert!(
+            attempt < 8 * n_traj as u64 + 64,
+            "expert failing too often — task suite broken"
+        );
+    }
+    demos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::tasks::libero_suite;
+
+    #[test]
+    fn collects_requested_count() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let tasks = libero_suite("object");
+        let demos = collect_demos(&model, &tasks, 6, 7);
+        assert_eq!(demos.len(), 6);
+        for d in &demos {
+            assert!(!d.is_empty());
+        }
+    }
+
+    #[test]
+    fn demos_deterministic() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let tasks = libero_suite("object");
+        let a = collect_demos(&model, &tasks, 3, 9);
+        let b = collect_demos(&model, &tasks, 3, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.len(), y.len());
+            assert_eq!(x[0].action, y[0].action);
+        }
+    }
+}

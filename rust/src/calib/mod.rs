@@ -1,0 +1,9 @@
+//! Calibration pipeline: demonstration collection, activation capture,
+//! and construction of per-layer [`CalibData`] (standard + policy-aware
+//! rectified Hessians).
+
+pub mod capture;
+pub mod demos;
+
+pub use capture::{capture_calibration, CaptureConfig};
+pub use demos::collect_demos;

@@ -1,0 +1,98 @@
+//! Latency/throughput accounting for the serving router and the perf pass.
+
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round()) as usize;
+        v[idx]
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(0.99)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={}us p99={}us",
+            self.count(),
+            self.mean_us(),
+            self.p50_us(),
+            self.p99_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record_us(i);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+        assert!(s.p50_us() <= s.p99_us());
+        assert_eq!(s.percentile_us(0.0), 1);
+        assert_eq!(s.percentile_us(1.0), 100);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.p99_us(), 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyStats::new();
+        a.record_us(10);
+        let mut b = LatencyStats::new();
+        b.record_us(20);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

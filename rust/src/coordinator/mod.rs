@@ -1,0 +1,12 @@
+//! The L3 coordinator: layer-parallel PTQ scheduling, parallel closed-loop
+//! rollout, and a batched policy-serving router (vLLM-router-like).
+
+pub mod metrics;
+pub mod rollout;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::LatencyStats;
+pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
+pub use scheduler::{quantize_model, QuantJobReport};
+pub use server::{PolicyServer, ServeConfig};

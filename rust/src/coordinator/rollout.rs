@@ -1,0 +1,127 @@
+//! Parallel closed-loop evaluation: episodes are distributed across a
+//! thread pool; results aggregate per task and per suite.
+
+use std::collections::BTreeMap;
+
+use crate::model::MiniVla;
+use crate::sim::episode::run_policy_episode;
+use crate::sim::observe::ObsParams;
+use crate::sim::tasks::Task;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// Which observation model episodes sample (SimplerEnv settings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsMode {
+    VisualMatching,
+    VariantAggregation,
+}
+
+#[derive(Clone, Debug)]
+pub struct RolloutConfig {
+    pub episodes_per_task: usize,
+    pub mode: ObsMode,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        RolloutConfig {
+            episodes_per_task: 50,
+            mode: ObsMode::VisualMatching,
+            seed: 2026,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+/// Per-task and aggregate success rates.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub per_task: BTreeMap<String, f64>,
+    pub successes: usize,
+    pub episodes: usize,
+}
+
+impl SuiteResult {
+    pub fn success_rate(&self) -> f64 {
+        if self.episodes == 0 {
+            0.0
+        } else {
+            self.successes as f64 / self.episodes as f64
+        }
+    }
+}
+
+/// Evaluate `model` over `tasks`, `episodes_per_task` each, in parallel.
+/// Episode seeds are deterministic functions of (cfg.seed, task, episode),
+/// so different methods are compared on identical episode draws.
+pub fn eval_tasks(model: &MiniVla, tasks: &[Task], cfg: &RolloutConfig) -> SuiteResult {
+    let jobs: Vec<(usize, usize)> = (0..tasks.len())
+        .flat_map(|t| (0..cfg.episodes_per_task).map(move |e| (t, e)))
+        .collect();
+    let outcomes = parallel_map(jobs.len(), cfg.threads, |j| {
+        let (t, e) = jobs[j];
+        let task = &tasks[t];
+        let ep_seed = cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((t as u64) << 32)
+            .wrapping_add(e as u64);
+        let params = match cfg.mode {
+            ObsMode::VisualMatching => ObsParams::visual_matching(),
+            ObsMode::VariantAggregation => {
+                let mut r = Rng::with_stream(ep_seed, 0x5A);
+                ObsParams::variant_aggregation(&mut r)
+            }
+        };
+        (t, run_policy_episode(model, task, &params, ep_seed).success)
+    });
+    let mut per_task_succ: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    let mut successes = 0;
+    for (t, ok) in &outcomes {
+        let e = per_task_succ.entry(tasks[*t].name.clone()).or_insert((0, 0));
+        e.1 += 1;
+        if *ok {
+            e.0 += 1;
+            successes += 1;
+        }
+    }
+    SuiteResult {
+        per_task: per_task_succ
+            .into_iter()
+            .map(|(k, (s, n))| (k, s as f64 / n as f64))
+            .collect(),
+        successes,
+        episodes: outcomes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::tasks::libero_suite;
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let tasks = libero_suite("object");
+        let mk = |threads| RolloutConfig { episodes_per_task: 2, threads, ..Default::default() };
+        let a = eval_tasks(&model, &tasks, &mk(1));
+        let b = eval_tasks(&model, &tasks, &mk(4));
+        assert_eq!(a.successes, b.successes);
+        assert_eq!(a.per_task, b.per_task);
+    }
+
+    #[test]
+    fn counts_episodes() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let tasks = libero_suite("object");
+        let cfg = RolloutConfig { episodes_per_task: 3, threads: 2, ..Default::default() };
+        let r = eval_tasks(&model, &tasks, &cfg);
+        assert_eq!(r.episodes, 3 * tasks.len());
+        assert_eq!(r.per_task.len(), tasks.len());
+    }
+}

@@ -1,0 +1,187 @@
+//! Batched policy-serving router — the deploy-scenario runtime.
+//!
+//! Clients submit observation requests; the router coalesces them into
+//! batches (up to `max_batch` or `max_wait`) and dispatches to worker
+//! threads running policy inference. This mirrors the dynamic-batching
+//! router architecture of LLM serving systems (vllm-project/router),
+//! specialized for action-policy serving where each request is a single
+//! policy step with tight latency budgets.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::model::MiniVla;
+use crate::sim::observe::Observation;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_micros(500) }
+    }
+}
+
+struct Request {
+    obs: Observation,
+    submitted: Instant,
+    reply: Sender<(Vec<Vec<f32>>, Duration)>,
+}
+
+/// The serving router. `submit` is thread-safe and blocking (returns the
+/// decoded action chunk); latency statistics accumulate internally.
+pub struct PolicyServer {
+    tx: Sender<Request>,
+    stats: Arc<Mutex<LatencyStats>>,
+    batch_sizes: Arc<Mutex<Vec<usize>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PolicyServer {
+    pub fn start(model: Arc<MiniVla>, cfg: ServeConfig) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(Mutex::new(LatencyStats::new()));
+        let batch_sizes = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            let batch_sizes = Arc::clone(&batch_sizes);
+            let model = Arc::clone(&model);
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::with_stream(0x5E4E, w as u64);
+                loop {
+                    // Collect a batch: block for the first request, then
+                    // drain up to max_batch within max_wait.
+                    let mut batch: Vec<Request> = Vec::new();
+                    {
+                        let guard = rx.lock().unwrap();
+                        match guard.recv() {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
+                        }
+                        let deadline = Instant::now() + cfg.max_wait;
+                        while batch.len() < cfg.max_batch {
+                            let left = deadline.saturating_duration_since(Instant::now());
+                            if left.is_zero() {
+                                break;
+                            }
+                            match guard.recv_timeout(left) {
+                                Ok(r) => batch.push(r),
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    batch_sizes.lock().unwrap().push(batch.len());
+                    for req in batch {
+                        let feat = model.features(
+                            &req.obs.visual_raw,
+                            req.obs.instr_id,
+                            &req.obs.proprio,
+                            &mut None,
+                        );
+                        let act = model.decode(&feat, &mut rng);
+                        let latency = req.submitted.elapsed();
+                        stats.lock().unwrap().record(latency);
+                        let _ = req.reply.send((act, latency));
+                    }
+                }
+            }));
+        }
+        PolicyServer { tx, stats, batch_sizes, handles }
+    }
+
+    /// Submit one observation; blocks until the action chunk is decoded.
+    pub fn submit(&self, obs: Observation) -> (Vec<Vec<f32>>, Duration) {
+        let (reply_tx, reply_rx): (Sender<(Vec<Vec<f32>>, Duration)>, Receiver<_>) = channel();
+        self.tx
+            .send(Request { obs, submitted: Instant::now(), reply: reply_tx })
+            .expect("server stopped");
+        reply_rx.recv().expect("worker dropped request")
+    }
+
+    pub fn latency_stats(&self) -> LatencyStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batch_sizes.lock().unwrap();
+        if b.is_empty() {
+            0.0
+        } else {
+            b.iter().sum::<usize>() as f64 / b.len() as f64
+        }
+    }
+
+    /// Shut down: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::observe::{observe, ObsParams};
+    use crate::sim::tasks::libero_suite;
+
+    fn sample_obs(model: &MiniVla) -> Observation {
+        let task = &libero_suite("object")[0];
+        let mut rng = Rng::new(1);
+        let scene = task.instantiate(&mut rng);
+        observe(&scene, task.stages[0].instr(), 100, model, &ObsParams::clean(), &mut rng)
+    }
+
+    #[test]
+    fn serves_requests_and_records_latency() {
+        let model = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Chunk)));
+        let server = PolicyServer::start(Arc::clone(&model), ServeConfig::default());
+        let obs = sample_obs(&model);
+        for _ in 0..12 {
+            let (act, lat) = server.submit(obs.clone());
+            assert_eq!(act.len(), model.chunk_len());
+            assert!(lat.as_nanos() > 0);
+        }
+        let stats = server.latency_stats();
+        assert_eq!(stats.count(), 12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batch() {
+        let model = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Chunk)));
+        let server = Arc::new(PolicyServer::start(
+            Arc::clone(&model),
+            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(2) },
+        ));
+        let obs = sample_obs(&model);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let srv = Arc::clone(&server);
+                let o = obs.clone();
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        let (act, _) = srv.submit(o.clone());
+                        assert!(!act.is_empty());
+                    }
+                });
+            }
+        });
+        assert_eq!(server.latency_stats().count(), 32);
+        assert!(server.mean_batch_size() >= 1.0);
+    }
+}

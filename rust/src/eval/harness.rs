@@ -1,0 +1,68 @@
+//! Shared experiment harness: builds a fitted MiniVLA ("checkpoint"), its
+//! demonstration corpus, and the calibration Hessians — the inputs every
+//! table/figure driver consumes.
+
+use std::collections::HashMap;
+
+use crate::calib::capture::{capture_calibration, CaptureConfig};
+use crate::calib::demos::collect_demos;
+use crate::methods::traits::{CalibData, Component};
+use crate::model::{HeadKind, MiniVla, VlaConfig};
+use crate::sim::tasks::Task;
+use crate::train::bc::fit_policy;
+
+/// Ridge strength used for every head fit (chosen once; see DESIGN.md §9).
+pub const BC_LAMBDA: f64 = 1.0;
+
+/// Demonstrations per checkpoint. The paper samples 256 calibration
+/// trajectories; we reuse the BC corpus for calibration.
+pub const N_DEMOS: usize = 256;
+
+/// A ready-to-evaluate checkpoint.
+pub struct Testbed {
+    pub model: MiniVla,
+    pub calib: HashMap<String, CalibData>,
+    pub tasks: Vec<Task>,
+}
+
+/// The component set the paper's main tables quantize: vision + language
+/// backbones, everything else FP.
+pub fn paper_components() -> Vec<Component> {
+    vec![Component::Vision, Component::Language]
+}
+
+/// Build a fitted + calibrated checkpoint for `head` over `tasks`.
+/// `n_demos` can be reduced for smoke runs.
+pub fn build_testbed(head: HeadKind, tasks: Vec<Task>, n_demos: usize, seed: u64) -> Testbed {
+    let cfg = VlaConfig::base(head).with_seed(seed);
+    let mut model = MiniVla::new(cfg);
+    let demos = collect_demos(&model, &tasks, n_demos, seed ^ 0xD37A);
+    fit_policy(&mut model, &demos, BC_LAMBDA);
+    let calib = capture_calibration(&model, &demos, &CaptureConfig::default());
+    Testbed { model, calib, tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::HeadKind;
+    use crate::sim::tasks::libero_suite;
+
+    #[test]
+    fn testbed_builds_and_calibrates() {
+        let tb = build_testbed(HeadKind::Chunk, libero_suite("object"), 8, 3);
+        assert!(!tb.calib.is_empty());
+        for name in tb.model.store.quantizable_layers(None) {
+            assert!(tb.calib.contains_key(&name), "{name}");
+        }
+    }
+
+    #[test]
+    fn paper_components_exclude_head() {
+        let c = paper_components();
+        assert!(c.contains(&Component::Vision));
+        assert!(c.contains(&Component::Language));
+        assert!(!c.contains(&Component::ActionHead));
+        assert!(!c.contains(&Component::Projector));
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment drivers: one module per paper table/figure plus the
+//! §Perf measurements. See DESIGN.md §6 for the experiment index.
+
+pub mod ablation;
+pub mod figures;
+pub mod harness;
+pub mod perf;
+pub mod tables;
+
+pub use harness::{build_testbed, paper_components, Testbed};
+pub use tables::EvalBudget;

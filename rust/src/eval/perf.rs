@@ -1,0 +1,123 @@
+//! §Perf drivers: quantization throughput, packed-GEMV vs dense GEMV,
+//! rollout throughput and serving latency — the measurements behind
+//! EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::rollout::{eval_tasks, ObsMode, RolloutConfig};
+use crate::coordinator::scheduler::quantize_model;
+use crate::coordinator::server::{PolicyServer, ServeConfig};
+use crate::eval::harness::{build_testbed, paper_components};
+use crate::methods::HbVla;
+use crate::model::HeadKind;
+use crate::quant::packed::PackedBits;
+use crate::sim::observe::{observe, ObsParams};
+use crate::sim::tasks::libero_suite;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::matvec;
+use crate::util::rng::Rng;
+
+pub struct PerfReport {
+    pub quant_layers_per_sec: f64,
+    pub quant_weights_per_sec: f64,
+    pub rollout_eps_per_sec: f64,
+    pub serve_p50_us: u64,
+    pub serve_p99_us: u64,
+    pub serve_qps: f64,
+    pub packed_gemv_gflops: f64,
+    pub dense_gemv_gflops: f64,
+    pub packed_mem_ratio: f64,
+}
+
+impl PerfReport {
+    pub fn render(&self) -> String {
+        format!(
+            "quantization: {:.1} layers/s ({:.2} Mweights/s)\n\
+             rollout:      {:.1} episodes/s\n\
+             serving:      p50={}us p99={}us throughput={:.0} req/s\n\
+             packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller",
+            self.quant_layers_per_sec,
+            self.quant_weights_per_sec / 1e6,
+            self.rollout_eps_per_sec,
+            self.serve_p50_us,
+            self.serve_p99_us,
+            self.serve_qps,
+            self.packed_gemv_gflops,
+            self.dense_gemv_gflops,
+            self.packed_mem_ratio
+        )
+    }
+}
+
+pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
+    let tasks = libero_suite("object");
+    let tb = build_testbed(HeadKind::Chunk, tasks.clone(), 32, seed);
+
+    // --- PTQ throughput ---
+    let t0 = Instant::now();
+    let reps = 3;
+    let mut total_layers = 0usize;
+    let mut total_weights = 0usize;
+    for _ in 0..reps {
+        let (_, rep) = quantize_model(&tb.model, &tb.calib, &HbVla::new(), &paper_components(), threads);
+        total_layers += rep.layers.len();
+        total_weights += rep.stats.weights as usize;
+    }
+    let quant_secs = t0.elapsed().as_secs_f64();
+
+    // --- rollout throughput ---
+    let cfg = RolloutConfig { episodes_per_task: 6, mode: ObsMode::VisualMatching, seed, threads };
+    let t1 = Instant::now();
+    let r = eval_tasks(&tb.model, &tasks, &cfg);
+    let rollout_secs = t1.elapsed().as_secs_f64();
+
+    // --- serving latency/throughput ---
+    let model = Arc::new(tb.model.clone());
+    let server = PolicyServer::start(Arc::clone(&model), ServeConfig::default());
+    let mut rng = Rng::with_stream(seed, 0x9F);
+    let scene = tasks[0].instantiate(&mut rng);
+    let obs = observe(&scene, tasks[0].stages[0].instr(), 100, &model, &ObsParams::clean(), &mut rng);
+    let n_req = 400;
+    let t2 = Instant::now();
+    for _ in 0..n_req {
+        let _ = server.submit(obs.clone());
+    }
+    let serve_secs = t2.elapsed().as_secs_f64();
+    let stats = server.latency_stats();
+    let (p50, p99) = (stats.p50_us(), stats.p99_us());
+    server.shutdown();
+
+    // --- packed vs dense GEMV ---
+    let (rows, cols) = (512usize, 2048usize);
+    let mut wr = Rng::with_stream(seed, 0x6E);
+    let w = Matrix::gauss(rows, cols, 1.0, &mut wr);
+    let x: Vec<f32> = (0..cols).map(|_| wr.gauss() as f32).collect();
+    let packed = PackedBits::pack(&w, 128);
+    let gsums = packed.group_sums(&x);
+    let mut y = vec![0.0f32; rows];
+    let iters = 200;
+    let t3 = Instant::now();
+    for _ in 0..iters {
+        packed.matvec(&x, &gsums, &mut y);
+    }
+    let packed_secs = t3.elapsed().as_secs_f64();
+    let t4 = Instant::now();
+    for _ in 0..iters {
+        matvec(&w, &x);
+    }
+    let dense_secs = t4.elapsed().as_secs_f64();
+    let flops = 2.0 * rows as f64 * cols as f64 * iters as f64;
+
+    PerfReport {
+        quant_layers_per_sec: total_layers as f64 / quant_secs,
+        quant_weights_per_sec: total_weights as f64 / quant_secs,
+        rollout_eps_per_sec: r.episodes as f64 / rollout_secs,
+        serve_p50_us: p50,
+        serve_p99_us: p99,
+        serve_qps: n_req as f64 / serve_secs,
+        packed_gemv_gflops: flops / packed_secs / 1e9,
+        dense_gemv_gflops: flops / dense_secs / 1e9,
+        packed_mem_ratio: packed.compression_ratio(),
+    }
+}

@@ -1,0 +1,171 @@
+//! Drivers for the paper's main tables.
+//!
+//! - Table 1: SIMPLER (CogACT-mini / Diffusion head), Visual Matching and
+//!   Variant Aggregation, methods × 4 tasks;
+//! - Table 2: LIBERO (OpenVLA-mini Token head + OpenVLA-OFT-mini Chunk
+//!   head), 4 suites × methods.
+//!
+//! Reported numbers are success rates; Δ is vs the FP row — the *shape*
+//! (method ordering, small HBVLA delta, catastrophic BiLLM) is the
+//! reproduction target (DESIGN.md §6).
+
+use crate::coordinator::rollout::{eval_tasks, ObsMode, RolloutConfig};
+use crate::coordinator::scheduler::quantize_model;
+use crate::eval::harness::{build_testbed, paper_components, Testbed};
+use crate::methods::paper_methods;
+use crate::model::{HeadKind, MiniVla};
+use crate::report::Table;
+use crate::sim::tasks::{libero_suite, simpler_suite, Task};
+
+/// Evaluation budget knobs (smoke runs shrink these).
+#[derive(Clone, Debug)]
+pub struct EvalBudget {
+    pub episodes_per_task: usize,
+    pub n_demos: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for EvalBudget {
+    fn default() -> Self {
+        EvalBudget {
+            episodes_per_task: 50,
+            n_demos: crate::eval::harness::N_DEMOS,
+            seed: 2026,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+impl EvalBudget {
+    pub fn smoke() -> Self {
+        EvalBudget { episodes_per_task: 4, n_demos: 24, ..Default::default() }
+    }
+}
+
+fn rollout_cfg(b: &EvalBudget, mode: ObsMode) -> RolloutConfig {
+    RolloutConfig { episodes_per_task: b.episodes_per_task, mode, seed: b.seed, threads: b.threads }
+}
+
+/// Evaluate FP + all paper methods on one task set / obs mode; returns
+/// per-task columns per method row.
+fn method_rows(
+    tb: &Testbed,
+    tasks: &[Task],
+    mode: ObsMode,
+    budget: &EvalBudget,
+    fp_label: &str,
+) -> Vec<(String, Vec<f64>)> {
+    let cfg = rollout_cfg(budget, mode);
+    let eval_model = |m: &MiniVla| -> Vec<f64> {
+        let r = eval_tasks(m, tasks, &cfg);
+        tasks.iter().map(|t| r.per_task[&t.name]).collect()
+    };
+    let mut rows = vec![(fp_label.to_string(), eval_model(&tb.model))];
+    for method in paper_methods() {
+        let (qm, _) = quantize_model(&tb.model, &tb.calib, method.as_ref(), &paper_components(), budget.threads);
+        rows.push((method.name().to_string(), eval_model(&qm)));
+    }
+    rows
+}
+
+/// Merge open/close drawer task columns into one "O/C Drawer" column,
+/// matching Table 1's presentation.
+fn simpler_columns(tasks: &[Task], cells: &[f64]) -> Vec<f64> {
+    let mut pick = 0.0;
+    let mut movn = 0.0;
+    let mut drawer = Vec::new();
+    let mut apple = 0.0;
+    for (t, &v) in tasks.iter().zip(cells) {
+        match t.name.as_str() {
+            "pick_coke" => pick = v,
+            "move_near" => movn = v,
+            "open_drawer" | "close_drawer" => drawer.push(v),
+            "place_apple" => apple = v,
+            _ => {}
+        }
+    }
+    let oc = drawer.iter().sum::<f64>() / drawer.len().max(1) as f64;
+    vec![pick, movn, oc, apple]
+}
+
+/// Table 1: SIMPLER with the CogACT-mini (diffusion) policy.
+pub fn table1_simpler(budget: &EvalBudget) -> Vec<Table> {
+    let tasks = simpler_suite();
+    let tb = build_testbed(HeadKind::Diffusion, tasks.clone(), budget.n_demos, budget.seed);
+    let mut tables = Vec::new();
+    for (mode, label) in [
+        (ObsMode::VisualMatching, "Visual Matching"),
+        (ObsMode::VariantAggregation, "Variant Aggregation"),
+    ] {
+        let rows = method_rows(&tb, &tasks, mode, budget, "CogACT-mini (FP Model)");
+        let mut t = Table::new(
+            &format!("Table 1 — SIMPLER {label} (success rate, %)"),
+            &["Pick Coke", "Move Near", "O/C Drawer", "Place Apple"],
+        );
+        for (label, cells) in rows {
+            t.add_row(&label, simpler_columns(&tasks, &cells));
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Table 2: LIBERO with OpenVLA-mini (token) and OpenVLA-OFT-mini (chunk).
+pub fn table2_libero(budget: &EvalBudget) -> Vec<Table> {
+    let suites = ["spatial", "object", "goal", "long"];
+    let mut tables = Vec::new();
+    for (head, label) in [
+        (HeadKind::Token, "OpenVLA-mini"),
+        (HeadKind::Chunk, "OpenVLA-OFT-mini"),
+    ] {
+        // One testbed across all suites (one checkpoint, like the paper).
+        let all_tasks: Vec<Task> = suites.iter().flat_map(|s| libero_suite(s)).collect();
+        let tb = build_testbed(head, all_tasks, budget.n_demos, budget.seed);
+        // Per-suite evaluation columns.
+        let cfg = rollout_cfg(budget, ObsMode::VisualMatching);
+        let eval_model = |m: &MiniVla| -> Vec<f64> {
+            suites
+                .iter()
+                .map(|s| eval_tasks(m, &libero_suite(s), &cfg).success_rate())
+                .collect()
+        };
+        let mut t = Table::new(
+            &format!("Table 2 — LIBERO, {label} (success rate, %)"),
+            &["Spatial", "Object", "Goal", "Long"],
+        );
+        t.add_row(&format!("{label} (FP Model)"), eval_model(&tb.model));
+        for method in paper_methods() {
+            let (qm, _) =
+                quantize_model(&tb.model, &tb.calib, method.as_ref(), &paper_components(), budget.threads);
+            t.add_row(method.name(), eval_model(&qm));
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simpler_columns_merge_drawer() {
+        let tasks = simpler_suite();
+        let cells = vec![0.8, 0.7, 0.6, 0.4, 0.5]; // pick, move, open, close, apple
+        let c = simpler_columns(&tasks, &cells);
+        assert_eq!(c.len(), 4);
+        assert!((c[2] - 0.5).abs() < 1e-9); // avg(0.6, 0.4)
+        assert!((c[3] - 0.5).abs() < 1e-9);
+    }
+
+    /// Smoke: the full Table-1 pipeline runs end to end at tiny budget.
+    /// (Uses the base-config model — a real but small workload.)
+    #[test]
+    #[ignore] // several minutes; exercised by `cargo test -- --ignored` and benches
+    fn table1_smoke() {
+        let tables = table1_simpler(&EvalBudget::smoke());
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].rows.len(), 5);
+    }
+}

@@ -1,0 +1,223 @@
+//! One-level Haar wavelet transform (paper Appendix, Eqs. 34–48).
+//!
+//! The transform is the pairwise "average and difference" map implemented
+//! as two fixed stride-2 kernels h_lo = [1/2, 1/2], h_hi = [1/2, −1/2],
+//! exactly the convention HBLLM and this paper use (note: *not* the
+//! orthonormal 1/√2 scaling; the inverse is the exact pairwise
+//! reconstruction w_{2k} = lo + hi, w_{2k+1} = lo − hi).
+//!
+//! Layout: the transformed row is the concatenation [lo | hi] with
+//! J = ⌈m/2⌉ low-pass then high-pass coefficients. Odd lengths are handled
+//! by carrying the leftover sample in the low-pass band with a zero
+//! high-pass partner (equivalent to padding with a duplicate, noted in the
+//! paper's "Odd m" remark).
+
+use crate::tensor::matrix::Matrix;
+
+/// Number of low-pass coefficients for signal length m.
+#[inline]
+pub fn half_len(m: usize) -> usize {
+    m.div_ceil(2)
+}
+
+/// One-level Haar analysis of a single row: returns [lo | hi].
+pub fn haar_fwd_vec(w: &[f32]) -> Vec<f32> {
+    let m = w.len();
+    let j = half_len(m);
+    let mut out = vec![0.0f32; 2 * j];
+    for k in 0..m / 2 {
+        let a = w[2 * k];
+        let b = w[2 * k + 1];
+        out[k] = 0.5 * (a + b);
+        out[j + k] = 0.5 * (a - b);
+    }
+    if m % 2 == 1 {
+        // Leftover sample: lo = value, hi = 0 → inverse reproduces exactly.
+        out[j - 1] = w[m - 1];
+        out[2 * j - 1] = 0.0;
+    }
+    out
+}
+
+/// One-level Haar synthesis: input [lo | hi] of length 2·⌈m/2⌉, original
+/// length `m` must be supplied to undo odd-length handling.
+pub fn haar_inv_vec(c: &[f32], m: usize) -> Vec<f32> {
+    let j = half_len(m);
+    assert_eq!(c.len(), 2 * j, "coefficient length mismatch");
+    let mut w = vec![0.0f32; m];
+    for k in 0..m / 2 {
+        let lo = c[k];
+        let hi = c[j + k];
+        w[2 * k] = lo + hi;
+        w[2 * k + 1] = lo - hi;
+    }
+    if m % 2 == 1 {
+        w[m - 1] = c[j - 1];
+    }
+    w
+}
+
+/// Row-wise Haar (Eq. 46): transform each row of W along the column axis.
+/// Output shape: rows × 2·⌈cols/2⌉.
+pub fn haar_rows(w: &Matrix) -> Matrix {
+    let j2 = 2 * half_len(w.cols);
+    let mut out = Matrix::zeros(w.rows, j2);
+    for i in 0..w.rows {
+        let t = haar_fwd_vec(w.row(i));
+        out.row_mut(i).copy_from_slice(&t);
+    }
+    out
+}
+
+/// Inverse of [`haar_rows`]; `cols` is the original column count.
+pub fn haar_rows_inv(c: &Matrix, cols: usize) -> Matrix {
+    let mut out = Matrix::zeros(c.rows, cols);
+    for i in 0..c.rows {
+        let w = haar_inv_vec(c.row(i), cols);
+        out.row_mut(i).copy_from_slice(&w);
+    }
+    out
+}
+
+/// Column-wise Haar (Eq. 47): Hᵀ_d W — pairwise average/difference of
+/// adjacent *rows* per column. Implemented via transposition (Eq. 48).
+pub fn haar_cols(w: &Matrix) -> Matrix {
+    haar_rows(&w.transpose()).transpose()
+}
+
+/// Inverse of [`haar_cols`]; `rows` is the original row count.
+pub fn haar_cols_inv(c: &Matrix, rows: usize) -> Matrix {
+    haar_rows_inv(&c.transpose(), rows).transpose()
+}
+
+/// High-pass energy of a row-wise transform: ‖W H_hi‖²_F. By the identity
+/// of Eq. 14 this equals ¼ Σ_k ‖W(:,2k-1) − W(:,2k)‖² — verified in tests.
+pub fn highpass_energy(w: &Matrix) -> f64 {
+    let t = haar_rows(w);
+    let j = half_len(w.cols);
+    let mut e = 0.0f64;
+    for i in 0..t.rows {
+        for k in j..2 * j {
+            let v = t.at(i, k) as f64;
+            e += v * v;
+        }
+    }
+    e
+}
+
+/// Direct evaluation of the pairwise-difference identity (Eq. 14) for a
+/// given column ordering π over W's columns: ¼ Σ ‖w_{π(2k-1)} − w_{π(2k)}‖².
+pub fn pairwise_highpass_energy(w: &Matrix, perm: &[usize]) -> f64 {
+    let mut e = 0.0f64;
+    let mut k = 0;
+    while k + 1 < perm.len() {
+        let (a, b) = (perm[k], perm[k + 1]);
+        let mut d2 = 0.0f64;
+        for i in 0..w.rows {
+            let d = (w.at(i, a) - w.at(i, b)) as f64;
+            d2 += d * d;
+        }
+        e += d2;
+        k += 2;
+    }
+    0.25 * e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fwd_matches_closed_form() {
+        // Eq. 39-40: lo = (a+b)/2, hi = (a-b)/2.
+        let w = [4.0f32, 2.0, -1.0, 3.0];
+        let c = haar_fwd_vec(&w);
+        assert_eq!(c, vec![3.0, 1.0, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn roundtrip_even() {
+        let mut rng = Rng::new(31);
+        for m in [2usize, 8, 64, 128] {
+            let w: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+            let c = haar_fwd_vec(&w);
+            let r = haar_inv_vec(&c, m);
+            for (a, b) in w.iter().zip(&r) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_odd() {
+        let mut rng = Rng::new(32);
+        for m in [1usize, 3, 7, 65] {
+            let w: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+            let c = haar_fwd_vec(&w);
+            assert_eq!(c.len(), 2 * half_len(m));
+            let r = haar_inv_vec(&c, m);
+            for (a, b) in w.iter().zip(&r) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_row_roundtrip() {
+        let mut rng = Rng::new(33);
+        for cols in [6usize, 7, 128] {
+            let w = Matrix::gauss(9, cols, 1.5, &mut rng);
+            let c = haar_rows(&w);
+            let r = haar_rows_inv(&c, cols);
+            assert!(w.dist_sq(&r) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn matrix_col_roundtrip() {
+        let mut rng = Rng::new(34);
+        for rows in [6usize, 9, 32] {
+            let w = Matrix::gauss(rows, 11, 1.5, &mut rng);
+            let c = haar_cols(&w);
+            let r = haar_cols_inv(&c, rows);
+            assert!(w.dist_sq(&r) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn col_equals_transposed_row() {
+        // Eq. 48: H_col(W) = (H_row(Wᵀ))ᵀ
+        let mut rng = Rng::new(35);
+        let w = Matrix::gauss(8, 5, 1.0, &mut rng);
+        let a = haar_cols(&w);
+        let b = haar_rows(&w.transpose()).transpose();
+        assert!(a.dist_sq(&b) < 1e-10);
+    }
+
+    #[test]
+    fn highpass_identity_eq14() {
+        let mut rng = Rng::new(36);
+        let w = Matrix::gauss(16, 20, 1.0, &mut rng);
+        let id: Vec<usize> = (0..20).collect();
+        let direct = highpass_energy(&w);
+        let pairwise = pairwise_highpass_energy(&w, &id);
+        assert!((direct - pairwise).abs() < 1e-6 * (1.0 + direct.abs()));
+    }
+
+    #[test]
+    fn constant_signal_has_zero_highpass() {
+        let w = Matrix::filled(4, 10, 3.0);
+        assert!(highpass_energy(&w) < 1e-12);
+    }
+
+    #[test]
+    fn smooth_signal_energy_compacts_to_lowpass() {
+        // Haar on a slowly varying signal puts most energy in the low band.
+        let m = 64;
+        let w = Matrix::from_fn(1, m, |_, j| (j as f32 / m as f32 * 3.0).sin());
+        let hi = highpass_energy(&w);
+        let total = w.frob_norm_sq();
+        assert!(hi / total < 0.01, "hi/total = {}", hi / total);
+    }
+}

@@ -1,0 +1,35 @@
+//! # HBVLA — 1-bit post-training quantization for Vision-Language-Action models
+//!
+//! A production-grade Rust + JAX + Pallas reproduction of *"HBVLA: Pushing
+//! 1-Bit Post-Training Quantization for Vision-Language-Action Models"*
+//! (CS.LG 2026). The crate provides:
+//!
+//! - the **HBVLA binarizer** (policy-aware rectified Hessian saliency,
+//!   sparse orthogonal (permutation) transform, Haar-domain group-wise
+//!   1-bit quantization with residual salient correction) plus the
+//!   BiLLM / HBLLM / BiVLM / RTN baselines ([`methods`]);
+//! - a **MiniVLA** policy family (token / chunked / diffusion action heads)
+//!   with every substrate built in-repo ([`model`], [`tensor`]);
+//! - closed-loop **manipulation benchmarks** mirroring LIBERO, SimplerEnv
+//!   and the Mobile-ALOHA suite ([`sim`]);
+//! - a **coordinator** runtime: layer-parallel PTQ scheduling, batched
+//!   rollout, and a policy-serving router ([`coordinator`]);
+//! - a **PJRT runtime** executing the AOT-lowered JAX/Pallas policy graph
+//!   from `artifacts/*.hlo.txt` ([`runtime`]).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod haar;
+pub mod methods;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,139 @@
+//! `hbvla` — the command-line launcher for the HBVLA reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper (DESIGN.md §6):
+//!
+//! ```text
+//! hbvla table1|table2|table3|table4|fig1|fig3|fig4   # one experiment
+//! hbvla all                                          # everything
+//! hbvla quantize --method hbvla                      # PTQ report
+//! hbvla perf                                         # §Perf measurements
+//! hbvla serve                                        # serving-router demo
+//! ```
+//!
+//! Budget flags: `--episodes N` (per task, default 50), `--demos N`
+//! (default 256), `--seed S`, `--threads T`, `--md` (markdown tables),
+//! `--smoke` (tiny budget for CI).
+
+use hbvla::eval::tables::EvalBudget;
+use hbvla::report::Table;
+use hbvla::util::cli::Args;
+
+fn budget_from(args: &Args) -> EvalBudget {
+    let mut b = if args.flag("smoke") { EvalBudget::smoke() } else { EvalBudget::default() };
+    b.episodes_per_task = args.usize_or("episodes", b.episodes_per_task);
+    b.n_demos = args.usize_or("demos", b.n_demos);
+    b.seed = args.u64_or("seed", b.seed);
+    b.threads = args.usize_or("threads", b.threads);
+    b
+}
+
+fn emit(tables: &[Table], md: bool) {
+    for t in tables {
+        if md {
+            println!("{}", t.render_markdown());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let md = args.flag("md");
+    let budget = budget_from(&args);
+    match args.subcommand() {
+        Some("table1") => emit(&hbvla::eval::tables::table1_simpler(&budget), md),
+        Some("table2") => emit(&hbvla::eval::tables::table2_libero(&budget), md),
+        Some("table3") => emit(&[hbvla::eval::ablation::table3_permutation(&budget)], md),
+        Some("table4") => emit(&[hbvla::eval::ablation::table4_hessian(&budget)], md),
+        Some("fig1") => {
+            let s = hbvla::eval::figures::fig1_dual_dominance(&budget);
+            println!("## Figure 1 — dual dominance statistics");
+            println!("max |activation|      : {:.1} (paper highlights Val=106.5)", s.max_abs);
+            println!("excess kurtosis       : {:.1}", s.kurtosis);
+            println!("visual:instr tokens   : {:.0}:1", s.visual_token_ratio);
+        }
+        Some("fig3") => emit(&[hbvla::eval::figures::fig3_aloha(&budget)], md),
+        Some("fig4") => emit(&[hbvla::eval::figures::fig4_sensitivity(&budget)], md),
+        Some("quantize") => {
+            let method_name = args.get_or("method", "hbvla");
+            let method = hbvla::methods::by_name(method_name)
+                .unwrap_or_else(|| panic!("unknown method {method_name}"));
+            let tb = hbvla::eval::build_testbed(
+                hbvla::model::HeadKind::Chunk,
+                hbvla::sim::tasks::libero_suite("object"),
+                budget.n_demos.min(64),
+                budget.seed,
+            );
+            let (_, rep) = hbvla::coordinator::scheduler::quantize_model(
+                &tb.model,
+                &tb.calib,
+                method.as_ref(),
+                &hbvla::eval::paper_components(),
+                budget.threads,
+            );
+            println!("method            : {}", rep.method);
+            println!("layers quantized  : {}", rep.layers.len());
+            println!("mean rel frob err : {:.4}", rep.mean_rel_err);
+            println!("bits per weight   : {:.3}", rep.bits_per_weight());
+            println!("wall time         : {:.3}s", rep.wall_secs);
+            for (name, err) in &rep.layers {
+                println!("  {name:<14} rel_err={err:.4}");
+            }
+        }
+        Some("perf") => {
+            let rep = hbvla::eval::perf::run_perf(budget.threads, budget.seed);
+            println!("## §Perf\n{}", rep.render());
+        }
+        Some("serve") => {
+            use std::sync::Arc;
+            let tb = hbvla::eval::build_testbed(
+                hbvla::model::HeadKind::Chunk,
+                hbvla::sim::tasks::libero_suite("object"),
+                budget.n_demos.min(64),
+                budget.seed,
+            );
+            let model = Arc::new(tb.model);
+            let server = hbvla::coordinator::server::PolicyServer::start(
+                Arc::clone(&model),
+                hbvla::coordinator::server::ServeConfig::default(),
+            );
+            let mut rng = hbvla::util::rng::Rng::new(budget.seed);
+            let task = &tb.tasks[0];
+            let scene = task.instantiate(&mut rng);
+            let obs = hbvla::sim::observe::observe(
+                &scene,
+                task.stages[0].instr(),
+                100,
+                &model,
+                &hbvla::sim::observe::ObsParams::clean(),
+                &mut rng,
+            );
+            let n = args.usize_or("requests", 1000);
+            let t0 = std::time::Instant::now();
+            for _ in 0..n {
+                let _ = server.submit(obs.clone());
+            }
+            let el = t0.elapsed().as_secs_f64();
+            println!("served {n} requests in {el:.3}s ({:.0} req/s)", n as f64 / el);
+            println!("latency: {}", server.latency_stats().summary());
+            println!("mean batch size: {:.2}", server.mean_batch_size());
+            server.shutdown();
+        }
+        Some("all") => {
+            emit(&hbvla::eval::tables::table1_simpler(&budget), md);
+            emit(&hbvla::eval::tables::table2_libero(&budget), md);
+            emit(&[hbvla::eval::ablation::table3_permutation(&budget)], md);
+            emit(&[hbvla::eval::ablation::table4_hessian(&budget)], md);
+            emit(&[hbvla::eval::figures::fig3_aloha(&budget)], md);
+            emit(&[hbvla::eval::figures::fig4_sensitivity(&budget)], md);
+        }
+        _ => {
+            eprintln!(
+                "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
+                 [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Bi-VLM baseline (Wang et al., 2025): Gaussian-quantile weight
+//! partitioning. The weight distribution of each row is modeled as a
+//! Gaussian; quantile boundaries split entries into `groups` equal-mass
+//! partitions, each binarized with its own (μ, α). A small per-modality
+//! fraction of salient columns (5 % language, 1 % vision, per the paper's
+//! adaptation) is kept at order-2 residual fidelity by column norm — the
+//! method is calibration-free (no Hessian), which is exactly the weakness
+//! the paper's Figure 1 analysis targets: it "fails to capture critical
+//! activation columns".
+
+use crate::methods::traits::{Binarizer, CalibData, Component, QuantizedLayer};
+use crate::quant::group::QuantStats;
+use crate::quant::obq::residual_binarize_col;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::stats::{mean, std_dev, top_k};
+
+pub struct BiVlm {
+    /// Number of Gaussian-quantile partitions per row.
+    pub groups: usize,
+}
+
+impl BiVlm {
+    pub fn new() -> Self {
+        // Two quantile partitions: one membership bit per weight keeps the
+        // storage near the 1-bit regime the paper's tables compare at.
+        BiVlm { groups: 2 }
+    }
+
+    fn salient_fraction(component: Component) -> f64 {
+        match component {
+            Component::Vision => 0.01,
+            Component::Language => 0.05,
+            Component::Projector | Component::ActionHead => 0.05,
+        }
+    }
+}
+
+impl Default for BiVlm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation) — enough
+/// precision for quantile boundaries.
+fn inv_norm_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+/// Quantile-partition binarization of one row.
+fn quantile_binarize_row(row: &mut [f32], groups: usize) -> (u64, u64) {
+    let mu = mean(row);
+    let sigma = std_dev(row).max(1e-12);
+    // Boundaries at Φ⁻¹(k/G)·σ + μ.
+    let mut bounds = Vec::with_capacity(groups - 1);
+    for k in 1..groups {
+        bounds.push(mu + sigma * inv_norm_cdf(k as f64 / groups as f64) as f32);
+    }
+    let part_of = |v: f32| -> usize {
+        bounds.iter().position(|&b| v <= b).unwrap_or(groups - 1)
+    };
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); groups];
+    for (i, &v) in row.iter().enumerate() {
+        members[part_of(v)].push(i);
+    }
+    let mut scales = 0u64;
+    let mut means = 0u64;
+    for part in &members {
+        if part.is_empty() {
+            continue;
+        }
+        let vals: Vec<f32> = part.iter().map(|&i| row[i]).collect();
+        let m = mean(&vals);
+        let a = vals.iter().map(|&v| (v - m).abs()).sum::<f32>() / vals.len() as f32;
+        for &i in part {
+            row[i] = m + a * if row[i] >= m { 1.0 } else { -1.0 };
+        }
+        scales += 1;
+        means += 1;
+    }
+    (scales, means)
+}
+
+impl Binarizer for BiVlm {
+    fn name(&self) -> &'static str {
+        "BiVLM"
+    }
+
+    fn quantize(&self, w: &Matrix, calib: &CalibData) -> QuantizedLayer {
+        // Salient columns by plain column norm (no Hessian — data-free).
+        let norms = w.col_norms();
+        let k = ((w.cols as f64 * Self::salient_fraction(calib.component)).round() as usize)
+            .min(w.cols / 2);
+        let salient = {
+            let mut s = top_k(&norms, k);
+            s.sort_unstable();
+            s
+        };
+        let is_sal = {
+            let mut v = vec![false; w.cols];
+            for &j in &salient {
+                v[j] = true;
+            }
+            v
+        };
+
+        let mut w_hat = w.clone();
+        let mut stats = QuantStats { weights: (w.rows * w.cols) as u64, ..Default::default() };
+        // Non-salient: quantile partitioning row-wise over non-salient cols.
+        let ns_idx: Vec<usize> = (0..w.cols).filter(|&j| !is_sal[j]).collect();
+        let mut ns = w.select_cols(&ns_idx);
+        for i in 0..ns.rows {
+            let (s, m) = quantile_binarize_row(ns.row_mut(i), self.groups);
+            stats.scale_params += s;
+            stats.mean_params += m;
+        }
+        stats.sign_bits += (ns.rows * ns.cols) as u64;
+        // Partition membership: ⌈log2 G⌉ bits per weight.
+        let gbits = (usize::BITS - (self.groups - 1).leading_zeros()) as u64;
+        stats.mask_bits += (ns.rows * ns.cols) as u64 * gbits;
+        w_hat.assign_cols(&ns_idx, &ns);
+
+        // Salient: order-2 residual per column.
+        for &j in &salient {
+            let col = w.col(j);
+            let q = residual_binarize_col(&col);
+            w_hat.set_col(j, &q);
+            stats.sign_bits += 2 * w.rows as u64;
+            stats.scale_params += 2;
+            stats.mean_params += 2;
+            stats.index_params += 1;
+        }
+
+        QuantizedLayer::new(w, w_hat, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn inv_norm_cdf_known_values() {
+        assert!((inv_norm_cdf(0.5) - 0.0).abs() < 1e-8);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((inv_norm_cdf(0.8413) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantile_partition_beats_single_group_on_gaussian() {
+        let mut rng = Rng::new(131);
+        let orig: Vec<f32> = (0..512).map(|_| rng.gauss() as f32).collect();
+        let mut q4 = orig.clone();
+        quantile_binarize_row(&mut q4, 4);
+        let mut q1 = orig.clone();
+        quantile_binarize_row(&mut q1, 1);
+        let err = |q: &[f32]| -> f64 {
+            orig.iter().zip(q).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(err(&q4) < 0.5 * err(&q1), "{} vs {}", err(&q4), err(&q1));
+    }
+
+    #[test]
+    fn vision_gets_fewer_salient_than_language() {
+        let mut rng = Rng::new(132);
+        let w = Matrix::gauss(64, 200, 1.0, &mut rng);
+        let qv = BiVlm::new().quantize(&w, &CalibData::identity(200, Component::Vision));
+        let ql = BiVlm::new().quantize(&w, &CalibData::identity(200, Component::Language));
+        assert!(qv.stats.index_params < ql.stats.index_params);
+    }
+
+    #[test]
+    fn output_finite_and_bounded_error() {
+        let mut rng = Rng::new(133);
+        let w = Matrix::gauss(128, 256, 1.0, &mut rng);
+        let q = BiVlm::new().quantize(&w, &CalibData::identity(256, Component::Language));
+        assert!(q.w_hat.is_finite());
+        assert!(q.rel_frob_err < 0.6, "err={}", q.rel_frob_err);
+        let bpw = q.stats.bits_per_weight();
+        assert!(bpw > 1.0 && bpw < 3.0, "bpw={bpw}");
+    }
+}

@@ -1,0 +1,285 @@
+//! HBVLA — the paper's method (Figure 2), and, by configuration, the
+//! HBLLM baseline (HBVLA minus the permutation minus the policy-aware
+//! Hessian).
+//!
+//! Pipeline per layer W:
+//! 1. choose the Hessian diagonal (policy-aware rectified H̃ or standard H);
+//! 2. partition columns into salient / non-salient (two-stage selection);
+//! 3. non-salient: fill salient columns with adjacent averages (Eq. 12),
+//!    apply the sparse orthogonal transform P (Algorithm 1), row-wise
+//!    one-level Haar (Eq. 10), group-wise 1-bit quantization per frequency
+//!    band with shared means (Eq. 11/13), inverse Haar, inverse P;
+//! 4. salient: residual R = W − Ŵ_nonsal (Eq. 15), column-wise Haar on
+//!    R(:, I_sal) (Eq. 16), order-2 residual binarization in the Haar
+//!    domain, inverse (Eq. 17);
+//! 5. Ŵ = Ŵ_nonsal + Ŵ_sal (Eq. 18).
+
+use crate::haar::{haar_rows, haar_rows_inv, half_len};
+use crate::methods::traits::{Binarizer, CalibData, QuantizedLayer};
+use crate::quant::group::{quantize_matrix_banded, GroupSpec, QuantStats};
+use crate::quant::permute::{pairing_and_chaining, permute_cols, unpermute_cols, NormKind};
+use crate::quant::saliency::{fill_salient_adjacent, select_salient};
+use crate::tensor::matrix::Matrix;
+
+/// Configuration of the Haar-hybrid quantizer family.
+#[derive(Clone, Debug)]
+pub struct HaarHybridConfig {
+    /// Use the policy-aware rectified Hessian when available (HBVLA: yes,
+    /// HBLLM: no). Table 4 ablates this.
+    pub policy_aware: bool,
+    /// Apply Algorithm 1's permutation before the Haar transform (HBVLA:
+    /// yes, HBLLM: no).
+    pub permute: bool,
+    /// Column-norm criterion for the permutation pivots (Table 3: ℓ2 wins).
+    pub norm: NormKind,
+    /// Restrict pairing to top-K neighbours (None = exhaustive).
+    pub top_k: Option<usize>,
+    /// Candidate salient columns considered (HBLLM convention: 40).
+    pub max_candidates: usize,
+    /// Group quantizer settings for the non-salient Haar coefficients.
+    pub group: GroupSpec,
+}
+
+impl HaarHybridConfig {
+    pub fn hbvla() -> Self {
+        HaarHybridConfig {
+            policy_aware: true,
+            permute: true,
+            norm: NormKind::L2,
+            top_k: None,
+            max_candidates: 40,
+            group: GroupSpec { group_size: 128, shared_mean: true, adaptive_split: true },
+        }
+    }
+
+    pub fn hbllm() -> Self {
+        HaarHybridConfig { policy_aware: false, permute: false, ..Self::hbvla() }
+    }
+}
+
+/// The HBVLA binarizer (also instantiates HBLLM via [`HaarHybridConfig`]).
+pub struct HbVla {
+    pub cfg: HaarHybridConfig,
+    name: &'static str,
+}
+
+impl HbVla {
+    pub fn new() -> Self {
+        HbVla { cfg: HaarHybridConfig::hbvla(), name: "HBVLA" }
+    }
+
+    pub fn with_config(cfg: HaarHybridConfig, name: &'static str) -> Self {
+        HbVla { cfg, name }
+    }
+
+    /// HBLLM baseline: Haar + shared-mean + ℓ2 saliency, no permutation,
+    /// standard Hessian.
+    pub fn hbllm() -> Self {
+        HbVla { cfg: HaarHybridConfig::hbllm(), name: "HBLLM" }
+    }
+}
+
+impl Default for HbVla {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Quantize the salient residual via column-wise Haar + order-2 residual
+/// group binarization (Eqs. 16–17). Returns (Ŵ_sal_cols, stats).
+fn quantize_salient_residual(r_sal: &Matrix, group: &GroupSpec) -> (Matrix, QuantStats) {
+    // Column-wise Haar = row-wise Haar on the transpose (Eq. 48); quantize
+    // the transposed coefficients row-wise per band, order 2.
+    let rt = r_sal.transpose(); // k_sal × d
+    let c = haar_rows(&rt); // k_sal × 2⌈d/2⌉
+    let j = half_len(rt.cols);
+    let bands = [(0usize, j), (j, 2 * j)];
+    // Salient path keeps per-group means (high fidelity): shared_mean off.
+    let spec = GroupSpec { shared_mean: false, ..group.clone() };
+    let (q1, mut stats) = quantize_matrix_banded(&c, &bands, &spec);
+    let resid = c.sub(&q1);
+    let (q2, s2) = quantize_matrix_banded(&resid, &bands, &spec);
+    stats.add(&s2);
+    let qc = q1.add(&q2);
+    let rec_t = haar_rows_inv(&qc, rt.cols);
+    (rec_t.transpose(), stats)
+}
+
+impl Binarizer for HbVla {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn quantize(&self, w: &Matrix, calib: &CalibData) -> QuantizedLayer {
+        let cfg = &self.cfg;
+        let h_diag = calib.diag(cfg.policy_aware);
+
+        // --- Step 1–2: policy-aware partitioning ---
+        let part = select_salient(w, &h_diag, cfg.max_candidates.min(w.cols / 2));
+
+        // --- Step 3: non-salient Haar-domain binarization ---
+        let filled = fill_salient_adjacent(w, &part.salient);
+        let pi: Vec<usize> = if cfg.permute {
+            pairing_and_chaining(&filled, cfg.top_k, cfg.norm)
+        } else {
+            (0..w.cols).collect()
+        };
+        let wp = permute_cols(&filled, &pi);
+        let u = haar_rows(&wp);
+        let j = half_len(w.cols);
+        let bands = [(0usize, j), (j, 2 * j)];
+        let (uq, mut stats) = quantize_matrix_banded(&u, &bands, &cfg.group);
+        let rec = haar_rows_inv(&uq, w.cols);
+        let w_nonsal_hat = unpermute_cols(&rec, &pi);
+
+        // --- Step 4: salient residual, column-wise Haar, order-2 ---
+        let mut w_hat = w_nonsal_hat;
+        if !part.salient.is_empty() {
+            let r = w.sub(&w_hat);
+            let r_sal = r.select_cols(&part.salient);
+            let (q_sal, s_sal) = quantize_salient_residual(&r_sal, &cfg.group);
+            stats.add(&s_sal);
+            stats.index_params += part.salient.len() as u64;
+            // Ŵ(:, sal) += quantized residual (Eq. 18).
+            let cur = w_hat.select_cols(&part.salient);
+            w_hat.assign_cols(&part.salient, &cur.add(&q_sal));
+        }
+
+        QuantizedLayer::new(w, w_hat, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::traits::Component;
+    use crate::tensor::ops::{gram, matmul};
+    use crate::util::rng::Rng;
+
+    fn calib_for(w_cols: usize, rng: &mut Rng) -> CalibData {
+        let x = Matrix::gauss(w_cols, 4 * w_cols, 1.0, rng);
+        let mut h = gram(&x);
+        h.scale(1.0 / (4 * w_cols) as f32);
+        CalibData::from_hessian(h, Component::Language)
+    }
+
+    #[test]
+    fn reconstruction_beats_rtn_on_structured_weights() {
+        let mut rng = Rng::new(111);
+        // Modality-structured weights: interleaved column groups with
+        // different means — the regime HBVLA is built for.
+        let m = 128;
+        let w = Matrix::from_fn(64, m, |_, j| {
+            let base = if j % 2 == 0 { 1.5 } else { -1.5 };
+            base + 0.3 * rng.gauss() as f32
+        });
+        let calib = calib_for(m, &mut rng);
+        let hb = HbVla::new().quantize(&w, &calib);
+        let spec = GroupSpec { group_size: 128, shared_mean: false, adaptive_split: false };
+        let (rtn, _) = crate::quant::group::quantize_matrix(&w, &spec);
+        let rtn_err = w.dist_sq(&rtn) / w.frob_norm_sq();
+        assert!(
+            hb.rel_frob_err < 0.5 * rtn_err,
+            "HBVLA {} vs RTN {}",
+            hb.rel_frob_err,
+            rtn_err
+        );
+    }
+
+    #[test]
+    fn permutation_helps_on_interleaved_modalities() {
+        let mut rng = Rng::new(112);
+        let m = 96;
+        let w = Matrix::from_fn(48, m, |_, j| {
+            let base = match j % 3 {
+                0 => 2.0,
+                1 => -2.0,
+                _ => 0.0,
+            };
+            base + 0.2 * rng.gauss() as f32
+        });
+        let calib = calib_for(m, &mut rng);
+        let with = HbVla::new().quantize(&w, &calib);
+        let without = HbVla::with_config(
+            HaarHybridConfig { permute: false, ..HaarHybridConfig::hbvla() },
+            "noperm",
+        )
+        .quantize(&w, &calib);
+        assert!(
+            with.rel_frob_err < without.rel_frob_err,
+            "permute {} !< no-permute {}",
+            with.rel_frob_err,
+            without.rel_frob_err
+        );
+    }
+
+    #[test]
+    fn hbvla_beats_hbllm_with_rectified_hessian() {
+        let mut rng = Rng::new(113);
+        let m = 64;
+        let w = Matrix::gauss(32, m, 1.0, &mut rng);
+        // Calibration where token 0 carries a distinct direction with a
+        // large rectified weight.
+        let x = Matrix::gauss(m, 256, 1.0, &mut rng);
+        let mut s = vec![1.0f32; 256];
+        for t in 0..32 {
+            s[t] = 20.0;
+        }
+        let mut h = gram(&x);
+        h.scale(1.0 / 256.0);
+        let mut hr = crate::tensor::ops::gram_weighted(&x, &s);
+        hr.scale(1.0 / s.iter().sum::<f32>());
+        let calib = CalibData::from_hessian(h.clone(), Component::Language).with_rectified(hr.clone());
+        let q_aware = HbVla::new().quantize(&w, &calib);
+        let q_plain = HbVla::hbllm().quantize(&w, &calib);
+        // Evaluate against the *rectified* objective — the policy-aware
+        // method should win on the metric it optimizes.
+        let err = |q: &QuantizedLayer, h: &Matrix| {
+            crate::quant::hessian::hessian_weighted_error(&w, &q.w_hat, h)
+        };
+        assert!(err(&q_aware, &hr) <= err(&q_plain, &hr) * 1.05,
+            "{} vs {}", err(&q_aware, &hr), err(&q_plain, &hr));
+    }
+
+    #[test]
+    fn bits_per_weight_close_to_paper() {
+        let mut rng = Rng::new(114);
+        let w = Matrix::gauss(256, 256, 1.0, &mut rng);
+        let calib = calib_for(256, &mut rng);
+        let q = HbVla::new().quantize(&w, &calib);
+        let bpw = q.stats.bits_per_weight();
+        // Paper reports ~1.08 bits; our accounting (masks + fp16 metadata
+        // + 2-bit salient) should land in the same ballpark.
+        assert!(bpw > 1.0 && bpw < 2.6, "bpw={bpw}");
+    }
+
+    #[test]
+    fn handles_odd_and_small_shapes() {
+        let mut rng = Rng::new(115);
+        for &(r, c) in &[(8usize, 9usize), (3, 4), (16, 31)] {
+            let w = Matrix::gauss(r, c, 1.0, &mut rng);
+            let calib = CalibData::identity(c, Component::Vision);
+            let q = HbVla::new().quantize(&w, &calib);
+            assert_eq!((q.w_hat.rows, q.w_hat.cols), (r, c));
+            assert!(q.w_hat.is_finite());
+            assert!(q.rel_frob_err < 1.0);
+        }
+    }
+
+    #[test]
+    fn output_error_correlates_with_forward_error() {
+        // The Frobenius objective is a proxy for ‖WX − ŴX‖ (Eq. 2): check
+        // that the reconstruction also reduces *output* error vs RTN.
+        let mut rng = Rng::new(116);
+        let w = Matrix::from_fn(32, 64, |_, j| if j < 32 { 1.0 } else { -1.0 } + 0.2 * rng.gauss() as f32);
+        let x = Matrix::gauss(64, 100, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(1.0 / 100.0);
+        let calib = CalibData::from_hessian(h, Component::Language);
+        let q = HbVla::new().quantize(&w, &calib);
+        let spec = GroupSpec { group_size: 64, shared_mean: false, adaptive_split: false };
+        let (rtn, _) = crate::quant::group::quantize_matrix(&w, &spec);
+        let out_err = |wh: &Matrix| matmul(&w.sub(wh), &x).frob_norm_sq();
+        assert!(out_err(&q.w_hat) < out_err(&rtn));
+    }
+}

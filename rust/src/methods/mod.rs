@@ -1,0 +1,106 @@
+//! Binarization methods: HBVLA (the paper) and the published baselines it
+//! is compared against, all behind the [`traits::Binarizer`] interface so
+//! the coordinator, eval drivers and benches are method-agnostic.
+
+pub mod billm;
+pub mod bivlm;
+pub mod hbvla;
+pub mod rtn;
+pub mod traits;
+
+pub use billm::BiLlm;
+pub use bivlm::BiVlm;
+pub use hbvla::{HaarHybridConfig, HbVla};
+pub use rtn::{FullPrecision, Rtn};
+pub use traits::{Binarizer, CalibData, Component, QuantizedLayer};
+
+/// The method roster of the paper's tables, in presentation order.
+pub fn paper_methods() -> Vec<Box<dyn Binarizer>> {
+    vec![
+        Box::new(BiLlm::new()),
+        Box::new(BiVlm::new()),
+        Box::new(HbVla::hbllm()),
+        Box::new(HbVla::new()),
+    ]
+}
+
+/// Look a method up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Box<dyn Binarizer>> {
+    match name.to_ascii_lowercase().as_str() {
+        "hbvla" => Some(Box::new(HbVla::new())),
+        "hbllm" => Some(Box::new(HbVla::hbllm())),
+        "billm" => Some(Box::new(BiLlm::new())),
+        "bivlm" => Some(Box::new(BiVlm::new())),
+        "rtn" | "rtn-1b" => Some(Box::new(Rtn::new())),
+        "fp" | "full" | "fullprecision" => Some(Box::new(FullPrecision)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_paper_order() {
+        let names: Vec<&str> = paper_methods().iter().map(|m| m.name()).collect();
+        assert_eq!(names, vec!["BiLLM", "BiVLM", "HBLLM", "HBVLA"]);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ["hbvla", "HBLLM", "BiLLM", "bivlm", "rtn", "fp"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    /// The ordering the paper's tables rest on. On VLA-like weights —
+    /// row-mean offsets + interleaved multi-level modality column
+    /// structure + noise — HBVLA must have the lowest reconstruction
+    /// error and BiLLM (sign-only, no transform) the highest.
+    #[test]
+    fn hbvla_best_billm_worst_on_vla_like_weights() {
+        use crate::tensor::matrix::Matrix;
+        use crate::tensor::ops::gram;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(151);
+        let m = 128;
+        let d = 64;
+        // Per-row mean offsets (breaks sign-only quantizers), interleaved
+        // 4-level modality structure (needs the permutation), iid noise.
+        let row_mu: Vec<f32> = (0..d).map(|_| 0.6 * rng.gauss() as f32).collect();
+        // Random (not periodic) modality assignment — real VLA columns are
+        // irregularly interleaved, which is what the permutation exploits.
+        let mut modality: Vec<usize> = (0..m).map(|j| j % 4).collect();
+        rng.shuffle(&mut modality);
+        let w = Matrix::from_fn(d, m, |i, j| {
+            let base = match modality[j] {
+                0 => 1.2,
+                1 => -1.2,
+                2 => 0.4,
+                _ => -0.4,
+            };
+            row_mu[i] + base + 0.25 * rng.gauss() as f32
+        });
+        let x = Matrix::gauss(m, 512, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(1.0 / 512.0);
+        let calib = CalibData::from_hessian(h, Component::Language);
+        let mut errs = std::collections::HashMap::new();
+        for method in paper_methods() {
+            let q = method.quantize(&w, &calib);
+            errs.insert(method.name().to_string(), q.rel_frob_err);
+        }
+        let hbvla = errs["HBVLA"];
+        let billm = errs["BiLLM"];
+        for (name, &e) in &errs {
+            if name != "HBVLA" {
+                assert!(hbvla <= e * 1.02, "HBVLA ({hbvla}) should beat {name} ({e})");
+            }
+            if name != "BiLLM" {
+                assert!(billm >= e, "BiLLM ({billm}) should trail {name} ({e})");
+            }
+        }
+    }
+}

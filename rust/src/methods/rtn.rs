@@ -1,0 +1,77 @@
+//! RTN-1b: round-to-nearest 1-bit baseline — per-row group binarization
+//! with no calibration, no transform, no saliency. The sanity floor every
+//! structured method must beat.
+
+use crate::methods::traits::{Binarizer, CalibData, QuantizedLayer};
+use crate::quant::group::{quantize_matrix, GroupSpec};
+use crate::tensor::matrix::Matrix;
+
+pub struct Rtn {
+    pub group: GroupSpec,
+}
+
+impl Rtn {
+    pub fn new() -> Self {
+        Rtn { group: GroupSpec { group_size: 128, shared_mean: false, adaptive_split: false } }
+    }
+}
+
+impl Default for Rtn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Binarizer for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN-1b"
+    }
+
+    fn quantize(&self, w: &Matrix, _calib: &CalibData) -> QuantizedLayer {
+        let (w_hat, stats) = quantize_matrix(w, &self.group);
+        QuantizedLayer::new(w, w_hat, stats)
+    }
+}
+
+/// FP passthrough — the full-precision "method" used as the table baseline.
+pub struct FullPrecision;
+
+impl Binarizer for FullPrecision {
+    fn name(&self) -> &'static str {
+        "FP"
+    }
+
+    fn quantize(&self, w: &Matrix, _calib: &CalibData) -> QuantizedLayer {
+        let stats = crate::quant::group::QuantStats {
+            sign_bits: 16 * (w.rows * w.cols) as u64, // bf16 storage
+            weights: (w.rows * w.cols) as u64,
+            ..Default::default()
+        };
+        QuantizedLayer::new(w, w.clone(), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::traits::Component;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fp_is_lossless_16_bits() {
+        let mut rng = Rng::new(141);
+        let w = Matrix::gauss(8, 8, 1.0, &mut rng);
+        let q = FullPrecision.quantize(&w, &CalibData::identity(8, Component::Vision));
+        assert_eq!(q.rel_frob_err, 0.0);
+        assert_eq!(q.stats.bits_per_weight(), 16.0);
+    }
+
+    #[test]
+    fn rtn_error_in_expected_range() {
+        let mut rng = Rng::new(142);
+        let w = Matrix::gauss(64, 256, 1.0, &mut rng);
+        let q = Rtn::new().quantize(&w, &CalibData::identity(256, Component::Language));
+        // Gaussian 1-bit floor is 1 − 2/π ≈ 0.363.
+        assert!((q.rel_frob_err - 0.363).abs() < 0.04, "err={}", q.rel_frob_err);
+    }
+}

@@ -1,0 +1,129 @@
+//! The common interface every binarization method implements, plus the
+//! per-layer calibration context they consume.
+
+use crate::quant::group::QuantStats;
+use crate::tensor::matrix::Matrix;
+
+/// Which VLA component a layer belongs to — drives method-specific policy
+/// (e.g. BiVLM's per-modality salient ratios) and the Figure-4 sensitivity
+/// sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Component {
+    Vision,
+    Projector,
+    Language,
+    ActionHead,
+}
+
+impl Component {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Vision => "vision",
+            Component::Projector => "projector",
+            Component::Language => "language",
+            Component::ActionHead => "action_head",
+        }
+    }
+}
+
+/// Per-layer calibration context.
+///
+/// `hessian` is the standard proxy H = XXᵀ/N; `hessian_rect` is the
+/// policy-aware rectified H̃ = XSXᵀ/Σs when the gradient probe ran for this
+/// layer. Both are normalized per token so their scales are comparable.
+#[derive(Clone, Debug)]
+pub struct CalibData {
+    pub hessian: Matrix,
+    pub hessian_rect: Option<Matrix>,
+    pub component: Component,
+}
+
+impl CalibData {
+    /// Data-free context: identity Hessian (all columns equal energy).
+    pub fn identity(dim: usize, component: Component) -> Self {
+        CalibData { hessian: Matrix::eye(dim), hessian_rect: None, component }
+    }
+
+    pub fn from_hessian(h: Matrix, component: Component) -> Self {
+        CalibData { hessian: h, hessian_rect: None, component }
+    }
+
+    pub fn with_rectified(mut self, h_rect: Matrix) -> Self {
+        self.hessian_rect = Some(h_rect);
+        self
+    }
+
+    /// Diagonal of the Hessian a method wants: rectified if requested and
+    /// available, standard otherwise.
+    pub fn diag(&self, policy_aware: bool) -> Vec<f32> {
+        if policy_aware {
+            if let Some(hr) = &self.hessian_rect {
+                return hr.diag();
+            }
+        }
+        self.hessian.diag()
+    }
+}
+
+/// Output of quantizing one layer.
+#[derive(Clone, Debug)]
+pub struct QuantizedLayer {
+    /// Dense reconstruction Ŵ — what the forward pass / PJRT path uses.
+    pub w_hat: Matrix,
+    /// Storage accounting (bits per weight ≈ 1.08 for the paper methods).
+    pub stats: QuantStats,
+    /// Relative Frobenius error ‖W − Ŵ‖²_F / ‖W‖²_F.
+    pub rel_frob_err: f64,
+}
+
+impl QuantizedLayer {
+    pub fn new(w: &Matrix, w_hat: Matrix, stats: QuantStats) -> Self {
+        let denom = w.frob_norm_sq().max(1e-30);
+        let rel = w.dist_sq(&w_hat) / denom;
+        QuantizedLayer { w_hat, stats, rel_frob_err: rel }
+    }
+}
+
+/// A post-training binarization method. Implementations must be pure
+/// functions of (W, calib) so the coordinator can quantize layers in
+/// parallel.
+pub trait Binarizer: Sync + Send {
+    fn name(&self) -> &'static str;
+    fn quantize(&self, w: &Matrix, calib: &CalibData) -> QuantizedLayer;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_calib_has_unit_diag() {
+        let c = CalibData::identity(5, Component::Language);
+        assert_eq!(c.diag(false), vec![1.0; 5]);
+        assert_eq!(c.diag(true), vec![1.0; 5]); // falls back, no rectified
+    }
+
+    #[test]
+    fn rectified_diag_selected_when_requested() {
+        let h = Matrix::eye(3);
+        let mut hr = Matrix::eye(3);
+        hr.set(0, 0, 7.0);
+        let c = CalibData::from_hessian(h, Component::Vision).with_rectified(hr);
+        assert_eq!(c.diag(true)[0], 7.0);
+        assert_eq!(c.diag(false)[0], 1.0);
+    }
+
+    #[test]
+    fn quantized_layer_rel_err() {
+        let w = Matrix::filled(2, 2, 2.0);
+        let w_hat = Matrix::filled(2, 2, 1.0);
+        let q = QuantizedLayer::new(&w, w_hat, QuantStats::default());
+        assert!((q.rel_frob_err - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn component_labels() {
+        assert_eq!(Component::Vision.label(), "vision");
+        assert_eq!(Component::ActionHead.label(), "action_head");
+    }
+}

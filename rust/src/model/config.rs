@@ -1,0 +1,183 @@
+//! MiniVLA configuration.
+//!
+//! MiniVLA mirrors the component inventory of the paper's subject models
+//! (OpenVLA / OpenVLA-OFT / CogACT): a vision encoder over visual tokens,
+//! a projector into the language-model width, a causal-attention language
+//! trunk consuming [visual | instruction | proprio] tokens, and one of
+//! three action heads. Sizes are laptop-scale by design (DESIGN.md §1);
+//! the *structure* (layer types, modality interleaving, salient activation
+//! columns) is what the quantizers see, and is faithful.
+
+/// Which action decoder the policy uses — the axis distinguishing
+/// OpenVLA / OpenVLA-OFT / CogACT in the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadKind {
+    /// OpenVLA-style: per-dimension discretized action tokens (argmax over
+    /// bins).
+    Token,
+    /// OpenVLA-OFT-style: continuous action-chunk regression.
+    Chunk,
+    /// CogACT-style: DDIM-like iterative denoising action decoder.
+    Diffusion,
+}
+
+impl HeadKind {
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            HeadKind::Token => "OpenVLA-mini",
+            HeadKind::Chunk => "OpenVLA-OFT-mini",
+            HeadKind::Diffusion => "CogACT-mini",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VlaConfig {
+    /// Vision encoder width.
+    pub d_vision: usize,
+    /// Vision encoder blocks.
+    pub vision_blocks: usize,
+    /// Language-model width (also the projector output).
+    pub d_model: usize,
+    /// Language trunk blocks.
+    pub lm_blocks: usize,
+    /// Attention heads (both encoders).
+    pub heads: usize,
+    /// MLP hidden width multiplier (hidden = mult × width).
+    pub mlp_mult: usize,
+    /// Raw visual-token feature dim (from the sim featurizer).
+    pub d_vis_in: usize,
+    /// Number of visual tokens (object slots + clutter slots).
+    pub n_visual: usize,
+    /// Instruction vocabulary size.
+    pub vocab: usize,
+    /// Raw proprio feature dim.
+    pub d_proprio: usize,
+    /// Action dimensionality (dx, dy, grip).
+    pub act_dim: usize,
+    /// Chunk length for the Chunk head.
+    pub chunk: usize,
+    /// Bins per action dim for the Token head.
+    pub bins: usize,
+    /// Denoising steps for the Diffusion head.
+    pub diffusion_steps: usize,
+    /// Hidden units of the action head's fixed tanh expansion (the
+    /// "action MLP" — real VLA heads are nonlinear).
+    pub head_hidden: usize,
+    /// Action head kind.
+    pub head: HeadKind,
+    /// Weight-structure seed.
+    pub seed: u64,
+}
+
+impl VlaConfig {
+    /// The default evaluation-scale model (≈0.9 M parameters).
+    pub fn base(head: HeadKind) -> Self {
+        VlaConfig {
+            d_vision: 48,
+            vision_blocks: 2,
+            d_model: 64,
+            lm_blocks: 3,
+            heads: 4,
+            mlp_mult: 2,
+            d_vis_in: 24,
+            n_visual: 10,
+            vocab: 64,
+            d_proprio: 12,
+            act_dim: 3,
+            chunk: 4,
+            bins: 32,
+            diffusion_steps: 6,
+            head_hidden: 96,
+            head: HeadKind::Chunk,
+            seed: 0xBEEF,
+        }
+        .with_head(head)
+    }
+
+    /// Small config for unit tests (fast).
+    pub fn tiny(head: HeadKind) -> Self {
+        VlaConfig {
+            d_vision: 24, // must be ≥ channels::APPEAR_START (20)
+            vision_blocks: 1,
+            d_model: 32,
+            lm_blocks: 2,
+            heads: 2,
+            mlp_mult: 2,
+            d_vis_in: 16, // ≥ channels::RAW_APPEAR_START (12) + some appearance
+
+            n_visual: 6,
+            vocab: 64,
+            d_proprio: 12,
+            act_dim: 3,
+            chunk: 2,
+            bins: 32,
+            diffusion_steps: 4,
+            head_hidden: 48,
+            head: HeadKind::Chunk,
+            seed: 7,
+        }
+        .with_head(head)
+    }
+
+    pub fn with_head(mut self, head: HeadKind) -> Self {
+        self.head = head;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn mlp_hidden(&self, width: usize) -> usize {
+        self.mlp_mult * width
+    }
+
+    /// Sequence length the language trunk sees:
+    /// visual tokens + 1 instruction token + 1 proprio token.
+    pub fn seq_len(&self) -> usize {
+        self.n_visual + 2
+    }
+
+    /// Readout feature dim: LM output at the instruction token ⊕ raw
+    /// proprio ⊕ held-gated copy of both (lets a linear head realize the
+    /// grasp/transport mode switch).
+    pub fn feat_dim(&self) -> usize {
+        2 * (self.d_model + self.d_proprio)
+    }
+
+    /// Head-input dim after the fixed tanh expansion.
+    pub fn head_in_dim(&self) -> usize {
+        self.feat_dim() + self.head_hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_config_consistent() {
+        let c = VlaConfig::base(HeadKind::Chunk);
+        assert_eq!(c.d_model % c.heads, 0);
+        assert_eq!(c.d_vision % c.heads, 0);
+        assert_eq!(c.seq_len(), c.n_visual + 2);
+        assert_eq!(c.feat_dim(), 2 * (c.d_model + c.d_proprio));
+    }
+
+    #[test]
+    fn head_names() {
+        assert_eq!(HeadKind::Token.model_name(), "OpenVLA-mini");
+        assert_eq!(HeadKind::Chunk.model_name(), "OpenVLA-OFT-mini");
+        assert_eq!(HeadKind::Diffusion.model_name(), "CogACT-mini");
+    }
+
+    #[test]
+    fn tiny_is_smaller() {
+        let t = VlaConfig::tiny(HeadKind::Token);
+        let b = VlaConfig::base(HeadKind::Token);
+        assert!(t.d_model < b.d_model);
+        assert_eq!(t.head, HeadKind::Token);
+    }
+}

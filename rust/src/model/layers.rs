@@ -1,0 +1,211 @@
+//! Transformer layer forwards operating directly on the [`ParamStore`]
+//! (so PTQ weight swaps take effect with no model rebuild) with an
+//! optional activation hook for Hessian calibration capture.
+//!
+//! Block structure (both encoders): Φ_attn(X) = X + MHSA(X) followed by
+//! Φ_mlp(X) = X + W₂·gelu(W₁·X), each followed by a column RMS-norm.
+//! The attention math mirrors `quant::probe::AttnBlock` (finite-diff
+//! verified there); a parity test pins the two implementations together.
+
+use crate::model::params::ParamStore;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{gelu, matmul, softmax_rows};
+
+/// Activation hook: called with (layer_name, layer_input) right before
+/// each quantizable matmul. Inputs are d_in × n_tokens.
+pub type Hook<'a> = &'a mut dyn FnMut(&str, &Matrix);
+
+/// RMS-normalize each column (token) toward unit RMS, with a *floor*:
+/// near-silent tokens (padding slots) are left small instead of being
+/// blown up into random unit vectors that would pollute attention.
+pub fn rmsnorm_cols(m: &mut Matrix) {
+    let d = m.rows as f32;
+    for t in 0..m.cols {
+        let mut ss = 0.0f32;
+        for i in 0..m.rows {
+            let v = m.at(i, t);
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d + 0.05).sqrt();
+        for i in 0..m.rows {
+            *m.at_mut(i, t) *= inv;
+        }
+    }
+}
+
+/// Multi-head self-attention sub-layer: returns X + MHSA(X).
+pub fn attn_forward(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    hook: &mut Option<Hook>,
+) -> Matrix {
+    let wq = store.get(&format!("{prefix}.wq"));
+    let wk = store.get(&format!("{prefix}.wk"));
+    let wv = store.get(&format!("{prefix}.wv"));
+    let wo = store.get(&format!("{prefix}.wo"));
+    if let Some(h) = hook {
+        h(&format!("{prefix}.wq"), x);
+        h(&format!("{prefix}.wk"), x);
+        h(&format!("{prefix}.wv"), x);
+    }
+    let d = wq.rows;
+    let n = x.cols;
+    let dh = d / heads;
+    let q = matmul(wq, x);
+    let k = matmul(wk, x);
+    let v = matmul(wv, x);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Matrix::zeros(d, n);
+    for h in 0..heads {
+        let r0 = h * dh;
+        let r1 = r0 + dh;
+        let qh = q.slice_rows(r0, r1);
+        let kh = k.slice_rows(r0, r1);
+        let vh = v.slice_rows(r0, r1);
+        let mut s = matmul(&qh.transpose(), &kh);
+        s.scale(scale);
+        softmax_rows(&mut s);
+        let ch = matmul(&vh, &s.transpose());
+        for i in 0..dh {
+            for t in 0..n {
+                ctx.set(r0 + i, t, ch.at(i, t));
+            }
+        }
+    }
+    if let Some(h) = hook {
+        h(&format!("{prefix}.wo"), &ctx);
+    }
+    let yo = matmul(wo, &ctx);
+    x.add(&yo)
+}
+
+/// MLP sub-layer: returns X + W₂·gelu(W₁·X).
+pub fn mlp_forward(store: &ParamStore, prefix: &str, x: &Matrix, hook: &mut Option<Hook>) -> Matrix {
+    let w1 = store.get(&format!("{prefix}.w1"));
+    let w2 = store.get(&format!("{prefix}.w2"));
+    if let Some(h) = hook {
+        h(&format!("{prefix}.w1"), x);
+    }
+    let mut hmid = matmul(w1, x);
+    gelu(&mut hmid.data);
+    if let Some(h) = hook {
+        h(&format!("{prefix}.w2"), &hmid);
+    }
+    let out = matmul(w2, &hmid);
+    x.add(&out)
+}
+
+/// One full transformer block: attention + MLP, RMS-norm after each.
+pub fn block_forward(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    hook: &mut Option<Hook>,
+) -> Matrix {
+    block_forward_norm(store, prefix, heads, x, hook, true)
+}
+
+/// Block with optional per-sublayer RMS-norm. The language trunk runs
+/// norm-free (gains are small, so norms stay bounded over a few blocks):
+/// per-token normalization would rescale the readout token by a
+/// scene-dependent factor, injecting multiplicative noise into the
+/// linear position decode the action head depends on.
+pub fn block_forward_norm(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    hook: &mut Option<Hook>,
+    norm: bool,
+) -> Matrix {
+    let mut h = attn_forward(store, prefix, heads, x, hook);
+    if norm {
+        rmsnorm_cols(&mut h);
+    }
+    let mut out = mlp_forward(store, prefix, &h, hook);
+    if norm {
+        rmsnorm_cols(&mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::traits::Component;
+    use crate::quant::probe::AttnBlock;
+    use crate::util::rng::Rng;
+
+    fn store_with_block(d: usize, hidden: usize, rng: &mut Rng) -> ParamStore {
+        let mut s = ParamStore::new();
+        let g = 1.0 / (d as f32).sqrt();
+        for w in ["wq", "wk", "wv", "wo"] {
+            s.insert(&format!("b.{w}"), Component::Language, true, Matrix::gauss(d, d, g, rng));
+        }
+        s.insert("b.w1", Component::Language, true, Matrix::gauss(hidden, d, g, rng));
+        s.insert("b.w2", Component::Language, true, Matrix::gauss(d, hidden, g, rng));
+        s
+    }
+
+    #[test]
+    fn attn_matches_probe_block() {
+        let mut rng = Rng::new(171);
+        let s = store_with_block(16, 32, &mut rng);
+        let x = Matrix::gauss(16, 7, 1.0, &mut rng);
+        let mut none: Option<Hook> = None;
+        let here = attn_forward(&s, "b", 4, &x, &mut none);
+        let probe = AttnBlock {
+            wq: s.get("b.wq").clone(),
+            wk: s.get("b.wk").clone(),
+            wv: s.get("b.wv").clone(),
+            wo: s.get("b.wo").clone(),
+            heads: 4,
+        };
+        let z = probe.forward(&x).z;
+        assert!(here.dist_sq(&z) < 1e-9, "dist={}", here.dist_sq(&z));
+    }
+
+    #[test]
+    fn hook_sees_every_quantizable_layer() {
+        let mut rng = Rng::new(172);
+        let s = store_with_block(8, 16, &mut rng);
+        let x = Matrix::gauss(8, 5, 1.0, &mut rng);
+        let mut seen: Vec<String> = Vec::new();
+        {
+            let mut f = |name: &str, _inp: &Matrix| seen.push(name.to_string());
+            let mut hook: Option<Hook> = Some(&mut f);
+            block_forward(&s, "b", 2, &x, &mut hook);
+        }
+        assert_eq!(seen, vec!["b.wq", "b.wk", "b.wv", "b.wo", "b.w1", "b.w2"]);
+    }
+
+    #[test]
+    fn rmsnorm_near_unit_rms_with_floor() {
+        let mut rng = Rng::new(173);
+        let mut m = Matrix::gauss(32, 5, 4.0, &mut rng);
+        rmsnorm_cols(&mut m);
+        for t in 0..5 {
+            let ss: f32 = (0..32).map(|i| m.at(i, t) * m.at(i, t)).sum();
+            // Floor of 0.05 ⇒ strong tokens normalize just below unit RMS.
+            assert!((ss / 32.0 - 1.0).abs() < 0.05, "ms={}", ss / 32.0);
+        }
+        // Near-silent tokens stay small instead of exploding.
+        let mut z = Matrix::filled(32, 1, 0.01);
+        rmsnorm_cols(&mut z);
+        assert!(z.at(0, 0).abs() < 0.1);
+    }
+
+    #[test]
+    fn block_output_finite_and_normed() {
+        let mut rng = Rng::new(174);
+        let s = store_with_block(16, 32, &mut rng);
+        let x = Matrix::gauss(16, 6, 1.0, &mut rng);
+        let mut none: Option<Hook> = None;
+        let y = block_forward(&s, "b", 4, &x, &mut none);
+        assert!(y.is_finite());
+        assert_eq!((y.rows, y.cols), (16, 6));
+    }
+}

@@ -1,0 +1,11 @@
+//! MiniVLA: configs, parameter store, transformer layers and the policy
+//! forward passes (token / chunk / diffusion action heads).
+
+pub mod config;
+pub mod layers;
+pub mod params;
+pub mod vla;
+
+pub use config::{HeadKind, VlaConfig};
+pub use params::ParamStore;
+pub use vla::{content_codes, instr_index, MiniVla, N_CONTENT_IDS};

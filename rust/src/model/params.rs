@@ -1,0 +1,343 @@
+//! Parameter store and the structured MiniVLA weight generator.
+//!
+//! Weights are *constructed*, not gradient-trained: the trunk is a
+//! random-feature transformer whose grounding attention (instruction ↔
+//! visual content matching) is built analytically from shared low-rank
+//! factors, and whose readout layers are ridge-fit on expert
+//! demonstrations ([`crate::train::bc`]). DESIGN.md §1 documents why this
+//! substitution preserves the behaviours under study. Three structural
+//! properties mirror real VLA checkpoints and drive the quantizers:
+//!
+//! 1. **modality column structure** — input channels belong to irregularly
+//!    interleaved channel groups with distinct mean levels (what the
+//!    permutation + Haar transform exploits);
+//! 2. **row offsets** — per-output-row mean shifts (what sign-only
+//!    binarization cannot represent);
+//! 3. **low-rank semantic factors** — the grounding projections are
+//!    rank-8 + noise (salient columns that Hessian-aware selection must
+//!    protect).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+use crate::methods::traits::Component;
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Channel-layout constants shared between the model and the sim
+/// featurizer (see `sim/observe.rs`).
+pub mod channels {
+    /// Content-code subspace (object identity embeddings).
+    pub const CONTENT: std::ops::Range<usize> = 0..8;
+    /// Secondary content slot (goal code in instruction embeddings).
+    pub const GOAL: std::ops::Range<usize> = 8..16;
+    /// Position (x, y).
+    pub const POS: std::ops::Range<usize> = 16..18;
+    /// Extra geometry (openness, held flag).
+    pub const EXTRA: std::ops::Range<usize> = 18..20;
+    /// Appearance features start here (outlier-prone).
+    pub const APPEAR_START: usize = 20;
+
+    /// Instruction-target code channels: the TOP 8 channels of the LM
+    /// width. Visual tokens carry (near-)zero here — the projector's
+    /// mixing rows stop below this band — so the grounding query (from
+    /// this band) cannot self-match the instruction token's key (from
+    /// CONTENT, which the instruction embedding leaves zero).
+    pub fn tgt_range(d_model: usize) -> std::ops::Range<usize> {
+        d_model - 8..d_model
+    }
+
+    /// Raw visual-token layout (before the vision embed).
+    pub const RAW_CONTENT: std::ops::Range<usize> = 0..8;
+    pub const RAW_POS: std::ops::Range<usize> = 8..10;
+    pub const RAW_EXTRA: std::ops::Range<usize> = 10..12;
+    pub const RAW_APPEAR_START: usize = 12;
+}
+
+/// One named parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub component: Component,
+    pub matrix: Matrix,
+    /// Whether PTQ methods may quantize this matrix (embeddings and
+    /// norm-adjacent vectors are kept FP, as in the paper's setup).
+    pub quantizable: bool,
+}
+
+/// Named parameter store with component tags — the unit the coordinator's
+/// layer-parallel PTQ scheduler operates on.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    params: Vec<Param>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, component: Component, quantizable: bool, m: Matrix) {
+        assert!(!self.index.contains_key(name), "duplicate param {name}");
+        self.index.insert(name.to_string(), self.params.len());
+        self.params.push(Param { name: name.to_string(), component, matrix: m, quantizable });
+    }
+
+    pub fn get(&self, name: &str) -> &Matrix {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+        &self.params[i].matrix
+    }
+
+    pub fn set(&mut self, name: &str, m: Matrix) {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+        let old = &self.params[i].matrix;
+        assert_eq!((old.rows, old.cols), (m.rows, m.cols), "shape change for {name}");
+        self.params[i].matrix = m;
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    /// Names of quantizable layers, optionally filtered to a component set.
+    pub fn quantizable_layers(&self, components: Option<&[Component]>) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| p.quantizable)
+            .filter(|p| components.map(|cs| cs.contains(&p.component)).unwrap_or(true))
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    pub fn component_of(&self, name: &str) -> Component {
+        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
+        self.params[i].component
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|p| p.matrix.rows * p.matrix.cols).sum()
+    }
+
+    /// Serialize to a simple binary format (magic, count, then per-param:
+    /// name, component byte, quantizable byte, rows, cols, f32 LE data).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"HBVLAPS1")?;
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for p in &self.params {
+            let nb = p.name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            let comp = match p.component {
+                Component::Vision => 0u8,
+                Component::Projector => 1,
+                Component::Language => 2,
+                Component::ActionHead => 3,
+            };
+            f.write_all(&[comp, p.quantizable as u8])?;
+            f.write_all(&(p.matrix.rows as u32).to_le_bytes())?;
+            f.write_all(&(p.matrix.cols as u32).to_le_bytes())?;
+            for v in &p.matrix.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"HBVLAPS1" {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut store = ParamStore::new();
+        for _ in 0..count {
+            f.read_exact(&mut u32buf)?;
+            let nlen = u32::from_le_bytes(u32buf) as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)
+                .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad name"))?;
+            let mut two = [0u8; 2];
+            f.read_exact(&mut two)?;
+            let component = match two[0] {
+                0 => Component::Vision,
+                1 => Component::Projector,
+                2 => Component::Language,
+                _ => Component::ActionHead,
+            };
+            let quantizable = two[1] != 0;
+            f.read_exact(&mut u32buf)?;
+            let rows = u32::from_le_bytes(u32buf) as usize;
+            f.read_exact(&mut u32buf)?;
+            let cols = u32::from_le_bytes(u32buf) as usize;
+            let mut data = vec![0f32; rows * cols];
+            let mut fbuf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut fbuf)?;
+                *v = f32::from_le_bytes(fbuf);
+            }
+            store.insert(&name, component, quantizable, Matrix::from_vec(rows, cols, data));
+        }
+        Ok(store)
+    }
+}
+
+/// Continuous residue fraction of the weight lattice: the part of each
+/// weight that no 1-bit representation can capture. This is the
+/// degradation-margin knob of the synthetic checkpoint (DESIGN.md §1):
+/// real VLA weights are heavily quantization-compressible *given the right
+/// structure model* (that is the premise of the paper), and ε controls how
+/// much irreducible error every binarizer pays.
+pub const WEIGHT_RESIDUE: f32 = 0.18;
+
+/// Structured trunk-weight generator: a ±σ sign lattice (the information-
+/// carrying random projection) plus irregular modality column levels plus
+/// row offsets plus an ε·σ continuous residue.
+pub fn structured_weight(
+    rows: usize,
+    cols: usize,
+    gain: f32,
+    structure: f32,
+    rng: &mut Rng,
+) -> Matrix {
+    let sigma = gain / (cols as f32).sqrt();
+    // Irregular modality grouping of input channels.
+    let levels = [1.0f32, -1.0, 0.33, -0.33];
+    let mut modality: Vec<usize> = (0..cols).map(|j| j % 4).collect();
+    rng.shuffle(&mut modality);
+    let col_mu: Vec<f32> = (0..cols).map(|j| structure * sigma * levels[modality[j]]).collect();
+    let row_mu: Vec<f32> = (0..rows).map(|_| 0.5 * structure * sigma * rng.gauss() as f32).collect();
+    Matrix::from_fn(rows, cols, |i, j| {
+        col_mu[j] + row_mu[i] + sigma * rng.gauss() as f32
+    })
+}
+
+/// Like [`structured_weight`] but the iid part is a ±σ sign lattice with
+/// an ε·σ continuous residue (ε = [`WEIGHT_RESIDUE`]): the form a
+/// structure-aware 1-bit quantizer can capture up to the residue. Used
+/// for the language-backbone weights — the quantization subject of the
+/// paper's main tables.
+pub fn structured_weight_lattice(
+    rows: usize,
+    cols: usize,
+    gain: f32,
+    structure: f32,
+    rng: &mut Rng,
+) -> Matrix {
+    let sigma = gain / (cols as f32).sqrt();
+    let levels = [1.0f32, -1.0, 0.33, -0.33];
+    let mut modality: Vec<usize> = (0..cols).map(|j| j % 4).collect();
+    rng.shuffle(&mut modality);
+    let col_mu: Vec<f32> = (0..cols).map(|j| structure * sigma * levels[modality[j]]).collect();
+    let row_mu: Vec<f32> = (0..rows).map(|_| 0.5 * structure * sigma * rng.gauss() as f32).collect();
+    Matrix::from_fn(rows, cols, |i, j| {
+        let sign = if rng.flip(0.5) { 1.0 } else { -1.0 };
+        col_mu[j] + row_mu[i] + sigma * (sign + WEIGHT_RESIDUE * rng.gauss() as f32)
+    })
+}
+
+/// Binary-valued factor (±amp entries): factors of this form survive
+/// sign-based 1-bit quantization with only the ε-residue lost.
+pub fn binary_factor(rows: usize, cols: usize, amp: f32, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| if rng.flip(0.5) { amp } else { -amp })
+}
+
+/// Low-rank grounding projection: W = A · Sel(range) + ε·noise, where
+/// Sel(range) selects `rank` input channels — queries/keys built from the
+/// same A measure content-code agreement.
+pub fn grounding_proj(
+    rows: usize,
+    cols: usize,
+    range: std::ops::Range<usize>,
+    a: &Matrix,
+    noise: f32,
+    rng: &mut Rng,
+) -> Matrix {
+    let rank = range.end - range.start;
+    assert_eq!(a.rows, rows);
+    assert_eq!(a.cols, rank);
+    let sigma = noise / (cols as f32).sqrt();
+    Matrix::from_fn(rows, cols, |i, j| {
+        let structural = if range.contains(&j) { a.at(i, j - range.start) } else { 0.0 };
+        structural + sigma * rng.gauss() as f32
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip_through_disk() {
+        let mut rng = Rng::new(161);
+        let mut s = ParamStore::new();
+        s.insert("a.w", Component::Vision, true, Matrix::gauss(4, 6, 1.0, &mut rng));
+        s.insert("b.w", Component::ActionHead, false, Matrix::gauss(3, 3, 1.0, &mut rng));
+        let dir = std::env::temp_dir().join("hbvla_test_store.bin");
+        s.save(&dir).unwrap();
+        let loaded = ParamStore::load(&dir).unwrap();
+        assert_eq!(loaded.params().len(), 2);
+        assert!(loaded.get("a.w").dist_sq(s.get("a.w")) < 1e-12);
+        assert_eq!(loaded.component_of("b.w"), Component::ActionHead);
+        assert_eq!(loaded.quantizable_layers(None), vec!["a.w".to_string()]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn quantizable_filter_by_component() {
+        let mut rng = Rng::new(162);
+        let mut s = ParamStore::new();
+        s.insert("v", Component::Vision, true, Matrix::gauss(2, 2, 1.0, &mut rng));
+        s.insert("l", Component::Language, true, Matrix::gauss(2, 2, 1.0, &mut rng));
+        let only_v = s.quantizable_layers(Some(&[Component::Vision]));
+        assert_eq!(only_v, vec!["v".to_string()]);
+    }
+
+    #[test]
+    fn structured_weight_has_modality_means() {
+        let mut rng = Rng::new(163);
+        let w = structured_weight(128, 64, 1.0, 3.0, &mut rng);
+        // Column means should spread much wider than pure gaussian noise
+        // would allow (σ/√rows).
+        let mut col_means = vec![0.0f32; 64];
+        for j in 0..64 {
+            col_means[j] = (0..128).map(|i| w.at(i, j)).sum::<f32>() / 128.0;
+        }
+        let spread = col_means.iter().cloned().fold(f32::MIN, f32::max)
+            - col_means.iter().cloned().fold(f32::MAX, f32::min);
+        let sigma = 1.0 / (64.0f32).sqrt();
+        assert!(spread > 3.0 * sigma / (128.0f32).sqrt() * 4.0, "spread={spread}");
+    }
+
+    #[test]
+    fn grounding_proj_is_low_rank_plus_noise() {
+        let mut rng = Rng::new(164);
+        let a = Matrix::gauss(32, 8, 1.0, &mut rng);
+        let w = grounding_proj(32, 40, 4..12, &a, 0.1, &mut rng);
+        // Structural columns carry A; others are small noise.
+        let norms = w.col_norms();
+        let structural_avg: f32 = (4..12).map(|j| norms[j]).sum::<f32>() / 8.0;
+        let noise_avg: f32 =
+            (0..40).filter(|j| !(4..12).contains(j)).map(|j| norms[j]).sum::<f32>() / 32.0;
+        assert!(structural_avg > 10.0 * noise_avg, "{structural_avg} vs {noise_avg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate param")]
+    fn duplicate_insert_panics() {
+        let mut rng = Rng::new(165);
+        let mut s = ParamStore::new();
+        s.insert("x", Component::Vision, true, Matrix::gauss(2, 2, 1.0, &mut rng));
+        s.insert("x", Component::Vision, true, Matrix::gauss(2, 2, 1.0, &mut rng));
+    }
+}

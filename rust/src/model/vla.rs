@@ -1,0 +1,544 @@
+//! MiniVLA: the policy family under quantization.
+//!
+//! Architecture (mirroring OpenVLA / OpenVLA-OFT / CogACT at laptop scale):
+//!
+//! ```text
+//! visual raw tokens ──vis.embed──▶ vision blocks ──proj──▶ ┐
+//! instruction id ────lm.embed_instr──────────────────────▶ ├─ LM blocks ─▶ features ─▶ head
+//! proprio ───────────lm.embed_proprio────────────────────▶ ┘
+//! ```
+//!
+//! Grounding is *constructed*: LM block 0's Q/K projections share a
+//! low-rank factor that scores content-code agreement between the
+//! instruction token and visual tokens (target selection); block 1 does
+//! the same for the goal code. Readout layers are ridge-fit by
+//! behavioural cloning ([`crate::train::bc`]). See DESIGN.md §1.
+
+use crate::methods::traits::Component;
+use crate::model::config::{HeadKind, VlaConfig};
+use crate::model::layers::{block_forward, rmsnorm_cols, Hook};
+use crate::model::params::{binary_factor, channels, grounding_proj, structured_weight, structured_weight_lattice, ParamStore};
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{matmul, matvec};
+use crate::util::rng::Rng;
+
+/// Number of global content ids (objects the benchmarks reference).
+pub const N_CONTENT_IDS: usize = 8;
+
+/// Fixed orthonormal content-code table (8 ids × 8 dims), deterministic.
+pub fn content_codes() -> Matrix {
+    let mut rng = Rng::with_stream(0xC0DE, 0xC0);
+    Matrix::orthogonal(N_CONTENT_IDS, channels::CONTENT.end - channels::CONTENT.start, 1.0, &mut rng)
+}
+
+/// Instruction index from (target content id, goal content id).
+pub fn instr_index(target_id: usize, goal_id: usize) -> usize {
+    target_id * N_CONTENT_IDS + goal_id
+}
+
+#[derive(Clone, Debug)]
+pub struct MiniVla {
+    pub cfg: VlaConfig,
+    pub store: ParamStore,
+}
+
+impl MiniVla {
+    /// Build a MiniVLA with structured weights (readout heads start at
+    /// zero; fit them with [`crate::train::bc::fit_policy`]).
+    pub fn new(cfg: VlaConfig) -> Self {
+        let mut rng = Rng::with_stream(cfg.seed, 0x51A);
+        let mut store = ParamStore::new();
+        let codes = content_codes();
+
+        // ---- vision embed: raw channels → reserved channels ----
+        let dv = cfg.d_vision;
+        // Detection channels get a strong identity map and appearance a
+        // weak projection, so the (RMS-normalized) token keeps its
+        // semantic content dominant regardless of the appearance width.
+        let mut vis_embed = Matrix::gauss(dv, cfg.d_vis_in, 0.02, &mut rng);
+        for (r, c) in channels::CONTENT.zip(channels::RAW_CONTENT) {
+            vis_embed.set(r, c, 2.0);
+        }
+        for (r, c) in channels::POS.zip(channels::RAW_POS) {
+            vis_embed.set(r, c, 2.0);
+        }
+        for (r, c) in channels::EXTRA.zip(channels::RAW_EXTRA) {
+            vis_embed.set(r, c, 2.0);
+        }
+        // appearance → weak spread over remaining rows
+        for r in channels::APPEAR_START..dv {
+            for c in channels::RAW_APPEAR_START..cfg.d_vis_in {
+                vis_embed.set(r, c, vis_embed.at(r, c) + 0.15 * rng.gauss() as f32);
+            }
+        }
+        store.insert("vis.embed", Component::Vision, false, vis_embed);
+
+        // ---- vision blocks: mild mixing (residual dominates). The
+        // write-back projections (wo, w2) leave the reserved detection
+        // channels untouched — the encoder refines appearance features
+        // while the residual path carries content/pos/extra cleanly (and
+        // zero rows stay zero under every 1-bit quantizer: α = 0).
+        let zero_rows = |m: &mut Matrix, upto: usize| {
+            for i in 0..upto {
+                for j in 0..m.cols {
+                    m.set(i, j, 0.0);
+                }
+            }
+        };
+        for b in 0..cfg.vision_blocks {
+            let p = format!("vis.{b}");
+            for w in ["wq", "wk", "wv"] {
+                store.insert(
+                    &format!("{p}.{w}"),
+                    Component::Vision,
+                    true,
+                    structured_weight(dv, dv, 0.35, 2.0, &mut rng),
+                );
+            }
+            let mut wo = structured_weight(dv, dv, 0.15, 2.0, &mut rng);
+            zero_rows(&mut wo, channels::APPEAR_START);
+            store.insert(&format!("{p}.wo"), Component::Vision, true, wo);
+            let hid = cfg.mlp_hidden(dv);
+            store.insert(&format!("{p}.w1"), Component::Vision, true, structured_weight(hid, dv, 0.35, 2.0, &mut rng));
+            let mut w2 = structured_weight(dv, hid, 0.15, 2.0, &mut rng);
+            zero_rows(&mut w2, channels::APPEAR_START);
+            store.insert(&format!("{p}.w2"), Component::Vision, true, w2);
+        }
+
+        // ---- projector: identity-lift d_vision → d_model + mixing rows ----
+        let dm = cfg.d_model;
+        assert!(dm >= dv, "projector assumes d_model >= d_vision");
+        let mut proj = Matrix::gauss(dm, dv, 0.05, &mut rng);
+        for i in 0..dv.min(channels::tgt_range(dm).start) {
+            proj.set(i, i, 1.0);
+        }
+        // Mixing rows stop below the instruction-target band: visual
+        // tokens must stay (near-)zero there so grounding cannot
+        // self-match (see channels::tgt_range).
+        for i in dv..channels::tgt_range(dm).start {
+            for j in channels::APPEAR_START..dv {
+                proj.set(i, j, proj.at(i, j) + 0.3 * rng.gauss() as f32);
+            }
+        }
+        for i in channels::tgt_range(dm) {
+            for j in 0..dv {
+                proj.set(i, j, 0.01 * rng.gauss() as f32);
+            }
+        }
+        store.insert("proj", Component::Projector, true, proj);
+
+        // ---- instruction embedding table (FP) ----
+        let mut embed_instr = Matrix::gauss(dm, cfg.vocab, 0.02, &mut rng);
+        let cdim = channels::CONTENT.end - channels::CONTENT.start;
+        let tgt = channels::tgt_range(dm);
+        for target in 0..N_CONTENT_IDS {
+            for goal in 0..N_CONTENT_IDS {
+                let col = instr_index(target, goal);
+                if col >= cfg.vocab {
+                    continue;
+                }
+                for k in 0..cdim {
+                    // Target code in the dedicated instruction band (NOT in
+                    // CONTENT — keeps the instruction's own key silent).
+                    embed_instr.set(tgt.start + k, col, codes.at(target, k));
+                    embed_instr.set(channels::GOAL.start + k, col, codes.at(goal, k));
+                }
+            }
+        }
+        store.insert("lm.embed_instr", Component::Language, false, embed_instr);
+        let mut embed_proprio = structured_weight(dm, cfg.d_proprio, 0.8, 1.0, &mut rng);
+        // The proprio token must be silent in the grounding match bands,
+        // or its random embedding competes with visual keys.
+        for i in channels::CONTENT.chain(channels::GOAL).chain(channels::tgt_range(dm)) {
+            for j in 0..cfg.d_proprio {
+                embed_proprio.set(i, j, 0.01 * rng.gauss() as f32);
+            }
+        }
+        store.insert("lm.embed_proprio", Component::Language, false, embed_proprio);
+
+        // ---- language blocks ----
+        // Shared low-rank grounding factors (content-match spaces).
+        let a_target = binary_factor(dm, cdim, 1.0, &mut rng);
+        let a_goal = binary_factor(dm, cdim, 1.0, &mut rng);
+        for b in 0..cfg.lm_blocks {
+            let p = format!("lm.{b}");
+            let (wq, wk) = match b {
+                0 => (
+                    // Query: instruction-target band; key: visual content.
+                    grounding_proj(dm, dm, channels::tgt_range(dm), &a_target, 0.25, &mut rng),
+                    grounding_proj(dm, dm, channels::CONTENT, &a_target, 0.25, &mut rng),
+                ),
+                1 => (
+                    // Query: goal band (instruction only); key: content.
+                    grounding_proj(dm, dm, channels::GOAL, &a_goal, 0.25, &mut rng),
+                    grounding_proj(dm, dm, channels::CONTENT, &a_goal, 0.25, &mut rng),
+                ),
+                _ => (
+                    // Non-grounding blocks: weak scores → high-entropy
+                    // attention (≈ mean pooling), so the untrained mixing
+                    // does not scramble the grounded readout.
+                    structured_weight_lattice(dm, dm, 0.25, 2.0, &mut rng),
+                    structured_weight_lattice(dm, dm, 0.25, 2.0, &mut rng),
+                ),
+            };
+            store.insert(&format!("{p}.wq"), Component::Language, true, wq);
+            store.insert(&format!("{p}.wk"), Component::Language, true, wk);
+            // Grounding blocks carry the attended token's position/extra
+            // channels through a dedicated low-rank factor in the value
+            // path (plus the usual structured mixing), so the readout can
+            // linearly recover target/goal positions.
+            let gain_v = if b < 2 { 0.3 } else { 0.15 };
+            let mut wv = structured_weight_lattice(dm, dm, gain_v, 2.0, &mut rng);
+            if b < 2 {
+                let span = channels::EXTRA.end - channels::POS.start;
+                let bmat = binary_factor(dm, span, 2.0, &mut rng);
+                for i in 0..dm {
+                    for (k, j) in (channels::POS.start..channels::EXTRA.end).enumerate() {
+                        *wv.at_mut(i, j) += bmat.at(i, k);
+                    }
+                }
+            }
+            store.insert(&format!("{p}.wv"), Component::Language, true, wv);
+            let gain_o = if b < 2 { 0.25 } else { 0.12 };
+            let mut wo = structured_weight_lattice(dm, dm, gain_o, 2.0, &mut rng);
+            let hid = cfg.mlp_hidden(dm);
+            let mut w1 = structured_weight_lattice(hid, dm, 0.4, 2.0, &mut rng);
+            let mut w2 = structured_weight_lattice(dm, hid, 0.15, 2.0, &mut rng);
+            let _ = &mut w1;
+            if b == 0 {
+                // Block 0 must not pollute the match bands the goal
+                // grounding (block 1) reads: silence those write rows.
+                for i in channels::CONTENT.chain(channels::GOAL) {
+                    for j in 0..dm {
+                        wo.set(i, j, 0.0);
+                    }
+                    for j in 0..hid {
+                        w2.set(i, j, 0.0);
+                    }
+                }
+            }
+            store.insert(&format!("{p}.wo"), Component::Language, true, wo);
+            store.insert(&format!("{p}.w1"), Component::Language, true, w1);
+            store.insert(&format!("{p}.w2"), Component::Language, true, w2);
+        }
+
+        // ---- action heads (zero-init; BC fits them) ----
+        // Fixed tanh random-feature expansion: the action head's "MLP"
+        // nonlinearity (clamp/mode-switch shapes), ridge-fit on top.
+        let fd = cfg.feat_dim();
+        store.insert(
+            "head.expand",
+            Component::ActionHead,
+            true,
+            Matrix::gauss(cfg.head_hidden, fd, 1.0 / (fd as f32).sqrt() * 1.5, &mut rng),
+        );
+        let feat = cfg.head_in_dim();
+        // Feature standardization (the head's input layernorm-affine):
+        // row 0 = mean, row 1 = std, fit by BC. Keeps ridge regularization
+        // uniform per dimension — no tiny-variance dim can acquire a huge
+        // inverse weight that would amplify quantization noise.
+        let mut hn = Matrix::zeros(2, feat);
+        for j in 0..feat {
+            hn.set(1, j, 1.0);
+        }
+        store.insert("head.norm", Component::ActionHead, false, hn);
+        match cfg.head {
+            HeadKind::Token => {
+                store.insert(
+                    "head.main",
+                    Component::ActionHead,
+                    true,
+                    Matrix::zeros(cfg.act_dim, feat),
+                );
+            }
+            HeadKind::Chunk => {
+                store.insert(
+                    "head.main",
+                    Component::ActionHead,
+                    true,
+                    Matrix::zeros(cfg.chunk * cfg.act_dim, feat),
+                );
+            }
+            HeadKind::Diffusion => {
+                for t in 0..cfg.diffusion_steps {
+                    store.insert(
+                        &format!("head.diff.{t}"),
+                        Component::ActionHead,
+                        true,
+                        Matrix::zeros(cfg.act_dim, cfg.act_dim + feat + 1),
+                    );
+                }
+            }
+        }
+
+        MiniVla { cfg, store }
+    }
+
+    /// Run the trunk: visual raw tokens (d_vis_in × n_visual), instruction
+    /// index, proprio vector → readout feature vector.
+    pub fn features(
+        &self,
+        visual_raw: &Matrix,
+        instr_id: usize,
+        proprio: &[f32],
+        hook: &mut Option<Hook>,
+    ) -> Vec<f32> {
+        let cfg = &self.cfg;
+        assert_eq!(visual_raw.rows, cfg.d_vis_in);
+        assert_eq!(visual_raw.cols, cfg.n_visual);
+        assert_eq!(proprio.len(), cfg.d_proprio);
+        assert!(instr_id < cfg.vocab);
+
+        // Vision encoder.
+        let mut xv = matmul(self.store.get("vis.embed"), visual_raw);
+        rmsnorm_cols(&mut xv);
+        for b in 0..cfg.vision_blocks {
+            xv = block_forward(&self.store, &format!("vis.{b}"), cfg.heads, &xv, hook);
+        }
+
+        // Projector.
+        if let Some(h) = hook {
+            h("proj", &xv);
+        }
+        let mut xp = matmul(self.store.get("proj"), &xv);
+        rmsnorm_cols(&mut xp);
+
+        // Assemble the LM sequence: [visual | instruction | proprio].
+        let n = cfg.seq_len();
+        let dm = cfg.d_model;
+        let mut seq = Matrix::zeros(dm, n);
+        for t in 0..cfg.n_visual {
+            for i in 0..dm {
+                seq.set(i, t, xp.at(i, t));
+            }
+        }
+        let instr = self.store.get("lm.embed_instr");
+        for i in 0..dm {
+            seq.set(i, cfg.n_visual, instr.at(i, instr_id));
+        }
+        let pvec = matvec(self.store.get("lm.embed_proprio"), proprio);
+        for i in 0..dm {
+            seq.set(i, cfg.n_visual + 1, pvec[i]);
+        }
+        rmsnorm_cols(&mut seq);
+
+        for b in 0..cfg.lm_blocks {
+            seq = crate::model::layers::block_forward_norm(
+                &self.store,
+                &format!("lm.{b}"),
+                cfg.heads,
+                &seq,
+                hook,
+                true,
+            );
+        }
+
+        // Readout: LM output at the instruction token ⊕ raw proprio,
+        // duplicated with a held gate so a linear head can mode-switch.
+        let held = proprio[3];
+        let mut base = Vec::with_capacity(dm + cfg.d_proprio);
+        for i in 0..dm {
+            base.push(seq.at(i, cfg.n_visual));
+        }
+        base.extend_from_slice(proprio);
+        let mut feat = Vec::with_capacity(2 * base.len());
+        feat.extend_from_slice(&base);
+        feat.extend(base.iter().map(|&v| held * v));
+        feat
+    }
+
+    /// Apply the head's fixed tanh expansion: [f | tanh(W_e f)] — the
+    /// action head's MLP nonlinearity (ridge fits the layer on top) —
+    /// followed by the BC-fit standardization (head.norm).
+    pub fn head_features(&self, feat: &[f32]) -> Vec<f32> {
+        let w = self.store.get("head.expand");
+        let h = matvec(w, feat);
+        let mut out = Vec::with_capacity(feat.len() + h.len());
+        out.extend_from_slice(feat);
+        out.extend(h.iter().map(|v| v.tanh()));
+        let norm = self.store.get("head.norm");
+        for (j, v) in out.iter_mut().enumerate() {
+            *v = (*v - norm.at(0, j)) / norm.at(1, j).max(1e-4);
+        }
+        out
+    }
+
+    /// Decode an action chunk from features. Every head returns
+    /// `chunk_len()` consecutive actions (Token/Diffusion heads return a
+    /// single action). `rng` drives the diffusion head's initial noise.
+    pub fn decode(&self, trunk_feat: &[f32], rng: &mut Rng) -> Vec<Vec<f32>> {
+        let feat = &self.head_features(trunk_feat);
+        let cfg = &self.cfg;
+        match cfg.head {
+            HeadKind::Chunk => {
+                let w = self.store.get("head.main");
+                let out = matvec(w, feat);
+                (0..cfg.chunk)
+                    .map(|c| {
+                        (0..cfg.act_dim)
+                            .map(|d| out[c * cfg.act_dim + d].clamp(-1.0, 1.0))
+                            .collect()
+                    })
+                    .collect()
+            }
+            HeadKind::Token => {
+                // OpenVLA-style discrete action tokens: the head predicts a
+                // continuous value per dim which is emitted as the nearest
+                // of `bins` token centers — the discretization error of the
+                // token interface is exactly what distinguishes OpenVLA
+                // from OFT's continuous chunks in the paper's tables.
+                let w = self.store.get("head.main");
+                let pred = matvec(w, feat);
+                let mut a = Vec::with_capacity(cfg.act_dim);
+                for d in 0..cfg.act_dim {
+                    let v = pred[d].clamp(-1.0, 1.0);
+                    let b = (((v + 1.0) / 2.0 * cfg.bins as f32) as usize).min(cfg.bins - 1);
+                    a.push(-1.0 + 2.0 * (b as f32 + 0.5) / cfg.bins as f32);
+                }
+                vec![a]
+            }
+            HeadKind::Diffusion => {
+                let mut a: Vec<f32> = (0..cfg.act_dim).map(|_| rng.gauss() as f32).collect();
+                let mut zin = vec![0.0f32; cfg.act_dim + feat.len() + 1];
+                for t in (0..cfg.diffusion_steps).rev() {
+                    let w = self.store.get(&format!("head.diff.{t}"));
+                    zin[..cfg.act_dim].copy_from_slice(&a);
+                    zin[cfg.act_dim..cfg.act_dim + feat.len()].copy_from_slice(feat);
+                    zin[cfg.act_dim + feat.len()] = 1.0;
+                    a = matvec(w, &zin);
+                }
+                vec![a.into_iter().map(|v| v.clamp(-1.0, 1.0)).collect()]
+            }
+        }
+    }
+
+    /// How many actions one decode yields.
+    pub fn chunk_len(&self) -> usize {
+        match self.cfg.head {
+            HeadKind::Chunk => self.cfg.chunk,
+            _ => 1,
+        }
+    }
+
+    /// Convenience: features + decode in one call.
+    pub fn act(
+        &self,
+        visual_raw: &Matrix,
+        instr_id: usize,
+        proprio: &[f32],
+        rng: &mut Rng,
+    ) -> Vec<Vec<f32>> {
+        let feat = self.features(visual_raw, instr_id, proprio, &mut None);
+        self.decode(&feat, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::VlaConfig;
+
+    fn rand_obs(cfg: &VlaConfig, rng: &mut Rng) -> (Matrix, usize, Vec<f32>) {
+        let v = Matrix::gauss(cfg.d_vis_in, cfg.n_visual, 1.0, rng);
+        let p: Vec<f32> = (0..cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+        (v, 3, p)
+    }
+
+    #[test]
+    fn forward_shapes_all_heads() {
+        for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+            let cfg = VlaConfig::tiny(head);
+            let m = MiniVla::new(cfg.clone());
+            let mut rng = Rng::new(181);
+            let (v, i, p) = rand_obs(&cfg, &mut rng);
+            let feat = m.features(&v, i, &p, &mut None);
+            assert_eq!(feat.len(), cfg.feat_dim());
+            let acts = m.decode(&feat, &mut rng);
+            assert_eq!(acts.len(), m.chunk_len());
+            for a in &acts {
+                assert_eq!(a.len(), cfg.act_dim);
+                assert!(a.iter().all(|v| v.is_finite() && *v >= -1.0 && *v <= 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let cfg = VlaConfig::tiny(HeadKind::Chunk);
+        let m = MiniVla::new(cfg.clone());
+        let mut rng = Rng::new(182);
+        let (v, i, p) = rand_obs(&cfg, &mut rng);
+        let f1 = m.features(&v, i, &p, &mut None);
+        let f2 = m.features(&v, i, &p, &mut None);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn held_gate_duplicates_features() {
+        let cfg = VlaConfig::tiny(HeadKind::Chunk);
+        let m = MiniVla::new(cfg.clone());
+        let mut rng = Rng::new(183);
+        let (v, i, mut p) = rand_obs(&cfg, &mut rng);
+        p[3] = 0.0; // not held
+        let f0 = m.features(&v, i, &p, &mut None);
+        let half = f0.len() / 2;
+        assert!(f0[half..].iter().all(|&x| x == 0.0));
+        p[3] = 1.0; // held
+        let f1 = m.features(&v, i, &p, &mut None);
+        // held copies: second half equals first half (proprio differs in
+        // the held flag itself, so compare the LM part only).
+        for k in 0..cfg.d_model {
+            assert!((f1[half + k] - f1[k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grounding_attends_to_target_object() {
+        // Token with the instruction's target content code should dominate
+        // the block-0 attention from the instruction token.
+        let cfg = VlaConfig::tiny(HeadKind::Chunk);
+        let m = MiniVla::new(cfg.clone());
+        let codes = content_codes();
+        // Visual raw: slot 2 carries content id 5; others id 0..
+        let mut v = Matrix::zeros(cfg.d_vis_in, cfg.n_visual);
+        for t in 0..cfg.n_visual {
+            let id = if t == 2 { 5 } else { 0 };
+            for k in 0..8 {
+                v.set(k, t, codes.at(id, k));
+            }
+            v.set(8, t, 0.1 * t as f32); // positions
+            v.set(9, t, 0.2);
+        }
+        let p = vec![0.0f32; cfg.d_proprio];
+        let instr = instr_index(5, 0);
+        // Features must differ strongly when the target moves.
+        let f_a = m.features(&v, instr, &p, &mut None);
+        let mut v2 = v.clone();
+        v2.set(8, 2, 0.9); // move target object
+        let f_b = m.features(&v2, instr, &p, &mut None);
+        let mut v3 = v.clone();
+        v3.set(8, 4, 0.9); // move a distractor instead
+        let f_c = m.features(&v3, instr, &p, &mut None);
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+        };
+        assert!(
+            d(&f_a, &f_b) > 2.0 * d(&f_a, &f_c),
+            "target move {} should outweigh distractor move {}",
+            d(&f_a, &f_b),
+            d(&f_a, &f_c)
+        );
+    }
+
+    #[test]
+    fn quantizable_inventory_excludes_embeddings() {
+        let cfg = VlaConfig::base(HeadKind::Chunk);
+        let m = MiniVla::new(cfg);
+        let q = m.store.quantizable_layers(None);
+        assert!(!q.iter().any(|n| n.contains("embed")));
+        assert!(q.iter().any(|n| n == "proj"));
+        assert!(q.iter().any(|n| n.starts_with("lm.")));
+        assert!(q.iter().any(|n| n.starts_with("vis.")));
+        assert!(q.iter().any(|n| n.starts_with("head.")));
+    }
+}

@@ -1,0 +1,190 @@
+//! Calibration Hessians.
+//!
+//! Standard proxy: H = X Xᵀ = Σₜ xₜxₜᵀ over calibration tokens (GPTQ/OBQ
+//! convention). The paper's *policy-aware rectified* Hessian (Eq. 3)
+//! replaces the uniform token sum with a token-importance-weighted one,
+//! H̃ = X S Xᵀ = Σₜ sₜ xₜxₜᵀ, where S comes from the block gradient probe
+//! ([`crate::quant::probe`]). This module provides streaming accumulation
+//! of both forms.
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{gram, gram_weighted};
+
+/// Streaming accumulator for H (d×d) over calibration activations.
+/// Activations arrive as matrices with **rows = feature dims (d), cols =
+/// tokens** — the xₜ-as-columns convention of the paper.
+#[derive(Clone, Debug)]
+pub struct HessianAccum {
+    pub h: Matrix,
+    pub tokens: usize,
+    /// Sum of token weights seen (equals `tokens` for the uniform Hessian).
+    pub weight_sum: f64,
+}
+
+impl HessianAccum {
+    pub fn new(dim: usize) -> Self {
+        HessianAccum { h: Matrix::zeros(dim, dim), tokens: 0, weight_sum: 0.0 }
+    }
+
+    /// Add a chunk with uniform token weights: H += X Xᵀ.
+    pub fn add(&mut self, x: &Matrix) {
+        assert_eq!(x.rows, self.h.rows, "feature dim mismatch");
+        let g = gram(x);
+        self.h.add_assign(&g);
+        self.tokens += x.cols;
+        self.weight_sum += x.cols as f64;
+    }
+
+    /// Add a chunk with per-token weights sₜ: H̃ += X S Xᵀ (Eq. 3).
+    pub fn add_weighted(&mut self, x: &Matrix, s: &[f32]) {
+        assert_eq!(x.rows, self.h.rows, "feature dim mismatch");
+        assert_eq!(x.cols, s.len(), "token weight length mismatch");
+        let g = gram_weighted(x, s);
+        self.h.add_assign(&g);
+        self.tokens += x.cols;
+        self.weight_sum += s.iter().map(|&v| v as f64).sum::<f64>();
+    }
+
+    /// Finalized Hessian, normalized by total weight so that scales are
+    /// comparable between the standard and rectified variants.
+    pub fn finalize(&self) -> Matrix {
+        let mut h = self.h.clone();
+        if self.weight_sum > 0.0 {
+            h.scale((1.0 / self.weight_sum) as f32);
+        }
+        h
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        self.finalize().diag()
+    }
+}
+
+/// H-weighted reconstruction error ‖(W − Ŵ) X‖²_F = tr(Δ H Δᵀ) — the
+/// proxy objective of Eq. 2 evaluated through the Hessian. This is the
+/// metric Tables 3/4 report (as a relative %).
+pub fn hessian_weighted_error(w: &Matrix, w_hat: &Matrix, h: &Matrix) -> f64 {
+    assert_eq!(w.cols, h.rows);
+    let delta = w.sub(w_hat);
+    // tr(Δ H Δᵀ) = Σ_i  δᵢ H δᵢᵀ  over rows δᵢ.
+    let mut total = 0.0f64;
+    for i in 0..delta.rows {
+        let d = delta.row(i);
+        // v = H dᵀ ; total += d · v
+        for r in 0..h.rows {
+            if d[r] == 0.0 {
+                continue;
+            }
+            let hrow = h.row(r);
+            let mut acc = 0.0f32;
+            for c in 0..h.cols {
+                acc += hrow[c] * d[c];
+            }
+            total += (d[r] * acc) as f64;
+        }
+    }
+    total.max(0.0)
+}
+
+/// Relative H-weighted error: err(Ŵ) / err(0) — i.e. normalized by the
+/// full signal energy ‖W X‖². Returned as a fraction in [0, ~1].
+pub fn relative_hessian_error(w: &Matrix, w_hat: &Matrix, h: &Matrix) -> f64 {
+    let zero = Matrix::zeros(w.rows, w.cols);
+    let sig = hessian_weighted_error(w, &zero, h);
+    if sig <= 0.0 {
+        return 0.0;
+    }
+    hessian_weighted_error(w, w_hat, h) / sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accum_matches_direct_gram() {
+        let mut rng = Rng::new(61);
+        let x1 = Matrix::gauss(8, 30, 1.0, &mut rng);
+        let x2 = Matrix::gauss(8, 20, 1.0, &mut rng);
+        let mut acc = HessianAccum::new(8);
+        acc.add(&x1);
+        acc.add(&x2);
+        // Direct: concat and gram, then normalize by tokens.
+        let mut xall = Matrix::zeros(8, 50);
+        for i in 0..8 {
+            for t in 0..30 {
+                xall.set(i, t, x1.at(i, t));
+            }
+            for t in 0..20 {
+                xall.set(i, 30 + t, x2.at(i, t));
+            }
+        }
+        let mut expect = gram(&xall);
+        expect.scale(1.0 / 50.0);
+        assert!(acc.finalize().dist_sq(&expect) < 1e-6);
+        assert_eq!(acc.tokens, 50);
+    }
+
+    #[test]
+    fn weighted_with_unit_weights_equals_uniform() {
+        let mut rng = Rng::new(62);
+        let x = Matrix::gauss(6, 40, 1.0, &mut rng);
+        let mut a = HessianAccum::new(6);
+        a.add(&x);
+        let mut b = HessianAccum::new(6);
+        b.add_weighted(&x, &vec![1.0; 40]);
+        assert!(a.finalize().dist_sq(&b.finalize()) < 1e-8);
+    }
+
+    #[test]
+    fn weights_suppress_outlier_tokens() {
+        let mut rng = Rng::new(63);
+        // One token with huge magnitude dominates the uniform Hessian; a
+        // small weight on it restores balance (the dual-dominance fix).
+        let mut x = Matrix::gauss(4, 20, 1.0, &mut rng);
+        for i in 0..4 {
+            x.set(i, 0, 100.0);
+        }
+        let mut uni = HessianAccum::new(4);
+        uni.add(&x);
+        let mut w = vec![1.0f32; 20];
+        w[0] = 1e-4;
+        let mut rect = HessianAccum::new(4);
+        rect.add_weighted(&x, &w);
+        let h_uni = uni.finalize();
+        let h_rect = rect.finalize();
+        // Uniform Hessian diag is outlier-dominated (~100²/20 = 500).
+        assert!(h_uni.at(0, 0) > 100.0);
+        // Rectified diag is back at O(1).
+        assert!(h_rect.at(0, 0) < 10.0, "h_rect diag {}", h_rect.at(0, 0));
+    }
+
+    #[test]
+    fn hessian_error_matches_explicit_form() {
+        let mut rng = Rng::new(64);
+        let w = Matrix::gauss(5, 7, 1.0, &mut rng);
+        let w_hat = Matrix::gauss(5, 7, 1.0, &mut rng);
+        let x = Matrix::gauss(7, 60, 1.0, &mut rng);
+        let h = gram(&x);
+        // Explicit ‖(W−Ŵ)X‖²_F
+        let d = w.sub(&w_hat);
+        let dx = matmul(&d, &x);
+        let direct = dx.frob_norm_sq();
+        let via_h = hessian_weighted_error(&w, &w_hat, &h);
+        assert!((direct - via_h).abs() < 1e-2 * (1.0 + direct), "{direct} vs {via_h}");
+    }
+
+    #[test]
+    fn relative_error_is_zero_for_exact() {
+        let mut rng = Rng::new(65);
+        let w = Matrix::gauss(4, 6, 1.0, &mut rng);
+        let x = Matrix::gauss(6, 30, 1.0, &mut rng);
+        let h = gram(&x);
+        assert_eq!(relative_hessian_error(&w, &w, &h), 0.0);
+        let zero = Matrix::zeros(4, 6);
+        let r = relative_hessian_error(&w, &zero, &h);
+        assert!((r - 1.0).abs() < 1e-9);
+    }
+}

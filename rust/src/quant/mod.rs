@@ -1,0 +1,19 @@
+//! Quantization core: the building blocks of HBVLA and its baselines.
+//!
+//! - [`group`] — the group-wise 1-bit primitive Q(u) = α·sign(u − μ)
+//!   (Eq. 11) with shared-mean and adaptive dense/sparse grouping;
+//! - [`packed`] — true 1-bit bitplane storage + packed GEMV (deploy path);
+//! - [`permute`] — the sparse orthogonal transform of Algorithm 1;
+//! - [`hessian`] — standard and policy-aware rectified Hessians (Eq. 3);
+//! - [`probe`] — the block-wise gradient probe producing token-importance
+//!   scores (Eqs. 4–9), with a hand-written MHSA backward;
+//! - [`saliency`] — salient column partitioning (two-stage selection);
+//! - [`obq`] — OBQ/GPTQ error compensation (Appendix Eq. 28).
+
+pub mod group;
+pub mod hessian;
+pub mod obq;
+pub mod packed;
+pub mod permute;
+pub mod probe;
+pub mod saliency;

@@ -1,0 +1,182 @@
+//! OBQ / GPTQ error compensation with an (optionally) importance-aware
+//! Hessian — the closed-form update of the paper's Appendix (Eq. 28).
+//!
+//! Quantizing column q and re-minimizing ‖ΔW X‖² over the remaining
+//! columns gives the classic OBS/GPTQ recursion
+//!
+//!   e_q = (w_q − ŵ_q) / (H⁻¹)_qq,   w_k ← w_k − e_q · (H⁻¹)_qk  (k > q)
+//!
+//! applied column-by-column in index order. With the importance-aware
+//! Hessian H_e = X G Xᵀ (G diagonal token importance) the identical update
+//! holds with H replaced by H_e — that substitution is the whole proof of
+//! Eq. 28, and is what the `hessian` argument receives when the
+//! policy-aware path is on.
+
+use crate::tensor::linalg::spd_inverse;
+use crate::tensor::matrix::Matrix;
+
+/// Percent-damping used before inversion, as in GPTQ.
+pub const PERCDAMP: f64 = 0.01;
+
+/// Run the OBQ sweep over the columns of `w` (d_out × d_in).
+///
+/// `quantize_col(j, col) -> quantized col` supplies the per-column
+/// quantizer (binarization, residual binarization, …). Columns are visited
+/// in ascending index order; after each column is frozen, its error is
+/// propagated into the not-yet-visited columns through H⁻¹.
+///
+/// Returns the quantized matrix Ŵ (the compensated weights are internal).
+pub fn obq_sweep<F>(w: &Matrix, hessian: &Matrix, mut quantize_col: F) -> Matrix
+where
+    F: FnMut(usize, &[f32]) -> Vec<f32>,
+{
+    assert_eq!(w.cols, hessian.rows);
+    assert_eq!(hessian.rows, hessian.cols);
+    let n = w.cols;
+    let d = w.rows;
+    let hinv = spd_inverse(hessian, PERCDAMP).expect("Hessian not invertible even after damping");
+
+    // Work on a mutable copy; q holds the frozen quantized columns.
+    let mut work = w.clone();
+    let mut q = Matrix::zeros(d, n);
+    for j in 0..n {
+        let col = work.col(j);
+        let qcol = quantize_col(j, &col);
+        assert_eq!(qcol.len(), d);
+        q.set_col(j, &qcol);
+        let hjj = hinv.at(j, j).max(1e-12);
+        // Propagate error to later columns: w_k -= e * hinv[j,k]
+        for i in 0..d {
+            let e = (col[i] - qcol[i]) / hjj;
+            if e == 0.0 {
+                continue;
+            }
+            let row = work.row_mut(i);
+            let hrow = hinv.row(j);
+            for k in j + 1..n {
+                row[k] -= e * hrow[k];
+            }
+        }
+    }
+    q
+}
+
+/// Convenience: OBQ sweep where each column is binarized about its mean
+/// with optimal scale (1-bit per-column quantizer), the building block of
+/// the BiLLM baseline's non-salient path.
+pub fn binarize_col(col: &[f32]) -> Vec<f32> {
+    let n = col.len() as f32;
+    let mu = col.iter().sum::<f32>() / n;
+    let alpha = col.iter().map(|&v| (v - mu).abs()).sum::<f32>() / n;
+    col.iter().map(|&v| mu + alpha * if v >= mu { 1.0 } else { -1.0 }).collect()
+}
+
+/// Order-2 residual per-column binarizer (salient columns).
+pub fn residual_binarize_col(col: &[f32]) -> Vec<f32> {
+    let q1 = binarize_col(col);
+    let resid: Vec<f32> = col.iter().zip(&q1).map(|(&v, &q)| v - q).collect();
+    let q2 = binarize_col(&resid);
+    q1.iter().zip(&q2).map(|(&a, &b)| a + b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hessian::hessian_weighted_error;
+    use crate::tensor::ops::gram;
+    use crate::util::rng::Rng;
+
+    fn calib(rng: &mut Rng, d_in: usize, n: usize) -> Matrix {
+        Matrix::gauss(d_in, n, 1.0, rng)
+    }
+
+    #[test]
+    fn obq_reduces_hessian_weighted_error_vs_direct() {
+        let mut rng = Rng::new(81);
+        let w = Matrix::gauss(24, 32, 1.0, &mut rng);
+        // Correlated activations (x = A z): off-diagonal Hessian structure
+        // is where OBQ compensation has room to help.
+        let mix = Matrix::gauss(32, 8, 1.0, &mut rng);
+        let z = calib(&mut rng, 8, 128);
+        let x = crate::tensor::ops::matmul(&mix, &z);
+        let h = gram(&x);
+        // Direct column binarization (no compensation).
+        let mut direct = Matrix::zeros(24, 32);
+        for j in 0..32 {
+            direct.set_col(j, &binarize_col(&w.col(j)));
+        }
+        let q = obq_sweep(&w, &h, |_, col| binarize_col(col));
+        let e_direct = hessian_weighted_error(&w, &direct, &h);
+        let e_obq = hessian_weighted_error(&w, &q, &h);
+        assert!(
+            e_obq < 0.9 * e_direct,
+            "OBQ should reduce the H-weighted error: {e_obq} vs {e_direct}"
+        );
+    }
+
+    #[test]
+    fn obq_with_lossless_quantizer_is_identity() {
+        let mut rng = Rng::new(82);
+        let w = Matrix::gauss(8, 10, 1.0, &mut rng);
+        let x = calib(&mut rng, 10, 40);
+        let h = gram(&x);
+        let q = obq_sweep(&w, &h, |_, col| col.to_vec());
+        assert!(q.dist_sq(&w) < 1e-10);
+    }
+
+    #[test]
+    fn residual_col_better_than_single() {
+        let mut rng = Rng::new(83);
+        let col: Vec<f32> = (0..64).map(|_| rng.gauss() as f32).collect();
+        let e1: f64 = col
+            .iter()
+            .zip(&binarize_col(&col))
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let e2: f64 = col
+            .iter()
+            .zip(&residual_binarize_col(&col))
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(e2 < 0.6 * e1);
+    }
+
+    #[test]
+    fn importance_aware_hessian_prioritizes_weighted_tokens() {
+        // Quantize with H built from token-weighted calibration; the
+        // resulting Ŵ should fit the heavily weighted token better than
+        // the uniform-H solution does.
+        let mut rng = Rng::new(84);
+        let d_in = 16;
+        let w = Matrix::gauss(8, d_in, 1.0, &mut rng);
+        let x = calib(&mut rng, d_in, 64);
+        // Token 0 is "policy critical": weight 50.
+        let mut s = vec![1.0f32; 64];
+        s[0] = 50.0;
+        let h_uni = gram(&x);
+        let h_imp = crate::tensor::ops::gram_weighted(&x, &s);
+        let q_uni = obq_sweep(&w, &h_uni, |_, col| binarize_col(col));
+        let q_imp = obq_sweep(&w, &h_imp, |_, col| binarize_col(col));
+        // Error on the critical token x₀.
+        let x0 = x.col(0);
+        let err_on = |q: &Matrix| -> f64 {
+            let mut e = 0.0f64;
+            for i in 0..8 {
+                let mut y = 0.0f32;
+                let mut yq = 0.0f32;
+                for j in 0..d_in {
+                    y += w.at(i, j) * x0[j];
+                    yq += q.at(i, j) * x0[j];
+                }
+                e += ((y - yq) as f64).powi(2);
+            }
+            e
+        };
+        assert!(
+            err_on(&q_imp) < err_on(&q_uni),
+            "importance-aware OBQ should fit the critical token better: {} vs {}",
+            err_on(&q_imp),
+            err_on(&q_uni)
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! True 1-bit weight storage and the deploy-path kernels.
+//!
+//! The evaluation pipeline works with dequantized reconstructions (for
+//! closed-loop parity with the PJRT path), but a deployable system must
+//! actually *store* binarized layers packed: sign bitplanes in `u64` words
+//! plus per-group (α, μ) in f32 (fp16-equivalent accounting). This module
+//! provides the packed container, pack/dequant round-trips, and a packed
+//! GEMV whose inner loop flips activation signs through the IEEE-754 sign
+//! bit (branch-free), which is what the Pallas L1 kernel mirrors on TPU
+//! (see `python/compile/kernels/binary_matmul.py` and DESIGN.md
+//! §Hardware-Adaptation).
+
+use crate::tensor::matrix::Matrix;
+
+/// A packed 1-bit matrix: for each row, `cols` sign bits in u64 words and
+/// one (α, μ) pair per group of `group_size` consecutive columns.
+#[derive(Clone, Debug)]
+pub struct PackedBits {
+    pub rows: usize,
+    pub cols: usize,
+    pub group_size: usize,
+    words_per_row: usize,
+    groups_per_row: usize,
+    /// Row-major sign words; bit j of word (r, j/64) set ⇒ sign +1.
+    signs: Vec<u64>,
+    /// Row-major per-group scales α.
+    alpha: Vec<f32>,
+    /// Row-major per-group means μ.
+    mu: Vec<f32>,
+}
+
+impl PackedBits {
+    /// Pack a dense matrix: each group of `group_size` columns in each row
+    /// is binarized as μ + α·sign(w − μ) and the signs stored packed.
+    pub fn pack(w: &Matrix, group_size: usize) -> Self {
+        let group_size = group_size.max(1);
+        let words_per_row = w.cols.div_ceil(64);
+        let groups_per_row = w.cols.div_ceil(group_size);
+        let mut signs = vec![0u64; w.rows * words_per_row];
+        let mut alpha = vec![0f32; w.rows * groups_per_row];
+        let mut mu = vec![0f32; w.rows * groups_per_row];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for g in 0..groups_per_row {
+                let s = g * group_size;
+                let e = (s + group_size).min(w.cols);
+                let seg = &row[s..e];
+                let m = seg.iter().sum::<f32>() / seg.len() as f32;
+                let a = seg.iter().map(|&v| (v - m).abs()).sum::<f32>() / seg.len() as f32;
+                mu[r * groups_per_row + g] = m;
+                alpha[r * groups_per_row + g] = a;
+                for (k, &v) in seg.iter().enumerate() {
+                    if v >= m {
+                        let j = s + k;
+                        signs[r * words_per_row + j / 64] |= 1u64 << (j % 64);
+                    }
+                }
+            }
+        }
+        PackedBits { rows: w.rows, cols: w.cols, group_size, words_per_row, groups_per_row, signs, alpha, mu }
+    }
+
+    /// Dequantize to a dense matrix (the reconstruction the quantizer's
+    /// dense path produces, bit-for-bit).
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            for j in 0..self.cols {
+                let g = j / self.group_size;
+                let a = self.alpha[r * self.groups_per_row + g];
+                let m = self.mu[r * self.groups_per_row + g];
+                let bit = (self.signs[r * self.words_per_row + j / 64] >> (j % 64)) & 1;
+                row[j] = m + if bit == 1 { a } else { -a };
+            }
+        }
+        out
+    }
+
+    /// Packed GEMV: y = Ŵ x without materializing Ŵ.
+    ///
+    /// Per row r and group g:  Σ_{j∈g} (μ_g + α_g s_j) x_j
+    ///   = μ_g Σ_{j∈g} x_j + α_g Σ_{j∈g} s_j x_j,
+    /// and the sign-weighted sum flips x_j's IEEE sign bit by XOR — no
+    /// branches, no multiply by ±1.
+    pub fn matvec(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(group_sums.len(), self.groups_per_row);
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            let wbase = r * self.words_per_row;
+            let gbase = r * self.groups_per_row;
+            for g in 0..self.groups_per_row {
+                let s = g * self.group_size;
+                let e = (s + self.group_size).min(self.cols);
+                let mut signed_sum = 0.0f32;
+                let mut j = s;
+                while j < e {
+                    let word = self.signs[wbase + j / 64];
+                    let upto = e.min((j / 64 + 1) * 64);
+                    let mut bitpos = j % 64;
+                    while j < upto {
+                        // +x if bit set, −x otherwise, via sign-bit XOR.
+                        let neg_mask = (!(word >> bitpos) & 1) as u32;
+                        let flipped = f32::from_bits(x[j].to_bits() ^ (neg_mask << 31));
+                        signed_sum += flipped;
+                        j += 1;
+                        bitpos += 1;
+                    }
+                }
+                acc += self.mu[gbase + g] * group_sums[g] + self.alpha[gbase + g] * signed_sum;
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Precompute per-group sums of an activation vector (shared across all
+    /// rows — the μ-term of the packed GEMV).
+    pub fn group_sums(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut sums = vec![0.0f32; self.groups_per_row];
+        for (g, sum) in sums.iter_mut().enumerate() {
+            let s = g * self.group_size;
+            let e = (s + self.group_size).min(self.cols);
+            *sum = x[s..e].iter().sum();
+        }
+        sums
+    }
+
+    /// Bytes of storage for the packed form (signs + fp16 metadata).
+    pub fn storage_bytes(&self) -> usize {
+        self.signs.len() * 8 + (self.alpha.len() + self.mu.len()) * 2
+    }
+
+    /// Bytes the dense f32 form would take.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Compression ratio dense/packed.
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.storage_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matvec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_dequant_is_group_binarization() {
+        let mut rng = Rng::new(91);
+        let w = Matrix::gauss(16, 200, 1.0, &mut rng);
+        let p = PackedBits::pack(&w, 64);
+        let d = p.dequantize();
+        // Reconstruction must equal the dense group binarizer output.
+        let spec = crate::quant::group::GroupSpec { group_size: 64, shared_mean: false, adaptive_split: false };
+        let (q, _) = crate::quant::group::quantize_matrix(&w, &spec);
+        assert!(d.dist_sq(&q) < 1e-9, "dist={}", d.dist_sq(&q));
+    }
+
+    #[test]
+    fn packed_matvec_matches_dense() {
+        let mut rng = Rng::new(92);
+        for &(rows, cols, gs) in &[(8usize, 64usize, 32usize), (5, 130, 64), (3, 64, 64), (7, 100, 128)] {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            let p = PackedBits::pack(&w, gs);
+            let dense = p.dequantize();
+            let y_dense = matvec(&dense, &x);
+            let mut y_packed = vec![0.0f32; rows];
+            let gsums = p.group_sums(&x);
+            p.matvec(&x, &gsums, &mut y_packed);
+            for i in 0..rows {
+                assert!(
+                    (y_dense[i] - y_packed[i]).abs() < 1e-3 * (1.0 + y_dense[i].abs()),
+                    "({rows},{cols},{gs}) row {i}: {} vs {}",
+                    y_dense[i],
+                    y_packed[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_near_32x_for_large_groups() {
+        let mut rng = Rng::new(93);
+        let w = Matrix::gauss(256, 1024, 1.0, &mut rng);
+        let p = PackedBits::pack(&w, 128);
+        let r = p.compression_ratio();
+        assert!(r > 20.0, "ratio={r}");
+    }
+
+    #[test]
+    fn storage_accounting_sane() {
+        let w = Matrix::zeros(4, 64);
+        let p = PackedBits::pack(&w, 64);
+        // 4 rows × 1 word × 8B signs + 4×(α+μ)×2B = 32 + 16 = 48.
+        assert_eq!(p.storage_bytes(), 48);
+        assert_eq!(p.dense_bytes(), 4 * 64 * 4);
+    }
+
+    #[test]
+    fn non_multiple_group_sizes() {
+        let mut rng = Rng::new(94);
+        let w = Matrix::gauss(3, 70, 1.0, &mut rng); // 70 = 64 + 6 tail
+        let p = PackedBits::pack(&w, 32);
+        let d = p.dequantize();
+        assert_eq!(d.cols, 70);
+        assert!(d.is_finite());
+    }
+}

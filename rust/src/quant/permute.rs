@@ -1,0 +1,258 @@
+//! Sparse orthogonal transform: the column permutation that makes the Haar
+//! transform adaptive to weight geometry (paper Algorithm 1).
+//!
+//! By the identity of Eq. 14, the one-level Haar high-pass energy of `W P`
+//! equals ¼ Σ_k ‖w_{π(2k−1)} − w_{π(2k)}‖², so the optimal P is the
+//! minimum-weight perfect matching + ordering — NP-hard in general, hence
+//! the paper's two-phase greedy heuristic:
+//!
+//! 1. **Pairing** — repeatedly take the unmatched column with the largest
+//!    norm and match it to its nearest unmatched neighbour (optionally
+//!    restricted to a top-K candidate list);
+//! 2. **Chaining** — order the pairs into one sequence, at each step
+//!    appending the pair (oriented) whose closer endpoint is nearest to the
+//!    current tail, which suppresses discontinuities at pair boundaries
+//!    (these matter for the *shared-mean* grouping across a band).
+
+use crate::tensor::matrix::Matrix;
+
+/// Distance criterion between columns, used both by Algorithm 1 and by the
+/// Table-3 ablation (column-norm criterion ℓ1 vs ℓ2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormKind {
+    L1,
+    L2,
+}
+
+/// Squared ℓ2 distance matrix between all column pairs of W (m×m).
+/// O(m²·d); layers in MiniVLA have m ≤ a few hundred so this is cheap,
+/// and it is computed once per layer.
+pub fn column_distances(w: &Matrix) -> Matrix {
+    let m = w.cols;
+    let mut d = Matrix::zeros(m, m);
+    // ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b ; use the Gram of Wᵀ.
+    let wt = w.transpose(); // m×d, rows are columns of W
+    let norms: Vec<f32> = (0..m)
+        .map(|i| wt.row(i).iter().map(|v| v * v).sum::<f32>())
+        .collect();
+    for i in 0..m {
+        let ri = wt.row(i);
+        for j in i + 1..m {
+            let rj = wt.row(j);
+            let mut dot = 0.0f32;
+            for p in 0..wt.cols {
+                dot += ri[p] * rj[p];
+            }
+            let dist = (norms[i] + norms[j] - 2.0 * dot).max(0.0);
+            d.set(i, j, dist);
+            d.set(j, i, dist);
+        }
+    }
+    d
+}
+
+/// Algorithm 1: greedy pairing-and-chaining. Returns the ordering π over
+/// the columns of `w` (a permutation of 0..m). `top_k = Some(K)` restricts
+/// pairing candidates to the K nearest neighbours of the pivot.
+/// `norm` selects the pivot-ordering criterion (Table 3 ablation; the
+/// paper's default and winner is ℓ2).
+pub fn pairing_and_chaining(w: &Matrix, top_k: Option<usize>, norm: NormKind) -> Vec<usize> {
+    let m = w.cols;
+    if m <= 2 {
+        return (0..m).collect();
+    }
+    let d = column_distances(w);
+    let col_norm: Vec<f32> = match norm {
+        NormKind::L2 => w.col_norms(),
+        NormKind::L1 => w.col_norms_l1(),
+    };
+
+    // Optional top-K neighbour lists.
+    let neighbors: Option<Vec<Vec<usize>>> = top_k.map(|k| {
+        (0..m)
+            .map(|i| {
+                let mut idx: Vec<usize> = (0..m).filter(|&j| j != i).collect();
+                idx.sort_by(|&a, &b| d.at(i, a).partial_cmp(&d.at(i, b)).unwrap());
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    });
+
+    // ---- Pairing ----
+    let mut unmatched: Vec<bool> = vec![true; m];
+    let mut remaining = m;
+    // Pivot order: descending column norm (paper line 7).
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| col_norm[b].partial_cmp(&col_norm[a]).unwrap());
+
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(m / 2 + 1);
+    for &i in &order {
+        if !unmatched[i] || remaining < 2 {
+            continue;
+        }
+        // Candidate set: top-K neighbours ∩ unmatched, else all unmatched.
+        let mut best: Option<usize> = None;
+        if let Some(nb) = &neighbors {
+            for &t in &nb[i] {
+                if unmatched[t] && t != i && best.map(|b| d.at(i, t) < d.at(i, b)).unwrap_or(true) {
+                    best = Some(t);
+                }
+            }
+        }
+        if best.is_none() {
+            for t in 0..m {
+                if t != i && unmatched[t] && best.map(|b| d.at(i, t) < d.at(i, b)).unwrap_or(true) {
+                    best = Some(t);
+                }
+            }
+        }
+        let j = best.expect("at least one unmatched candidate");
+        unmatched[i] = false;
+        unmatched[j] = false;
+        remaining -= 2;
+        pairs.push((i, j));
+    }
+    // Leftover (odd m): self-pair, placed last (paper line 16).
+    let leftover: Option<usize> = unmatched.iter().position(|&u| u);
+
+    // ---- Chaining ----
+    // Seed with the first-formed pair (contains the max-norm column).
+    let mut pi: Vec<usize> = Vec::with_capacity(m);
+    let mut rest: Vec<(usize, usize)> = pairs;
+    let (a, b) = rest.remove(0);
+    pi.push(a);
+    pi.push(b);
+    let mut tail = b;
+    while !rest.is_empty() {
+        let mut best_idx = 0;
+        let mut best_d = f32::INFINITY;
+        for (k, &(x, y)) in rest.iter().enumerate() {
+            let dd = d.at(tail, x).min(d.at(tail, y));
+            if dd < best_d {
+                best_d = dd;
+                best_idx = k;
+            }
+        }
+        let (mut u, mut v) = rest.remove(best_idx);
+        if d.at(tail, u) > d.at(tail, v) {
+            std::mem::swap(&mut u, &mut v);
+        }
+        pi.push(u);
+        pi.push(v);
+        tail = v;
+    }
+    if let Some(r) = leftover {
+        pi.push(r);
+    }
+    debug_assert_eq!(pi.len(), m);
+    pi
+}
+
+/// Apply the ordering: out(:,k) = w(:,π(k)) — i.e. W·P.
+pub fn permute_cols(w: &Matrix, pi: &[usize]) -> Matrix {
+    assert_eq!(pi.len(), w.cols);
+    w.select_cols(pi)
+}
+
+/// Invert the ordering: returns W such that permute_cols(W, π) = input.
+pub fn unpermute_cols(w: &Matrix, pi: &[usize]) -> Matrix {
+    assert_eq!(pi.len(), w.cols);
+    let mut inv = vec![0usize; pi.len()];
+    for (k, &p) in pi.iter().enumerate() {
+        inv[p] = k;
+    }
+    w.select_cols(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::haar::pairwise_highpass_energy;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut rng = Rng::new(51);
+        for m in [4usize, 5, 16, 33, 64] {
+            let w = Matrix::gauss(8, m, 1.0, &mut rng);
+            let pi = pairing_and_chaining(&w, None, NormKind::L2);
+            let mut s = pi.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..m).collect::<Vec<_>>(), "m={m}");
+        }
+    }
+
+    #[test]
+    fn permute_unpermute_roundtrip() {
+        let mut rng = Rng::new(52);
+        let w = Matrix::gauss(6, 12, 1.0, &mut rng);
+        let pi = pairing_and_chaining(&w, None, NormKind::L2);
+        let p = permute_cols(&w, &pi);
+        let back = unpermute_cols(&p, &pi);
+        assert!(w.dist_sq(&back) < 1e-12);
+    }
+
+    #[test]
+    fn reduces_highpass_energy_on_modality_interleaved_weights() {
+        // Simulate the paper's motivating structure: columns of two
+        // "modalities" with very different statistics, interleaved.
+        let mut rng = Rng::new(53);
+        let m = 64;
+        let w = Matrix::from_fn(32, m, |_, j| {
+            if j % 2 == 0 {
+                (rng.gauss() * 0.1 + 3.0) as f32 // modality A: large mean
+            } else {
+                (rng.gauss() * 0.1 - 3.0) as f32 // modality B: negative mean
+            }
+        });
+        let identity: Vec<usize> = (0..m).collect();
+        let pi = pairing_and_chaining(&w, None, NormKind::L2);
+        let e_id = pairwise_highpass_energy(&w, &identity);
+        let e_pi = pairwise_highpass_energy(&w, &pi);
+        assert!(
+            e_pi < 0.05 * e_id,
+            "permutation should collapse cross-modality jumps: {e_pi} vs {e_id}"
+        );
+    }
+
+    #[test]
+    fn top_k_close_to_full_search() {
+        let mut rng = Rng::new(54);
+        let w = Matrix::gauss(16, 48, 1.0, &mut rng);
+        let full = pairing_and_chaining(&w, None, NormKind::L2);
+        let topk = pairing_and_chaining(&w, Some(8), NormKind::L2);
+        let e_full = pairwise_highpass_energy(&w, &full);
+        let e_topk = pairwise_highpass_energy(&w, &topk);
+        assert!(e_topk <= 1.5 * e_full, "topk {e_topk} vs full {e_full}");
+    }
+
+    #[test]
+    fn odd_column_count_keeps_all() {
+        let mut rng = Rng::new(55);
+        let w = Matrix::gauss(4, 9, 1.0, &mut rng);
+        let pi = pairing_and_chaining(&w, Some(3), NormKind::L1);
+        assert_eq!(pi.len(), 9);
+    }
+
+    #[test]
+    fn distance_matrix_symmetry_and_zero_diag() {
+        let mut rng = Rng::new(56);
+        let w = Matrix::gauss(5, 10, 1.0, &mut rng);
+        let d = column_distances(&w);
+        for i in 0..10 {
+            assert_eq!(d.at(i, i), 0.0);
+            for j in 0..10 {
+                assert!((d.at(i, j) - d.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_matrices_identity() {
+        let w = Matrix::zeros(3, 2);
+        assert_eq!(pairing_and_chaining(&w, None, NormKind::L2), vec![0, 1]);
+        let w1 = Matrix::zeros(3, 1);
+        assert_eq!(pairing_and_chaining(&w1, None, NormKind::L2), vec![0]);
+    }
+}

@@ -1,0 +1,372 @@
+//! Block-wise gradient probe (paper Eqs. 4–9): the source of the token
+//! importance scores that rectify the Hessian.
+//!
+//! The block is the residual attention module on the action pathway,
+//! Φ(X) = X + MHSA(X), together with its quantized counterpart Φ̂ under a
+//! provisional binarization. A single local backward pass on
+//! L_blk = ‖Φ(X) − Φ̂(X)‖²_F yields the cached gradients
+//! G⁽ᵖ⁾ = ∂L/∂Y⁽ᵖ⁾ at the four projection outputs p ∈ {Q, K, V, O}; the
+//! per-token column norms aₜ⁽ᵖ⁾ = ‖G⁽ᵖ⁾₍:,ₜ₎‖₂ / d_p become the diagonal
+//! importance matrix S⁽ᵖ⁾ that reweights the Hessian (Eq. 3/9).
+//!
+//! The MHSA forward/backward here is hand-derived and verified against
+//! finite differences in the tests — there is no autograd in this stack.
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{matmul, softmax_rows};
+
+/// Weights of one residual attention block. Convention: tokens are
+/// **columns** (X is d × N), projections act from the left: Y⁽ᵖ⁾ = W⁽ᵖ⁾ X.
+#[derive(Clone, Debug)]
+pub struct AttnBlock {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub heads: usize,
+}
+
+/// Intermediate state cached by the forward pass, needed for backward.
+pub struct AttnTrace {
+    /// Projection outputs Q, K, V (d × N).
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+    /// Per-head softmax attention matrices (N × N, rows = query tokens).
+    pub probs: Vec<Matrix>,
+    /// Concatenated attention output before W_O (d × N).
+    pub ctx: Matrix,
+    /// Block output Z = X + W_O · ctx (d × N).
+    pub z: Matrix,
+}
+
+/// Gradients at the four projection outputs (each d × N).
+pub struct ProbeGrads {
+    pub gq: Matrix,
+    pub gk: Matrix,
+    pub gv: Matrix,
+    pub go: Matrix,
+}
+
+impl AttnBlock {
+    pub fn head_dim(&self) -> usize {
+        self.wq.rows / self.heads
+    }
+
+    /// Forward pass Φ(X) = X + MHSA(X), caching everything backward needs.
+    pub fn forward(&self, x: &Matrix) -> AttnTrace {
+        let d = self.wq.rows;
+        let n = x.cols;
+        assert_eq!(x.rows, self.wq.cols, "input dim mismatch");
+        assert_eq!(d % self.heads, 0, "heads must divide model dim");
+        let dh = d / self.heads;
+        let q = matmul(&self.wq, x);
+        let k = matmul(&self.wk, x);
+        let v = matmul(&self.wv, x);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Matrix::zeros(d, n);
+        let mut probs = Vec::with_capacity(self.heads);
+        for h in 0..self.heads {
+            let r0 = h * dh;
+            let r1 = r0 + dh;
+            let qh = q.slice_rows(r0, r1);
+            let kh = k.slice_rows(r0, r1);
+            let vh = v.slice_rows(r0, r1);
+            // S = Qᵀ K / √dh  (N×N, rows = query tokens)
+            let mut s = matmul(&qh.transpose(), &kh);
+            s.scale(scale);
+            softmax_rows(&mut s);
+            // ctx_h = V_h · Pᵀ
+            let ch = matmul(&vh, &s.transpose());
+            for i in 0..dh {
+                for t in 0..n {
+                    ctx.set(r0 + i, t, ch.at(i, t));
+                }
+            }
+            probs.push(s);
+        }
+        let yo = matmul(&self.wo, &ctx);
+        let z = x.add(&yo);
+        AttnTrace { q, k, v, probs, ctx, z }
+    }
+
+    /// Backward pass: given ∂L/∂Z, return gradients at the projection
+    /// outputs Y⁽Q,K,V,O⁾. (Input gradients are not needed by the probe.)
+    pub fn backward(&self, x: &Matrix, trace: &AttnTrace, gz: &Matrix) -> ProbeGrads {
+        let d = self.wq.rows;
+        let n = x.cols;
+        let dh = d / self.heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        // Z = X + W_O·ctx ⇒ ∂L/∂Y_O = ∂L/∂Z.
+        let go = gz.clone();
+        // ∂L/∂ctx = W_Oᵀ · G_O
+        let gctx = matmul(&self.wo.transpose(), &go);
+        let mut gq = Matrix::zeros(d, n);
+        let mut gk = Matrix::zeros(d, n);
+        let mut gv = Matrix::zeros(d, n);
+        for h in 0..self.heads {
+            let r0 = h * dh;
+            let r1 = r0 + dh;
+            let gch = gctx.slice_rows(r0, r1); // dh × N
+            let qh = trace.q.slice_rows(r0, r1);
+            let kh = trace.k.slice_rows(r0, r1);
+            let vh = trace.v.slice_rows(r0, r1);
+            let p = &trace.probs[h]; // N × N
+            // ctx_h = V_h Pᵀ  ⇒ G_V = G_ctx · P ; G_P = G_ctxᵀ · V_h
+            let gvh = matmul(&gch, p);
+            // G_P[t,s] = Σ_i gch[i,t]·vh[i,s]  →  (N×dh)·(dh×N) = N×N
+            let gp = matmul(&gch.transpose(), &vh);
+            // Softmax backward, row-wise: gS[t,s] = P[t,s]·(gP[t,s] − Σ_u gP[t,u]P[t,u])
+            let mut gs = Matrix::zeros(n, n);
+            for t in 0..n {
+                let prow = p.row(t);
+                let gprow = gp.row(t);
+                let dot: f32 = prow.iter().zip(gprow.iter()).map(|(&a, &b)| a * b).sum();
+                let gsrow = gs.row_mut(t);
+                for s in 0..n {
+                    gsrow[s] = prow[s] * (gprow[s] - dot);
+                }
+            }
+            gs.scale(scale);
+            // S = Qᵀ K  ⇒ G_Q = K · G_Sᵀ ; G_K = Q · G_S
+            let gqh = matmul(&kh, &gs.transpose());
+            let gkh = matmul(&qh, &gs);
+            for i in 0..dh {
+                for t in 0..n {
+                    gq.set(r0 + i, t, gqh.at(i, t));
+                    gk.set(r0 + i, t, gkh.at(i, t));
+                    gv.set(r0 + i, t, gvh.at(i, t));
+                }
+            }
+        }
+        ProbeGrads { gq, gk, gv, go }
+    }
+}
+
+/// Result of the probe: per-projection token-importance vectors (length N),
+/// plus their mean (used for layers outside the attention projections,
+/// e.g. MLP matrices — documented design choice).
+#[derive(Clone, Debug)]
+pub struct TokenImportance {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub o: Vec<f32>,
+    pub mean: Vec<f32>,
+}
+
+impl TokenImportance {
+    pub fn for_proj(&self, p: char) -> &[f32] {
+        match p {
+            'q' | 'Q' => &self.q,
+            'k' | 'K' => &self.k,
+            'v' | 'V' => &self.v,
+            'o' | 'O' => &self.o,
+            _ => &self.mean,
+        }
+    }
+}
+
+/// Run the probe: forward FP block and quantized block on the same X,
+/// backprop L = ‖Z − Ẑ‖² through the quantized block, aggregate per-token
+/// column norms (Eq. 7), normalize to mean 1 so the rectified Hessian
+/// keeps the standard Hessian's scale.
+///
+/// `focus` restricts the block loss to one output column — the *action
+/// pathway* (readout/instruction token). This is what makes the probe
+/// immune to the dual-dominance problem: measured over all columns, the
+/// loss (and hence the gradients) would be dominated by the very
+/// high-magnitude background tokens the rectification is meant to
+/// suppress.
+pub fn probe_token_importance_focused(
+    fp: &AttnBlock,
+    quant: &AttnBlock,
+    x: &Matrix,
+    focus: Option<usize>,
+) -> TokenImportance {
+    let z = fp.forward(x).z;
+    let tr_q = quant.forward(x);
+    // G_Z = 2 (Ẑ − Z), optionally restricted to the action column.
+    let mut gz = tr_q.z.sub(&z);
+    gz.scale(2.0);
+    if let Some(c) = focus {
+        for i in 0..gz.rows {
+            for t in 0..gz.cols {
+                if t != c {
+                    gz.set(i, t, 0.0);
+                }
+            }
+        }
+    }
+    let grads = quant.backward(x, &tr_q, &gz);
+    let n = x.cols;
+    let colnorm = |g: &Matrix| -> Vec<f32> {
+        let dp = g.rows as f32;
+        (0..n)
+            .map(|t| {
+                let mut acc = 0.0f32;
+                for i in 0..g.rows {
+                    let v = g.at(i, t);
+                    acc += v * v;
+                }
+                acc.sqrt() / dp
+            })
+            .collect()
+    };
+    let mut q = colnorm(&grads.gq);
+    let mut k = colnorm(&grads.gk);
+    let mut v = colnorm(&grads.gv);
+    let mut o = colnorm(&grads.go);
+    // Normalize each score vector to mean 1 (keeps H̃ on H's scale; an
+    // all-equal importance then reduces exactly to the standard Hessian).
+    for s in [&mut q, &mut k, &mut v, &mut o] {
+        let m: f32 = s.iter().sum::<f32>() / n as f32;
+        if m > 1e-20 {
+            for x in s.iter_mut() {
+                *x /= m;
+            }
+        } else {
+            for x in s.iter_mut() {
+                *x = 1.0;
+            }
+        }
+    }
+    let mean: Vec<f32> = (0..n).map(|t| 0.25 * (q[t] + k[t] + v[t] + o[t])).collect();
+    TokenImportance { q, k, v, o, mean }
+}
+
+/// Unfocused probe (loss over all output tokens) — kept for the ablation
+/// benches; the calibration pipeline uses the focused variant.
+pub fn probe_token_importance(fp: &AttnBlock, quant: &AttnBlock, x: &Matrix) -> TokenImportance {
+    probe_token_importance_focused(fp, quant, x, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_block(d: usize, heads: usize, rng: &mut Rng) -> AttnBlock {
+        let s = 1.0 / (d as f32).sqrt();
+        AttnBlock {
+            wq: Matrix::gauss(d, d, s, rng),
+            wk: Matrix::gauss(d, d, s, rng),
+            wv: Matrix::gauss(d, d, s, rng),
+            wo: Matrix::gauss(d, d, s, rng),
+            heads,
+        }
+    }
+
+    fn block_loss(fp: &AttnBlock, q: &AttnBlock, x: &Matrix) -> f64 {
+        let z = fp.forward(x).z;
+        let zq = q.forward(x).z;
+        z.dist_sq(&zq)
+    }
+
+    /// dL/dW⁽ᵖ⁾ = G⁽ᵖ⁾ Xᵀ for Y = W X; finite differences on W entries
+    /// validate the whole manual backward chain.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(101);
+        let d = 8;
+        let n = 6;
+        let fp = random_block(d, 2, &mut rng);
+        let mut qb = random_block(d, 2, &mut rng);
+        let x = Matrix::gauss(d, n, 1.0, &mut rng);
+
+        let z = fp.forward(&x).z;
+        let tr = qb.forward(&x);
+        let mut gz = tr.z.sub(&z);
+        gz.scale(2.0);
+        let grads = qb.backward(&x, &tr, &gz);
+
+        let xt = x.transpose();
+        let analytic = [
+            ("wq", matmul(&grads.gq, &xt)),
+            ("wk", matmul(&grads.gk, &xt)),
+            ("wv", matmul(&grads.gv, &xt)),
+            ("wo", matmul(&grads.go, &tr.ctx.transpose())),
+        ];
+        let eps = 1e-3f32;
+        for (name, ga) in &analytic {
+            for &(i, j) in &[(0usize, 0usize), (1, 3), (d - 1, d - 1), (2, 5)] {
+                let orig = match *name {
+                    "wq" => qb.wq.at(i, j),
+                    "wk" => qb.wk.at(i, j),
+                    "wv" => qb.wv.at(i, j),
+                    _ => qb.wo.at(i, j),
+                };
+                let set = |qb: &mut AttnBlock, v: f32| match *name {
+                    "wq" => qb.wq.set(i, j, v),
+                    "wk" => qb.wk.set(i, j, v),
+                    "wv" => qb.wv.set(i, j, v),
+                    _ => qb.wo.set(i, j, v),
+                };
+                set(&mut qb, orig + eps);
+                let lp = block_loss(&fp, &qb, &x);
+                set(&mut qb, orig - eps);
+                let lm = block_loss(&fp, &qb, &x);
+                set(&mut qb, orig);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = ga.at(i, j);
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "{name}[{i},{j}]: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_blocks_give_zero_loss_and_uniform_importance() {
+        let mut rng = Rng::new(102);
+        let b = random_block(8, 2, &mut rng);
+        let x = Matrix::gauss(8, 10, 1.0, &mut rng);
+        assert!(block_loss(&b, &b, &x) < 1e-12);
+        let imp = probe_token_importance(&b, &b, &x);
+        // Zero gradients → normalized to all-ones fallback.
+        for t in 0..10 {
+            assert!((imp.mean[t] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn importance_mean_is_one() {
+        let mut rng = Rng::new(103);
+        let fp = random_block(8, 2, &mut rng);
+        let qb = random_block(8, 2, &mut rng);
+        let x = Matrix::gauss(8, 12, 1.0, &mut rng);
+        let imp = probe_token_importance(&fp, &qb, &x);
+        for s in [&imp.q, &imp.k, &imp.v, &imp.o] {
+            let m: f32 = s.iter().sum::<f32>() / 12.0;
+            assert!((m - 1.0).abs() < 1e-4);
+            assert!(s.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn forward_residual_path() {
+        // With zero attention output (W_O = 0), Φ(X) = X.
+        let mut rng = Rng::new(104);
+        let mut b = random_block(8, 2, &mut rng);
+        b.wo = Matrix::zeros(8, 8);
+        let x = Matrix::gauss(8, 5, 1.0, &mut rng);
+        let z = b.forward(&x).z;
+        assert!(z.dist_sq(&x) < 1e-12);
+    }
+
+    #[test]
+    fn probs_are_row_stochastic() {
+        let mut rng = Rng::new(105);
+        let b = random_block(16, 4, &mut rng);
+        let x = Matrix::gauss(16, 9, 1.0, &mut rng);
+        let tr = b.forward(&x);
+        assert_eq!(tr.probs.len(), 4);
+        for p in &tr.probs {
+            for t in 0..9 {
+                let s: f32 = p.row(t).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Salient-column selection (paper "Policy-Aware Weight Partitioning",
+//! final paragraphs).
+//!
+//! Stage 1: element-wise importance sᵢⱼ = wᵢⱼ² · h̃ⱼⱼ (quantization loss of
+//! element (i,j) weighted by the — possibly rectified — Hessian diagonal),
+//! reduced to a per-column score by ℓ2 over rows; the top `max_candidates`
+//! columns form the candidate set.
+//!
+//! Stage 2: the final salient count k is chosen by minimizing a local
+//! reconstruction-error surrogate: salient columns pay the (small)
+//! order-2-residual binarization error, non-salient columns the 1-bit
+//! error, both Hessian-diagonal-weighted, plus a metadata penalty per
+//! salient column. This mirrors "determine the final number of salient
+//! columns by minimizing a local reconstruction error under our
+//! binarization surrogate".
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::stats::{mean, mean_abs_dev, top_k};
+
+/// Result of salient-column selection.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Sorted salient column indices.
+    pub salient: Vec<usize>,
+    /// Sorted non-salient column indices.
+    pub non_salient: Vec<usize>,
+    /// Per-column saliency scores (diagnostics / reports).
+    pub scores: Vec<f32>,
+}
+
+/// Per-column MSE of 1-bit binarization (about the column's own mean).
+fn col_mse_1bit(w: &Matrix, j: usize) -> f64 {
+    let col = w.col(j);
+    let mu = mean(&col);
+    let alpha = mean_abs_dev(&col, mu);
+    col.iter()
+        .map(|&v| {
+            let q = mu + alpha * if v >= mu { 1.0 } else { -1.0 };
+            let d = (v - q) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Per-column MSE of order-2 residual binarization.
+fn col_mse_2bit(w: &Matrix, j: usize) -> f64 {
+    let col = w.col(j);
+    let mu = mean(&col);
+    let alpha = mean_abs_dev(&col, mu);
+    let resid: Vec<f32> = col
+        .iter()
+        .map(|&v| v - (mu + alpha * if v >= mu { 1.0 } else { -1.0 }))
+        .collect();
+    let mu2 = mean(&resid);
+    let a2 = mean_abs_dev(&resid, mu2);
+    resid
+        .iter()
+        .map(|&r| {
+            let q = mu2 + a2 * if r >= mu2 { 1.0 } else { -1.0 };
+            let d = (r - q) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Select salient columns of `w` given the Hessian diagonal `h_diag`
+/// (standard or policy-aware rectified). `max_candidates` bounds the
+/// search (HBLLM convention: 40); the returned salient count is the
+/// surrogate-error argmin over 0..=max_candidates.
+pub fn select_salient(w: &Matrix, h_diag: &[f32], max_candidates: usize) -> Partition {
+    assert_eq!(h_diag.len(), w.cols, "hessian diag dim mismatch");
+    let m = w.cols;
+
+    // Stage 1: diag-normalized element scores → column ℓ2 reduction.
+    let mut scores = vec![0.0f32; m];
+    for j in 0..m {
+        let hj = h_diag[j].max(0.0);
+        let mut acc = 0.0f64;
+        for i in 0..w.rows {
+            let s = (w.at(i, j) * w.at(i, j)) as f64 * hj as f64;
+            acc += s * s;
+        }
+        scores[j] = (acc.sqrt()) as f32;
+    }
+    let cand = top_k(&scores, max_candidates.min(m));
+
+    // Stage 2: pick k minimizing the binarization surrogate.
+    // Precompute per-column weighted errors for both fidelities.
+    let e1: Vec<f64> = (0..m).map(|j| col_mse_1bit(w, j) * h_diag[j].max(1e-12) as f64).collect();
+    let e2: Vec<f64> = (0..m).map(|j| col_mse_2bit(w, j) * h_diag[j].max(1e-12) as f64).collect();
+    let base: f64 = e1.iter().sum();
+    // Metadata penalty per salient column: an extra sign plane + scales ≈
+    // one column of bits; expressed as a fraction of the mean 1-bit error
+    // so the units match. Small but non-zero, so k doesn't always max out.
+    let penalty = 0.02 * base / m.max(1) as f64;
+
+    let mut best_k = 0usize;
+    let mut best_err = base;
+    let mut err = base;
+    for (k, &j) in cand.iter().enumerate() {
+        err += e2[j] - e1[j] + penalty;
+        if err < best_err {
+            best_err = err;
+            best_k = k + 1;
+        }
+    }
+
+    let mut salient: Vec<usize> = cand[..best_k].to_vec();
+    salient.sort_unstable();
+    let sal_set: Vec<bool> = {
+        let mut s = vec![false; m];
+        for &j in &salient {
+            s[j] = true;
+        }
+        s
+    };
+    let non_salient: Vec<usize> = (0..m).filter(|&j| !sal_set[j]).collect();
+    Partition { salient, non_salient, scores }
+}
+
+/// Fill salient columns with the average of their nearest non-salient
+/// neighbours on each side (paper: "fill the missing values in salient
+/// columns using adjacent averages"), producing W_filled for the
+/// non-salient Haar pass.
+pub fn fill_salient_adjacent(w: &Matrix, salient: &[usize]) -> Matrix {
+    let mut filled = w.clone();
+    if salient.is_empty() {
+        return filled;
+    }
+    let m = w.cols;
+    let is_sal = {
+        let mut s = vec![false; m];
+        for &j in salient {
+            s[j] = true;
+        }
+        s
+    };
+    for &j in salient {
+        // Nearest non-salient neighbours left/right.
+        let left = (0..j).rev().find(|&t| !is_sal[t]);
+        let right = (j + 1..m).find(|&t| !is_sal[t]);
+        for i in 0..w.rows {
+            let v = match (left, right) {
+                (Some(l), Some(r)) => 0.5 * (w.at(i, l) + w.at(i, r)),
+                (Some(l), None) => w.at(i, l),
+                (None, Some(r)) => w.at(i, r),
+                (None, None) => 0.0,
+            };
+            filled.set(i, j, v);
+        }
+    }
+    filled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_planted_salient_columns() {
+        let mut rng = Rng::new(71);
+        let mut w = Matrix::gauss(32, 64, 0.1, &mut rng);
+        // Plant large-magnitude columns at 5 and 40.
+        for i in 0..32 {
+            w.set(i, 5, (rng.gauss() * 4.0) as f32);
+            w.set(i, 40, (rng.gauss() * 4.0) as f32);
+        }
+        let h = vec![1.0f32; 64];
+        let p = select_salient(&w, &h, 8);
+        assert!(p.salient.contains(&5), "salient={:?}", p.salient);
+        assert!(p.salient.contains(&40), "salient={:?}", p.salient);
+    }
+
+    #[test]
+    fn hessian_diag_steers_selection() {
+        let mut rng = Rng::new(72);
+        let w = Matrix::gauss(16, 32, 1.0, &mut rng);
+        // Uniform weights but one column has huge activation energy.
+        let mut h = vec![1.0f32; 32];
+        h[17] = 500.0;
+        let p = select_salient(&w, &h, 4);
+        assert!(p.salient.contains(&17), "salient={:?}", p.salient);
+    }
+
+    #[test]
+    fn partition_is_complete_and_disjoint() {
+        let mut rng = Rng::new(73);
+        let w = Matrix::gauss(8, 20, 1.0, &mut rng);
+        let h = vec![1.0f32; 20];
+        let p = select_salient(&w, &h, 6);
+        let mut all: Vec<usize> = p.salient.iter().chain(p.non_salient.iter()).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn salient_count_bounded_by_candidates() {
+        let mut rng = Rng::new(74);
+        let w = Matrix::gauss(8, 50, 1.0, &mut rng);
+        let h = vec![1.0f32; 50];
+        let p = select_salient(&w, &h, 5);
+        assert!(p.salient.len() <= 5);
+    }
+
+    #[test]
+    fn fill_adjacent_averages() {
+        let w = Matrix::from_vec(1, 5, vec![1.0, 100.0, 3.0, 100.0, 5.0]);
+        let filled = fill_salient_adjacent(&w, &[1, 3]);
+        assert_eq!(filled.at(0, 1), 2.0); // avg(1, 3)
+        assert_eq!(filled.at(0, 3), 4.0); // avg(3, 5)
+        assert_eq!(filled.at(0, 0), 1.0); // untouched
+    }
+
+    #[test]
+    fn fill_edge_salient_uses_single_neighbor() {
+        let w = Matrix::from_vec(1, 3, vec![100.0, 2.0, 100.0]);
+        let filled = fill_salient_adjacent(&w, &[0, 2]);
+        assert_eq!(filled.at(0, 0), 2.0);
+        assert_eq!(filled.at(0, 2), 2.0);
+    }
+
+    #[test]
+    fn no_salient_noop() {
+        let mut rng = Rng::new(75);
+        let w = Matrix::gauss(4, 8, 1.0, &mut rng);
+        let filled = fill_salient_adjacent(&w, &[]);
+        assert_eq!(filled, w);
+    }
+}

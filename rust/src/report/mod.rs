@@ -1,0 +1,143 @@
+//! Paper-style table formatting: fixed-width text tables with a Δ column
+//! relative to the FP row, matching the presentation of Tables 1–2.
+
+/// One table: header columns, rows of (label, cells), Δ computed against
+/// the row labeled "FP" (by average).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Decimal places for rendered percentages (ablation tables use 2).
+    pub decimals: usize,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            decimals: 1,
+        }
+    }
+
+    pub fn add_row(&mut self, label: &str, cells: Vec<f64>) {
+        assert_eq!(cells.len(), self.columns.len(), "cell count mismatch");
+        self.rows.push((label.to_string(), cells));
+    }
+
+    /// Average of a row's cells.
+    pub fn avg(cells: &[f64]) -> f64 {
+        if cells.is_empty() {
+            0.0
+        } else {
+            cells.iter().sum::<f64>() / cells.len() as f64
+        }
+    }
+
+    fn fp_avg(&self) -> Option<f64> {
+        self.rows.iter().find(|(l, _)| l.contains("FP")).map(|(_, c)| Self::avg(c))
+    }
+
+    /// Render as fixed-width text (values as percents with one decimal).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(6))
+            .max()
+            .unwrap()
+            + 2;
+        let col_w = 12usize;
+        out.push_str(&format!("{:label_w$}", "Method"));
+        for c in &self.columns {
+            out.push_str(&format!("{:>col_w$}", c));
+        }
+        out.push_str(&format!("{:>col_w$}{:>col_w$}\n", "Avg", "Δ"));
+        let fp = self.fp_avg();
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{:label_w$}", label));
+            for v in cells {
+                out.push_str(&format!("{:>col_w$.*}", self.decimals, v * 100.0));
+            }
+            let avg = Self::avg(cells);
+            out.push_str(&format!("{:>col_w$.*}", self.decimals, avg * 100.0));
+            match fp {
+                Some(f) if !label.contains("FP") => {
+                    out.push_str(&format!("{:>col_w$.*}\n", self.decimals, (avg - f) * 100.0));
+                }
+                _ => out.push_str(&format!("{:>col_w$}\n", "-")),
+            }
+        }
+        out
+    }
+
+    /// Render as a GitHub-markdown table (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str("| Method |");
+        for c in &self.columns {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push_str(" Avg | Δ |\n|---|");
+        for _ in 0..self.columns.len() + 2 {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        let fp = self.fp_avg();
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("| {label} |"));
+            for v in cells {
+                out.push_str(&format!(" {:.*} |", self.decimals, v * 100.0));
+            }
+            let avg = Self::avg(cells);
+            out.push_str(&format!(" {:.*} |", self.decimals, avg * 100.0));
+            match fp {
+                Some(f) if !label.contains("FP") => {
+                    out.push_str(&format!(" {:+.*} |\n", self.decimals, (avg - f) * 100.0));
+                }
+                _ => out.push_str(" - |\n"),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["A", "B"]);
+        t.add_row("FP Model", vec![0.9, 0.8]);
+        t.add_row("HBVLA", vec![0.85, 0.75]);
+        t
+    }
+
+    #[test]
+    fn render_contains_delta() {
+        let r = sample().render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("85.0"));
+        assert!(r.contains("-5.0"));
+    }
+
+    #[test]
+    fn markdown_row_counts() {
+        let md = sample().render_markdown();
+        assert_eq!(md.matches("| FP Model |").count(), 1);
+        assert!(md.contains("| HBVLA | 85.0 | 75.0 | 80.0 | -5.0 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "cell count mismatch")]
+    fn mismatched_cells_panic() {
+        let mut t = Table::new("x", &["A"]);
+        t.add_row("r", vec![0.1, 0.2]);
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas policy graph
+//! (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md §2) and executes
+//! it from Rust. Python never runs on this path.
+
+pub mod pjrt;
+
+pub use pjrt::{artifacts_dir, HloExecutable, PolicyRuntime};

@@ -1,0 +1,111 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::MiniVla;
+use crate::tensor::matrix::Matrix;
+
+/// Default artifacts directory (repo-root relative).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("HBVLA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A compiled HLO module ready to execute.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl HloExecutable {
+    /// Load HLO text from `path` and compile it on the CPU PJRT client.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(HloExecutable { exe, name: path.file_stem().unwrap().to_string_lossy().into_owned() })
+    }
+
+    /// Execute with f32 tensor inputs ((data, dims) pairs); the module is
+    /// lowered with `return_tuple=True`, so outputs are a tuple of f32
+    /// buffers, returned flattened per element.
+    pub fn run_f32(&self, inputs: &[(&[f32], Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape input {dims:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// The policy-serving runtime: the AOT policy-step graph plus the input
+/// manifest (`policy_step.inputs.txt`) that fixes the weight feed order.
+pub struct PolicyRuntime {
+    pub exe: HloExecutable,
+    /// Parameter names fed after the observation inputs, in order.
+    pub weight_order: Vec<String>,
+}
+
+impl PolicyRuntime {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        let exe = HloExecutable::load(&client, &dir.join("policy_step.hlo.txt"))?;
+        let manifest = std::fs::read_to_string(dir.join("policy_step.inputs.txt"))
+            .context("missing input manifest — run `make artifacts`")?;
+        let weight_order: Vec<String> =
+            manifest.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        Ok(PolicyRuntime { exe, weight_order })
+    }
+
+    /// One policy step through PJRT: observation + the model's weights
+    /// (FP or quantized — whatever is in the store) → action chunk.
+    pub fn step(
+        &self,
+        model: &MiniVla,
+        visual_raw: &Matrix,
+        instr_id: usize,
+        proprio: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let cfg = &model.cfg;
+        let mut instr_onehot = vec![0.0f32; cfg.vocab];
+        instr_onehot[instr_id] = 1.0;
+        let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![
+            (&visual_raw.data, vec![cfg.d_vis_in as i64, cfg.n_visual as i64]),
+            (&instr_onehot, vec![cfg.vocab as i64]),
+            (proprio, vec![cfg.d_proprio as i64]),
+        ];
+        for name in &self.weight_order {
+            let w = model.store.get(name);
+            inputs.push((&w.data, vec![w.rows as i64, w.cols as i64]));
+        }
+        let outs = self.exe.run_f32(&inputs)?;
+        let flat = &outs[0];
+        anyhow::ensure!(flat.len() == cfg.chunk * cfg.act_dim, "unexpected output size {}", flat.len());
+        Ok((0..cfg.chunk)
+            .map(|c| flat[c * cfg.act_dim..(c + 1) * cfg.act_dim].to_vec())
+            .collect())
+    }
+}

@@ -1,0 +1,150 @@
+//! Closed-loop episode runners: policy evaluation and expert
+//! demonstration collection.
+
+use crate::model::layers::Hook;
+use crate::model::MiniVla;
+use crate::sim::expert::expert_action;
+use crate::sim::observe::{observe, Observation, ObsParams};
+use crate::sim::tasks::Task;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EpisodeResult {
+    pub success: bool,
+    pub steps: usize,
+}
+
+/// Run the policy closed-loop on one episode. The observation parameters
+/// are sampled once per episode by `obs_params` (Visual Matching vs
+/// Variant Aggregation differ exactly here). Decoding happens every
+/// `model.chunk_len()` steps; multi-stage tasks re-issue the active
+/// stage's instruction at each decode (sequenced sub-instructions).
+pub fn run_policy_episode(
+    model: &MiniVla,
+    task: &Task,
+    obs_params: &ObsParams,
+    seed: u64,
+) -> EpisodeResult {
+    run_policy_episode_hooked(model, task, obs_params, seed, &mut None)
+}
+
+/// Same as [`run_policy_episode`] but with an activation hook (used by the
+/// calibration capture pass, which runs the *policy* distribution).
+pub fn run_policy_episode_hooked(
+    model: &MiniVla,
+    task: &Task,
+    obs_params: &ObsParams,
+    seed: u64,
+    hook: &mut Option<Hook>,
+) -> EpisodeResult {
+    let mut rng = Rng::with_stream(seed, 0xE9);
+    let mut scene = task.instantiate(&mut rng);
+    let mut queue: Vec<Vec<f32>> = Vec::new();
+    for step in 0..task.horizon {
+        if task.success(&scene) {
+            return EpisodeResult { success: true, steps: step };
+        }
+        if queue.is_empty() {
+            let stage = task.active_stage(&scene).unwrap_or(0);
+            let instr = task.stages[stage].instr();
+            let obs = observe(&scene, instr, task.horizon, model, obs_params, &mut rng);
+            let feat = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, hook);
+            queue = model.decode(&feat, &mut rng);
+            queue.reverse(); // pop from the back
+        }
+        let action = queue.pop().unwrap();
+        scene.step(&action);
+    }
+    EpisodeResult { success: task.success(&scene), steps: task.horizon }
+}
+
+/// One demonstration step: the observation the policy would have seen and
+/// the expert's action.
+#[derive(Clone, Debug)]
+pub struct DemoStep {
+    pub obs: Observation,
+    pub action: [f32; 3],
+}
+
+/// Roll out the scripted expert, recording (observation, action) pairs.
+///
+/// `noise` enables DART-style noise injection: the *executed* action is
+/// the expert's plus exploration noise, while the recorded label stays
+/// the expert's corrective action — widening the state coverage so the
+/// cloned policy learns to recover from its own drift.
+pub fn run_expert_episode_noisy(
+    model: &MiniVla,
+    task: &Task,
+    obs_params: &ObsParams,
+    seed: u64,
+    noise: f64,
+) -> (EpisodeResult, Vec<DemoStep>) {
+    let mut rng = Rng::with_stream(seed, 0xDE);
+    let mut scene = task.instantiate(&mut rng);
+    let mut steps = Vec::new();
+    for step in 0..task.horizon {
+        if task.success(&scene) {
+            return (EpisodeResult { success: true, steps: step }, steps);
+        }
+        let stage = task.active_stage(&scene).unwrap_or(0);
+        let instr = task.stages[stage].instr();
+        let obs = observe(&scene, instr, task.horizon, model, obs_params, &mut rng);
+        let action = expert_action(&scene, task);
+        steps.push(DemoStep { obs, action });
+        let executed = [
+            (action[0] + (noise * rng.gauss()) as f32).clamp(-1.0, 1.0),
+            (action[1] + (noise * rng.gauss()) as f32).clamp(-1.0, 1.0),
+            action[2],
+        ];
+        scene.step(&executed);
+    }
+    (EpisodeResult { success: task.success(&scene), steps: task.horizon }, steps)
+}
+
+/// Noise-free expert rollout (calibration capture uses this).
+pub fn run_expert_episode(
+    model: &MiniVla,
+    task: &Task,
+    obs_params: &ObsParams,
+    seed: u64,
+) -> (EpisodeResult, Vec<DemoStep>) {
+    run_expert_episode_noisy(model, task, obs_params, seed, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::tasks::libero_suite;
+
+    #[test]
+    fn expert_episode_succeeds_and_records() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let task = &libero_suite("object")[0];
+        let (res, demo) = run_expert_episode(&model, task, &ObsParams::clean(), 42);
+        assert!(res.success);
+        assert!(!demo.is_empty());
+        assert!(demo.len() <= task.horizon);
+        assert_eq!(demo[0].obs.proprio.len(), model.cfg.d_proprio);
+    }
+
+    #[test]
+    fn untrained_policy_fails_gracefully() {
+        // Zero-initialized heads → zero actions → no success, full horizon.
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let task = &libero_suite("object")[0];
+        let res = run_policy_episode(&model, task, &ObsParams::clean(), 1);
+        assert!(!res.success);
+        assert_eq!(res.steps, task.horizon);
+    }
+
+    #[test]
+    fn episodes_are_deterministic_given_seed() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let task = &libero_suite("spatial")[0];
+        let a = run_policy_episode(&model, task, &ObsParams::clean(), 9);
+        let b = run_policy_episode(&model, task, &ObsParams::clean(), 9);
+        assert_eq!(a.success, b.success);
+        assert_eq!(a.steps, b.steps);
+    }
+}

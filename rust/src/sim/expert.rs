@@ -1,0 +1,138 @@
+//! Scripted expert controller: the demonstration source for behavioural
+//! cloning and the calibration-set generator (256 trajectories, matching
+//! the paper's setup).
+
+use crate::sim::scene::{dist, ObjKind, Scene};
+use crate::sim::tasks::{Goal, Task};
+
+/// Proportional servo gain (action units per world unit). Deliberately
+/// low enough that the expert's actions are *linear* in the state over
+/// most of the workspace (saturation only beyond ~0.4 world units) — a
+/// behavioural-cloning-friendly expert, standard practice for BC corpora.
+const KP: f32 = 2.4;
+/// Grip-ramp sharpness (action units per world unit of distance).
+const KG: f32 = 12.0;
+
+/// Proportional steer toward a point, expressed in action units.
+fn steer(from: [f32; 2], to: [f32; 2], _max_step: f32) -> [f32; 2] {
+    [
+        (KP * (to[0] - from[0])).clamp(-1.0, 1.0),
+        (KP * (to[1] - from[1])).clamp(-1.0, 1.0),
+    ]
+}
+
+/// Expert action for the current scene under `task`.
+/// Returns `[dx, dy, grip]` in [−1, 1]³.
+pub fn expert_action(scene: &Scene, task: &Task) -> [f32; 3] {
+    let Some(si) = task.active_stage(scene) else {
+        return [0.0, 0.0, -1.0]; // done: stay put, open gripper
+    };
+    let stage = &task.stages[si];
+    let p = scene.params;
+    let Some(tidx) = scene.find_idx(stage.target_id) else {
+        return [0.0, 0.0, -1.0];
+    };
+    let target_pos = scene.objects[tidx].pos;
+    let holding_target = scene.held == Some(tidx);
+    let holding_other = scene.held.is_some() && !holding_target;
+
+    if holding_other {
+        // Drop whatever we're wrongly holding.
+        return [0.0, 0.0, -1.0];
+    }
+
+    match stage.goal {
+        Goal::DrawerOpen(_) | Goal::DrawerClosed => {
+            debug_assert_eq!(scene.objects[tidx].kind, ObjKind::Drawer);
+            if holding_target {
+                let dir = if matches!(stage.goal, Goal::DrawerOpen(_)) { 0.8 } else { -0.8 };
+                [dir, (KP * (target_pos[1] - scene.ee[1])).clamp(-1.0, 1.0), 1.0]
+            } else {
+                let d = dist(scene.ee, target_pos);
+                let [dx, dy] = steer(scene.ee, target_pos, p.max_step);
+                // Smooth grip ramp: closes exactly at the grasp threshold —
+                // linear in the proximity-sensor feature.
+                let grip = (KG * (p.grasp_radius * 0.7 - d)).clamp(-1.0, 1.0);
+                [dx, dy, grip]
+            }
+        }
+        Goal::Point(_) | Goal::Obj(_) => {
+            if holding_target {
+                let goal = stage.goal_point(scene);
+                let d = dist(scene.ee, goal);
+                let [dx, dy] = steer(scene.ee, goal, p.max_step);
+                // Stay closed while far from the goal, open at the release
+                // threshold — again a linear ramp in distance.
+                let grip = (KG * (d - stage.radius * 0.55)).clamp(-1.0, 1.0);
+                [dx, dy, grip]
+            } else {
+                let d = dist(scene.ee, target_pos);
+                let [dx, dy] = steer(scene.ee, target_pos, p.max_step);
+                let grip = (KG * (p.grasp_radius * 0.7 - d)).clamp(-1.0, 1.0);
+                [dx, dy, grip]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tasks::{aloha_suite, libero_suite, simpler_suite};
+    use crate::util::rng::Rng;
+
+    /// The expert must solve every task in every suite from jittered
+    /// starts — otherwise BC has no clean signal.
+    #[test]
+    fn expert_solves_all_suites() {
+        let mut all: Vec<_> = Vec::new();
+        for which in ["spatial", "object", "goal", "long"] {
+            all.extend(libero_suite(which));
+        }
+        all.extend(simpler_suite());
+        all.extend(aloha_suite());
+        let mut rng = Rng::new(201);
+        for task in &all {
+            let mut ok = 0;
+            let trials = 5;
+            for _ in 0..trials {
+                let mut scene = task.instantiate(&mut rng);
+                for _ in 0..task.horizon {
+                    if task.success(&scene) {
+                        break;
+                    }
+                    let a = expert_action(&scene, task);
+                    scene.step(&a);
+                }
+                if task.success(&scene) {
+                    ok += 1;
+                }
+            }
+            assert_eq!(ok, trials, "expert failed task {}", task.name);
+        }
+    }
+
+    #[test]
+    fn expert_idles_when_done() {
+        let task = &libero_suite("object")[0];
+        let mut scene = task.template.clone();
+        let bucket = scene.find(crate::sim::scene::ids::BUCKET).unwrap().pos;
+        let tid = scene.find_idx(task.stages[0].target_id).unwrap();
+        scene.objects[tid].pos = bucket;
+        let a = expert_action(&scene, task);
+        assert_eq!(a, [0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn expert_actions_bounded() {
+        let mut rng = Rng::new(202);
+        for task in simpler_suite() {
+            let mut scene = task.instantiate(&mut rng);
+            for _ in 0..30 {
+                let a = expert_action(&scene, &task);
+                assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)), "{a:?}");
+                scene.step(&a);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Closed-loop manipulation benchmarks: the tabletop world ([`scene`]),
+//! the observation featurizer with dual-dominance statistics ([`observe`]),
+//! staged tasks for the LIBERO / SimplerEnv / Mobile-ALOHA analogues
+//! ([`tasks`]), the scripted expert ([`expert`]) and episode runners
+//! ([`episode`]).
+
+pub mod episode;
+pub mod expert;
+pub mod observe;
+pub mod scene;
+pub mod tasks;
+
+pub use episode::{run_expert_episode, run_policy_episode, DemoStep, EpisodeResult};
+pub use observe::{observe, ObsParams, Observation};
+pub use scene::{Object, Scene};
+pub use tasks::{aloha_suite, libero_suite, simpler_suite, Goal, Stage, Task};

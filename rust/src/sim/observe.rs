@@ -1,0 +1,286 @@
+//! Observation featurizer: scene → visual tokens + proprio.
+//!
+//! This is where the paper's **dual dominance** phenomenon (Figure 1) is
+//! generated explicitly: clutter tokens carry appearance features with
+//! occasional extreme magnitudes (the "Val=106.5" background artifact),
+//! and visual tokens vastly outnumber the single instruction token —
+//! exactly the statistics that skew the uniform Hessian and that the
+//! policy-aware rectification must overcome.
+
+use crate::model::params::channels;
+use crate::model::{content_codes, MiniVla};
+use crate::sim::scene::Scene;
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Per-episode observation-model parameters. `visual_matching()` mirrors
+/// SimplerEnv's clean setting; `variant_aggregation(rng)` randomizes
+/// lighting, clutter density and outlier magnitude.
+#[derive(Clone, Debug)]
+pub struct ObsParams {
+    /// Multiplies appearance features (SimplerEnv lighting variation).
+    pub lighting_gain: f32,
+    /// Number of clutter (background) tokens.
+    pub n_clutter: usize,
+    /// Magnitude of clutter outlier activations.
+    pub outlier_mag: f32,
+    /// Probability a clutter token is an extreme outlier.
+    pub outlier_prob: f64,
+    /// Std of position observation noise.
+    pub pos_noise: f32,
+    /// Std of generic feature noise.
+    pub feat_noise: f32,
+}
+
+impl ObsParams {
+    pub fn clean() -> Self {
+        ObsParams {
+            lighting_gain: 1.0,
+            n_clutter: 2,
+            outlier_mag: 30.0,
+            outlier_prob: 0.15,
+            pos_noise: 0.004,
+            feat_noise: 0.02,
+        }
+    }
+
+    /// SimplerEnv "Visual Matching": minimal discrepancy.
+    pub fn visual_matching() -> Self {
+        Self::clean()
+    }
+
+    /// SimplerEnv "Variant Aggregation": randomized lighting, backgrounds
+    /// and distractors per episode.
+    pub fn variant_aggregation(rng: &mut Rng) -> Self {
+        ObsParams {
+            lighting_gain: rng.range(0.6, 1.7) as f32,
+            n_clutter: 2 + rng.below(3),
+            outlier_mag: rng.range(40.0, 110.0) as f32,
+            outlier_prob: 0.35,
+            pos_noise: 0.008,
+            feat_noise: 0.05,
+        }
+    }
+}
+
+/// A full policy observation.
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// d_vis_in × n_visual raw visual tokens.
+    pub visual_raw: Matrix,
+    pub instr_id: usize,
+    pub proprio: Vec<f32>,
+}
+
+/// Appearance pattern per content id (deterministic), scaled by lighting.
+fn appearance_pattern(id: usize, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::with_stream(0xA99EA5, id as u64);
+    (0..dim).map(|_| rng.gauss() as f32).collect()
+}
+
+/// Featurize a scene for a given model config and instruction.
+/// Token layout: one token per scene object (slot order = object order),
+/// then clutter tokens, then zero padding up to `n_visual`.
+pub fn observe(
+    scene: &Scene,
+    instr_id: usize,
+    horizon: usize,
+    model: &MiniVla,
+    params: &ObsParams,
+    rng: &mut Rng,
+) -> Observation {
+    let cfg = &model.cfg;
+    let d = cfg.d_vis_in;
+    let n = cfg.n_visual;
+    let codes = content_codes();
+    let appear_dim = d - channels::RAW_APPEAR_START;
+    let mut v = Matrix::zeros(d, n);
+
+    let mut slot = 0usize;
+    for o in &scene.objects {
+        if slot >= n {
+            break;
+        }
+        // Content code.
+        for (k, ch) in channels::RAW_CONTENT.enumerate() {
+            v.set(ch, slot, codes.at(o.id, k));
+        }
+        // Noisy position.
+        v.set(channels::RAW_POS.start, slot, o.pos[0] + params.pos_noise * rng.gauss() as f32);
+        v.set(channels::RAW_POS.start + 1, slot, o.pos[1] + params.pos_noise * rng.gauss() as f32);
+        // Extra geometry: drawer openness, held-by-gripper flag.
+        v.set(channels::RAW_EXTRA.start, slot, o.openness());
+        let held = scene.held.map(|h| std::ptr::eq(&scene.objects[h], o)).unwrap_or(false);
+        v.set(channels::RAW_EXTRA.start + 1, slot, held as u8 as f32);
+        // Appearance, lighting-scaled.
+        let pat = appearance_pattern(o.id, appear_dim);
+        for (k, &p) in pat.iter().enumerate() {
+            v.set(
+                channels::RAW_APPEAR_START + k,
+                slot,
+                params.lighting_gain * (p + params.feat_noise * rng.gauss() as f32),
+            );
+        }
+        slot += 1;
+    }
+
+    // Clutter tokens: background junk with occasional extreme outliers —
+    // the dual-dominance generator.
+    for _ in 0..params.n_clutter {
+        if slot >= n {
+            break;
+        }
+        let mag = if rng.flip(params.outlier_prob) {
+            params.outlier_mag
+        } else {
+            params.lighting_gain
+        };
+        v.set(channels::RAW_POS.start, slot, rng.uniform() as f32);
+        v.set(channels::RAW_POS.start + 1, slot, rng.uniform() as f32);
+        for k in channels::RAW_APPEAR_START..d {
+            v.set(k, slot, mag * rng.gauss() as f32);
+        }
+        slot += 1;
+    }
+
+    // Remaining slots: silent padding with tiny noise.
+    for s in slot..n {
+        for k in 0..d {
+            v.set(k, s, 0.01 * rng.gauss() as f32);
+        }
+    }
+
+    // Gripper proximity sensors (real rigs expose these): distance to the
+    // nearest graspable non-held object and to the nearest fixed landmark.
+    // They make grasp/release thresholds linearly decodable.
+    let mut s_grasp = 1.5f32;
+    let mut s_landmark = 1.5f32;
+    for (i, o) in scene.objects.iter().enumerate() {
+        let d = crate::sim::scene::dist(scene.ee, o.pos);
+        match o.kind {
+            crate::sim::scene::ObjKind::Fixed => s_landmark = s_landmark.min(d),
+            _ => {
+                if scene.held != Some(i) {
+                    s_grasp = s_grasp.min(d);
+                }
+            }
+        }
+    }
+    let held = scene.held.is_some() as u8 as f32;
+    let proprio = vec![
+        scene.ee[0],
+        scene.ee[1],
+        scene.grip,
+        held,
+        scene.ee[0] * held,
+        scene.ee[1] * held,
+        s_grasp,
+        s_landmark,
+        s_grasp * held,
+        s_landmark * held,
+        scene.t as f32 / horizon.max(1) as f32,
+        1.0,
+    ];
+
+    Observation { visual_raw: v, instr_id, proprio }
+}
+
+/// Figure-1 diagnostics: activation-magnitude statistics over an
+/// observation batch — max |appearance| value, excess kurtosis, and the
+/// visual-to-instruction token ratio.
+pub struct DualDominanceStats {
+    pub max_abs: f32,
+    pub kurtosis: f32,
+    pub visual_token_ratio: f32,
+}
+
+pub fn dual_dominance_stats(obs: &[Observation], cfg_n_visual: usize) -> DualDominanceStats {
+    let mut vals = Vec::new();
+    for o in obs {
+        for t in 0..o.visual_raw.cols {
+            for k in channels::RAW_APPEAR_START..o.visual_raw.rows {
+                vals.push(o.visual_raw.at(k, t));
+            }
+        }
+    }
+    let max_abs = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    DualDominanceStats {
+        max_abs,
+        kurtosis: crate::tensor::stats::excess_kurtosis(&vals),
+        visual_token_ratio: cfg_n_visual as f32 / 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::scene::{ids, Object, Scene};
+
+    fn setup() -> (MiniVla, Scene) {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let scene = Scene::new(
+            vec![Object::rigid(ids::APPLE, [0.3, 0.4]), Object::fixed(ids::BUCKET, [0.7, 0.7])],
+            [0.1, 0.1],
+        );
+        (model, scene)
+    }
+
+    #[test]
+    fn observation_shapes_match_config() {
+        let (model, scene) = setup();
+        let mut rng = Rng::new(191);
+        let o = observe(&scene, 3, 100, &model, &ObsParams::clean(), &mut rng);
+        assert_eq!(o.visual_raw.rows, model.cfg.d_vis_in);
+        assert_eq!(o.visual_raw.cols, model.cfg.n_visual);
+        assert_eq!(o.proprio.len(), model.cfg.d_proprio);
+    }
+
+    #[test]
+    fn content_codes_present_in_slots() {
+        let (model, scene) = setup();
+        let mut rng = Rng::new(192);
+        let o = observe(&scene, 0, 100, &model, &ObsParams::clean(), &mut rng);
+        let codes = content_codes();
+        for k in 0..8 {
+            assert!((o.visual_raw.at(k, 0) - codes.at(ids::APPLE, k)).abs() < 1e-6);
+            assert!((o.visual_raw.at(k, 1) - codes.at(ids::BUCKET, k)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn positions_observed_with_small_noise() {
+        let (model, scene) = setup();
+        let mut rng = Rng::new(193);
+        let o = observe(&scene, 0, 100, &model, &ObsParams::clean(), &mut rng);
+        assert!((o.visual_raw.at(8, 0) - 0.3).abs() < 0.03);
+        assert!((o.visual_raw.at(9, 0) - 0.4).abs() < 0.03);
+    }
+
+    #[test]
+    fn variant_aggregation_produces_outliers() {
+        let (model, scene) = setup();
+        let mut rng = Rng::new(194);
+        let mut obs = Vec::new();
+        for _ in 0..40 {
+            let p = ObsParams::variant_aggregation(&mut rng);
+            obs.push(observe(&scene, 0, 100, &model, &p, &mut rng));
+        }
+        let stats = dual_dominance_stats(&obs, model.cfg.n_visual);
+        // Extreme background activations, like Figure 1's Val=106.5.
+        assert!(stats.max_abs > 30.0, "max_abs={}", stats.max_abs);
+        assert!(stats.kurtosis > 5.0, "kurtosis={}", stats.kurtosis);
+    }
+
+    #[test]
+    fn proprio_encodes_held_gate() {
+        let (model, mut scene) = setup();
+        let mut rng = Rng::new(195);
+        scene.ee = [0.3, 0.4];
+        scene.step(&[0.0, 0.0, 1.0]);
+        assert!(scene.held.is_some());
+        let o = observe(&scene, 0, 100, &model, &ObsParams::clean(), &mut rng);
+        assert_eq!(o.proprio[3], 1.0);
+        assert!((o.proprio[4] - scene.ee[0]).abs() < 1e-6);
+    }
+}

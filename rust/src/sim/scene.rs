@@ -1,0 +1,251 @@
+//! Tabletop scene state and kinematic dynamics.
+//!
+//! A deliberately simple but *closed-loop* manipulation world: a planar
+//! end-effector with a gripper, rigid objects that can be grasped and
+//! carried, and sliding drawers. The property the paper's evaluation needs
+//! — small per-step action errors compounding over long horizons into
+//! grasp/placement failures — comes from the closed loop itself, not from
+//! contact-physics fidelity (DESIGN.md §1).
+
+/// Global content ids (shared with the model's content-code table).
+pub mod ids {
+    pub const COKE: usize = 0;
+    pub const APPLE: usize = 1;
+    pub const BANANA: usize = 2;
+    pub const PEPPER: usize = 3;
+    pub const EGGPLANT: usize = 4;
+    pub const DRAWER: usize = 5;
+    pub const BUCKET: usize = 6;
+    pub const MARKER: usize = 7;
+    // Aliases for suite-local casts (≤ 8 ids active per task).
+    pub const TOWER_S: usize = 1;
+    pub const TOWER_M: usize = 2;
+    pub const TOWER_L: usize = 3;
+    pub const TOWEL_CORNER: usize = 4;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjKind {
+    /// Grasp-and-carry rigid object.
+    Rigid,
+    /// Drawer handle: slides along +x within [base_x, base_x + travel].
+    Drawer,
+    /// Fixed landmark (bucket, goal marker): cannot be grasped.
+    Fixed,
+}
+
+#[derive(Clone, Debug)]
+pub struct Object {
+    /// Content id (indexes the model's content-code table).
+    pub id: usize,
+    pub kind: ObjKind,
+    pub pos: [f32; 2],
+    /// Drawer: closed-position x; unused otherwise.
+    pub base_x: f32,
+}
+
+impl Object {
+    pub fn rigid(id: usize, pos: [f32; 2]) -> Self {
+        Object { id, kind: ObjKind::Rigid, pos, base_x: 0.0 }
+    }
+
+    pub fn fixed(id: usize, pos: [f32; 2]) -> Self {
+        Object { id, kind: ObjKind::Fixed, pos, base_x: 0.0 }
+    }
+
+    pub fn drawer(pos: [f32; 2]) -> Self {
+        Object { id: ids::DRAWER, kind: ObjKind::Drawer, pos, base_x: pos[0] }
+    }
+
+    /// Drawer openness in [0, 1].
+    pub fn openness(&self) -> f32 {
+        ((self.pos[0] - self.base_x) / DRAWER_TRAVEL).clamp(0.0, 1.0)
+    }
+}
+
+pub const DRAWER_TRAVEL: f32 = 0.18;
+
+/// Physical/action constants.
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// Max end-effector displacement per step (action unit → world).
+    pub max_step: f32,
+    /// Grasp succeeds within this distance of an object.
+    pub grasp_radius: f32,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { max_step: 0.05, grasp_radius: 0.09 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub objects: Vec<Object>,
+    pub ee: [f32; 2],
+    /// 1.0 = closed.
+    pub grip: f32,
+    /// Index into `objects` of the held object.
+    pub held: Option<usize>,
+    pub t: usize,
+    pub params: SimParams,
+}
+
+impl Scene {
+    pub fn new(objects: Vec<Object>, ee: [f32; 2]) -> Self {
+        Scene { objects, ee, grip: 0.0, held: None, t: 0, params: SimParams::default() }
+    }
+
+    pub fn find(&self, id: usize) -> Option<&Object> {
+        self.objects.iter().find(|o| o.id == id)
+    }
+
+    pub fn find_idx(&self, id: usize) -> Option<usize> {
+        self.objects.iter().position(|o| o.id == id)
+    }
+
+    pub fn dist_ee(&self, p: [f32; 2]) -> f32 {
+        dist(self.ee, p)
+    }
+
+    /// Advance one step with action [dx, dy, grip_cmd] ∈ [−1,1]³.
+    pub fn step(&mut self, action: &[f32]) {
+        let p = self.params;
+        let dx = action[0].clamp(-1.0, 1.0) * p.max_step;
+        let dy = action[1].clamp(-1.0, 1.0) * p.max_step;
+        self.ee[0] = (self.ee[0] + dx).clamp(0.0, 1.0);
+        self.ee[1] = (self.ee[1] + dy).clamp(0.0, 1.0);
+        let close_cmd = action[2] > 0.0;
+
+        match (close_cmd, self.held) {
+            (true, None) => {
+                // Try to grasp the nearest graspable object.
+                let mut best: Option<(usize, f32)> = None;
+                for (i, o) in self.objects.iter().enumerate() {
+                    if matches!(o.kind, ObjKind::Fixed) {
+                        continue;
+                    }
+                    let d = dist(self.ee, o.pos);
+                    if d < p.grasp_radius && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                        best = Some((i, d));
+                    }
+                }
+                if let Some((i, _)) = best {
+                    self.held = Some(i);
+                }
+                self.grip = 1.0;
+            }
+            (false, Some(_)) => {
+                self.held = None;
+                self.grip = 0.0;
+            }
+            (true, Some(_)) | (false, None) => {
+                self.grip = if close_cmd { 1.0 } else { 0.0 };
+            }
+        }
+
+        // Carried object follows the end-effector (drawers slide in x only,
+        // within their travel range).
+        if let Some(i) = self.held {
+            let (kind, base_x) = (self.objects[i].kind, self.objects[i].base_x);
+            match kind {
+                ObjKind::Drawer => {
+                    let o = &mut self.objects[i];
+                    o.pos[0] = self.ee[0].clamp(base_x, base_x + DRAWER_TRAVEL);
+                }
+                ObjKind::Rigid => {
+                    let o = &mut self.objects[i];
+                    o.pos = self.ee;
+                }
+                ObjKind::Fixed => unreachable!("fixed objects cannot be held"),
+            }
+        }
+        self.t += 1;
+    }
+}
+
+#[inline]
+pub fn dist(a: [f32; 2], b: [f32; 2]) -> f32 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    (dx * dx + dy * dy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scene_one_obj() -> Scene {
+        Scene::new(vec![Object::rigid(ids::APPLE, [0.5, 0.5])], [0.2, 0.2])
+    }
+
+    #[test]
+    fn ee_moves_and_clamps() {
+        let mut s = scene_one_obj();
+        s.step(&[1.0, 0.0, -1.0]);
+        assert!((s.ee[0] - 0.25).abs() < 1e-6);
+        for _ in 0..100 {
+            s.step(&[1.0, 1.0, -1.0]);
+        }
+        assert_eq!(s.ee, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn grasp_within_radius_only() {
+        let mut s = scene_one_obj();
+        s.step(&[0.0, 0.0, 1.0]); // far away: no grasp
+        assert!(s.held.is_none());
+        s.ee = [0.48, 0.5];
+        s.step(&[0.0, 0.0, 1.0]);
+        assert_eq!(s.held, Some(0));
+    }
+
+    #[test]
+    fn carried_object_follows_and_releases() {
+        let mut s = scene_one_obj();
+        s.ee = [0.5, 0.5];
+        s.step(&[0.0, 0.0, 1.0]);
+        assert!(s.held.is_some());
+        s.step(&[1.0, 0.0, 1.0]);
+        assert_eq!(s.objects[0].pos, s.ee);
+        let drop = s.objects[0].pos;
+        s.step(&[0.0, 0.0, -1.0]);
+        assert!(s.held.is_none());
+        s.step(&[-1.0, 0.0, -1.0]);
+        assert_eq!(s.objects[0].pos, drop, "released object stays put");
+    }
+
+    #[test]
+    fn fixed_objects_ungraspable() {
+        let mut s = Scene::new(vec![Object::fixed(ids::BUCKET, [0.3, 0.3])], [0.3, 0.3]);
+        s.step(&[0.0, 0.0, 1.0]);
+        assert!(s.held.is_none());
+    }
+
+    #[test]
+    fn drawer_slides_within_travel() {
+        let mut s = Scene::new(vec![Object::drawer([0.4, 0.6])], [0.4, 0.6]);
+        s.step(&[0.0, 0.0, 1.0]);
+        assert_eq!(s.held, Some(0));
+        for _ in 0..20 {
+            s.step(&[1.0, 0.0, 1.0]);
+        }
+        let o = &s.objects[0];
+        assert!((o.openness() - 1.0).abs() < 1e-5, "openness={}", o.openness());
+        assert!((o.pos[0] - (0.4 + DRAWER_TRAVEL)).abs() < 1e-5);
+        // Sliding back closes it.
+        for _ in 0..20 {
+            s.step(&[-1.0, 0.0, 1.0]);
+        }
+        assert!(s.objects[0].openness() < 1e-5);
+    }
+
+    #[test]
+    fn time_advances() {
+        let mut s = scene_one_obj();
+        s.step(&[0.0, 0.0, 0.0]);
+        s.step(&[0.0, 0.0, 0.0]);
+        assert_eq!(s.t, 2);
+    }
+}

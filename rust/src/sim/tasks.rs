@@ -1,0 +1,461 @@
+//! Task definitions and the three benchmark suites (LIBERO-like,
+//! SimplerEnv-like, Mobile-ALOHA-like). Tasks are staged pick/place/slide
+//! goals over the tabletop scene; multi-stage tasks receive the current
+//! stage's instruction (the benchmark supplies sequenced sub-instructions,
+//! as in Mobile-ALOHA's "Sequenced Instruction" suite).
+
+use crate::model::instr_index;
+use crate::sim::scene::{dist, ids, Object, Scene};
+use crate::util::rng::Rng;
+
+/// Where the stage's target object must end up.
+#[derive(Clone, Copy, Debug)]
+pub enum Goal {
+    /// Within `radius` of a fixed point.
+    Point([f32; 2]),
+    /// Within `radius` of another object (by content id).
+    Obj(usize),
+    /// Drawer openness ≥ threshold.
+    DrawerOpen(f32),
+    /// Drawer openness ≤ 0.15.
+    DrawerClosed,
+}
+
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// Content id of the object to manipulate.
+    pub target_id: usize,
+    pub goal: Goal,
+    pub radius: f32,
+}
+
+impl Stage {
+    /// Instruction id the policy receives while this stage is active.
+    /// Open vs close drawer get distinct goal codes so the instruction
+    /// disambiguates the direction ("open the drawer" / "close the
+    /// drawer" are different sentences).
+    pub fn instr(&self) -> usize {
+        let goal_id = match self.goal {
+            Goal::Point(_) => ids::MARKER,
+            Goal::Obj(id) => id,
+            Goal::DrawerOpen(_) => ids::DRAWER,
+            Goal::DrawerClosed => ids::BUCKET,
+        };
+        instr_index(self.target_id, goal_id)
+    }
+
+    pub fn satisfied(&self, scene: &Scene) -> bool {
+        let Some(idx) = scene.find_idx(self.target_id) else {
+            return false;
+        };
+        let obj = &scene.objects[idx];
+        let held = scene.held == Some(idx);
+        match self.goal {
+            Goal::Point(p) => !held && dist(obj.pos, p) <= self.radius,
+            Goal::Obj(gid) => {
+                let Some(g) = scene.find(gid) else { return false };
+                !held && dist(obj.pos, g.pos) <= self.radius
+            }
+            Goal::DrawerOpen(th) => obj.openness() >= th,
+            Goal::DrawerClosed => obj.openness() <= 0.15,
+        }
+    }
+
+    /// World point the expert steers the held object toward.
+    pub fn goal_point(&self, scene: &Scene) -> [f32; 2] {
+        match self.goal {
+            Goal::Point(p) => p,
+            Goal::Obj(gid) => scene.find(gid).map(|o| o.pos).unwrap_or([0.5, 0.5]),
+            Goal::DrawerOpen(_) | Goal::DrawerClosed => {
+                scene.find(self.target_id).map(|o| o.pos).unwrap_or([0.5, 0.5])
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub suite: String,
+    pub stages: Vec<Stage>,
+    pub horizon: usize,
+    /// Initial scene template; per-episode jitter applied on instantiate.
+    pub template: Scene,
+    pub jitter: f32,
+}
+
+impl Task {
+    /// Instantiate a per-episode scene: jitter object positions and the
+    /// end-effector start, deterministically from `rng`.
+    pub fn instantiate(&self, rng: &mut Rng) -> Scene {
+        let mut s = self.template.clone();
+        for o in &mut s.objects {
+            if matches!(o.kind, crate::sim::scene::ObjKind::Drawer) {
+                continue; // drawers stay anchored
+            }
+            o.pos[0] = (o.pos[0] + self.jitter * rng.gauss() as f32).clamp(0.05, 0.95);
+            o.pos[1] = (o.pos[1] + self.jitter * rng.gauss() as f32).clamp(0.05, 0.95);
+        }
+        s.ee[0] = (s.ee[0] + self.jitter * rng.gauss() as f32).clamp(0.05, 0.95);
+        s.ee[1] = (s.ee[1] + self.jitter * rng.gauss() as f32).clamp(0.05, 0.95);
+        s
+    }
+
+    /// First unsatisfied stage index (None = task complete).
+    pub fn active_stage(&self, scene: &Scene) -> Option<usize> {
+        (0..self.stages.len()).find(|&i| !self.stages[i].satisfied(scene))
+    }
+
+    pub fn success(&self, scene: &Scene) -> bool {
+        self.stages.iter().all(|st| st.satisfied(scene))
+    }
+}
+
+const R: f32 = 0.10; // default placement radius
+
+fn pick_place_task(
+    name: &str,
+    suite: &str,
+    target: usize,
+    goal: Goal,
+    extra: Vec<Object>,
+    horizon: usize,
+    radius: f32,
+) -> Task {
+    let mut objects = vec![Object::rigid(target, [0.3, 0.35])];
+    objects.extend(extra);
+    Task {
+        name: name.to_string(),
+        suite: suite.to_string(),
+        stages: vec![Stage { target_id: target, goal, radius }],
+        horizon,
+        template: Scene::new(objects, [0.15, 0.15]),
+        jitter: 0.06,
+    }
+}
+
+/// LIBERO-like suites: Spatial / Object / Goal / Long.
+pub fn libero_suite(which: &str) -> Vec<Task> {
+    match which {
+        "spatial" => {
+            // Place the object at a marked point among distractors.
+            let layouts: [( [f32;2], [f32;2] ); 5] = [
+                ([0.7, 0.7], [0.3, 0.7]),
+                ([0.75, 0.3], [0.5, 0.8]),
+                ([0.25, 0.75], [0.8, 0.5]),
+                ([0.6, 0.2], [0.2, 0.5]),
+                ([0.8, 0.8], [0.45, 0.3]),
+            ];
+            layouts
+                .iter()
+                .enumerate()
+                .map(|(i, (mpos, dpos))| {
+                    let mut t = pick_place_task(
+                        &format!("spatial_{i}"),
+                        "libero_spatial",
+                        ids::APPLE,
+                        Goal::Point(*mpos),
+                        vec![
+                            Object::fixed(ids::MARKER, *mpos),
+                            Object::rigid(ids::BANANA, *dpos),
+                            Object::rigid(ids::PEPPER, [dpos[1], dpos[0]]),
+                        ],
+                        110,
+                        R,
+                    );
+                    t.jitter = 0.05;
+                    t
+                })
+                .collect()
+        }
+        "object" => [ids::COKE, ids::APPLE, ids::BANANA, ids::PEPPER, ids::EGGPLANT]
+            .iter()
+            .enumerate()
+            .map(|(i, &target)| {
+                let distractors: Vec<Object> = [ids::COKE, ids::APPLE, ids::BANANA, ids::PEPPER, ids::EGGPLANT]
+                    .iter()
+                    .filter(|&&d| d != target)
+                    .take(3)
+                    .enumerate()
+                    .map(|(k, &d)| Object::rigid(d, [0.25 + 0.18 * k as f32, 0.65]))
+                    .collect();
+                let mut extra = vec![Object::fixed(ids::BUCKET, [0.75, 0.25])];
+                extra.extend(distractors);
+                pick_place_task(
+                    &format!("object_{i}"),
+                    "libero_object",
+                    target,
+                    Goal::Obj(ids::BUCKET),
+                    extra,
+                    110,
+                    R,
+                )
+            })
+            .collect(),
+        "goal" => {
+            // Fixed target object, varying goal landmark.
+            let goals: [(usize, [f32; 2]); 4] = [
+                (ids::BUCKET, [0.8, 0.3]),
+                (ids::MARKER, [0.25, 0.8]),
+                (ids::BANANA, [0.7, 0.75]),
+                (ids::PEPPER, [0.4, 0.2]),
+            ];
+            goals
+                .iter()
+                .enumerate()
+                .map(|(i, &(gid, gpos))| {
+                    let gobj = if gid == ids::BANANA || gid == ids::PEPPER {
+                        Object::rigid(gid, gpos)
+                    } else {
+                        Object::fixed(gid, gpos)
+                    };
+                    pick_place_task(
+                        &format!("goal_{i}"),
+                        "libero_goal",
+                        ids::APPLE,
+                        Goal::Obj(gid),
+                        vec![gobj, Object::rigid(ids::EGGPLANT, [0.55, 0.55])],
+                        110,
+                        0.12,
+                    )
+                })
+                .collect()
+        }
+        "long" => {
+            // Two-stage tasks: X → bucket, then Y → marker.
+            let pairs = [
+                (ids::APPLE, ids::BANANA),
+                (ids::COKE, ids::PEPPER),
+                (ids::EGGPLANT, ids::APPLE),
+                (ids::BANANA, ids::COKE),
+            ];
+            pairs
+                .iter()
+                .enumerate()
+                .map(|(i, &(a, b))| Task {
+                    name: format!("long_{i}"),
+                    suite: "libero_long".to_string(),
+                    stages: vec![
+                        Stage { target_id: a, goal: Goal::Obj(ids::BUCKET), radius: R },
+                        Stage { target_id: b, goal: Goal::Obj(ids::MARKER), radius: R },
+                    ],
+                    horizon: 240,
+                    template: Scene::new(
+                        vec![
+                            Object::rigid(a, [0.3, 0.3]),
+                            Object::rigid(b, [0.3, 0.7]),
+                            Object::fixed(ids::BUCKET, [0.8, 0.35]),
+                            Object::fixed(ids::MARKER, [0.75, 0.75]),
+                        ],
+                        [0.15, 0.5],
+                    ),
+                    jitter: 0.05,
+                })
+                .collect()
+        }
+        _ => panic!("unknown LIBERO suite '{which}'"),
+    }
+}
+
+/// SimplerEnv-like tasks: Pick Coke / Move Near / Open+Close Drawer /
+/// Place Apple (open drawer then put the apple in).
+pub fn simpler_suite() -> Vec<Task> {
+    let mut tasks = Vec::new();
+    tasks.push(pick_place_task(
+        "pick_coke",
+        "simpler",
+        ids::COKE,
+        Goal::Point([0.8, 0.75]),
+        vec![Object::fixed(ids::MARKER, [0.8, 0.75]), Object::rigid(ids::PEPPER, [0.55, 0.3])],
+        110,
+        0.11,
+    ));
+    tasks.push(pick_place_task(
+        "move_near",
+        "simpler",
+        ids::BANANA,
+        Goal::Obj(ids::PEPPER),
+        vec![Object::rigid(ids::PEPPER, [0.7, 0.6]), Object::rigid(ids::EGGPLANT, [0.5, 0.8])],
+        110,
+        0.13,
+    ));
+    tasks.push(Task {
+        name: "open_drawer".to_string(),
+        suite: "simpler".to_string(),
+        stages: vec![Stage { target_id: ids::DRAWER, goal: Goal::DrawerOpen(0.85), radius: R }],
+        horizon: 110,
+        template: Scene::new(vec![Object::drawer([0.45, 0.6])], [0.25, 0.35]),
+        jitter: 0.04,
+    });
+    tasks.push(Task {
+        name: "close_drawer".to_string(),
+        suite: "simpler".to_string(),
+        stages: vec![Stage { target_id: ids::DRAWER, goal: Goal::DrawerClosed, radius: R }],
+        horizon: 110,
+        template: {
+            let mut drawer = Object::drawer([0.45, 0.6]);
+            drawer.pos[0] = drawer.base_x + crate::sim::scene::DRAWER_TRAVEL; // start open
+            Scene::new(vec![drawer], [0.3, 0.4])
+        },
+        jitter: 0.04,
+    });
+    tasks.push(Task {
+        name: "place_apple".to_string(),
+        suite: "simpler".to_string(),
+        stages: vec![
+            Stage { target_id: ids::DRAWER, goal: Goal::DrawerOpen(0.7), radius: R },
+            Stage { target_id: ids::APPLE, goal: Goal::Obj(ids::DRAWER), radius: 0.11 },
+        ],
+        horizon: 240,
+        template: Scene::new(
+            vec![Object::drawer([0.45, 0.65]), Object::rigid(ids::APPLE, [0.25, 0.3])],
+            [0.2, 0.45],
+        ),
+        jitter: 0.04,
+    });
+    tasks
+}
+
+/// Mobile-ALOHA-like real-robot suite: Pick&Place (3 objects), Sequenced
+/// Instruction (tower of hanoi), Flexible Folding (3-stage).
+pub fn aloha_suite() -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for (i, &obj) in [ids::BANANA, ids::PEPPER, ids::EGGPLANT].iter().enumerate() {
+        let distractors: Vec<Object> = [ids::BANANA, ids::PEPPER, ids::EGGPLANT]
+            .iter()
+            .filter(|&&d| d != obj)
+            .enumerate()
+            .map(|(k, &d)| Object::rigid(d, [0.3 + 0.15 * k as f32, 0.7]))
+            .collect();
+        let mut extra = vec![Object::fixed(ids::BUCKET, [0.5, 0.45])];
+        extra.extend(distractors);
+        tasks.push(pick_place_task(
+            &format!("pick_place_{i}"),
+            "aloha_pick_place",
+            obj,
+            Goal::Obj(ids::BUCKET),
+            extra,
+            130,
+            0.08,
+        ));
+    }
+    tasks.push(Task {
+        name: "tower_of_hanoi".to_string(),
+        suite: "aloha_sequenced".to_string(),
+        stages: vec![
+            Stage { target_id: ids::TOWER_M, goal: Goal::Obj(ids::TOWER_L), radius: 0.09 },
+            Stage { target_id: ids::TOWER_S, goal: Goal::Obj(ids::TOWER_M), radius: 0.09 },
+        ],
+        horizon: 260,
+        template: Scene::new(
+            vec![
+                Object::rigid(ids::TOWER_S, [0.25, 0.3]),
+                Object::rigid(ids::TOWER_M, [0.5, 0.25]),
+                Object::rigid(ids::TOWER_L, [0.75, 0.55]),
+            ],
+            [0.2, 0.6],
+        ),
+        jitter: 0.04,
+    });
+    tasks.push(Task {
+        name: "fold_towel".to_string(),
+        suite: "aloha_folding".to_string(),
+        stages: vec![
+            Stage { target_id: ids::TOWEL_CORNER, goal: Goal::Point([0.5, 0.5]), radius: 0.08 },
+            Stage { target_id: ids::PEPPER, goal: Goal::Point([0.5, 0.42]), radius: 0.08 },
+            Stage { target_id: ids::COKE, goal: Goal::Point([0.42, 0.5]), radius: 0.08 },
+        ],
+        horizon: 300,
+        template: Scene::new(
+            vec![
+                // Towel corners cast as distinct content ids (abstract sim).
+                Object::rigid(ids::TOWEL_CORNER, [0.3, 0.72]),
+                Object::rigid(ids::PEPPER, [0.72, 0.3]),
+                Object::rigid(ids::COKE, [0.28, 0.3]),
+                Object::fixed(ids::MARKER, [0.5, 0.5]),
+            ],
+            [0.5, 0.75],
+        ),
+        jitter: 0.03,
+    });
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_nonempty_and_tagged() {
+        for which in ["spatial", "object", "goal", "long"] {
+            let suite = libero_suite(which);
+            assert!(!suite.is_empty());
+            for t in &suite {
+                assert!(t.suite.starts_with("libero_"));
+                assert!(!t.stages.is_empty());
+                assert!(t.horizon > 0);
+            }
+        }
+        assert_eq!(simpler_suite().len(), 5);
+        assert_eq!(aloha_suite().len(), 5);
+    }
+
+    #[test]
+    fn instantiate_jitters_deterministically() {
+        let t = &libero_suite("spatial")[0];
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let s1 = t.instantiate(&mut r1);
+        let s2 = t.instantiate(&mut r2);
+        assert_eq!(s1.objects[0].pos, s2.objects[0].pos);
+        let mut r3 = Rng::new(8);
+        let s3 = t.instantiate(&mut r3);
+        assert_ne!(s1.objects[0].pos, s3.objects[0].pos);
+    }
+
+    #[test]
+    fn stage_satisfaction_pick_place() {
+        let t = &libero_suite("object")[0];
+        let mut scene = t.template.clone();
+        assert!(!t.success(&scene));
+        assert_eq!(t.active_stage(&scene), Some(0));
+        // Teleport the target onto the bucket.
+        let bucket_pos = scene.find(ids::BUCKET).unwrap().pos;
+        let tid = scene.find_idx(t.stages[0].target_id).unwrap();
+        scene.objects[tid].pos = bucket_pos;
+        assert!(t.success(&scene));
+        assert_eq!(t.active_stage(&scene), None);
+    }
+
+    #[test]
+    fn drawer_stages() {
+        let tasks = simpler_suite();
+        let open = tasks.iter().find(|t| t.name == "open_drawer").unwrap();
+        let mut scene = open.template.clone();
+        assert!(!open.success(&scene));
+        scene.objects[0].pos[0] = scene.objects[0].base_x + crate::sim::scene::DRAWER_TRAVEL;
+        assert!(open.success(&scene));
+        let close = tasks.iter().find(|t| t.name == "close_drawer").unwrap();
+        assert!(!close.success(&close.template.clone()));
+    }
+
+    #[test]
+    fn held_object_does_not_satisfy_place() {
+        let t = &libero_suite("object")[0];
+        let mut scene = t.template.clone();
+        let bucket_pos = scene.find(ids::BUCKET).unwrap().pos;
+        let tid = scene.find_idx(t.stages[0].target_id).unwrap();
+        scene.objects[tid].pos = bucket_pos;
+        scene.held = Some(tid);
+        assert!(!t.stages[0].satisfied(&scene), "held object must not count as placed");
+    }
+
+    #[test]
+    fn stage_instructions_are_groundable() {
+        for t in simpler_suite().iter().chain(aloha_suite().iter()) {
+            for st in &t.stages {
+                assert!(st.instr() < 64, "instr out of vocab for {}", t.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Dense linear algebra: Cholesky factorization, SPD solves, matrix
+//! inversion and ridge regression. These back the OBQ/GPTQ compensation
+//! (H⁻¹ via Cholesky) and behavioural-cloning fits (normal equations).
+//!
+//! Internals run in f64 for stability — calibration Hessians of nearly
+//! collinear activations are poorly conditioned, and GPTQ error
+//! compensation amplifies factorization noise.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix (f64 internally).
+/// Returns `None` if the matrix is not positive definite (after the caller's
+/// damping — callers should add λI first).
+pub fn cholesky(a: &Matrix) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular n×n in f64.
+fn forward_sub(l: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    y
+}
+
+/// Solve Lᵀ x = y (back substitution).
+fn backward_sub(l: &[f64], y: &[f64]) -> Vec<f64> {
+    let n = y.len();
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Solve A x = b for SPD A with pre-computed Cholesky factor.
+pub fn cholesky_solve(l: &[f64], b: &[f32]) -> Vec<f32> {
+    let b64: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    let y = forward_sub(l, &b64);
+    backward_sub(l, &y).into_iter().map(|v| v as f32).collect()
+}
+
+/// Invert an SPD matrix via Cholesky. Adds `damp`·mean(diag)·I first.
+/// Used for H⁻¹ in OBQ; damping follows GPTQ's percdamp convention.
+pub fn spd_inverse(a: &Matrix, damp: f64) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mean_diag: f64 = (0..n).map(|i| a.at(i, i) as f64).sum::<f64>() / n as f64;
+    let lambda = (damp * mean_diag).max(1e-10);
+    let mut ad = a.clone();
+    for i in 0..n {
+        *ad.at_mut(i, i) += lambda as f32;
+    }
+    let l = cholesky(&ad)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = cholesky_solve(&l, &e);
+        for i in 0..n {
+            inv.set(i, j, col[i]);
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+/// Ridge regression: solve (XᵀX + λI) W = Xᵀ Y for W (features×targets),
+/// X: samples×features, Y: samples×targets. Returns W.
+pub fn ridge(x: &Matrix, y: &Matrix, lambda: f64) -> Matrix {
+    assert_eq!(x.rows, y.rows, "sample count mismatch");
+    let d = x.cols;
+    let t = y.cols;
+    // Normal equations in f64.
+    let mut xtx = vec![0.0f64; d * d];
+    for s in 0..x.rows {
+        let row = x.row(s);
+        for i in 0..d {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..d {
+                xtx[i * d + j] += xi * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            xtx[i * d + j] = xtx[j * d + i];
+        }
+        xtx[i * d + i] += lambda;
+    }
+    let mut xty = vec![0.0f64; d * t];
+    for s in 0..x.rows {
+        let xrow = x.row(s);
+        let yrow = y.row(s);
+        for i in 0..d {
+            let xi = xrow[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for k in 0..t {
+                xty[i * t + k] += xi * yrow[k] as f64;
+            }
+        }
+    }
+    let xtx_m = Matrix::from_vec(d, d, xtx.iter().map(|&v| v as f32).collect());
+    let l = match cholesky(&xtx_m) {
+        Some(l) => l,
+        None => {
+            // Increase damping until PD.
+            let mut lam = lambda.max(1e-6);
+            loop {
+                lam *= 10.0;
+                let mut a = xtx_m.clone();
+                for i in 0..d {
+                    *a.at_mut(i, i) += lam as f32;
+                }
+                if let Some(l) = cholesky(&a) {
+                    break l;
+                }
+                assert!(lam < 1e12, "ridge: matrix unsalvageable");
+            }
+        }
+    };
+    let mut w = Matrix::zeros(d, t);
+    let mut rhs = vec![0.0f32; d];
+    for k in 0..t {
+        for i in 0..d {
+            rhs[i] = xty[i * t + k] as f32;
+        }
+        let col = cholesky_solve(&l, &rhs);
+        for i in 0..d {
+            w.set(i, k, col[i]);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = Matrix::gauss(n, n + 4, 1.0, rng);
+        let mut g = matmul(&a, &a.transpose());
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(21);
+        let a = random_spd(12, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let n = 12;
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = 0.0f64;
+                for k in 0..n {
+                    v += l[i * n + k] * l[j * n + k];
+                }
+                assert!((v - a.at(i, j) as f64).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(22);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let x_true = Matrix::gauss(8, 1, 1.0, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = cholesky_solve(&l, &b.data);
+        for i in 0..8 {
+            assert!((x[i] - x_true.data[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(23);
+        let a = random_spd(10, &mut rng);
+        let inv = spd_inverse(&a, 0.0).unwrap();
+        let prod = matmul(&a, &inv);
+        let eye = Matrix::eye(10);
+        assert!(prod.dist_sq(&eye) < 1e-4, "dist={}", prod.dist_sq(&eye));
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        let mut rng = Rng::new(24);
+        let w_true = Matrix::gauss(6, 3, 1.0, &mut rng);
+        let x = Matrix::gauss(200, 6, 1.0, &mut rng);
+        let y = matmul(&x, &w_true);
+        let w = ridge(&x, &y, 1e-6);
+        assert!(w.dist_sq(&w_true) < 1e-4, "dist={}", w.dist_sq(&w_true));
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let mut rng = Rng::new(25);
+        let w_true = Matrix::gauss(5, 1, 1.0, &mut rng);
+        let x = Matrix::gauss(100, 5, 1.0, &mut rng);
+        let y = matmul(&x, &w_true);
+        let w_small = ridge(&x, &y, 1e-6);
+        let w_big = ridge(&x, &y, 1e4);
+        assert!(w_big.frob_norm() < w_small.frob_norm());
+    }
+
+    #[test]
+    fn ridge_handles_rank_deficiency() {
+        let mut rng = Rng::new(26);
+        // Duplicate feature columns => singular XtX; ridge must still solve.
+        let base = Matrix::gauss(50, 3, 1.0, &mut rng);
+        let x = Matrix::from_fn(50, 6, |i, j| base.at(i, j % 3));
+        let y = Matrix::gauss(50, 2, 1.0, &mut rng);
+        let w = ridge(&x, &y, 1e-3);
+        assert!(w.is_finite());
+    }
+}

@@ -1,0 +1,321 @@
+//! Dense row-major `f32` matrix — the workhorse container of the repo.
+//!
+//! All model weights, activations, Hessians and quantizer intermediates are
+//! `Matrix` values. We deliberately keep a single concrete dtype (f32) and
+//! layout (row-major) so kernels in [`crate::tensor::ops`] can be tight.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn gauss(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data, std);
+        m
+    }
+
+    /// Near-orthogonal random matrix via Gram–Schmidt on gaussian rows,
+    /// scaled by `gain`. For rows > cols, blocks of `cols` rows are
+    /// orthogonalized independently.
+    pub fn orthogonal(rows: usize, cols: usize, gain: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::gauss(rows, cols, 1.0, rng);
+        let block = cols;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + block).min(rows);
+            for i in r0..r1 {
+                // Orthogonalize row i against rows r0..i.
+                for k in r0..i {
+                    let mut dot = 0.0f32;
+                    for j in 0..cols {
+                        dot += m.data[i * cols + j] * m.data[k * cols + j];
+                    }
+                    for j in 0..cols {
+                        m.data[i * cols + j] -= dot * m.data[k * cols + j];
+                    }
+                }
+                let mut n2 = 0.0f32;
+                for j in 0..cols {
+                    n2 += m.data[i * cols + j] * m.data[i * cols + j];
+                }
+                let inv = if n2 > 1e-12 { gain / n2.sqrt() } else { 0.0 };
+                for j in 0..cols {
+                    m.data[i * cols + j] *= inv;
+                }
+            }
+            r0 = r1;
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Select columns by index into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in idx.iter().enumerate() {
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Scatter columns of `src` back into `self` at positions `idx`.
+    pub fn assign_cols(&mut self, idx: &[usize], src: &Matrix) {
+        assert_eq!(src.rows, self.rows);
+        assert_eq!(src.cols, idx.len());
+        for i in 0..self.rows {
+            for (k, &j) in idx.iter().enumerate() {
+                self.set(i, j, src.at(i, k));
+            }
+        }
+    }
+
+    /// Horizontal slice rows [r0, r1).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.frob_norm_sq().sqrt()
+    }
+
+    /// ‖self − other‖²_F
+    pub fn dist_sq(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Column ℓ2 norms.
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut n = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for j in 0..self.cols {
+                n[j] += row[j] * row[j];
+            }
+        }
+        for v in &mut n {
+            *v = v.sqrt();
+        }
+        n
+    }
+
+    /// Column ℓ1 norms.
+    pub fn col_norms_l1(&self) -> Vec<f32> {
+        let mut n = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for j in 0..self.cols {
+                n[j] += row[j].abs();
+            }
+        }
+        n
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(3);
+        let m = Matrix::gauss(17, 33, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_diag() {
+        let i = Matrix::eye(5);
+        assert_eq!(i.diag(), vec![1.0; 5]);
+        assert_eq!(i.frob_norm_sq(), 5.0);
+    }
+
+    #[test]
+    fn select_assign_cols_roundtrip() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::gauss(6, 10, 1.0, &mut rng);
+        let idx = vec![1, 4, 7];
+        let sub = m.select_cols(&idx);
+        let mut m2 = m.clone();
+        m2.assign_cols(&idx, &sub);
+        assert_eq!(m2, m);
+    }
+
+    #[test]
+    fn orthogonal_rows_are_orthonormal() {
+        let mut rng = Rng::new(5);
+        let q = Matrix::orthogonal(8, 16, 1.0, &mut rng);
+        for i in 0..8 {
+            for k in 0..8 {
+                let dot: f32 = (0..16).map(|j| q.at(i, j) * q.at(k, j)).sum();
+                let expect = if i == k { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "i={i} k={k} dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_norms_match_manual() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 1.0]);
+        let n = m.col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 1.0).abs() < 1e-6);
+        let n1 = m.col_norms_l1();
+        assert!((n1[0] - 7.0).abs() < 1e-6);
+        assert!((n1[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dist_sq_zero_for_self() {
+        let mut rng = Rng::new(6);
+        let m = Matrix::gauss(5, 5, 2.0, &mut rng);
+        assert_eq!(m.dist_sq(&m), 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dense tensor substrate: the f32 matrix container, GEMM/GEMV kernels,
+//! SPD linear algebra (Cholesky / ridge) and statistics helpers.
+
+pub mod linalg;
+pub mod matrix;
+pub mod ops;
+pub mod stats;
+
+pub use matrix::Matrix;

@@ -1,0 +1,316 @@
+//! Matrix kernels: blocked, multi-threaded GEMM and friends.
+//!
+//! This is the hot path of both the PTQ pipeline (Hessian products, Haar
+//! transforms, OBQ updates) and closed-loop policy inference, so the GEMM is
+//! written to auto-vectorize: the inner loop is a saxpy over contiguous
+//! rows (ikj order) on a zero-initialized accumulator panel.
+
+use super::matrix::Matrix;
+use crate::util::threadpool::parallel_for;
+
+/// C = A · B  (A: m×k, B: k×n)
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · B, writing into a preallocated output (C is overwritten).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.iter_mut().for_each(|v| *v = 0.0);
+    // ikj loop: for each row of A, accumulate scaled rows of B. The j-loop
+    // is contiguous over both B and C, so LLVM vectorizes it.
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = arow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Threaded GEMM: rows of A are distributed over `threads` workers.
+/// Falls back to single-thread for small problems.
+pub fn matmul_mt(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if threads <= 1 || flops < 2.0e7 {
+        return matmul(a, b);
+    }
+    let mut c = Matrix::zeros(m, n);
+    let cptr = SendPtr(c.data.as_mut_ptr());
+    let rows_per = m.div_ceil(threads);
+    let chunks = m.div_ceil(rows_per);
+    parallel_for(chunks, threads, |ci| {
+        // Capture the wrapper (not the raw field) so Send/Sync apply under
+        // edition-2021 disjoint closure capture.
+        let cptr = &cptr;
+        let r0 = ci * rows_per;
+        let r1 = ((ci + 1) * rows_per).min(m);
+        for i in r0..r1 {
+            let arow = a.row(i);
+            // SAFETY: each worker writes a disjoint row range of C.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+            for p in 0..k {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    });
+    c
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// y = A · x  (A: m×k, x: k) — GEMV used on the policy hot path.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let mut j = 0;
+        while j + 4 <= row.len() {
+            acc0 += row[j] * x[j];
+            acc1 += row[j + 1] * x[j + 1];
+            acc2 += row[j + 2] * x[j + 2];
+            acc3 += row[j + 3] * x[j + 3];
+            j += 4;
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        while j < row.len() {
+            acc += row[j] * x[j];
+            j += 1;
+        }
+        y[i] = acc;
+    }
+}
+
+/// A · Aᵀ without forming the transpose (used for Hessians H = X Xᵀ with X
+/// stored as rows = features, cols = tokens: call with X directly).
+pub fn gram(a: &Matrix) -> Matrix {
+    let n = a.rows;
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        let ri = a.row(i);
+        for j in i..n {
+            let rj = a.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..a.cols {
+                acc += ri[p] * rj[p];
+            }
+            g.set(i, j, acc);
+            g.set(j, i, acc);
+        }
+    }
+    g
+}
+
+/// Weighted Gram: A · Diag(w) · Aᵀ — the policy-aware Hessian (Eq. 3).
+pub fn gram_weighted(a: &Matrix, w: &[f32]) -> Matrix {
+    assert_eq!(a.cols, w.len());
+    let n = a.rows;
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        let ri = a.row(i);
+        for j in i..n {
+            let rj = a.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..a.cols {
+                acc += w[p] * ri[p] * rj[p];
+            }
+            g.set(i, j, acc);
+            g.set(j, i, acc);
+        }
+    }
+    g
+}
+
+/// Softmax over each row, in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// LayerNorm over each row (no affine), eps = 1e-5.
+pub fn layernorm_rows(m: &mut Matrix) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        layernorm_vec(row);
+    }
+}
+
+pub fn layernorm_vec(row: &mut [f32]) {
+    let n = row.len() as f32;
+    let mean = row.iter().sum::<f32>() / n;
+    let mut var = 0.0f32;
+    for v in row.iter() {
+        let d = v - mean;
+        var += d * d;
+    }
+    var /= n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for v in row.iter_mut() {
+        *v = (*v - mean) * inv;
+    }
+}
+
+/// GELU (tanh approximation), elementwise in place.
+pub fn gelu(m: &mut [f32]) {
+    for v in m.iter_mut() {
+        let x = *v;
+        let c = 0.797_884_6_f32; // sqrt(2/pi)
+        let t = (c * (x + 0.044715 * x * x * x)).tanh();
+        *v = 0.5 * x * (1.0 + t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for p in 0..a.cols {
+                    acc += a.at(i, p) as f64 * b.at(p, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3, 4, 5), (16, 16, 16), (7, 33, 9), (1, 8, 1)] {
+            let a = Matrix::gauss(m, k, 1.0, &mut rng);
+            let b = Matrix::gauss(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let c0 = naive_matmul(&a, &b);
+            assert!(c.dist_sq(&c0) < 1e-6, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_mt_matches_st() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gauss(128, 200, 1.0, &mut rng);
+        let b = Matrix::gauss(200, 96, 1.0, &mut rng);
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_mt(&a, &b, 8);
+        assert!(c1.dist_sq(&c2) < 1e-8);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gauss(31, 47, 1.0, &mut rng);
+        let x = Matrix::gauss(47, 1, 1.0, &mut rng);
+        let y1 = matvec(&a, &x.data);
+        let y2 = matmul(&a, &x);
+        for i in 0..31 {
+            assert!((y1[i] - y2.at(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::gauss(12, 40, 1.0, &mut rng);
+        let g1 = gram(&x);
+        let g2 = matmul(&x, &x.transpose());
+        assert!(g1.dist_sq(&g2) < 1e-5);
+    }
+
+    #[test]
+    fn gram_weighted_uniform_equals_gram() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::gauss(10, 25, 1.0, &mut rng);
+        let g1 = gram(&x);
+        let g2 = gram_weighted(&x, &vec![1.0; 25]);
+        assert!(g1.dist_sq(&g2) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(6);
+        let mut m = Matrix::gauss(5, 9, 3.0, &mut rng);
+        softmax_rows(&mut m);
+        for i in 0..5 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(7);
+        let mut m = Matrix::gauss(4, 64, 5.0, &mut rng);
+        layernorm_rows(&mut m);
+        for i in 0..4 {
+            let row = m.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let mut v = [0.0f32, 1.0, -1.0, 3.0];
+        gelu(&mut v);
+        assert!((v[0] - 0.0).abs() < 1e-6);
+        assert!((v[1] - 0.8412).abs() < 1e-3);
+        assert!((v[2] + 0.1588).abs() < 1e-3);
+        assert!((v[3] - 2.9964).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,150 @@
+//! Small statistics helpers used by saliency scoring, grouping and reports.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+}
+
+pub fn std_dev(xs: &[f32]) -> f32 {
+    variance(xs).sqrt()
+}
+
+/// Mean absolute deviation from `center` — the optimal 1-bit scale α for a
+/// group binarized as α·sign(u − μ) is exactly mean(|u − μ|).
+pub fn mean_abs_dev(xs: &[f32], center: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| (x - center).abs()).sum::<f32>() / xs.len() as f32
+}
+
+/// p-th quantile (0..=1) by sorting a copy. Linear interpolation.
+pub fn quantile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest elements, descending.
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+/// Kurtosis (excess). Outlier-dominated activations (Figure 1) show large
+/// positive excess kurtosis; reported by the dual-dominance analysis.
+pub fn excess_kurtosis(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    if n < 4 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let mut m2 = 0.0f64;
+    let mut m4 = 0.0f64;
+    for &x in xs {
+        let d = (x - m) as f64;
+        m2 += d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n as f64;
+    m4 /= n as f64;
+    if m2 < 1e-20 {
+        return 0.0;
+    }
+    (m4 / (m2 * m2) - 3.0) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((variance(&xs) - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mad_optimality() {
+        // For 1-bit quantization q = a*sign(x-mu), the MSE-optimal a given mu
+        // is mean|x-mu|. Check the analytic value beats perturbations.
+        let xs = [0.3f32, -1.2, 2.0, 0.8, -0.1];
+        let mu = mean(&xs);
+        let a_opt = mean_abs_dev(&xs, mu);
+        let err = |a: f32| -> f32 {
+            xs.iter().map(|&x| {
+                let q = a * (x - mu).signum();
+                (x - mu - q) * (x - mu - q)
+            }).sum()
+        };
+        assert!(err(a_opt) <= err(a_opt * 1.1) + 1e-6);
+        assert!(err(a_opt) <= err(a_opt * 0.9) + 1e-6);
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-6);
+        assert!((quantile(&xs, 1.0) - 5.0).abs() < 1e-6);
+        assert!((quantile(&xs, 0.5) - 3.0).abs() < 1e-6);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_descending() {
+        let xs = [0.1f32, 5.0, 3.0, 4.0];
+        assert_eq!(top_k(&xs, 2), vec![1, 3]);
+        assert_eq!(top_k(&xs, 10).len(), 4);
+    }
+
+    #[test]
+    fn kurtosis_of_outliers_positive() {
+        let mut xs = vec![0.0f32; 100];
+        for (i, v) in xs.iter_mut().enumerate() {
+            *v = ((i * 37 % 100) as f32 / 100.0) - 0.5;
+        }
+        let base = excess_kurtosis(&xs);
+        xs[0] = 50.0; // inject an outlier
+        assert!(excess_kurtosis(&xs) > base + 10.0);
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        assert_eq!(argmax(&[1.0, 9.0, 3.0]), 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Behavioural cloning: ridge-regression fits of the action heads on
+//! expert demonstrations.
+//!
+//! The trunk (vision encoder, projector, language blocks) is a fixed
+//! random-feature/constructed-grounding transformer; only the head layers
+//! are fit, in closed form (normal equations via Cholesky) — no gradient
+//! training anywhere in the stack, which keeps the whole reproduction
+//! deterministic and fast. Head-specific targets:
+//!
+//! - **Chunk** (OFT-like): next `chunk` expert actions, flattened;
+//! - **Token** (OpenVLA-like): one-hot action-bin indicators per dim
+//!   (least-squares classifier, argmax decode);
+//! - **Diffusion** (CogACT-like): per-step linear DDIM denoisers fit on
+//!   synthetically noised expert actions along the deterministic path.
+
+use crate::model::config::HeadKind;
+use crate::model::MiniVla;
+use crate::sim::episode::DemoStep;
+use crate::tensor::linalg::ridge;
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub samples: usize,
+    /// Mean-squared action error on the training set (continuous heads) or
+    /// argmax accuracy (token head).
+    pub train_metric: f64,
+}
+
+/// Fit `model`'s head on demonstrations, in place.
+pub fn fit_policy(model: &mut MiniVla, demos: &[Vec<DemoStep>], lambda: f64) -> FitReport {
+    // 1. Featurize every demo step with the FP trunk (+ head expansion).
+    let feat_dim = model.cfg.head_in_dim();
+    let mut feats: Vec<Vec<f32>> = Vec::new();
+    let mut acts: Vec<[f32; 3]> = Vec::new();
+    let mut traj_bounds: Vec<(usize, usize)> = Vec::new();
+    let mut trunk_feats: Vec<Vec<f32>> = Vec::new();
+    for demo in demos {
+        let start = trunk_feats.len();
+        for step in demo {
+            let f = model.features(&step.obs.visual_raw, step.obs.instr_id, &step.obs.proprio, &mut None);
+            trunk_feats.push(f);
+            acts.push(step.action);
+        }
+        traj_bounds.push((start, trunk_feats.len()));
+    }
+    // Fit the head standardization (head.norm) on raw expanded features,
+    // then re-expand through it.
+    {
+        let mut hn = Matrix::zeros(2, feat_dim);
+        for j in 0..feat_dim {
+            hn.set(1, j, 1.0);
+        }
+        model.store.set("head.norm", hn);
+        let raw: Vec<Vec<f32>> = trunk_feats.iter().map(|f| model.head_features(f)).collect();
+        let n = raw.len() as f32;
+        let mut hn = Matrix::zeros(2, feat_dim);
+        for j in 0..feat_dim {
+            // Scale-only standardization: mean subtraction would break the
+            // held-gate semantics (zeroed dims must stay zero).
+            let ms: f32 = raw.iter().map(|r| r[j] * r[j]).sum::<f32>() / n;
+            hn.set(0, j, 0.0);
+            hn.set(1, j, ms.sqrt().max(1e-3));
+        }
+        model.store.set("head.norm", hn);
+    }
+    for f in &trunk_feats {
+        feats.push(model.head_features(f));
+    }
+    let n = feats.len();
+    assert!(n > 0, "no demo steps");
+    let mut x = Matrix::zeros(n, feat_dim);
+    for (i, f) in feats.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(f);
+    }
+
+    let cfg = model.cfg.clone();
+    match cfg.head {
+        HeadKind::Chunk => {
+            // Targets: the next `chunk` actions within the trajectory
+            // (repeat the last action past the end).
+            let tdim = cfg.chunk * cfg.act_dim;
+            let mut y = Matrix::zeros(n, tdim);
+            for &(s, e) in &traj_bounds {
+                for i in s..e {
+                    for c in 0..cfg.chunk {
+                        let src = (i + c).min(e - 1);
+                        for d in 0..cfg.act_dim {
+                            y.set(i, c * cfg.act_dim + d, acts[src][d]);
+                        }
+                    }
+                }
+            }
+            let w = ridge(&x, &y, lambda);
+            model.store.set("head.main", w.transpose());
+            // Train metric: first-action MSE.
+            let mut mse = 0.0f64;
+            for i in 0..n {
+                let pred = crate::tensor::ops::matvec(model.store.get("head.main"), x.row(i));
+                for d in 0..cfg.act_dim {
+                    mse += ((pred[d] - acts[i][d]) as f64).powi(2);
+                }
+            }
+            FitReport { samples: n, train_metric: mse / (n * cfg.act_dim) as f64 }
+        }
+        HeadKind::Token => {
+            // Regression fit; decode snaps to the bin grid (see
+            // MiniVla::decode). Metric: post-discretization action MSE.
+            let mut y = Matrix::zeros(n, cfg.act_dim);
+            for i in 0..n {
+                for d in 0..cfg.act_dim {
+                    y.set(i, d, acts[i][d]);
+                }
+            }
+            let w = ridge(&x, &y, lambda);
+            model.store.set("head.main", w.transpose());
+            let mut mse = 0.0f64;
+            for i in 0..n {
+                let pred = crate::tensor::ops::matvec(model.store.get("head.main"), x.row(i));
+                for d in 0..cfg.act_dim {
+                    let v = pred[d].clamp(-1.0, 1.0);
+                    let b = (((v + 1.0) / 2.0 * cfg.bins as f32) as usize).min(cfg.bins - 1);
+                    let q = -1.0 + 2.0 * (b as f32 + 0.5) / cfg.bins as f32;
+                    mse += ((q - acts[i][d]) as f64).powi(2);
+                }
+            }
+            FitReport { samples: n, train_metric: mse / (n * cfg.act_dim) as f64 }
+        }
+        HeadKind::Diffusion => {
+            // Deterministic-path DDIM with ᾱ_t = 1 − (t+1)/T (ᾱ₋₁ ≡ 1).
+            let t_steps = cfg.diffusion_steps;
+            let alpha_bar = |t: i64| -> f32 {
+                if t < 0 {
+                    1.0
+                } else {
+                    1.0 - (t + 1) as f32 / t_steps as f32
+                }
+            };
+            let mut rng = Rng::with_stream(cfg.seed ^ 0xD1FF, 0xBC);
+            // Per-sample noise, shared across steps (deterministic path).
+            let eps: Vec<[f32; 3]> = (0..n)
+                .map(|_| [rng.gauss() as f32, rng.gauss() as f32, rng.gauss() as f32])
+                .collect();
+            let in_dim = cfg.act_dim + feat_dim + 1;
+            let mut mse_last = 0.0f64;
+            for t in (0..t_steps).rev() {
+                let ab_t = alpha_bar(t as i64);
+                let ab_prev = alpha_bar(t as i64 - 1);
+                let (st, sn) = (ab_t.sqrt(), (1.0 - ab_t).sqrt());
+                let (pt, pn) = (ab_prev.sqrt(), (1.0 - ab_prev).max(0.0).sqrt());
+                let mut xin = Matrix::zeros(n, in_dim);
+                let mut y = Matrix::zeros(n, cfg.act_dim);
+                for i in 0..n {
+                    for d in 0..cfg.act_dim {
+                        let a0 = acts[i][d];
+                        xin.set(i, d, st * a0 + sn * eps[i][d]);
+                        y.set(i, d, pt * a0 + pn * eps[i][d]);
+                    }
+                    for (k, &f) in feats[i].iter().enumerate() {
+                        xin.set(i, cfg.act_dim + k, f);
+                    }
+                    xin.set(i, cfg.act_dim + feat_dim, 1.0);
+                }
+                let w = ridge(&xin, &y, lambda);
+                model.store.set(&format!("head.diff.{t}"), w.transpose());
+                if t == 0 {
+                    // Final-step training MSE against clean actions.
+                    for i in 0..n {
+                        let pred = crate::tensor::ops::matvec(
+                            model.store.get("head.diff.0"),
+                            xin.row(i),
+                        );
+                        for d in 0..cfg.act_dim {
+                            mse_last += ((pred[d] - acts[i][d]) as f64).powi(2);
+                        }
+                    }
+                    mse_last /= (n * cfg.act_dim) as f64;
+                }
+            }
+            FitReport { samples: n, train_metric: mse_last }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::demos::collect_demos;
+    use crate::model::{HeadKind, VlaConfig};
+    use crate::sim::episode::run_policy_episode;
+    use crate::sim::observe::ObsParams;
+    use crate::sim::tasks::libero_suite;
+
+    fn fit_and_eval(head: HeadKind, n_demo: usize, episodes: usize) -> f64 {
+        let cfg = VlaConfig::tiny(head);
+        let mut model = MiniVla::new(cfg);
+        let tasks = libero_suite("object");
+        let demos = collect_demos(&model, &tasks, n_demo, 11);
+        let rep = fit_policy(&mut model, &demos, 1.0);
+        assert!(rep.samples > 0);
+        let mut ok = 0;
+        for (i, task) in tasks.iter().cycle().take(episodes).enumerate() {
+            if run_policy_episode(&model, task, &ObsParams::clean(), 1000 + i as u64).success {
+                ok += 1;
+            }
+        }
+        ok as f64 / episodes as f64
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "heavy; run with --release")]
+    fn chunk_head_clones_expert_closed_loop() {
+        let sr = fit_and_eval(HeadKind::Chunk, 32, 10);
+        assert!(sr >= 0.5, "chunk-head closed-loop SR {sr}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "heavy; run with --release")]
+    fn token_head_works() {
+        let sr = fit_and_eval(HeadKind::Token, 32, 10);
+        assert!(sr >= 0.4, "token-head closed-loop SR {sr}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "heavy; run with --release")]
+    fn diffusion_head_works() {
+        let sr = fit_and_eval(HeadKind::Diffusion, 32, 10);
+        assert!(sr >= 0.4, "diffusion-head closed-loop SR {sr}");
+    }
+
+    #[test]
+    fn chunk_train_mse_small() {
+        let cfg = VlaConfig::tiny(HeadKind::Chunk);
+        let mut model = MiniVla::new(cfg);
+        let tasks = libero_suite("object");
+        let demos = collect_demos(&model, &tasks, 16, 13);
+        let rep = fit_policy(&mut model, &demos, 1.0);
+        assert!(rep.train_metric < 0.08, "train action MSE {}", rep.train_metric);
+    }
+}

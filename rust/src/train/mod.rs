@@ -1,0 +1,5 @@
+//! Behavioural-cloning fits for the MiniVLA readout heads.
+
+pub mod bc;
+
+pub use bc::{fit_policy, FitReport};

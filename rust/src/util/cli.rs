@@ -1,0 +1,117 @@
+//! Minimal command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = parse(&["eval", "--suite", "libero", "--episodes=20", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("eval"));
+        assert_eq!(a.get("suite"), Some("libero"));
+        assert_eq!(a.usize_or("episodes", 0), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.usize_or("episodes", 50), 50);
+        assert_eq!(a.f64_or("tol", 0.5), 0.5);
+        assert_eq!(a.get_or("suite", "simpler"), "simpler");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn option_then_flag() {
+        let a = parse(&["--seed", "7", "--obq"]);
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.flag("obq"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure substrates: deterministic RNG, scoped thread pool,
+//! CLI parsing and progress reporting — all dependency-free (the usual
+//! crates are unavailable in this offline build environment).
+
+pub mod cli;
+pub mod progress;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,76 @@
+//! Lightweight progress / timing instrumentation for long eval runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// A named stopwatch that prints elapsed time on drop (opt-in via verbose).
+pub struct Timer {
+    label: String,
+    start: Instant,
+    verbose: bool,
+}
+
+impl Timer {
+    pub fn new(label: &str, verbose: bool) -> Self {
+        Timer { label: label.to_string(), start: Instant::now(), verbose }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if self.verbose {
+            eprintln!("[timer] {}: {:.3}s", self.label, self.elapsed_secs());
+        }
+    }
+}
+
+/// Thread-safe counter for coarse progress lines ("42/200 episodes").
+pub struct Progress {
+    label: String,
+    total: usize,
+    done: AtomicUsize,
+    every: usize,
+    verbose: bool,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize, verbose: bool) -> Self {
+        let every = (total / 10).max(1);
+        Progress { label: label.to_string(), total, done: AtomicUsize::new(0), every, verbose }
+    }
+
+    pub fn tick(&self) {
+        let d = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.verbose && (d % self.every == 0 || d == self.total) {
+            eprintln!("[{}] {}/{}", self.label, d, self.total);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_counts() {
+        let p = Progress::new("t", 10, false);
+        for _ in 0..7 {
+            p.tick();
+        }
+        assert_eq!(p.count(), 7);
+    }
+
+    #[test]
+    fn timer_elapsed_nonnegative() {
+        let t = Timer::new("x", false);
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+}

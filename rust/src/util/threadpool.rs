@@ -1,0 +1,208 @@
+//! A small scoped thread pool.
+//!
+//! `rayon` is not available offline, so the layer-parallel PTQ scheduler and
+//! the rollout engine use this pool: a fixed set of workers pulling closures
+//! from an MPMC channel built on `std::sync::mpsc` + a mutex-wrapped
+//! receiver. `scope` provides structured parallelism: it blocks until every
+//! job submitted inside the scope has finished, so borrows of stack data are
+//! expressed safely via `std::thread::scope` underneath.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Run `f(i)` for i in 0..n across at most `threads` OS threads, blocking
+/// until all items complete. Items are pulled dynamically (work stealing by
+/// atomic counter), so uneven item costs balance well.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over 0..n in parallel, preserving order of results.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        parallel_for(n, threads, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = Some(f(i));
+        });
+    }
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the coordinator), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// A persistent pool for the serving path: submit boxed jobs, each tagged
+/// with a completion notification through a shared counter+condvar. Used by
+/// the coordinator where job submission is dynamic (not a fixed range).
+pub struct Pool {
+    tx: std::sync::mpsc::Sender<Job>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cvar) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cvar.notify_all();
+                        }
+                    }
+                    Err(_) => break, // channel closed: shut down
+                }
+            }));
+        }
+        Pool { tx, pending, handles }
+    }
+
+    /// Submit a job. Runs as soon as a worker is free.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        // Close the channel so workers exit, then join.
+        let (tx, _) = std::sync::mpsc::channel::<Job>();
+        drop(std::mem::replace(&mut self.tx, tx));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 8, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000 * 1001 / 2);
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let v = parallel_map(100, 7, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_single_thread() {
+        let hits = AtomicU64::new(0);
+        parallel_for(10, 1, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn pool_reusable_after_wait() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 10);
+        }
+    }
+}

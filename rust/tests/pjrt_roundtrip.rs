@@ -1,0 +1,126 @@
+//! Three-layer composition proof: the AOT-lowered JAX/Pallas policy graph
+//! (L2+L1), executed by the Rust PJRT runtime (L3), must agree with the
+//! Rust-native forward pass on the same weights and observations.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise, so plain
+//! `cargo test` works before the Python build step).
+
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::runtime::{artifacts_dir, PolicyRuntime};
+use hbvla::sim::observe::{observe, ObsParams};
+use hbvla::sim::tasks::libero_suite;
+use hbvla::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<PolicyRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("policy_step.hlo.txt").exists() {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(PolicyRuntime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn pjrt_policy_matches_native_forward() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = MiniVla::new(VlaConfig::base(HeadKind::Chunk));
+    assert_eq!(rt.weight_order.len(), 37, "manifest drifted from the model layout");
+    let tasks = libero_suite("object");
+    let mut rng = Rng::new(77);
+    for trial in 0..5 {
+        let task = &tasks[trial % tasks.len()];
+        let scene = task.instantiate(&mut rng);
+        let obs = observe(&scene, task.stages[0].instr(), 100, &model, &ObsParams::clean(), &mut rng);
+        let pjrt_act = rt
+            .step(&model, &obs.visual_raw, obs.instr_id, &obs.proprio)
+            .expect("pjrt step failed");
+        let native = model.act(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut rng);
+        assert_eq!(pjrt_act.len(), native.len());
+        for (a, b) in pjrt_act.iter().flatten().zip(native.iter().flatten()) {
+            assert!(
+                (a - b).abs() < 5e-3,
+                "trial {trial}: pjrt {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_runs_quantized_weights() {
+    // The deploy story: feed binarized weights through the SAME graph.
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = MiniVla::new(VlaConfig::base(HeadKind::Chunk));
+    let mut qm = model.clone();
+    let comps = [hbvla::methods::Component::Vision, hbvla::methods::Component::Language];
+    for name in model.store.quantizable_layers(Some(&comps)) {
+        let w = model.store.get(&name);
+        let cd = hbvla::methods::CalibData::identity(w.cols, model.store.component_of(&name));
+        use hbvla::methods::Binarizer as _;
+        let q = hbvla::methods::HbVla::new().quantize(w, &cd);
+        qm.store.set(&name, q.w_hat);
+    }
+    let tasks = libero_suite("object");
+    let mut rng = Rng::new(78);
+    let scene = tasks[0].instantiate(&mut rng);
+    let obs = observe(&scene, tasks[0].stages[0].instr(), 100, &qm, &ObsParams::clean(), &mut rng);
+    let pjrt_act = rt.step(&qm, &obs.visual_raw, obs.instr_id, &obs.proprio).expect("pjrt step");
+    let native = qm.act(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut rng);
+    for (a, b) in pjrt_act.iter().flatten().zip(native.iter().flatten()) {
+        assert!((a - b).abs() < 5e-3, "pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn binary_linear_kernel_artifact_matches_packed_gemv() {
+    // The L1 Pallas kernel (interpret-lowered) vs the Rust packed GEMV.
+    let dir = artifacts_dir();
+    let path = dir.join("binary_linear.hlo.txt");
+    if !path.exists() {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().expect("pjrt cpu");
+    let exe = hbvla::runtime::HloExecutable::load(&client, &path).expect("load kernel");
+    let (rows, cols, gs) = (128usize, 256usize, 128usize);
+    let mut rng = Rng::new(9);
+    let w = hbvla::tensor::Matrix::gauss(rows, cols, 1.0, &mut rng);
+    let packed = hbvla::quant::packed::PackedBits::pack(&w, gs);
+    let dense = packed.dequantize();
+    // Reconstruct the kernel inputs (signs, alpha, mu) from the packed rep
+    // via the dense dequant: signs = sign(dense - mu broadcast).
+    let groups = cols / gs;
+    let mut signs = vec![0f32; rows * cols];
+    let mut alpha = vec![0f32; rows * groups];
+    let mut mu = vec![0f32; rows * groups];
+    for r in 0..rows {
+        for g in 0..groups {
+            let s = g * gs;
+            let seg: Vec<f32> = (s..s + gs).map(|j| w.at(r, j)).collect();
+            let m: f32 = seg.iter().sum::<f32>() / gs as f32;
+            let a: f32 = seg.iter().map(|v| (v - m).abs()).sum::<f32>() / gs as f32;
+            mu[r * groups + g] = m;
+            alpha[r * groups + g] = a;
+            for (k, &v) in seg.iter().enumerate() {
+                signs[r * cols + s + k] = if v >= m { 1.0 } else { -1.0 };
+            }
+        }
+    }
+    let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+    let out = exe
+        .run_f32(&[
+            (&signs, vec![rows as i64, cols as i64]),
+            (&alpha, vec![rows as i64, groups as i64]),
+            (&mu, vec![rows as i64, groups as i64]),
+            (&x, vec![cols as i64]),
+        ])
+        .expect("kernel exec");
+    let y_dense = hbvla::tensor::ops::matvec(&dense, &x);
+    for r in 0..rows {
+        assert!(
+            (out[0][r] - y_dense[r]).abs() < 1e-2 * (1.0 + y_dense[r].abs()),
+            "row {r}: kernel {} vs dense {}",
+            out[0][r],
+            y_dense[r]
+        );
+    }
+}

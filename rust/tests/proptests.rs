@@ -1,0 +1,132 @@
+//! Randomized property tests (hand-rolled generators — proptest is not
+//! available offline): invariants of the quantization core swept over
+//! random shapes, seeds and parameter regimes.
+
+use hbvla::haar::{haar_rows, haar_rows_inv, pairwise_highpass_energy};
+use hbvla::methods::{paper_methods, CalibData, Component};
+use hbvla::quant::group::{quantize_matrix, GroupSpec};
+use hbvla::quant::packed::PackedBits;
+use hbvla::quant::permute::{pairing_and_chaining, NormKind};
+use hbvla::tensor::ops::{gram, matvec};
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+fn random_shape(rng: &mut Rng) -> (usize, usize) {
+    (4 + rng.below(60), 4 + rng.below(120))
+}
+
+/// Haar round-trips exactly for every shape.
+#[test]
+fn prop_haar_roundtrip() {
+    let mut rng = Rng::new(1001);
+    for _ in 0..50 {
+        let (r, c) = random_shape(&mut rng);
+        let w = Matrix::gauss(r, c, rng.range(0.1, 4.0) as f32, &mut rng);
+        let back = haar_rows_inv(&haar_rows(&w), c);
+        assert!(w.dist_sq(&back) < 1e-6, "shape {r}x{c}");
+    }
+}
+
+/// The permutation never increases the pairwise high-pass energy vs the
+/// identity ordering (Algorithm 1 minimizes a superset of orderings that
+/// includes greedy-from-identity starts).
+#[test]
+fn prop_permutation_reduces_highpass() {
+    let mut rng = Rng::new(1002);
+    for trial in 0..30 {
+        let (r, c) = random_shape(&mut rng);
+        let w = Matrix::gauss(r, c, 1.0, &mut rng);
+        let id: Vec<usize> = (0..c).collect();
+        let pi = pairing_and_chaining(&w, None, NormKind::L2);
+        let e_id = pairwise_highpass_energy(&w, &id);
+        let e_pi = pairwise_highpass_energy(&w, &pi);
+        assert!(e_pi <= e_id * 1.001, "trial {trial}: {e_pi} > {e_id}");
+    }
+}
+
+/// Quantization is *near*-idempotent: a second pass over an already
+/// binarized matrix moves it by a tiny fraction of its energy. (Exact
+/// idempotence does not hold for unbalanced groups: re-estimating μ on a
+/// two-level signal with unequal level counts shifts the mean slightly.)
+#[test]
+fn prop_group_quantizer_near_idempotent() {
+    let mut rng = Rng::new(1003);
+    for _ in 0..30 {
+        let (r, c) = random_shape(&mut rng);
+        let spec = GroupSpec {
+            group_size: 1 + rng.below(64),
+            shared_mean: rng.flip(0.5),
+            adaptive_split: false,
+        };
+        let w = Matrix::gauss(r, c, 1.0, &mut rng);
+        let (q1, _) = quantize_matrix(&w, &spec);
+        let (q2, _) = quantize_matrix(&q1, &spec);
+        let rel = q1.dist_sq(&q2) / q1.frob_norm_sq().max(1e-12);
+        assert!(rel < 0.05, "second-pass movement {rel}");
+    }
+}
+
+/// Packed storage round-trips the dense group binarization exactly and
+/// its GEMV matches the dense GEMV, across random shapes/group sizes.
+#[test]
+fn prop_packed_matches_dense() {
+    let mut rng = Rng::new(1004);
+    for _ in 0..30 {
+        let (r, c) = random_shape(&mut rng);
+        let gs = 1 + rng.below(96);
+        let w = Matrix::gauss(r, c, rng.range(0.2, 3.0) as f32, &mut rng);
+        let packed = PackedBits::pack(&w, gs);
+        let dense = packed.dequantize();
+        let x: Vec<f32> = (0..c).map(|_| rng.gauss() as f32).collect();
+        let mut y = vec![0.0f32; r];
+        packed.matvec(&x, &packed.group_sums(&x), &mut y);
+        let yd = matvec(&dense, &x);
+        for i in 0..r {
+            assert!((y[i] - yd[i]).abs() < 1e-3 * (1.0 + yd[i].abs()), "{r}x{c} gs={gs}");
+        }
+    }
+}
+
+/// Every method, on every random layer: finite output, correct shape,
+/// strictly-positive bit accounting, error strictly below "all zeros".
+#[test]
+fn prop_all_methods_sane_on_random_layers() {
+    let mut rng = Rng::new(1005);
+    for trial in 0..12 {
+        let (r, c) = random_shape(&mut rng);
+        let w = Matrix::gauss(r, c, rng.range(0.2, 2.0) as f32, &mut rng);
+        let x = Matrix::gauss(c, 3 * c, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(1.0 / (3 * c) as f32);
+        let calib = CalibData::from_hessian(h, Component::Language);
+        for method in paper_methods() {
+            let q = method.quantize(&w, &calib);
+            assert_eq!((q.w_hat.rows, q.w_hat.cols), (r, c), "{} trial {trial}", method.name());
+            assert!(q.w_hat.is_finite(), "{} trial {trial}", method.name());
+            assert!(q.rel_frob_err < 1.0, "{} err {}", method.name(), q.rel_frob_err);
+            assert!(q.stats.bits_per_weight() > 0.5, "{}", method.name());
+        }
+    }
+}
+
+/// Orthogonality of the transform chain: permutation + Haar preserve the
+/// Frobenius norm (Eq. 13's geometry-preservation claim).
+#[test]
+fn prop_transform_chain_is_isometric() {
+    let mut rng = Rng::new(1006);
+    for _ in 0..30 {
+        let (r, c) = random_shape(&mut rng);
+        if c % 2 != 0 {
+            continue; // exact isometry holds for even lengths
+        }
+        let w = Matrix::gauss(r, c, 1.0, &mut rng);
+        let pi = pairing_and_chaining(&w, Some(8), NormKind::L2);
+        let wp = hbvla::quant::permute::permute_cols(&w, &pi);
+        let u = haar_rows(&wp);
+        // Our Haar uses the [.5,.5]/[.5,−.5] kernels: ‖U‖² = ‖W‖²/2 exactly
+        // for even lengths (the 2×2 block has singular values 1/√2·√2 …
+        // verify the constant empirically rather than assuming).
+        let ratio = u.frob_norm_sq() / w.frob_norm_sq();
+        assert!((ratio - 0.5).abs() < 1e-3, "ratio {ratio}");
+    }
+}
