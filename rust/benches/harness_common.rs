@@ -1,9 +1,10 @@
 // Shared mini-harness for the benches (criterion is unavailable offline):
-// wall-clock a closure with warmup, report mean/min over iterations.
+// wall-clock a closure with warmup, report mean/min over iterations and
+// return the mean (for derived figures like speedup ratios).
 // Included into each bench via `include!`.
 
 #[allow(dead_code)]
-pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) {
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
     for _ in 0..warmup {
         f();
     }
@@ -16,6 +17,7 @@ pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) {
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("[bench] {label:<40} mean {mean:>9.4}s  min {min:>9.4}s  (n={iters})");
+    mean
 }
 
 #[allow(dead_code)]

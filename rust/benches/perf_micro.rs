@@ -1,5 +1,6 @@
-//! Micro/perf benches: PTQ throughput, packed vs dense GEMV, GEMM,
-//! rollout and serving — the §Perf numbers of EXPERIMENTS.md.
+//! Micro/perf benches: PTQ throughput, packed vs dense GEMV/GEMM (with
+//! the word-at-a-time vs per-bit kernel speedup), rollout and serving —
+//! the §Perf numbers of EXPERIMENTS.md.
 include!("harness_common.rs");
 
 use hbvla::quant::packed::PackedBits;
@@ -29,9 +30,29 @@ fn main() {
     bench("dense GEMV 512x2048", 5, 200, || {
         std::hint::black_box(matvec(&w, &x));
     });
-    bench("packed 1-bit GEMV 512x2048", 5, 200, || {
+    let t_new = bench("packed 1-bit GEMV 512x2048", 5, 200, || {
         packed.matvec(&x, &gsums, &mut y);
         std::hint::black_box(&y);
+    });
+    // Inner-loop speedup: word-at-a-time set-bit extraction vs the per-bit
+    // shift + sign-XOR reference kernel.
+    let t_ref = bench("packed GEMV per-bit reference", 5, 200, || {
+        packed.matvec_per_bit(&x, &gsums, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] packed GEMV inner loop: per-bit {:.3}ms, word-at-a-time {:.3}ms — speedup ×{:.2}",
+        t_ref * 1e3,
+        t_new * 1e3,
+        t_ref / t_new
+    );
+    // Packed multi-token GEMM (rows over the thread pool).
+    let xb = Matrix::gauss(2048, 16, 1.0, &mut rng);
+    bench("dense GEMM 512x2048x16 mt", 2, 30, || {
+        std::hint::black_box(matmul_mt(&w, &xb, 8));
+    });
+    bench("packed 1-bit GEMM 512x2048x16 mt", 2, 30, || {
+        std::hint::black_box(packed.matmul_mt(&xb, 8));
     });
     println!("packed memory ratio: ×{:.1}", packed.compression_ratio());
     // Full §Perf driver.

@@ -1,6 +1,12 @@
 //! Layer-parallel PTQ scheduler: quantizes every (selected) layer of a
 //! MiniVLA across worker threads — each layer is an independent pure job
 //! (W, CalibData) → Ŵ, so the schedule is a simple dynamic work queue.
+//!
+//! Commitment: when a method returns a packed deploy form
+//! ([`crate::methods::traits::QuantizedLayer::packed`]), the scheduler
+//! stores it as [`crate::model::params::WeightRepr::Packed`] — the served
+//! model then executes on the 1-bit kernels directly. Methods without a
+//! packed form (the FP passthrough) commit dense reconstructions.
 
 use std::collections::HashMap;
 
@@ -9,13 +15,25 @@ use crate::model::MiniVla;
 use crate::quant::group::QuantStats;
 use crate::util::threadpool::parallel_map;
 
-/// Per-run report: layer errors, aggregate bit width, wall time.
+/// Per-run report: layer errors, aggregate bit width, realized memory,
+/// wall time.
 #[derive(Clone, Debug)]
 pub struct QuantJobReport {
     pub method: String,
     pub layers: Vec<(String, f64)>,
     pub stats: QuantStats,
     pub mean_rel_err: f64,
+    /// Mean relative Frobenius error of the *deployed* weights (packed
+    /// dequantization where committed packed, else Ŵ) against W. Equals
+    /// `mean_rel_err` up to the deploy-packing tolerance.
+    pub mean_deploy_rel_err: f64,
+    /// Layers committed as packed 1-bit representations.
+    pub packed_layers: usize,
+    /// Bytes the quantized store actually keeps resident (whole model,
+    /// FP layers included at f32).
+    pub resident_bytes: usize,
+    /// Bytes the same store holds all-dense (the FP baseline).
+    pub dense_bytes: usize,
     pub wall_secs: f64,
 }
 
@@ -23,10 +41,17 @@ impl QuantJobReport {
     pub fn bits_per_weight(&self) -> f64 {
         self.stats.bits_per_weight()
     }
+
+    /// Realized whole-model compression (resident vs all-dense f32).
+    pub fn realized_compression(&self) -> f64 {
+        self.dense_bytes as f64 / self.resident_bytes.max(1) as f64
+    }
 }
 
 /// Quantize `components` of `model` with `method`, layer-parallel over
-/// `threads` workers. Returns the quantized model and the job report.
+/// `threads` workers. Returns the quantized model (packed layers
+/// committed as [`crate::model::params::WeightRepr::Packed`]) and the job
+/// report.
 pub fn quantize_model(
     model: &MiniVla,
     calib: &HashMap<String, CalibData>,
@@ -44,17 +69,32 @@ pub fn quantize_model(
             .cloned()
             .unwrap_or_else(|| CalibData::identity(w.cols, model.store.component_of(name)));
         let q = method.quantize(w, &cd);
-        (name.clone(), q)
+        // Deployed-weight error (packed dequantization vs W), computed
+        // here so the dense materialization stays inside the worker.
+        let deploy_err = match &q.packed {
+            Some(p) => w.dist_sq(&p.dequantize()) / w.frob_norm_sq().max(1e-30),
+            None => q.rel_frob_err,
+        };
+        (name.clone(), q, deploy_err)
     });
     let mut out = model.clone();
     let mut stats = QuantStats::default();
     let mut layers = Vec::with_capacity(results.len());
     let mut err_sum = 0.0;
-    for (name, q) in results {
+    let mut deploy_err_sum = 0.0;
+    let mut packed_layers = 0usize;
+    for (name, q, deploy_err) in results {
         stats.add(&q.stats);
         err_sum += q.rel_frob_err;
+        deploy_err_sum += deploy_err;
         layers.push((name.clone(), q.rel_frob_err));
-        out.store.set(&name, q.w_hat);
+        match q.packed {
+            Some(p) => {
+                out.store.set_packed(&name, p);
+                packed_layers += 1;
+            }
+            None => out.store.set(&name, q.w_hat),
+        }
     }
     let n = layers.len().max(1) as f64;
     let report = QuantJobReport {
@@ -62,6 +102,10 @@ pub fn quantize_model(
         layers,
         stats,
         mean_rel_err: err_sum / n,
+        mean_deploy_rel_err: deploy_err_sum / n,
+        packed_layers,
+        resident_bytes: out.store.resident_weight_bytes(),
+        dense_bytes: out.store.dense_weight_bytes(),
         wall_secs: start.elapsed().as_secs_f64(),
     };
     (out, report)
@@ -70,7 +114,7 @@ pub fn quantize_model(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::methods::Rtn;
+    use crate::methods::{HbVla, Rtn};
     use crate::model::{HeadKind, VlaConfig};
 
     #[test]
@@ -82,7 +126,9 @@ mod tests {
         let (q4, r4) = quantize_model(&model, &calib, &Rtn::new(), &comps, 4);
         assert_eq!(r1.layers.len(), r4.layers.len());
         for name in model.store.quantizable_layers(Some(&comps)) {
-            assert!(q1.store.get(&name).dist_sq(q4.store.get(&name)) < 1e-12, "{name}");
+            let d1 = q1.store.dense_view(&name);
+            let d4 = q4.store.dense_view(&name);
+            assert!(d1.dist_sq(&d4) < 1e-12, "{name}");
         }
         assert!((r1.mean_rel_err - r4.mean_rel_err).abs() < 1e-12);
     }
@@ -93,11 +139,52 @@ mod tests {
         let calib = HashMap::new();
         let (q, _) = quantize_model(&model, &calib, &Rtn::new(), &[Component::Vision], 2);
         for name in model.store.quantizable_layers(Some(&[Component::Language])) {
+            assert!(!q.store.is_packed(&name), "{name}");
             assert_eq!(q.store.get(&name), model.store.get(&name), "{name}");
         }
-        // Vision actually changed.
+        // Vision actually changed — committed as packed 1-bit layers.
         let vis = model.store.quantizable_layers(Some(&[Component::Vision]));
-        assert!(vis.iter().any(|n| q.store.get(n) != model.store.get(n)));
+        assert!(vis.iter().all(|n| q.store.is_packed(n)));
+    }
+
+    #[test]
+    fn commits_packed_and_accounts_memory() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let calib = HashMap::new();
+        let comps = [Component::Vision, Component::Language];
+        let (qm, rep) = quantize_model(&model, &calib, &Rtn::new(), &comps, 2);
+        assert_eq!(rep.packed_layers, rep.layers.len());
+        assert!(rep.resident_bytes < rep.dense_bytes, "{rep:?}");
+        assert!(rep.realized_compression() > 1.0);
+        // RTN's packed commit is exact: deploy error equals the method's.
+        assert!((rep.mean_deploy_rel_err - rep.mean_rel_err).abs() < 1e-6, "{rep:?}");
+        // The committed model still runs a forward pass (on the packed
+        // kernels) and stays finite.
+        let mut rng = crate::util::rng::Rng::new(9);
+        let v =
+            crate::tensor::matrix::Matrix::gauss(qm.cfg.d_vis_in, qm.cfg.n_visual, 1.0, &mut rng);
+        let p: Vec<f32> = (0..qm.cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+        let feat = qm.features(&v, 3, &p, &mut None);
+        assert!(feat.iter().all(|f| f.is_finite()));
+    }
+
+    #[test]
+    fn transform_method_deploy_error_close_to_method_error() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let calib = HashMap::new();
+        let (_, rep) = quantize_model(&model, &calib, &HbVla::new(), &[Component::Language], 2);
+        assert!(rep.packed_layers > 0);
+        // Residual-bitplane packing adds a bounded overhead on top of the
+        // method's own reconstruction error; the deployed weights must
+        // stay far below the plain 1-bit Gaussian floor (≈0.36) or the
+        // method advantage would be lost in serving.
+        assert!(rep.mean_deploy_rel_err > 0.0, "{rep:?}");
+        assert!(
+            rep.mean_deploy_rel_err < 0.25,
+            "deploy packing destroyed the reconstruction: {} (method {})",
+            rep.mean_deploy_rel_err,
+            rep.mean_rel_err
+        );
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! router architecture of LLM serving systems (vllm-project/router),
 //! specialized for action-policy serving where each request is a single
 //! policy step with tight latency budgets.
+//!
+//! Workers execute whatever representation the model's store holds: a
+//! PTQ-committed model serves on [`crate::model::params::WeightRepr::Packed`]
+//! 1-bit kernels directly — no dequantization on the request path.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -159,6 +163,44 @@ mod tests {
         let stats = server.latency_stats();
         assert_eq!(stats.count(), 12);
         server.shutdown();
+    }
+
+    #[test]
+    fn serves_packed_weights_bit_true_to_dense_twin() {
+        // The deploy property: a server running on packed 1-bit weights
+        // must produce the same actions as one running the dense
+        // dequantization of those same weights.
+        let mut packed_model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        // Give the (zero-init) head real weights so the decode is
+        // exercised, then pack every quantizable layer.
+        let mut rng = Rng::new(17);
+        let head_dims = packed_model.store.dims("head.main");
+        packed_model.store.set(
+            "head.main",
+            crate::tensor::matrix::Matrix::gauss(head_dims.0, head_dims.1, 0.1, &mut rng),
+        );
+        let n_packed = packed_model.store.pack_quantizable(64);
+        assert!(n_packed > 0);
+        let mut dense_model = packed_model.clone();
+        assert_eq!(dense_model.store.dequantize_all(), n_packed);
+
+        let obs = sample_obs(&packed_model);
+        let packed_model = Arc::new(packed_model);
+        let dense_model = Arc::new(dense_model);
+        let srv_p = PolicyServer::start(Arc::clone(&packed_model), ServeConfig::default());
+        let srv_d = PolicyServer::start(Arc::clone(&dense_model), ServeConfig::default());
+        for _ in 0..4 {
+            let (ap, _) = srv_p.submit(obs.clone());
+            let (ad, _) = srv_d.submit(obs.clone());
+            assert_eq!(ap.len(), ad.len());
+            for (ca, cb) in ap.iter().zip(&ad) {
+                for (a, b) in ca.iter().zip(cb) {
+                    assert!((a - b).abs() < 1e-3, "packed {a} vs dense-twin {b}");
+                }
+            }
+        }
+        srv_p.shutdown();
+        srv_d.shutdown();
     }
 
     #[test]

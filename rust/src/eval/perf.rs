@@ -1,6 +1,7 @@
-//! §Perf drivers: quantization throughput, packed-GEMV vs dense GEMV,
-//! rollout throughput and serving latency — the measurements behind
-//! EXPERIMENTS.md §Perf.
+//! §Perf drivers: quantization throughput, packed-GEMV/GEMM vs dense,
+//! rollout throughput, serving latency, and the end-to-end dense-vs-packed
+//! forward comparison (tokens/s + resident weight bytes) — the
+//! measurements behind EXPERIMENTS.md §Perf.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,7 +16,7 @@ use crate::quant::packed::PackedBits;
 use crate::sim::observe::{observe, ObsParams};
 use crate::sim::tasks::libero_suite;
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::matvec;
+use crate::tensor::ops::{matmul_mt, matvec};
 use crate::util::rng::Rng;
 
 pub struct PerfReport {
@@ -27,7 +28,16 @@ pub struct PerfReport {
     pub serve_qps: f64,
     pub packed_gemv_gflops: f64,
     pub dense_gemv_gflops: f64,
+    pub packed_gemm_gflops: f64,
+    pub dense_gemm_gflops: f64,
     pub packed_mem_ratio: f64,
+    /// End-to-end policy forward on the dense-twin model.
+    pub e2e_dense_tok_per_sec: f64,
+    /// End-to-end policy forward with every quantizable layer packed.
+    pub e2e_packed_tok_per_sec: f64,
+    /// Resident weight bytes of the dense-twin / packed stores.
+    pub e2e_dense_weight_bytes: usize,
+    pub e2e_packed_weight_bytes: usize,
 }
 
 impl PerfReport {
@@ -36,7 +46,10 @@ impl PerfReport {
             "quantization: {:.1} layers/s ({:.2} Mweights/s)\n\
              rollout:      {:.1} episodes/s\n\
              serving:      p50={}us p99={}us throughput={:.0} req/s\n\
-             packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller",
+             packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
+             packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
+             end-to-end forward (dense twin vs 1-plane packed commit):\n\
+             {}",
             self.quant_layers_per_sec,
             self.quant_weights_per_sec / 1e6,
             self.rollout_eps_per_sec,
@@ -45,7 +58,27 @@ impl PerfReport {
             self.serve_qps,
             self.packed_gemv_gflops,
             self.dense_gemv_gflops,
-            self.packed_mem_ratio
+            self.packed_mem_ratio,
+            self.packed_gemm_gflops,
+            self.dense_gemm_gflops,
+            self.e2e_table()
+        )
+    }
+
+    /// The end-to-end dense-vs-packed table: tokens/s and resident weight
+    /// bytes per representation.
+    pub fn e2e_table(&self) -> String {
+        let mem_ratio =
+            self.e2e_dense_weight_bytes as f64 / self.e2e_packed_weight_bytes.max(1) as f64;
+        format!(
+            "  repr             tokens/s   resident weight bytes\n\
+             \x20 dense twin     {:>10.0}   {:>10}\n\
+             \x20 packed 1-plane {:>10.0}   {:>10}   (weights ×{:.1} smaller)\n",
+            self.e2e_dense_tok_per_sec,
+            self.e2e_dense_weight_bytes,
+            self.e2e_packed_tok_per_sec,
+            self.e2e_packed_weight_bytes,
+            mem_ratio
         )
     }
 }
@@ -109,6 +142,45 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let dense_secs = t4.elapsed().as_secs_f64();
     let flops = 2.0 * rows as f64 * cols as f64 * iters as f64;
 
+    // --- packed vs dense multi-token GEMM (rows over the thread pool) ---
+    let batch = 16usize;
+    let xb = Matrix::gauss(cols, batch, 1.0, &mut wr);
+    let gemm_iters = 30;
+    let t5 = Instant::now();
+    for _ in 0..gemm_iters {
+        std::hint::black_box(packed.matmul_mt(&xb, threads));
+    }
+    let packed_gemm_secs = t5.elapsed().as_secs_f64();
+    let t6 = Instant::now();
+    for _ in 0..gemm_iters {
+        std::hint::black_box(matmul_mt(&w, &xb, threads));
+    }
+    let dense_gemm_secs = t6.elapsed().as_secs_f64();
+    let gemm_flops = 2.0 * rows as f64 * cols as f64 * batch as f64 * gemm_iters as f64;
+
+    // --- end-to-end: order-1 packed model vs its dense twin ---
+    // This measures the single-bitplane (RTN-style) commit; transform
+    // methods deploy pack_deploy chains whose GEMM cost scales linearly
+    // with plane count — the table row is labeled accordingly.
+    let mut packed_model = tb.model.clone();
+    packed_model.store.pack_quantizable(64);
+    let mut dense_model = packed_model.clone();
+    dense_model.store.dequantize_all();
+    let fw_iters = 60usize;
+    let toks = (fw_iters * tb.model.cfg.seq_len()) as f64;
+    let t7 = Instant::now();
+    for _ in 0..fw_iters {
+        let f = dense_model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        std::hint::black_box(f);
+    }
+    let e2e_dense_secs = t7.elapsed().as_secs_f64();
+    let t8 = Instant::now();
+    for _ in 0..fw_iters {
+        let f = packed_model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        std::hint::black_box(f);
+    }
+    let e2e_packed_secs = t8.elapsed().as_secs_f64();
+
     PerfReport {
         quant_layers_per_sec: total_layers as f64 / quant_secs,
         quant_weights_per_sec: total_weights as f64 / quant_secs,
@@ -118,6 +190,12 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         serve_qps: n_req as f64 / serve_secs,
         packed_gemv_gflops: flops / packed_secs / 1e9,
         dense_gemv_gflops: flops / dense_secs / 1e9,
+        packed_gemm_gflops: gemm_flops / packed_gemm_secs / 1e9,
+        dense_gemm_gflops: gemm_flops / dense_gemm_secs / 1e9,
         packed_mem_ratio: packed.compression_ratio(),
+        e2e_dense_tok_per_sec: toks / e2e_dense_secs,
+        e2e_packed_tok_per_sec: toks / e2e_packed_secs,
+        e2e_dense_weight_bytes: dense_model.store.resident_weight_bytes(),
+        e2e_packed_weight_bytes: packed_model.store.resident_weight_bytes(),
     }
 }

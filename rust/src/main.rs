@@ -65,7 +65,7 @@ fn main() {
                 budget.n_demos.min(64),
                 budget.seed,
             );
-            let (_, rep) = hbvla::coordinator::scheduler::quantize_model(
+            let (qm, rep) = hbvla::coordinator::scheduler::quantize_model(
                 &tb.model,
                 &tb.calib,
                 method.as_ref(),
@@ -75,11 +75,15 @@ fn main() {
             println!("method            : {}", rep.method);
             println!("layers quantized  : {}", rep.layers.len());
             println!("mean rel frob err : {:.4}", rep.mean_rel_err);
+            println!("deploy rel err    : {:.4}", rep.mean_deploy_rel_err);
             println!("bits per weight   : {:.3}", rep.bits_per_weight());
+            println!("packed layers     : {}", rep.packed_layers);
+            println!("realized memory   : ×{:.1} smaller", rep.realized_compression());
             println!("wall time         : {:.3}s", rep.wall_secs);
             for (name, err) in &rep.layers {
                 println!("  {name:<14} rel_err={err:.4}");
             }
+            println!("{}", hbvla::report::MemoryReport::from_store(&qm.store).render());
         }
         Some("perf") => {
             let rep = hbvla::eval::perf::run_perf(budget.threads, budget.seed);
@@ -93,7 +97,32 @@ fn main() {
                 budget.n_demos.min(64),
                 budget.seed,
             );
-            let model = Arc::new(tb.model);
+            // `--method <m>` serves the PTQ-committed model: the workers
+            // then execute on packed 1-bit weights (`--method fp` or
+            // omitting the flag serves the dense FP checkpoint).
+            let served = match args.get("method") {
+                Some(name) if !name.eq_ignore_ascii_case("fp") => {
+                    let method = hbvla::methods::by_name(name)
+                        .unwrap_or_else(|| panic!("unknown method {name}"));
+                    let (qm, _) = hbvla::coordinator::scheduler::quantize_model(
+                        &tb.model,
+                        &tb.calib,
+                        method.as_ref(),
+                        &hbvla::eval::paper_components(),
+                        budget.threads,
+                    );
+                    qm
+                }
+                _ => tb.model.clone(),
+            };
+            let mem = hbvla::report::MemoryReport::from_store(&served.store);
+            println!(
+                "serving {} packed layers, {} B resident weights (×{:.1} vs dense)",
+                mem.packed_layers(),
+                mem.total_resident(),
+                mem.compression_ratio()
+            );
+            let model = Arc::new(served);
             let server = hbvla::coordinator::server::PolicyServer::start(
                 Arc::clone(&model),
                 hbvla::coordinator::server::ServeConfig::default(),

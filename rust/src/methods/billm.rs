@@ -19,6 +19,7 @@
 use crate::methods::traits::{Binarizer, CalibData, QuantizedLayer};
 use crate::quant::group::QuantStats;
 use crate::quant::obq::obq_sweep;
+use crate::quant::packed::PackedBits;
 use crate::quant::saliency::select_salient;
 use crate::tensor::matrix::Matrix;
 
@@ -155,7 +156,11 @@ impl Binarizer for BiLlm {
             index_params: n_sal,
             weights: d * w.cols as u64,
         };
-        QuantizedLayer::new(w, w_hat, stats)
+        // Deploy commitment: bell-split scales and order-2 salient columns
+        // are not two-level per contiguous group, so the packed form uses
+        // residual bitplanes until Ŵ is captured.
+        let packed = PackedBits::pack_deploy(&w_hat);
+        QuantizedLayer::new(w, w_hat, stats).with_packed(packed)
     }
 }
 

@@ -11,6 +11,7 @@
 use crate::methods::traits::{Binarizer, CalibData, Component, QuantizedLayer};
 use crate::quant::group::QuantStats;
 use crate::quant::obq::residual_binarize_col;
+use crate::quant::packed::PackedBits;
 use crate::tensor::matrix::Matrix;
 use crate::tensor::stats::{mean, std_dev, top_k};
 
@@ -173,7 +174,11 @@ impl Binarizer for BiVlm {
             stats.index_params += 1;
         }
 
-        QuantizedLayer::new(w, w_hat, stats)
+        // Deploy commitment: quantile-partition scales are scattered
+        // across each row, so the packed form uses residual bitplanes
+        // until Ŵ is captured.
+        let packed = PackedBits::pack_deploy(&w_hat);
+        QuantizedLayer::new(w, w_hat, stats).with_packed(packed)
     }
 }
 

@@ -17,6 +17,7 @@
 use crate::haar::{haar_rows, haar_rows_inv, half_len};
 use crate::methods::traits::{Binarizer, CalibData, QuantizedLayer};
 use crate::quant::group::{quantize_matrix_banded, GroupSpec, QuantStats};
+use crate::quant::packed::PackedBits;
 use crate::quant::permute::{pairing_and_chaining, permute_cols, unpermute_cols, NormKind};
 use crate::quant::saliency::{fill_salient_adjacent, select_salient};
 use crate::tensor::matrix::Matrix;
@@ -145,7 +146,11 @@ impl Binarizer for HbVla {
             w_hat.assign_cols(&part.salient, &cur.add(&q_sal));
         }
 
-        QuantizedLayer::new(w, w_hat, stats)
+        // Deploy commitment: the inverse-Haar/-permutation reconstruction
+        // is multi-level per group, so the packed form uses residual
+        // bitplanes until it captures Ŵ (see quant::packed::DEPLOY_*).
+        let packed = PackedBits::pack_deploy(&w_hat);
+        QuantizedLayer::new(w, w_hat, stats).with_packed(packed)
     }
 }
 

@@ -4,6 +4,7 @@
 
 use crate::methods::traits::{Binarizer, CalibData, QuantizedLayer};
 use crate::quant::group::{quantize_matrix, GroupSpec};
+use crate::quant::packed::PackedBits;
 use crate::tensor::matrix::Matrix;
 
 pub struct Rtn {
@@ -29,7 +30,17 @@ impl Binarizer for Rtn {
 
     fn quantize(&self, w: &Matrix, _calib: &CalibData) -> QuantizedLayer {
         let (w_hat, stats) = quantize_matrix(w, &self.group);
-        QuantizedLayer::new(w, w_hat, stats)
+        // With the plain per-group spec, RTN's reconstruction IS the
+        // single-bitplane group binarization, so the packed deploy form
+        // is exact: one plane, same groups. A customized spec
+        // (shared-mean / adaptive-split) is not PackedBits-expressible —
+        // fall back to residual-plane packing of the reconstruction.
+        let packed = if !self.group.shared_mean && !self.group.adaptive_split {
+            PackedBits::pack(w, self.group.group_size)
+        } else {
+            PackedBits::pack_deploy(&w_hat)
+        };
+        QuantizedLayer::new(w, w_hat, stats).with_packed(packed)
     }
 }
 
@@ -73,5 +84,16 @@ mod tests {
         let q = Rtn::new().quantize(&w, &CalibData::identity(256, Component::Language));
         // Gaussian 1-bit floor is 1 − 2/π ≈ 0.363.
         assert!((q.rel_frob_err - 0.363).abs() < 0.04, "err={}", q.rel_frob_err);
+    }
+
+    #[test]
+    fn rtn_packed_commit_is_exact() {
+        let mut rng = Rng::new(143);
+        let w = Matrix::gauss(16, 200, 1.0, &mut rng);
+        let q = Rtn::new().quantize(&w, &CalibData::identity(200, Component::Language));
+        let p = q.packed.expect("RTN must commit packed weights");
+        assert_eq!(p.order(), 1);
+        // The packed dequantization is the reconstruction itself.
+        assert!(p.dequantize().dist_sq(&q.w_hat) < 1e-9);
     }
 }

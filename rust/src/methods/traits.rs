@@ -2,6 +2,7 @@
 //! per-layer calibration context they consume.
 
 use crate::quant::group::QuantStats;
+use crate::quant::packed::PackedBits;
 use crate::tensor::matrix::Matrix;
 
 /// Which VLA component a layer belongs to — drives method-specific policy
@@ -68,8 +69,15 @@ impl CalibData {
 /// Output of quantizing one layer.
 #[derive(Clone, Debug)]
 pub struct QuantizedLayer {
-    /// Dense reconstruction Ŵ — what the forward pass / PJRT path uses.
+    /// Dense reconstruction Ŵ — the method's accuracy-analysis artifact
+    /// (error metrics, ablations).
     pub w_hat: Matrix,
+    /// Packed deploy representation, when the method commits one: the
+    /// scheduler stores this in the [`crate::model::params::ParamStore`]
+    /// as [`crate::model::params::WeightRepr::Packed`] so serving and
+    /// rollouts execute on the 1-bit kernels. `None` means the layer is
+    /// committed dense (e.g. the FP passthrough).
+    pub packed: Option<PackedBits>,
     /// Storage accounting (bits per weight ≈ 1.08 for the paper methods).
     pub stats: QuantStats,
     /// Relative Frobenius error ‖W − Ŵ‖²_F / ‖W‖²_F.
@@ -80,7 +88,14 @@ impl QuantizedLayer {
     pub fn new(w: &Matrix, w_hat: Matrix, stats: QuantStats) -> Self {
         let denom = w.frob_norm_sq().max(1e-30);
         let rel = w.dist_sq(&w_hat) / denom;
-        QuantizedLayer { w_hat, stats, rel_frob_err: rel }
+        QuantizedLayer { w_hat, packed: None, stats, rel_frob_err: rel }
+    }
+
+    /// Attach the packed deploy form of this layer.
+    pub fn with_packed(mut self, p: PackedBits) -> Self {
+        assert_eq!((p.rows, p.cols), (self.w_hat.rows, self.w_hat.cols), "packed shape mismatch");
+        self.packed = Some(p);
+        self
     }
 }
 
@@ -119,6 +134,24 @@ mod tests {
         let w_hat = Matrix::filled(2, 2, 1.0);
         let q = QuantizedLayer::new(&w, w_hat, QuantStats::default());
         assert!((q.rel_frob_err - 0.25).abs() < 1e-9);
+        assert!(q.packed.is_none());
+    }
+
+    #[test]
+    fn with_packed_attaches_deploy_form() {
+        let w = Matrix::filled(2, 64, 1.0);
+        let q = QuantizedLayer::new(&w, w.clone(), QuantStats::default())
+            .with_packed(PackedBits::pack(&w, 64));
+        assert!(q.packed.is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "packed shape mismatch")]
+    fn with_packed_rejects_wrong_shape() {
+        let w = Matrix::filled(2, 64, 1.0);
+        let other = Matrix::filled(3, 64, 1.0);
+        let _ = QuantizedLayer::new(&w, w.clone(), QuantStats::default())
+            .with_packed(PackedBits::pack(&other, 64));
     }
 
     #[test]

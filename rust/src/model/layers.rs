@@ -2,18 +2,43 @@
 //! (so PTQ weight swaps take effect with no model rebuild) with an
 //! optional activation hook for Hessian calibration capture.
 //!
+//! Every weight product goes through the [`linear`] / [`linear_vec`]
+//! dispatch, which executes on whatever [`WeightRepr`] the store holds for
+//! that layer: dense f32 GEMM for FP weights, the packed 1-bit GEMM of
+//! [`crate::quant::packed::PackedBits`] for quantized ones. This is the
+//! single seam that makes packed execution the real inference path
+//! (serve, rollout, eval) rather than a microbenchmark
+//! (DESIGN.md §Hardware-Adaptation).
+//!
 //! Block structure (both encoders): Φ_attn(X) = X + MHSA(X) followed by
 //! Φ_mlp(X) = X + W₂·gelu(W₁·X), each followed by a column RMS-norm.
 //! The attention math mirrors `quant::probe::AttnBlock` (finite-diff
 //! verified there); a parity test pins the two implementations together.
 
-use crate::model::params::ParamStore;
+use crate::model::params::{ParamStore, WeightRepr};
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{gelu, matmul, softmax_rows};
+use crate::tensor::ops::{gelu, matmul, matvec, softmax_rows};
 
 /// Activation hook: called with (layer_name, layer_input) right before
 /// each quantizable matmul. Inputs are d_in × n_tokens.
 pub type Hook<'a> = &'a mut dyn FnMut(&str, &Matrix);
+
+/// Y = W · X through the layer's stored representation: dense GEMM or
+/// packed 1-bit GEMM — the quantizable-matmul dispatch point.
+pub fn linear(store: &ParamStore, name: &str, x: &Matrix) -> Matrix {
+    match store.repr(name) {
+        WeightRepr::Dense(w) => matmul(w, x),
+        WeightRepr::Packed(p) => p.matmul(x),
+    }
+}
+
+/// y = W · x (single-token GEMV form of [`linear`]).
+pub fn linear_vec(store: &ParamStore, name: &str, x: &[f32]) -> Vec<f32> {
+    match store.repr(name) {
+        WeightRepr::Dense(w) => matvec(w, x),
+        WeightRepr::Packed(p) => p.matvec_owned(x),
+    }
+}
 
 /// RMS-normalize each column (token) toward unit RMS, with a *floor*:
 /// near-silent tokens (padding slots) are left small instead of being
@@ -41,21 +66,21 @@ pub fn attn_forward(
     x: &Matrix,
     hook: &mut Option<Hook>,
 ) -> Matrix {
-    let wq = store.get(&format!("{prefix}.wq"));
-    let wk = store.get(&format!("{prefix}.wk"));
-    let wv = store.get(&format!("{prefix}.wv"));
-    let wo = store.get(&format!("{prefix}.wo"));
+    let nq = format!("{prefix}.wq");
+    let nk = format!("{prefix}.wk");
+    let nv = format!("{prefix}.wv");
+    let no = format!("{prefix}.wo");
     if let Some(h) = hook {
-        h(&format!("{prefix}.wq"), x);
-        h(&format!("{prefix}.wk"), x);
-        h(&format!("{prefix}.wv"), x);
+        h(&nq, x);
+        h(&nk, x);
+        h(&nv, x);
     }
-    let d = wq.rows;
+    let d = store.dims(&nq).0;
     let n = x.cols;
     let dh = d / heads;
-    let q = matmul(wq, x);
-    let k = matmul(wk, x);
-    let v = matmul(wv, x);
+    let q = linear(store, &nq, x);
+    let k = linear(store, &nk, x);
+    let v = linear(store, &nv, x);
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = Matrix::zeros(d, n);
     for h in 0..heads {
@@ -75,25 +100,25 @@ pub fn attn_forward(
         }
     }
     if let Some(h) = hook {
-        h(&format!("{prefix}.wo"), &ctx);
+        h(&no, &ctx);
     }
-    let yo = matmul(wo, &ctx);
+    let yo = linear(store, &no, &ctx);
     x.add(&yo)
 }
 
 /// MLP sub-layer: returns X + W₂·gelu(W₁·X).
 pub fn mlp_forward(store: &ParamStore, prefix: &str, x: &Matrix, hook: &mut Option<Hook>) -> Matrix {
-    let w1 = store.get(&format!("{prefix}.w1"));
-    let w2 = store.get(&format!("{prefix}.w2"));
+    let n1 = format!("{prefix}.w1");
+    let n2 = format!("{prefix}.w2");
     if let Some(h) = hook {
-        h(&format!("{prefix}.w1"), x);
+        h(&n1, x);
     }
-    let mut hmid = matmul(w1, x);
+    let mut hmid = linear(store, &n1, x);
     gelu(&mut hmid.data);
     if let Some(h) = hook {
-        h(&format!("{prefix}.w2"), &hmid);
+        h(&n2, &hmid);
     }
-    let out = matmul(w2, &hmid);
+    let out = linear(store, &n2, &hmid);
     x.add(&out)
 }
 
@@ -180,6 +205,53 @@ mod tests {
             block_forward(&s, "b", 2, &x, &mut hook);
         }
         assert_eq!(seen, vec!["b.wq", "b.wk", "b.wv", "b.wo", "b.w1", "b.w2"]);
+    }
+
+    #[test]
+    fn packed_block_forward_matches_dense_twin() {
+        // The dispatch seam itself: a block whose six layers are packed
+        // must produce the same output as a dense store holding the
+        // dequantized weights.
+        let mut rng = Rng::new(175);
+        let mut packed = store_with_block(16, 32, &mut rng);
+        assert_eq!(packed.pack_quantizable(8), 6);
+        let mut dense = packed.clone();
+        assert_eq!(dense.dequantize_all(), 6);
+        let x = Matrix::gauss(16, 7, 1.0, &mut rng);
+        let mut none: Option<Hook> = None;
+        let yp = block_forward(&packed, "b", 4, &x, &mut none);
+        let mut none2: Option<Hook> = None;
+        let yd = block_forward(&dense, "b", 4, &x, &mut none2);
+        assert!(
+            yp.dist_sq(&yd) < 1e-6,
+            "packed vs dense-twin block forward dist={}",
+            yp.dist_sq(&yd)
+        );
+    }
+
+    #[test]
+    fn linear_dispatch_matches_reprs() {
+        let mut rng = Rng::new(176);
+        let mut s = ParamStore::new();
+        s.insert("w", Component::Language, true, Matrix::gauss(12, 70, 1.0, &mut rng));
+        let x = Matrix::gauss(70, 3, 1.0, &mut rng);
+        let xv: Vec<f32> = x.col(0);
+        let y_dense = linear(&s, "w", &x);
+        let yv_dense = linear_vec(&s, "w", &xv);
+        s.pack_quantizable(64); // 70 = 64 + 6 tail
+        let y_packed = linear(&s, "w", &x);
+        let yv_packed = linear_vec(&s, "w", &xv);
+        // Packed dispatch must agree with the dense product of its own
+        // dequantization (bit-true), not with the FP weights.
+        let deq = s.dense_view("w").into_owned();
+        let y_ref = crate::tensor::ops::matmul(&deq, &x);
+        assert!(y_packed.dist_sq(&y_ref) < 1e-6 * y_ref.frob_norm_sq().max(1.0));
+        for (a, b) in yv_packed.iter().zip(y_packed.col(0)) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // And the FP dispatch was a plain dense matmul.
+        assert_eq!(y_dense.cols, 3);
+        assert_eq!(yv_dense.len(), 12);
     }
 
     #[test]

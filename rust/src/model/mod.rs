@@ -7,5 +7,5 @@ pub mod params;
 pub mod vla;
 
 pub use config::{HeadKind, VlaConfig};
-pub use params::ParamStore;
+pub use params::{ParamStore, WeightRepr};
 pub use vla::{content_codes, instr_index, MiniVla, N_CONTENT_IDS};

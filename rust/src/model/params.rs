@@ -1,4 +1,13 @@
-//! Parameter store and the structured MiniVLA weight generator.
+//! Parameter store — with per-layer weight *representations* — and the
+//! structured MiniVLA weight generator.
+//!
+//! Every parameter holds a [`WeightRepr`]: either a dense f32 [`Matrix`]
+//! or a [`PackedBits`] 1-bit container. PTQ methods commit packed
+//! representations directly (see [`crate::coordinator::scheduler`]), and
+//! the forward pass dispatches per-layer through
+//! [`crate::model::layers::linear`], so serving and rollouts execute on
+//! the packed form with no dequantization on the hot path
+//! (DESIGN.md §Hardware-Adaptation).
 //!
 //! Weights are *constructed*, not gradient-trained: the trunk is a
 //! random-feature transformer whose grounding attention (instruction ↔
@@ -17,10 +26,12 @@
 //!    rank-8 + noise (salient columns that Hessian-aware selection must
 //!    protect).
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::io::{Read, Write};
 
 use crate::methods::traits::Component;
+use crate::quant::packed::PackedBits;
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -54,12 +65,43 @@ pub mod channels {
     pub const RAW_APPEAR_START: usize = 12;
 }
 
+/// Per-layer weight representation: what the forward pass executes on.
+#[derive(Clone, Debug)]
+pub enum WeightRepr {
+    /// Dense f32 master weights (FP layers, pre-quantization).
+    Dense(Matrix),
+    /// Packed 1-bit signs + per-group scales — the deploy representation.
+    Packed(PackedBits),
+}
+
+impl WeightRepr {
+    /// (rows, cols) of the underlying matrix.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            WeightRepr::Dense(m) => (m.rows, m.cols),
+            WeightRepr::Packed(p) => (p.rows, p.cols),
+        }
+    }
+
+    /// Bytes this representation actually keeps resident.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            WeightRepr::Dense(m) => m.rows * m.cols * 4,
+            WeightRepr::Packed(p) => p.storage_bytes(),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, WeightRepr::Packed(_))
+    }
+}
+
 /// One named parameter.
 #[derive(Clone, Debug)]
 pub struct Param {
     pub name: String,
     pub component: Component,
-    pub matrix: Matrix,
+    pub repr: WeightRepr,
     /// Whether PTQ methods may quantize this matrix (embeddings and
     /// norm-adjacent vectors are kept FP, as in the paper's setup).
     pub quantizable: bool,
@@ -79,21 +121,81 @@ impl ParamStore {
     }
 
     pub fn insert(&mut self, name: &str, component: Component, quantizable: bool, m: Matrix) {
-        assert!(!self.index.contains_key(name), "duplicate param {name}");
-        self.index.insert(name.to_string(), self.params.len());
-        self.params.push(Param { name: name.to_string(), component, matrix: m, quantizable });
+        self.insert_repr(name, component, quantizable, WeightRepr::Dense(m));
     }
 
+    fn insert_repr(
+        &mut self,
+        name: &str,
+        component: Component,
+        quantizable: bool,
+        repr: WeightRepr,
+    ) {
+        assert!(!self.index.contains_key(name), "duplicate param {name}");
+        self.index.insert(name.to_string(), self.params.len());
+        self.params.push(Param { name: name.to_string(), component, repr, quantizable });
+    }
+
+    fn idx(&self, name: &str) -> usize {
+        *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    /// The representation the forward pass dispatches on.
+    pub fn repr(&self, name: &str) -> &WeightRepr {
+        &self.params[self.idx(name)].repr
+    }
+
+    /// Dense master weights. Panics for packed layers — quantizers and
+    /// calibration only ever read the FP source model; execution paths
+    /// must go through [`Self::repr`] / [`crate::model::layers::linear`].
     pub fn get(&self, name: &str) -> &Matrix {
-        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
-        &self.params[i].matrix
+        match self.repr(name) {
+            WeightRepr::Dense(m) => m,
+            WeightRepr::Packed(_) => {
+                panic!("param {name} is packed; use repr()/dense_view() instead of get()")
+            }
+        }
+    }
+
+    /// Dense view of any representation: borrows dense weights, or
+    /// dequantizes packed ones into an owned copy (cold paths only —
+    /// export, diffing, tests).
+    pub fn dense_view(&self, name: &str) -> Cow<'_, Matrix> {
+        match self.repr(name) {
+            WeightRepr::Dense(m) => Cow::Borrowed(m),
+            WeightRepr::Packed(p) => Cow::Owned(p.dequantize()),
+        }
+    }
+
+    /// (rows, cols) of a parameter regardless of representation.
+    pub fn dims(&self, name: &str) -> (usize, usize) {
+        self.repr(name).dims()
+    }
+
+    pub fn is_packed(&self, name: &str) -> bool {
+        self.repr(name).is_packed()
     }
 
     pub fn set(&mut self, name: &str, m: Matrix) {
-        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
-        let old = &self.params[i].matrix;
-        assert_eq!((old.rows, old.cols), (m.rows, m.cols), "shape change for {name}");
-        self.params[i].matrix = m;
+        let i = self.idx(name);
+        let old = self.params[i].repr.dims();
+        assert_eq!(old, (m.rows, m.cols), "shape change for {name}");
+        self.params[i].repr = WeightRepr::Dense(m);
+    }
+
+    /// Commit a packed 1-bit representation for a layer.
+    pub fn set_packed(&mut self, name: &str, p: PackedBits) {
+        let i = self.idx(name);
+        let old = self.params[i].repr.dims();
+        assert_eq!(old, (p.rows, p.cols), "shape change for {name}");
+        self.params[i].repr = WeightRepr::Packed(p);
+    }
+
+    pub fn set_repr(&mut self, name: &str, repr: WeightRepr) {
+        match repr {
+            WeightRepr::Dense(m) => self.set(name, m),
+            WeightRepr::Packed(p) => self.set_packed(name, p),
+        }
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -115,19 +217,72 @@ impl ParamStore {
     }
 
     pub fn component_of(&self, name: &str) -> Component {
-        let i = *self.index.get(name).unwrap_or_else(|| panic!("missing param {name}"));
-        self.params[i].component
+        self.params[self.idx(name)].component
     }
 
     pub fn total_weights(&self) -> usize {
-        self.params.iter().map(|p| p.matrix.rows * p.matrix.cols).sum()
+        self.params
+            .iter()
+            .map(|p| {
+                let (r, c) = p.repr.dims();
+                r * c
+            })
+            .sum()
     }
 
-    /// Serialize to a simple binary format (magic, count, then per-param:
-    /// name, component byte, quantizable byte, rows, cols, f32 LE data).
+    /// Bytes the store actually keeps resident (packed layers at their
+    /// sign-bitplane + f32 scale-metadata size, dense layers at f32).
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.repr.resident_bytes()).sum()
+    }
+
+    /// Bytes an all-dense f32 store of the same shapes would take.
+    pub fn dense_weight_bytes(&self) -> usize {
+        self.total_weights() * 4
+    }
+
+    pub fn packed_layer_count(&self) -> usize {
+        self.params.iter().filter(|p| p.repr.is_packed()).count()
+    }
+
+    /// Pack every quantizable dense layer in place (plain group
+    /// binarization — the RTN deploy form). Returns how many layers were
+    /// packed. Used by deploy tooling, perf drivers and parity tests.
+    pub fn pack_quantizable(&mut self, group_size: usize) -> usize {
+        let mut n = 0;
+        for p in self.params.iter_mut() {
+            if !p.quantizable {
+                continue;
+            }
+            if let WeightRepr::Dense(w) = &p.repr {
+                p.repr = WeightRepr::Packed(PackedBits::pack(w, group_size));
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Replace every packed representation with its dense dequantization
+    /// (the "dense twin" of a packed model — setup-time tool for parity
+    /// tests and perf baselines, never the serve path).
+    pub fn dequantize_all(&mut self) -> usize {
+        let mut n = 0;
+        for p in self.params.iter_mut() {
+            if let WeightRepr::Packed(pb) = &p.repr {
+                p.repr = WeightRepr::Dense(pb.dequantize());
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Serialize to a binary format (magic, count, then per-param: name,
+    /// component byte, quantizable byte, repr tag, payload). Dense layers
+    /// store rows/cols + f32 LE data; packed layers store the full
+    /// bitplane chain bit-exactly ([`PackedBits::write_to`]).
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"HBVLAPS1")?;
+        f.write_all(b"HBVLAPS2")?;
         f.write_all(&(self.params.len() as u32).to_le_bytes())?;
         for p in &self.params {
             let nb = p.name.as_bytes();
@@ -140,10 +295,19 @@ impl ParamStore {
                 Component::ActionHead => 3,
             };
             f.write_all(&[comp, p.quantizable as u8])?;
-            f.write_all(&(p.matrix.rows as u32).to_le_bytes())?;
-            f.write_all(&(p.matrix.cols as u32).to_le_bytes())?;
-            for v in &p.matrix.data {
-                f.write_all(&v.to_le_bytes())?;
+            match &p.repr {
+                WeightRepr::Dense(m) => {
+                    f.write_all(&[0u8])?;
+                    f.write_all(&(m.rows as u32).to_le_bytes())?;
+                    f.write_all(&(m.cols as u32).to_le_bytes())?;
+                    for v in &m.data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                WeightRepr::Packed(pb) => {
+                    f.write_all(&[1u8])?;
+                    pb.write_to(&mut f)?;
+                }
             }
         }
         Ok(())
@@ -153,9 +317,11 @@ impl ParamStore {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != b"HBVLAPS1" {
-            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
-        }
+        let v2 = match &magic {
+            b"HBVLAPS2" => true,
+            b"HBVLAPS1" => false,
+            _ => return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic")),
+        };
         let mut u32buf = [0u8; 4];
         f.read_exact(&mut u32buf)?;
         let count = u32::from_le_bytes(u32buf) as usize;
@@ -176,17 +342,38 @@ impl ParamStore {
                 _ => Component::ActionHead,
             };
             let quantizable = two[1] != 0;
-            f.read_exact(&mut u32buf)?;
-            let rows = u32::from_le_bytes(u32buf) as usize;
-            f.read_exact(&mut u32buf)?;
-            let cols = u32::from_le_bytes(u32buf) as usize;
-            let mut data = vec![0f32; rows * cols];
-            let mut fbuf = [0u8; 4];
-            for v in data.iter_mut() {
-                f.read_exact(&mut fbuf)?;
-                *v = f32::from_le_bytes(fbuf);
+            let tag = if v2 {
+                let mut t = [0u8; 1];
+                f.read_exact(&mut t)?;
+                t[0]
+            } else {
+                0
+            };
+            match tag {
+                0 => {
+                    f.read_exact(&mut u32buf)?;
+                    let rows = u32::from_le_bytes(u32buf) as usize;
+                    f.read_exact(&mut u32buf)?;
+                    let cols = u32::from_le_bytes(u32buf) as usize;
+                    let mut data = vec![0f32; rows * cols];
+                    let mut fbuf = [0u8; 4];
+                    for v in data.iter_mut() {
+                        f.read_exact(&mut fbuf)?;
+                        *v = f32::from_le_bytes(fbuf);
+                    }
+                    store.insert(&name, component, quantizable, Matrix::from_vec(rows, cols, data));
+                }
+                1 => {
+                    let pb = PackedBits::read_from(&mut f)?;
+                    store.insert_repr(&name, component, quantizable, WeightRepr::Packed(pb));
+                }
+                _ => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "bad repr tag",
+                    ))
+                }
             }
-            store.insert(&name, component, quantizable, Matrix::from_vec(rows, cols, data));
         }
         Ok(store)
     }
@@ -294,6 +481,49 @@ mod tests {
     }
 
     #[test]
+    fn packed_store_roundtrip_bit_exact() {
+        let mut rng = Rng::new(166);
+        let mut s = ParamStore::new();
+        s.insert("q.w", Component::Language, true, Matrix::gauss(6, 70, 1.0, &mut rng));
+        s.insert("fp.w", Component::Language, false, Matrix::gauss(4, 5, 1.0, &mut rng));
+        assert_eq!(s.pack_quantizable(64), 1);
+        assert!(s.is_packed("q.w"));
+        assert!(!s.is_packed("fp.w"));
+        let path = std::env::temp_dir().join("hbvla_test_packed_store.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert!(loaded.is_packed("q.w"));
+        assert_eq!(loaded.packed_layer_count(), 1);
+        let (d1, d2) = (s.dense_view("q.w"), loaded.dense_view("q.w"));
+        assert_eq!(d1.data, d2.data, "packed round-trip must be bit-exact");
+        assert_eq!(loaded.resident_weight_bytes(), s.resident_weight_bytes());
+        assert!(loaded.resident_weight_bytes() < loaded.dense_weight_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pack_then_dequantize_all_round_trips_repr() {
+        let mut rng = Rng::new(167);
+        let mut s = ParamStore::new();
+        s.insert("x.w", Component::Vision, true, Matrix::gauss(8, 32, 1.0, &mut rng));
+        s.pack_quantizable(16);
+        let packed_dense = s.dense_view("x.w").into_owned();
+        assert_eq!(s.dequantize_all(), 1);
+        assert!(!s.is_packed("x.w"));
+        assert_eq!(s.get("x.w").data, packed_dense.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "is packed")]
+    fn get_on_packed_param_panics() {
+        let mut rng = Rng::new(168);
+        let mut s = ParamStore::new();
+        s.insert("p.w", Component::Language, true, Matrix::gauss(4, 16, 1.0, &mut rng));
+        s.pack_quantizable(16);
+        let _ = s.get("p.w");
+    }
+
+    #[test]
     fn quantizable_filter_by_component() {
         let mut rng = Rng::new(162);
         let mut s = ParamStore::new();
@@ -310,8 +540,8 @@ mod tests {
         // Column means should spread much wider than pure gaussian noise
         // would allow (σ/√rows).
         let mut col_means = vec![0.0f32; 64];
-        for j in 0..64 {
-            col_means[j] = (0..128).map(|i| w.at(i, j)).sum::<f32>() / 128.0;
+        for (j, cm) in col_means.iter_mut().enumerate() {
+            *cm = (0..128).map(|i| w.at(i, j)).sum::<f32>() / 128.0;
         }
         let spread = col_means.iter().cloned().fold(f32::MIN, f32::max)
             - col_means.iter().cloned().fold(f32::MAX, f32::min);

@@ -16,10 +16,9 @@
 
 use crate::methods::traits::Component;
 use crate::model::config::{HeadKind, VlaConfig};
-use crate::model::layers::{block_forward, rmsnorm_cols, Hook};
+use crate::model::layers::{block_forward, linear, linear_vec, rmsnorm_cols, Hook};
 use crate::model::params::{binary_factor, channels, grounding_proj, structured_weight, structured_weight_lattice, ParamStore};
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{matmul, matvec};
 use crate::util::rng::Rng;
 
 /// Number of global content ids (objects the benchmarks reference).
@@ -289,8 +288,10 @@ impl MiniVla {
         assert_eq!(proprio.len(), cfg.d_proprio);
         assert!(instr_id < cfg.vocab);
 
-        // Vision encoder.
-        let mut xv = matmul(self.store.get("vis.embed"), visual_raw);
+        // Vision encoder. Every weight product below goes through the
+        // linear()/linear_vec() dispatch, so PTQ-committed packed layers
+        // execute on the 1-bit kernels with no dequantization here.
+        let mut xv = linear(&self.store, "vis.embed", visual_raw);
         rmsnorm_cols(&mut xv);
         for b in 0..cfg.vision_blocks {
             xv = block_forward(&self.store, &format!("vis.{b}"), cfg.heads, &xv, hook);
@@ -300,7 +301,7 @@ impl MiniVla {
         if let Some(h) = hook {
             h("proj", &xv);
         }
-        let mut xp = matmul(self.store.get("proj"), &xv);
+        let mut xp = linear(&self.store, "proj", &xv);
         rmsnorm_cols(&mut xp);
 
         // Assemble the LM sequence: [visual | instruction | proprio].
@@ -316,7 +317,7 @@ impl MiniVla {
         for i in 0..dm {
             seq.set(i, cfg.n_visual, instr.at(i, instr_id));
         }
-        let pvec = matvec(self.store.get("lm.embed_proprio"), proprio);
+        let pvec = linear_vec(&self.store, "lm.embed_proprio", proprio);
         for i in 0..dm {
             seq.set(i, cfg.n_visual + 1, pvec[i]);
         }
@@ -351,8 +352,7 @@ impl MiniVla {
     /// action head's MLP nonlinearity (ridge fits the layer on top) —
     /// followed by the BC-fit standardization (head.norm).
     pub fn head_features(&self, feat: &[f32]) -> Vec<f32> {
-        let w = self.store.get("head.expand");
-        let h = matvec(w, feat);
+        let h = linear_vec(&self.store, "head.expand", feat);
         let mut out = Vec::with_capacity(feat.len() + h.len());
         out.extend_from_slice(feat);
         out.extend(h.iter().map(|v| v.tanh()));
@@ -371,8 +371,7 @@ impl MiniVla {
         let cfg = &self.cfg;
         match cfg.head {
             HeadKind::Chunk => {
-                let w = self.store.get("head.main");
-                let out = matvec(w, feat);
+                let out = linear_vec(&self.store, "head.main", feat);
                 (0..cfg.chunk)
                     .map(|c| {
                         (0..cfg.act_dim)
@@ -387,8 +386,7 @@ impl MiniVla {
                 // of `bins` token centers — the discretization error of the
                 // token interface is exactly what distinguishes OpenVLA
                 // from OFT's continuous chunks in the paper's tables.
-                let w = self.store.get("head.main");
-                let pred = matvec(w, feat);
+                let pred = linear_vec(&self.store, "head.main", feat);
                 let mut a = Vec::with_capacity(cfg.act_dim);
                 for d in 0..cfg.act_dim {
                     let v = pred[d].clamp(-1.0, 1.0);
@@ -401,11 +399,10 @@ impl MiniVla {
                 let mut a: Vec<f32> = (0..cfg.act_dim).map(|_| rng.gauss() as f32).collect();
                 let mut zin = vec![0.0f32; cfg.act_dim + feat.len() + 1];
                 for t in (0..cfg.diffusion_steps).rev() {
-                    let w = self.store.get(&format!("head.diff.{t}"));
                     zin[..cfg.act_dim].copy_from_slice(&a);
                     zin[cfg.act_dim..cfg.act_dim + feat.len()].copy_from_slice(feat);
                     zin[cfg.act_dim + feat.len()] = 1.0;
-                    a = matvec(w, &zin);
+                    a = linear_vec(&self.store, &format!("head.diff.{t}"), &zin);
                 }
                 vec![a.into_iter().map(|v| v.clamp(-1.0, 1.0)).collect()]
             }

@@ -1,19 +1,38 @@
 //! True 1-bit weight storage and the deploy-path kernels.
 //!
-//! The evaluation pipeline works with dequantized reconstructions (for
-//! closed-loop parity with the PJRT path), but a deployable system must
-//! actually *store* binarized layers packed: sign bitplanes in `u64` words
-//! plus per-group (α, μ) in f32 (fp16-equivalent accounting). This module
-//! provides the packed container, pack/dequant round-trips, and a packed
-//! GEMV whose inner loop flips activation signs through the IEEE-754 sign
-//! bit (branch-free), which is what the Pallas L1 kernel mirrors on TPU
-//! (see `python/compile/kernels/binary_matmul.py` and DESIGN.md
+//! This is the execution representation behind [`crate::model::params::WeightRepr::Packed`]:
+//! sign bitplanes in `u64` words plus per-group (α, μ) scales in f32
+//! (the paper's fp16 *bit* accounting stays in `quant::group::QuantStats`;
+//! storage here is reported at the width actually held resident),
+//! an optional chain of residual bitplanes for reconstructions
+//! that are not two-level per group (the Haar/transform methods), and the
+//! packed GEMV/GEMM kernels the serving router and rollout engine run on.
+//! The Pallas L1 kernel mirrors the same math on TPU (see
+//! `python/compile/kernels/binary_matmul.py` and DESIGN.md
 //! §Hardware-Adaptation).
+//!
+//! Kernel identity: within one group g of one row,
+//!   Σ_{j∈g} (μ_g + α_g s_j) x_j = μ_g Σ_{j∈g} x_j + α_g (2 Σ_{j∈g, s_j=+1} x_j − Σ_{j∈g} x_j),
+//! so a row·token dot needs only the per-group activation sums (computed once
+//! per token, shared by every row) and the sum of x over *set* sign bits,
+//! which the inner loop extracts a full 64-bit word at a time.
 
 use crate::tensor::matrix::Matrix;
+use crate::util::threadpool::parallel_for;
+
+/// Deploy-path packing defaults: group 64 keeps scale granularity fine
+/// enough that residual planes converge fast on multi-level
+/// reconstructions; at most [`DEPLOY_MAX_ORDER`] bitplanes, stopping early
+/// once the packed dequantization captures the method's reconstruction to
+/// [`DEPLOY_REL_TOL`] relative energy.
+pub const DEPLOY_GROUP_SIZE: usize = 64;
+pub const DEPLOY_MAX_ORDER: usize = 4;
+pub const DEPLOY_REL_TOL: f64 = 5e-3;
 
 /// A packed 1-bit matrix: for each row, `cols` sign bits in u64 words and
-/// one (α, μ) pair per group of `group_size` consecutive columns.
+/// one (α, μ) pair per group of `group_size` consecutive columns, plus an
+/// optional residual bitplane chain (order-K packing) sharing the same
+/// group layout.
 #[derive(Clone, Debug)]
 pub struct PackedBits {
     pub rows: usize,
@@ -27,6 +46,8 @@ pub struct PackedBits {
     alpha: Vec<f32>,
     /// Row-major per-group means μ.
     mu: Vec<f32>,
+    /// Next residual bitplane (same rows/cols/group layout), if any.
+    residual: Option<Box<PackedBits>>,
 }
 
 impl PackedBits {
@@ -57,12 +78,63 @@ impl PackedBits {
                 }
             }
         }
-        PackedBits { rows: w.rows, cols: w.cols, group_size, words_per_row, groups_per_row, signs, alpha, mu }
+        PackedBits {
+            rows: w.rows,
+            cols: w.cols,
+            group_size,
+            words_per_row,
+            groups_per_row,
+            signs,
+            alpha,
+            mu,
+            residual: None,
+        }
     }
 
-    /// Dequantize to a dense matrix (the reconstruction the quantizer's
-    /// dense path produces, bit-for-bit).
-    pub fn dequantize(&self) -> Matrix {
+    /// Order-K packing: binarize, then repeatedly binarize the remaining
+    /// residual into further bitplanes until either `max_order` planes are
+    /// used or the dequantization captures `w` to within `rel_tol` relative
+    /// Frobenius energy. Order 1 with `rel_tol = 0` reproduces [`pack`].
+    pub fn pack_residual(w: &Matrix, group_size: usize, max_order: usize, rel_tol: f64) -> Self {
+        let denom = w.frob_norm_sq().max(1e-30);
+        let mut planes: Vec<PackedBits> = Vec::new();
+        let mut resid = w.clone();
+        for _ in 0..max_order.max(1) {
+            let p = PackedBits::pack(&resid, group_size);
+            resid = resid.sub(&p.dequantize_plane());
+            planes.push(p);
+            if resid.frob_norm_sq() / denom <= rel_tol {
+                break;
+            }
+        }
+        Self::chain_planes(planes)
+    }
+
+    /// Deploy-default packing of a method's dense reconstruction (see the
+    /// `DEPLOY_*` constants): the form PTQ methods commit to the
+    /// [`crate::model::params::ParamStore`] for bit-true serving.
+    pub fn pack_deploy(w: &Matrix) -> Self {
+        Self::pack_residual(w, DEPLOY_GROUP_SIZE, DEPLOY_MAX_ORDER, DEPLOY_REL_TOL)
+    }
+
+    /// Link a vector of planes (first = base) into a residual chain.
+    fn chain_planes(mut planes: Vec<PackedBits>) -> Self {
+        assert!(!planes.is_empty());
+        let mut chain: Option<PackedBits> = None;
+        while let Some(mut p) = planes.pop() {
+            p.residual = chain.take().map(Box::new);
+            chain = Some(p);
+        }
+        chain.unwrap()
+    }
+
+    /// Number of bitplanes (1 for a plain [`pack`]).
+    pub fn order(&self) -> usize {
+        1 + self.residual.as_deref().map_or(0, |r| r.order())
+    }
+
+    /// Dequantize one plane (no residual chain).
+    fn dequantize_plane(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         for r in 0..self.rows {
             let row = out.row_mut(r);
@@ -77,46 +149,202 @@ impl PackedBits {
         out
     }
 
-    /// Packed GEMV: y = Ŵ x without materializing Ŵ.
-    ///
-    /// Per row r and group g:  Σ_{j∈g} (μ_g + α_g s_j) x_j
-    ///   = μ_g Σ_{j∈g} x_j + α_g Σ_{j∈g} s_j x_j,
-    /// and the sign-weighted sum flips x_j's IEEE sign bit by XOR — no
-    /// branches, no multiply by ±1.
+    /// Dequantize to a dense matrix: the sum of every bitplane's
+    /// reconstruction (the dense twin of the packed execution path).
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = self.dequantize_plane();
+        let mut plane = self.residual.as_deref();
+        while let Some(p) = plane {
+            out.add_assign(&p.dequantize_plane());
+            plane = p.residual.as_deref();
+        }
+        out
+    }
+
+    /// Sum of `x` over the *set* sign bits of row-word-base `wbase` within
+    /// columns [s, e): the word-at-a-time inner loop. The bit mask for each
+    /// word is built once; set bits are then consumed with
+    /// `trailing_zeros` + `bits &= bits − 1` — no per-bit shifts.
+    #[inline]
+    fn set_sum(&self, wbase: usize, s: usize, e: usize, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        let mut j = s;
+        while j < e {
+            let wi = j / 64;
+            let upto = e.min((wi + 1) * 64);
+            let lo = j % 64;
+            let span = upto - j;
+            let mask = if span == 64 { u64::MAX } else { ((1u64 << span) - 1) << lo };
+            let mut bits = self.signs[wbase + wi] & mask;
+            let base = wi * 64;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                acc += x[base + b];
+                bits &= bits - 1;
+            }
+            j = upto;
+        }
+        acc
+    }
+
+    /// Accumulate this plane's contribution to y (one GEMV plane pass).
+    fn accumulate_matvec(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
+        for (r, slot) in y.iter_mut().enumerate() {
+            let wbase = r * self.words_per_row;
+            let gbase = r * self.groups_per_row;
+            let mut acc = 0.0f32;
+            for g in 0..self.groups_per_row {
+                let s = g * self.group_size;
+                let e = (s + self.group_size).min(self.cols);
+                let set = self.set_sum(wbase, s, e, x);
+                let gsum = group_sums[g];
+                acc += self.mu[gbase + g] * gsum + self.alpha[gbase + g] * (2.0 * set - gsum);
+            }
+            *slot += acc;
+        }
+    }
+
+    /// Packed GEMV: y = Ŵ x without materializing Ŵ (all bitplanes).
     pub fn matvec(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         assert_eq!(group_sums.len(), self.groups_per_row);
-        for r in 0..self.rows {
-            let mut acc = 0.0f32;
-            let wbase = r * self.words_per_row;
-            let gbase = r * self.groups_per_row;
-            for g in 0..self.groups_per_row {
-                let s = g * self.group_size;
-                let e = (s + self.group_size).min(self.cols);
-                let mut signed_sum = 0.0f32;
-                let mut j = s;
-                while j < e {
-                    let word = self.signs[wbase + j / 64];
-                    let upto = e.min((j / 64 + 1) * 64);
-                    let mut bitpos = j % 64;
-                    while j < upto {
-                        // +x if bit set, −x otherwise, via sign-bit XOR.
-                        let neg_mask = (!(word >> bitpos) & 1) as u32;
-                        let flipped = f32::from_bits(x[j].to_bits() ^ (neg_mask << 31));
-                        signed_sum += flipped;
-                        j += 1;
-                        bitpos += 1;
-                    }
-                }
-                acc += self.mu[gbase + g] * group_sums[g] + self.alpha[gbase + g] * signed_sum;
-            }
-            y[r] = acc;
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            p.accumulate_matvec(x, group_sums, y);
+            plane = p.residual.as_deref();
         }
     }
 
+    /// Allocating GEMV convenience (computes the group sums itself) — the
+    /// form the [`crate::model::layers::linear_vec`] dispatch calls.
+    pub fn matvec_owned(&self, x: &[f32]) -> Vec<f32> {
+        let gsums = self.group_sums(x);
+        let mut y = vec![0.0f32; self.rows];
+        self.matvec(x, &gsums, &mut y);
+        y
+    }
+
+    /// Reference GEMV processing one sign bit per iteration (the original
+    /// kernel: per-bit shift + IEEE sign-bit XOR). Kept for the
+    /// word-at-a-time speedup measurement in `benches/perf_micro.rs` and
+    /// as an independent implementation for parity tests.
+    pub fn matvec_per_bit(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(group_sums.len(), self.groups_per_row);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            for (r, slot) in y.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                let wbase = r * p.words_per_row;
+                let gbase = r * p.groups_per_row;
+                for g in 0..p.groups_per_row {
+                    let s = g * p.group_size;
+                    let e = (s + p.group_size).min(p.cols);
+                    let mut signed_sum = 0.0f32;
+                    let mut j = s;
+                    while j < e {
+                        let word = p.signs[wbase + j / 64];
+                        let upto = e.min((j / 64 + 1) * 64);
+                        let mut bitpos = j % 64;
+                        while j < upto {
+                            // +x if bit set, −x otherwise, via sign-bit XOR.
+                            let neg_mask = (!(word >> bitpos) & 1) as u32;
+                            let flipped = f32::from_bits(x[j].to_bits() ^ (neg_mask << 31));
+                            signed_sum += flipped;
+                            j += 1;
+                            bitpos += 1;
+                        }
+                    }
+                    acc += p.mu[gbase + g] * group_sums[g] + p.alpha[gbase + g] * signed_sum;
+                }
+                *slot += acc;
+            }
+            plane = p.residual.as_deref();
+        }
+    }
+
+    /// One row of the packed GEMM: accumulate every token's dot with row
+    /// `r` across all bitplanes into `orow` (length = number of tokens).
+    /// `xt` is the token-major transpose of the activation matrix;
+    /// `gsums[t * groups_per_row ..]` are token t's per-group sums.
+    fn row_tokens(&self, r: usize, xt: &Matrix, gsums: &[f32], orow: &mut [f32]) {
+        let g = self.groups_per_row;
+        orow.iter_mut().for_each(|v| *v = 0.0);
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            let wbase = r * p.words_per_row;
+            let gbase = r * p.groups_per_row;
+            for (t, slot) in orow.iter_mut().enumerate() {
+                let xrow = xt.row(t);
+                let tg = &gsums[t * g..(t + 1) * g];
+                let mut acc = 0.0f32;
+                for (gi, &gsum) in tg.iter().enumerate() {
+                    let s = gi * p.group_size;
+                    let e = (s + p.group_size).min(p.cols);
+                    let set = p.set_sum(wbase, s, e, xrow);
+                    acc += p.mu[gbase + gi] * gsum + p.alpha[gbase + gi] * (2.0 * set - gsum);
+                }
+                *slot += acc;
+            }
+            plane = p.residual.as_deref();
+        }
+    }
+
+    /// Packed multi-token GEMM: Y = Ŵ X (X: cols × n_tokens). Per-group
+    /// activation sums are computed once per token and reused by every row
+    /// and bitplane. Single-threaded form of [`Self::matmul_mt`].
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        self.matmul_mt(x, 1)
+    }
+
+    /// Packed GEMM with rows distributed over `threads` workers via
+    /// [`parallel_for`]. Falls back to single-thread for small problems
+    /// (thread spawn would dominate model-sized layers).
+    pub fn matmul_mt(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(
+            x.rows, self.cols,
+            "packed matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, x.rows, x.cols
+        );
+        let n = x.cols;
+        let xt = x.transpose();
+        let g = self.groups_per_row;
+        // Per-token per-group activation sums, token-major.
+        let mut gsums = vec![0.0f32; n * g];
+        for t in 0..n {
+            let xrow = xt.row(t);
+            let tg = &mut gsums[t * g..(t + 1) * g];
+            for (gi, slot) in tg.iter_mut().enumerate() {
+                let s = gi * self.group_size;
+                let e = (s + self.group_size).min(self.cols);
+                *slot = xrow[s..e].iter().sum();
+            }
+        }
+        let mut out = Matrix::zeros(self.rows, n);
+        let work = self.rows as f64 * self.cols as f64 * n as f64 * self.order() as f64;
+        if threads <= 1 || work < 1.0e7 {
+            for r in 0..self.rows {
+                let orow = &mut out.data[r * n..(r + 1) * n];
+                self.row_tokens(r, &xt, &gsums, orow);
+            }
+        } else {
+            let optr = SendPtr(out.data.as_mut_ptr());
+            parallel_for(self.rows, threads, |r| {
+                let optr = &optr;
+                // SAFETY: each worker writes a disjoint row of `out`.
+                let orow = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r * n), n) };
+                self.row_tokens(r, &xt, &gsums, orow);
+            });
+        }
+        out
+    }
+
     /// Precompute per-group sums of an activation vector (shared across all
-    /// rows — the μ-term of the packed GEMV).
+    /// rows and bitplanes — the μ-term of the packed GEMV).
     pub fn group_sums(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
         let mut sums = vec![0.0f32; self.groups_per_row];
@@ -128,9 +356,14 @@ impl PackedBits {
         sums
     }
 
-    /// Bytes of storage for the packed form (signs + fp16 metadata).
+    /// Bytes of storage the packed form actually holds resident: sign
+    /// words plus the (α, μ) metadata at the f32 width it is stored and
+    /// serialized at, over all bitplanes. (The paper's fp16-metadata *bit*
+    /// accounting lives in [`crate::quant::group::QuantStats`]; this
+    /// figure is the realized one the memory reports aggregate.)
     pub fn storage_bytes(&self) -> usize {
-        self.signs.len() * 8 + (self.alpha.len() + self.mu.len()) * 2
+        let own = self.signs.len() * 8 + (self.alpha.len() + self.mu.len()) * 4;
+        own + self.residual.as_deref().map_or(0, |r| r.storage_bytes())
     }
 
     /// Bytes the dense f32 form would take.
@@ -142,12 +375,97 @@ impl PackedBits {
     pub fn compression_ratio(&self) -> f64 {
         self.dense_bytes() as f64 / self.storage_bytes() as f64
     }
+
+    /// Serialize the full bitplane chain (self-describing, little-endian).
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&(self.rows as u32).to_le_bytes())?;
+        w.write_all(&(self.cols as u32).to_le_bytes())?;
+        w.write_all(&(self.group_size as u32).to_le_bytes())?;
+        w.write_all(&(self.order() as u32).to_le_bytes())?;
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            for s in &p.signs {
+                w.write_all(&s.to_le_bytes())?;
+            }
+            for a in &p.alpha {
+                w.write_all(&a.to_le_bytes())?;
+            }
+            for m in &p.mu {
+                w.write_all(&m.to_le_bytes())?;
+            }
+            plane = p.residual.as_deref();
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`Self::write_to`] — bit-exact round-trip.
+    pub fn read_from<R: std::io::Read>(r: &mut R) -> std::io::Result<Self> {
+        fn read_u32<R: std::io::Read>(r: &mut R) -> std::io::Result<usize> {
+            let mut buf = [0u8; 4];
+            r.read_exact(&mut buf)?;
+            Ok(u32::from_le_bytes(buf) as usize)
+        }
+        let rows = read_u32(r)?;
+        let cols = read_u32(r)?;
+        let group_size = read_u32(r)?;
+        let order = read_u32(r)?;
+        // Reject corrupt headers instead of coercing them: a zero
+        // group_size would silently change the group layout, and huge
+        // dims would allocate gigabytes before any data-length check.
+        const DIM_CAP: usize = 1 << 24;
+        if group_size == 0 || rows == 0 || cols == 0 || rows > DIM_CAP || cols > DIM_CAP {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad packed dims"));
+        }
+        if order == 0 || order > 64 {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad packed order"));
+        }
+        let words_per_row = cols.div_ceil(64);
+        let groups_per_row = cols.div_ceil(group_size);
+        let mut planes = Vec::with_capacity(order);
+        for _ in 0..order {
+            let mut signs = vec![0u64; rows * words_per_row];
+            let mut b8 = [0u8; 8];
+            for s in signs.iter_mut() {
+                r.read_exact(&mut b8)?;
+                *s = u64::from_le_bytes(b8);
+            }
+            let mut b4 = [0u8; 4];
+            let mut alpha = vec![0f32; rows * groups_per_row];
+            for a in alpha.iter_mut() {
+                r.read_exact(&mut b4)?;
+                *a = f32::from_le_bytes(b4);
+            }
+            let mut mu = vec![0f32; rows * groups_per_row];
+            for m in mu.iter_mut() {
+                r.read_exact(&mut b4)?;
+                *m = f32::from_le_bytes(b4);
+            }
+            planes.push(PackedBits {
+                rows,
+                cols,
+                group_size,
+                words_per_row,
+                groups_per_row,
+                signs,
+                alpha,
+                mu,
+                residual: None,
+            });
+        }
+        Ok(Self::chain_planes(planes))
+    }
 }
+
+/// Raw-pointer wrapper so disjoint output rows can be written from the
+/// thread pool (same idiom as `tensor::ops::matmul_mt`).
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::ops::matvec;
+    use crate::tensor::ops::{matmul, matvec};
     use crate::util::rng::Rng;
 
     #[test]
@@ -186,6 +504,113 @@ mod tests {
     }
 
     #[test]
+    fn word_at_a_time_matches_per_bit_reference() {
+        let mut rng = Rng::new(95);
+        let cases = [(6usize, 70usize, 64usize), (4, 130, 32), (5, 64, 128), (3, 200, 70)];
+        for &(rows, cols, gs) in &cases {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            let p = PackedBits::pack_residual(&w, gs, 2, 0.0);
+            let gsums = p.group_sums(&x);
+            let mut y_new = vec![0.0f32; rows];
+            let mut y_ref = vec![0.0f32; rows];
+            p.matvec(&x, &gsums, &mut y_new);
+            p.matvec_per_bit(&x, &gsums, &mut y_ref);
+            for i in 0..rows {
+                assert!(
+                    (y_new[i] - y_ref[i]).abs() < 1e-3 * (1.0 + y_ref[i].abs()),
+                    "({rows},{cols},{gs}) row {i}: {} vs {}",
+                    y_new[i],
+                    y_ref[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_dense_gemm() {
+        let mut rng = Rng::new(96);
+        let cases = [(8usize, 70usize, 64usize, 5usize), (6, 130, 32, 1), (5, 64, 64, 9)];
+        for &(rows, cols, gs, n) in &cases {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let x = Matrix::gauss(cols, n, 1.0, &mut rng);
+            let p = PackedBits::pack(&w, gs);
+            let y_dense = matmul(&p.dequantize(), &x);
+            let y_packed = p.matmul(&x);
+            assert_eq!((y_packed.rows, y_packed.cols), (rows, n));
+            for i in 0..rows {
+                for t in 0..n {
+                    let (a, b) = (y_dense.at(i, t), y_packed.at(i, t));
+                    assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "({i},{t}): {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_mt_matches_st() {
+        let mut rng = Rng::new(97);
+        let w = Matrix::gauss(96, 256, 1.0, &mut rng);
+        let x = Matrix::gauss(256, 32, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        let a = p.matmul_mt(&x, 1);
+        let b = p.matmul_mt(&x, 8);
+        assert!(a.dist_sq(&b) < 1e-8, "dist={}", a.dist_sq(&b));
+    }
+
+    #[test]
+    fn residual_planes_reduce_error_monotonically() {
+        let mut rng = Rng::new(98);
+        // Multi-level data (the transform-method reconstruction regime).
+        let w = Matrix::from_fn(16, 128, |_, _| {
+            let a = if rng.flip(0.5) { 1.0f32 } else { -1.0 };
+            let b = if rng.flip(0.5) { 0.4f32 } else { -0.4 };
+            a + b + 0.05 * rng.gauss() as f32
+        });
+        let denom = w.frob_norm_sq();
+        let mut last = f64::INFINITY;
+        for order in 1..=3 {
+            let p = PackedBits::pack_residual(&w, 64, order, 0.0);
+            assert_eq!(p.order(), order);
+            let err = w.dist_sq(&p.dequantize()) / denom;
+            assert!(err < last, "order {order}: {err} !< {last}");
+            last = err;
+        }
+        // Two planes capture the ±a±b lattice almost exactly.
+        let p2 = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        assert!(w.dist_sq(&p2.dequantize()) / denom < 0.05);
+    }
+
+    #[test]
+    fn pack_deploy_meets_tolerance_on_lattice() {
+        let mut rng = Rng::new(99);
+        let w = Matrix::from_fn(32, 192, |_, _| {
+            let a = if rng.flip(0.5) { 0.8f32 } else { -0.8 };
+            let b = if rng.flip(0.5) { 0.3f32 } else { -0.3 };
+            a + b
+        });
+        let p = PackedBits::pack_deploy(&w);
+        let err = w.dist_sq(&p.dequantize()) / w.frob_norm_sq();
+        assert!(err <= DEPLOY_REL_TOL * 1.5, "err={err}, order={}", p.order());
+        assert!(p.order() <= DEPLOY_MAX_ORDER);
+    }
+
+    #[test]
+    fn serialization_roundtrip_bit_exact() {
+        let mut rng = Rng::new(100);
+        let w = Matrix::gauss(9, 70, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 32, 3, 0.0);
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let q = PackedBits::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(q.order(), 3);
+        assert_eq!((q.rows, q.cols, q.group_size), (9, 70, 32));
+        let (d1, d2) = (p.dequantize(), q.dequantize());
+        assert_eq!(d1.data, d2.data, "round-trip must be bit-exact");
+        assert_eq!(p.storage_bytes(), q.storage_bytes());
+    }
+
+    #[test]
     fn compression_ratio_near_32x_for_large_groups() {
         let mut rng = Rng::new(93);
         let w = Matrix::gauss(256, 1024, 1.0, &mut rng);
@@ -198,9 +623,12 @@ mod tests {
     fn storage_accounting_sane() {
         let w = Matrix::zeros(4, 64);
         let p = PackedBits::pack(&w, 64);
-        // 4 rows × 1 word × 8B signs + 4×(α+μ)×2B = 32 + 16 = 48.
-        assert_eq!(p.storage_bytes(), 48);
+        // 4 rows × 1 word × 8B signs + 4×(α+μ)×4B = 32 + 32 = 64.
+        assert_eq!(p.storage_bytes(), 64);
         assert_eq!(p.dense_bytes(), 4 * 64 * 4);
+        // A second bitplane doubles it.
+        let p2 = PackedBits::pack_residual(&w, 64, 2, -1.0);
+        assert_eq!(p2.storage_bytes(), 128);
     }
 
     #[test]

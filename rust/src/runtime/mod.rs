@@ -1,7 +1,13 @@
 //! PJRT runtime: loads the AOT-lowered JAX/Pallas policy graph
 //! (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md §2) and executes
 //! it from Rust. Python never runs on this path.
+//!
+//! Gated behind the `xla-runtime` feature: the `xla` PJRT bindings (and
+//! `anyhow`) come from the XLA toolchain image, not crates.io, so the
+//! default build is dependency-free (see DESIGN.md §2 for enabling it).
 
+#[cfg(feature = "xla-runtime")]
 pub mod pjrt;
 
+#[cfg(feature = "xla-runtime")]
 pub use pjrt::{artifacts_dir, HloExecutable, PolicyRuntime};

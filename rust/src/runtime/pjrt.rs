@@ -92,13 +92,17 @@ impl PolicyRuntime {
         let cfg = &model.cfg;
         let mut instr_onehot = vec![0.0f32; cfg.vocab];
         instr_onehot[instr_id] = 1.0;
+        // The PJRT graph consumes dense f32 weights; packed layers are
+        // dequantized into owned copies here (packed PJRT export is a
+        // ROADMAP follow-on — the native serve path needs no such copy).
+        let mats: Vec<std::borrow::Cow<Matrix>> =
+            self.weight_order.iter().map(|n| model.store.dense_view(n)).collect();
         let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![
             (&visual_raw.data, vec![cfg.d_vis_in as i64, cfg.n_visual as i64]),
             (&instr_onehot, vec![cfg.vocab as i64]),
             (proprio, vec![cfg.d_proprio as i64]),
         ];
-        for name in &self.weight_order {
-            let w = model.store.get(name);
+        for w in mats.iter() {
             inputs.push((&w.data, vec![w.rows as i64, w.cols as i64]));
         }
         let outs = self.exe.run_f32(&inputs)?;

@@ -27,6 +27,11 @@ fn quantize_then_rollout_pipeline() {
     let method = by_name("hbvla").unwrap();
     let (qm, rep) = quantize_model(&tb.model, &tb.calib, method.as_ref(), &paper_components(), 4);
     assert!(rep.mean_rel_err < 0.15, "HBVLA rel err {}", rep.mean_rel_err);
+    // The committed model executes on packed 1-bit weights end to end:
+    // every quantized layer is WeightRepr::Packed and the store is
+    // measurably smaller than its dense twin.
+    assert_eq!(rep.packed_layers, rep.layers.len());
+    assert!(rep.resident_bytes < rep.dense_bytes);
     // Small (64-dim) layers amortize metadata worse than the paper's
     // 4096-dim LLM layers (~1.08 bpw); see EXPERIMENTS.md §Bits.
     assert!(rep.bits_per_weight() < 6.0, "bpw {}", rep.bits_per_weight());
@@ -83,7 +88,7 @@ fn store_roundtrip_preserves_policy() {
     let loaded = hbvla::model::ParamStore::load(&path).unwrap();
     let mut m2 = tb.model.clone();
     for p in loaded.params() {
-        m2.store.set(&p.name, p.matrix.clone());
+        m2.store.set_repr(&p.name, p.repr.clone());
     }
     let mut rng = Rng::new(1);
     let scene = tasks[0].instantiate(&mut rng);

@@ -1,0 +1,118 @@
+//! Packed-vs-dense forward parity: a MiniVLA whose every quantizable
+//! layer is `WeightRepr::Packed` must match the forward pass of its dense
+//! twin (the same store with each packed layer replaced by its
+//! dequantization) — the property that makes the packed kernels the
+//! *deployed* kernels rather than an approximation of them.
+
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Build (packed model, dense twin) with every quantizable layer packed at
+/// `group_size`. Heads get non-zero weights so the decode path is
+/// exercised too.
+fn twins(cfg: VlaConfig, group_size: usize) -> (MiniVla, MiniVla) {
+    let mut packed = MiniVla::new(cfg);
+    let mut rng = Rng::new(0x7A17);
+    let head_names: Vec<String> = if packed.store.contains("head.main") {
+        vec!["head.main".to_string()]
+    } else {
+        (0..packed.cfg.diffusion_steps).map(|t| format!("head.diff.{t}")).collect()
+    };
+    for name in &head_names {
+        let (hr, hc) = packed.store.dims(name);
+        packed.store.set(name, Matrix::gauss(hr, hc, 0.05, &mut rng));
+    }
+    let n = packed.store.pack_quantizable(group_size);
+    assert!(n > 0, "nothing packed");
+    let mut dense = packed.clone();
+    assert_eq!(dense.store.dequantize_all(), n);
+    (packed, dense)
+}
+
+fn rand_obs(cfg: &VlaConfig, rng: &mut Rng) -> (Matrix, usize, Vec<f32>) {
+    let v = Matrix::gauss(cfg.d_vis_in, cfg.n_visual, 1.0, rng);
+    let p: Vec<f32> = (0..cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+    (v, 3, p)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol * (1.0 + y.abs()),
+            "{what}[{i}]: packed {x} vs dense {y}"
+        );
+    }
+}
+
+#[test]
+fn full_forward_parity_every_head() {
+    for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (packed, dense) = twins(cfg.clone(), 64);
+        let mut rng = Rng::new(301);
+        for trial in 0..3 {
+            let (v, i, p) = rand_obs(&cfg, &mut rng);
+            let fp = packed.features(&v, i, &p, &mut None);
+            let fd = dense.features(&v, i, &p, &mut None);
+            assert_close(&fp, &fd, 1e-3, &format!("{head:?} trial {trial} features"));
+        }
+    }
+}
+
+#[test]
+fn decode_parity_chunk_and_diffusion() {
+    // Continuous heads decode identically (Token's bin edges can flip on
+    // float-noise knife edges, so it is covered at the feature level).
+    for head in [HeadKind::Chunk, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (packed, dense) = twins(cfg.clone(), 64);
+        let mut rng = Rng::new(302);
+        let (v, i, p) = rand_obs(&cfg, &mut rng);
+        // Identical rng streams on both sides (diffusion noise).
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let ap = packed.act(&v, i, &p, &mut rng_a);
+        let ad = dense.act(&v, i, &p, &mut rng_b);
+        assert_eq!(ap.len(), ad.len());
+        for (ca, cb) in ap.iter().zip(&ad) {
+            assert_close(ca, cb, 1e-2, &format!("{head:?} action"));
+        }
+    }
+}
+
+#[test]
+fn parity_with_tail_group_sizes() {
+    // d_model = 70 ⇒ layer widths of 70 = 64 + 6: one full sign word plus
+    // a 6-bit tail, and group sizes (64, 32) that do not divide the width.
+    let mut cfg = VlaConfig::tiny(HeadKind::Chunk);
+    cfg.d_model = 70;
+    cfg.heads = 2; // 70 / 2 = 35 per head
+    for gs in [64usize, 32] {
+        let (packed, dense) = twins(cfg.clone(), gs);
+        let mut rng = Rng::new(303);
+        for trial in 0..2 {
+            let (v, i, p) = rand_obs(&cfg, &mut rng);
+            let fp = packed.features(&v, i, &p, &mut None);
+            let fd = dense.features(&v, i, &p, &mut None);
+            assert_close(&fp, &fd, 1e-3, &format!("gs={gs} trial {trial}"));
+        }
+    }
+}
+
+#[test]
+fn packed_store_is_smaller_and_forward_finite() {
+    let cfg = VlaConfig::tiny(HeadKind::Chunk);
+    let (packed, dense) = twins(cfg.clone(), 64);
+    assert!(
+        packed.store.resident_weight_bytes() < dense.store.resident_weight_bytes(),
+        "{} !< {}",
+        packed.store.resident_weight_bytes(),
+        dense.store.resident_weight_bytes()
+    );
+    let mut rng = Rng::new(304);
+    let (v, i, p) = rand_obs(&cfg, &mut rng);
+    let f = packed.features(&v, i, &p, &mut None);
+    assert!(f.iter().all(|x| x.is_finite()));
+}

@@ -3,7 +3,9 @@
 //! Rust-native forward pass on the same weights and observations.
 //!
 //! Requires `make artifacts` (skipped with a notice otherwise, so plain
-//! `cargo test` works before the Python build step).
+//! `cargo test` works before the Python build step) and the `xla-runtime`
+//! feature (the xla PJRT bindings ship with the XLA toolchain image).
+#![cfg(feature = "xla-runtime")]
 
 use hbvla::model::{HeadKind, MiniVla, VlaConfig};
 use hbvla::runtime::{artifacts_dir, PolicyRuntime};
