@@ -1,8 +1,26 @@
 //! Latency/throughput accounting for the serving router and the perf pass.
+//!
+//! Every accumulator here is bounded: long-running serves must hold
+//! constant memory, so counts and sums are tracked exactly (u64 running
+//! totals) while percentile-bearing samples live in fixed-capacity rings
+//! covering the most recent window.
+
+/// Samples retained for percentile estimation; counts/means stay exact
+/// beyond this window.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Recent batch sizes retained by [`BatchStats`].
+pub const BATCH_WINDOW: usize = 1024;
 
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    /// Ring of the most recent samples (percentiles window).
+    window: Vec<u64>,
+    /// Next ring slot once the window is full.
+    next: usize,
+    /// Exact totals over the whole run.
+    count: u64,
+    sum_us: u64,
 }
 
 impl LatencyStats {
@@ -11,33 +29,63 @@ impl LatencyStats {
     }
 
     pub fn record_us(&mut self, us: u64) {
-        self.samples_us.push(us);
+        self.count += 1;
+        self.sum_us += us;
+        self.push_window(us);
+    }
+
+    fn push_window(&mut self, us: u64) {
+        if self.window.len() < LATENCY_WINDOW {
+            self.window.push(us);
+        } else {
+            self.window[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
     }
 
     pub fn record(&mut self, d: std::time::Duration) {
         self.record_us(d.as_micros() as u64);
     }
 
+    /// Merge another accumulator. Counts and sums add exactly; when the
+    /// combined percentile windows exceed capacity, an evenly-spaced
+    /// subsample keeps BOTH sources proportionally represented (naively
+    /// pushing `other`'s window would overwrite this one's entirely).
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        let mut all = Vec::with_capacity(self.window.len() + other.window.len());
+        all.extend_from_slice(&self.window);
+        all.extend_from_slice(&other.window);
+        if all.len() > LATENCY_WINDOW {
+            let step = all.len() as f64 / LATENCY_WINDOW as f64;
+            self.window = (0..LATENCY_WINDOW).map(|i| all[(i as f64 * step) as usize]).collect();
+        } else {
+            self.window = all;
+        }
+        self.next = 0;
     }
 
+    /// Exact number of samples ever recorded (not capped by the window).
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
+    /// Exact mean over every sample ever recorded.
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+        self.sum_us as f64 / self.count as f64
     }
 
+    /// Percentile over the retained window (the most recent
+    /// [`LATENCY_WINDOW`] samples).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.samples_us.is_empty() {
+        if self.window.is_empty() {
             return 0;
         }
-        let mut v = self.samples_us.clone();
+        let mut v = self.window.clone();
         v.sort_unstable();
         let idx = ((p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round()) as usize;
         v[idx]
@@ -58,6 +106,89 @@ impl LatencyStats {
             self.mean_us(),
             self.p50_us(),
             self.p99_us()
+        )
+    }
+}
+
+/// Batch-size accounting with bounded memory: exact running count/sum plus
+/// a fixed-capacity ring of the most recent sizes (replaces the unbounded
+/// `Vec<usize>` the server used to grow per batch).
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    recent: Vec<usize>,
+    next: usize,
+    count: u64,
+    sum: u64,
+}
+
+impl BatchStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, size: usize) {
+        self.count += 1;
+        self.sum += size as u64;
+        if self.recent.len() < BATCH_WINDOW {
+            self.recent.push(size);
+        } else {
+            self.recent[self.next] = size;
+            self.next = (self.next + 1) % BATCH_WINDOW;
+        }
+    }
+
+    /// Batches ever dispatched (exact).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Requests ever dispatched (exact).
+    pub fn requests(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact mean batch size over the whole run.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Largest batch in the retained window.
+    pub fn max_recent(&self) -> usize {
+        self.recent.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The retained window of recent batch sizes (unordered ring).
+    pub fn recent(&self) -> &[usize] {
+        &self.recent
+    }
+}
+
+/// Per-variant serving metrics: end-to-end latency with its queue/compute
+/// split, request count, and deadline misses.
+#[derive(Clone, Debug, Default)]
+pub struct VariantStats {
+    /// submit → response (queue + compute).
+    pub total: LatencyStats,
+    /// submit → batch dispatch.
+    pub queue: LatencyStats,
+    /// Batch compute wall time attributed to each request.
+    pub compute: LatencyStats,
+    pub requests: u64,
+    pub deadline_misses: u64,
+}
+
+impl VariantStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} misses={} total[{}] queue[{}] compute[{}]",
+            self.requests,
+            self.deadline_misses,
+            self.total.summary(),
+            self.queue.summary(),
+            self.compute.summary()
         )
     }
 }
@@ -94,5 +225,70 @@ mod tests {
         b.record_us(20);
         a.merge(&b);
         assert_eq!(a.count(), 2);
+        assert!((a.mean_us() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_window_bounds_memory_but_count_exact() {
+        let mut s = LatencyStats::new();
+        let n = LATENCY_WINDOW * 3;
+        for i in 0..n {
+            s.record_us(i as u64);
+        }
+        assert_eq!(s.count(), n);
+        assert!(s.window.len() <= LATENCY_WINDOW);
+        // Mean stays exact over the full run.
+        let expect = (0..n as u64).sum::<u64>() as f64 / n as f64;
+        assert!((s.mean_us() - expect).abs() < 1e-6);
+        // Percentiles reflect the recent window (all ≥ n − window).
+        assert!(s.percentile_us(0.0) >= (n - LATENCY_WINDOW) as u64);
+    }
+
+    #[test]
+    fn merge_of_full_windows_represents_both_sources() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        for _ in 0..LATENCY_WINDOW {
+            a.record_us(10);
+            b.record_us(1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2 * LATENCY_WINDOW);
+        // Percentile window must still see both populations, not just the
+        // last-merged one.
+        assert_eq!(a.percentile_us(0.0), 10);
+        assert_eq!(a.percentile_us(1.0), 1000);
+        assert_eq!(a.percentile_us(0.25), 10);
+        assert_eq!(a.percentile_us(0.75), 1000);
+        assert!(a.window.len() <= LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn batch_stats_bounded_and_exact() {
+        let mut b = BatchStats::new();
+        for i in 0..(BATCH_WINDOW * 4) {
+            b.record(1 + i % 7);
+        }
+        assert_eq!(b.count(), (BATCH_WINDOW * 4) as u64);
+        assert!(b.recent().len() <= BATCH_WINDOW);
+        let sum: u64 = (0..(BATCH_WINDOW * 4) as u64).map(|i| 1 + i % 7).sum();
+        assert!((b.mean() - sum as f64 / (BATCH_WINDOW * 4) as f64).abs() < 1e-9);
+        assert!(b.max_recent() <= 7);
+    }
+
+    #[test]
+    fn empty_batch_stats_safe() {
+        let b = BatchStats::new();
+        assert_eq!(b.mean(), 0.0);
+        assert_eq!(b.max_recent(), 0);
+    }
+
+    #[test]
+    fn variant_stats_summary_renders() {
+        let mut v = VariantStats::default();
+        v.requests = 3;
+        v.total.record_us(100);
+        let s = v.summary();
+        assert!(s.contains("requests=3"));
     }
 }

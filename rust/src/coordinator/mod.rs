@@ -1,12 +1,18 @@
 //! The L3 coordinator: layer-parallel PTQ scheduling, parallel closed-loop
-//! rollout, and a batched policy-serving router (vLLM-router-like).
+//! rollout, and a multi-model batched policy-serving router
+//! (vLLM-router-like) fed by a variant registry.
 
 pub mod metrics;
+pub mod registry;
 pub mod rollout;
 pub mod scheduler;
 pub mod server;
 
-pub use metrics::LatencyStats;
+pub use metrics::{BatchStats, LatencyStats, VariantStats};
+pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
-pub use scheduler::{quantize_model, QuantJobReport};
-pub use server::{PolicyServer, ServeConfig};
+pub use scheduler::{quantize_into_registry, quantize_model, QuantJobReport};
+pub use server::{
+    PolicyServer, ResponseHandle, ServeConfig, ServeError, ServeRequest, ServeResponse,
+    VariantSelector,
+};

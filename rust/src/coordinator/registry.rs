@@ -1,0 +1,181 @@
+//! Named model variants behind one serving endpoint.
+//!
+//! A [`ModelRegistry`] holds the model variants a [`crate::coordinator::server::PolicyServer`]
+//! can route requests to — e.g. `dense` (the FP checkpoint), `rtn-packed`
+//! and `hbvla-packed` (PTQ commits of the same checkpoint) — keyed by
+//! name. Which variant serves a request is a per-request choice
+//! ([`crate::coordinator::server::VariantSelector`]), so a single endpoint
+//! can A/B representations, fall back to dense for accuracy-critical
+//! traffic, and serve compressed variants for the rest.
+//!
+//! All variants must agree on the *serving interface*
+//! ([`crate::model::VlaConfig::serve_compatible`]): observation dims,
+//! vocabulary and action shape. Internal widths may differ — a distilled
+//! smaller trunk is a legal variant.
+//!
+//! Registration is thread-safe (`&self`), so quantization jobs can
+//! publish variants while the server is live; the scheduler's
+//! [`crate::coordinator::scheduler::quantize_into_registry`] makes
+//! `quantize → register → serve` one flow.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::MiniVla;
+
+/// Why a variant could not be registered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// The variant's serving interface (observation dims / action shape)
+    /// differs from the variants already registered.
+    IncompatibleConfig { variant: String },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::IncompatibleConfig { variant } => {
+                write!(f, "variant '{variant}' has an incompatible serving interface")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+#[derive(Default)]
+struct Inner {
+    /// Insertion-ordered (name, model) pairs; names are unique.
+    variants: Vec<(String, Arc<MiniVla>)>,
+    default: Option<String>,
+}
+
+/// Thread-safe registry of named model variants sharing one serving
+/// interface. The first registered variant becomes the default until
+/// [`ModelRegistry::set_default`] overrides it.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a variant. Fails if its config is not
+    /// serve-compatible with the variants already present — including the
+    /// one being replaced: a live server may be default-routing to it, so
+    /// the interface can never change out from under clients.
+    pub fn register(&self, name: &str, model: Arc<MiniVla>) -> Result<(), RegistryError> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, existing)) = g.variants.first() {
+            if !existing.cfg.serve_compatible(&model.cfg) {
+                return Err(RegistryError::IncompatibleConfig { variant: name.to_string() });
+            }
+        }
+        match g.variants.iter_mut().find(|(n, _)| n == name) {
+            Some(slot) => slot.1 = model,
+            None => g.variants.push((name.to_string(), model)),
+        }
+        if g.default.is_none() {
+            g.default = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Look up a variant by name.
+    pub fn get(&self, name: &str) -> Option<Arc<MiniVla>> {
+        let g = self.inner.lock().unwrap();
+        g.variants.iter().find(|(n, _)| n == name).map(|(_, m)| Arc::clone(m))
+    }
+
+    /// The default variant's name (first registered unless overridden).
+    pub fn default_variant(&self) -> Option<String> {
+        self.inner.lock().unwrap().default.clone()
+    }
+
+    /// Point the default at an existing variant; false if unknown.
+    pub fn set_default(&self, name: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.variants.iter().any(|(n, _)| n == name) {
+            g.default = Some(name.to_string());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Registered variant names, in insertion order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().variants.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{HeadKind, VlaConfig};
+
+    fn tiny_model(seed: u64) -> Arc<MiniVla> {
+        Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Chunk).with_seed(seed)))
+    }
+
+    #[test]
+    fn register_get_and_default() {
+        let r = ModelRegistry::new();
+        assert!(r.is_empty());
+        assert_eq!(r.default_variant(), None);
+        r.register("dense", tiny_model(1)).unwrap();
+        r.register("packed", tiny_model(2)).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.names(), vec!["dense".to_string(), "packed".to_string()]);
+        assert_eq!(r.default_variant().as_deref(), Some("dense"));
+        assert!(r.get("packed").is_some());
+        assert!(r.get("missing").is_none());
+        assert!(r.set_default("packed"));
+        assert_eq!(r.default_variant().as_deref(), Some("packed"));
+        assert!(!r.set_default("missing"));
+    }
+
+    #[test]
+    fn replace_keeps_single_slot() {
+        let r = ModelRegistry::new();
+        r.register("m", tiny_model(1)).unwrap();
+        let replacement = tiny_model(9);
+        r.register("m", Arc::clone(&replacement)).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.get("m").unwrap().cfg.seed, 9);
+    }
+
+    #[test]
+    fn incompatible_interface_rejected() {
+        let r = ModelRegistry::new();
+        r.register("dense", tiny_model(1)).unwrap();
+        // A Token-head model answers with a different action contract.
+        let other = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Token)));
+        let err = r.register("tok", other).unwrap_err();
+        assert_eq!(err, RegistryError::IncompatibleConfig { variant: "tok".to_string() });
+        assert_eq!(r.len(), 1);
+        // Same interface with different internals is fine.
+        let mut cfg = VlaConfig::tiny(HeadKind::Chunk);
+        cfg.d_model = 64;
+        cfg.heads = 4;
+        r.register("wide", Arc::new(MiniVla::new(cfg))).unwrap();
+        assert_eq!(r.len(), 2);
+        // Replacing the sole (default) variant with an incompatible model
+        // is rejected too — a live server may be default-routing to it.
+        let solo = ModelRegistry::new();
+        solo.register("only", tiny_model(1)).unwrap();
+        let swap = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Diffusion)));
+        assert!(solo.register("only", swap).is_err());
+        assert_eq!(solo.get("only").unwrap().cfg.head, HeadKind::Chunk);
+    }
+}

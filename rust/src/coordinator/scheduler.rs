@@ -9,7 +9,9 @@
 //! packed form (the FP passthrough) commit dense reconstructions.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use crate::coordinator::registry::{ModelRegistry, RegistryError};
 use crate::methods::traits::{Binarizer, CalibData, Component};
 use crate::model::MiniVla;
 use crate::quant::group::QuantStats;
@@ -109,6 +111,25 @@ pub fn quantize_model(
         wall_secs: start.elapsed().as_secs_f64(),
     };
     (out, report)
+}
+
+/// The `quantize → register → serve` flow in one call: quantize `model`
+/// with `method`, commit the packed layers, and publish the result to
+/// `registry` under `variant` so a live
+/// [`crate::coordinator::server::PolicyServer`] can route requests to it
+/// by name. Returns the job report.
+pub fn quantize_into_registry(
+    registry: &ModelRegistry,
+    variant: &str,
+    model: &MiniVla,
+    calib: &HashMap<String, CalibData>,
+    method: &dyn Binarizer,
+    components: &[Component],
+    threads: usize,
+) -> Result<QuantJobReport, RegistryError> {
+    let (qm, report) = quantize_model(model, calib, method, components, threads);
+    registry.register(variant, Arc::new(qm))?;
+    Ok(report)
 }
 
 #[cfg(test)]

@@ -1,21 +1,33 @@
-//! Batched policy-serving router — the deploy-scenario runtime.
+//! Batched multi-model policy-serving router — the deploy-scenario
+//! runtime.
 //!
-//! Clients submit observation requests; the router coalesces them into
-//! batches (up to `max_batch` or `max_wait`) and dispatches to worker
-//! threads running policy inference. This mirrors the dynamic-batching
-//! router architecture of LLM serving systems (vllm-project/router),
-//! specialized for action-policy serving where each request is a single
-//! policy step with tight latency budgets.
+//! Clients submit [`ServeRequest`]s naming (or defaulting) a model variant
+//! from a [`ModelRegistry`]; the router coalesces requests into batches
+//! (up to `max_batch` or `max_wait`), groups each batch by variant, and
+//! executes every same-variant group through ONE batched forward
+//! ([`crate::model::MiniVla::features_batch`] / `decode_batch`) — so
+//! PTQ-committed variants run the row-parallel multi-token packed GEMM of
+//! [`crate::quant::packed::PackedBits`] across the whole coalesced group,
+//! not a per-request loop. This mirrors the dynamic-batching router of
+//! LLM serving systems (vllm-project/router), specialized for
+//! action-policy serving where each request is one policy step with a
+//! tight latency budget.
 //!
-//! Workers execute whatever representation the model's store holds: a
-//! PTQ-committed model serves on [`crate::model::params::WeightRepr::Packed`]
-//! 1-bit kernels directly — no dequantization on the request path.
+//! The contract is typed end-to-end: responses carry which variant served
+//! the request and the queue/compute split; failures surface as
+//! [`ServeError`] — submitting to a stopped server is an error, never a
+//! panic. [`PolicyServer::submit_async`] returns a [`ResponseHandle`] for
+//! clients that pipeline requests.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::metrics::{BatchStats, LatencyStats, VariantStats};
+use crate::coordinator::registry::ModelRegistry;
+use crate::model::vla::ObsInput;
 use crate::model::MiniVla;
 use crate::sim::observe::Observation;
 use crate::util::rng::Rng;
@@ -33,105 +45,397 @@ impl Default for ServeConfig {
     }
 }
 
-struct Request {
-    obs: Observation,
-    submitted: Instant,
-    reply: Sender<(Vec<Vec<f32>>, Duration)>,
+/// Which registered variant a request asks for.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VariantSelector {
+    /// The registry's default variant.
+    Default,
+    /// A specific variant by name (e.g. `"hbvla-packed"`).
+    Named(String),
 }
 
-/// The serving router. `submit` is thread-safe and blocking (returns the
-/// decoded action chunk); latency statistics accumulate internally.
+impl VariantSelector {
+    pub fn named(name: &str) -> Self {
+        VariantSelector::Named(name.to_string())
+    }
+}
+
+/// A typed serving request: observation, per-request variant choice, and
+/// an optional queueing deadline (requests that wait longer are failed
+/// with [`ServeError::DeadlineExceeded`] instead of served stale).
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub obs: Observation,
+    pub variant: VariantSelector,
+    pub deadline: Option<Duration>,
+}
+
+impl ServeRequest {
+    pub fn new(obs: Observation) -> Self {
+        ServeRequest { obs, variant: VariantSelector::Default, deadline: None }
+    }
+
+    pub fn with_variant(mut self, name: &str) -> Self {
+        self.variant = VariantSelector::named(name);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// A served action chunk plus the telemetry the caller needs to reason
+/// about it: which variant actually ran, and where the time went.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub actions: Vec<Vec<f32>>,
+    pub variant_served: String,
+    /// submit → this request's group dispatch (in a mixed batch this
+    /// includes earlier variant groups' compute).
+    pub queue_time: Duration,
+    /// Wall time of the batched forward this request rode in.
+    pub compute_time: Duration,
+}
+
+impl ServeResponse {
+    /// End-to-end latency (queue + compute).
+    pub fn latency(&self) -> Duration {
+        self.queue_time + self.compute_time
+    }
+}
+
+/// Every way serving can fail — the public API never panics on these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The requested variant is not in the registry.
+    UnknownVariant(String),
+    /// The registry holds no variants at all.
+    NoVariants,
+    /// The server has been shut down.
+    Stopped,
+    /// A worker dropped the request mid-flight (teardown or panic).
+    WorkerDropped,
+    /// The request out-waited its deadline in the queue.
+    DeadlineExceeded { queued: Duration },
+    /// The observation's shape doesn't match the serving interface.
+    InvalidObservation { got: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownVariant(name) => write!(f, "unknown model variant '{name}'"),
+            ServeError::NoVariants => write!(f, "model registry holds no variants"),
+            ServeError::Stopped => write!(f, "server is stopped"),
+            ServeError::WorkerDropped => write!(f, "worker dropped the request"),
+            ServeError::DeadlineExceeded { queued } => {
+                write!(f, "deadline exceeded after {}us in queue", queued.as_micros())
+            }
+            ServeError::InvalidObservation { got } => {
+                write!(f, "observation does not match the serving interface ({got})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+struct Request {
+    obs: Observation,
+    variant: String,
+    deadline: Option<Duration>,
+    submitted: Instant,
+    /// Global submission sequence number: the request's own noise-stream
+    /// id, so stochastic decodes (diffusion head) never depend on which
+    /// requests happened to ride in the same batch.
+    seq: u64,
+    reply: Sender<Result<ServeResponse, ServeError>>,
+}
+
+/// Handle to an in-flight request from [`PolicyServer::submit_async`].
+pub struct ResponseHandle {
+    rx: Receiver<Result<ServeResponse, ServeError>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response (or error) arrives.
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::WorkerDropped))
+    }
+
+    /// Non-blocking poll: `None` while still in flight. A dropped request
+    /// (shutdown or worker death) surfaces as `WorkerDropped`, same as
+    /// [`Self::wait`] — it never looks like an in-flight request.
+    pub fn try_wait(&self) -> Option<Result<ServeResponse, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err(ServeError::WorkerDropped))
+            }
+        }
+    }
+}
+
+/// The serving router. `submit`/`submit_async` are thread-safe; per-variant
+/// latency and batch statistics accumulate internally (bounded memory).
+/// Shutdown is explicit and idempotent; dropping the server shuts it down.
 pub struct PolicyServer {
-    tx: Sender<Request>,
-    stats: Arc<Mutex<LatencyStats>>,
-    batch_sizes: Arc<Mutex<Vec<usize>>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    registry: Arc<ModelRegistry>,
+    tx: Mutex<Option<Sender<Request>>>,
+    next_seq: AtomicU64,
+    variant_stats: Arc<Mutex<HashMap<String, VariantStats>>>,
+    batch_stats: Arc<Mutex<BatchStats>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl PolicyServer {
-    pub fn start(model: Arc<MiniVla>, cfg: ServeConfig) -> Self {
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Self {
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
-        let stats = Arc::new(Mutex::new(LatencyStats::new()));
-        let batch_sizes = Arc::new(Mutex::new(Vec::new()));
+        let variant_stats = Arc::new(Mutex::new(HashMap::new()));
+        let batch_stats = Arc::new(Mutex::new(BatchStats::new()));
         let mut handles = Vec::new();
-        for w in 0..cfg.workers.max(1) {
+        for _ in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
-            let stats = Arc::clone(&stats);
-            let batch_sizes = Arc::clone(&batch_sizes);
-            let model = Arc::clone(&model);
+            let registry = Arc::clone(&registry);
+            let variant_stats = Arc::clone(&variant_stats);
+            let batch_stats = Arc::clone(&batch_stats);
             let cfg = cfg.clone();
             handles.push(std::thread::spawn(move || {
-                let mut rng = Rng::with_stream(0x5E4E, w as u64);
-                loop {
-                    // Collect a batch: block for the first request, then
-                    // drain up to max_batch within max_wait.
-                    let mut batch: Vec<Request> = Vec::new();
-                    {
-                        let guard = rx.lock().unwrap();
-                        match guard.recv() {
-                            Ok(r) => batch.push(r),
-                            Err(_) => break,
-                        }
-                        let deadline = Instant::now() + cfg.max_wait;
-                        while batch.len() < cfg.max_batch {
-                            let left = deadline.saturating_duration_since(Instant::now());
-                            if left.is_zero() {
-                                break;
-                            }
-                            match guard.recv_timeout(left) {
-                                Ok(r) => batch.push(r),
-                                Err(_) => break,
-                            }
-                        }
-                    }
-                    batch_sizes.lock().unwrap().push(batch.len());
-                    for req in batch {
-                        let feat = model.features(
-                            &req.obs.visual_raw,
-                            req.obs.instr_id,
-                            &req.obs.proprio,
-                            &mut None,
-                        );
-                        let act = model.decode(&feat, &mut rng);
-                        let latency = req.submitted.elapsed();
-                        stats.lock().unwrap().record(latency);
-                        let _ = req.reply.send((act, latency));
-                    }
-                }
+                worker_loop(&cfg, &rx, &registry, &variant_stats, &batch_stats)
             }));
         }
-        PolicyServer { tx, stats, batch_sizes, handles }
+        PolicyServer {
+            registry,
+            tx: Mutex::new(Some(tx)),
+            next_seq: AtomicU64::new(0),
+            variant_stats,
+            batch_stats,
+            handles: Mutex::new(handles),
+        }
     }
 
-    /// Submit one observation; blocks until the action chunk is decoded.
-    pub fn submit(&self, obs: Observation) -> (Vec<Vec<f32>>, Duration) {
-        let (reply_tx, reply_rx): (Sender<(Vec<Vec<f32>>, Duration)>, Receiver<_>) = channel();
-        self.tx
-            .send(Request { obs, submitted: Instant::now(), reply: reply_tx })
-            .expect("server stopped");
-        reply_rx.recv().expect("worker dropped request")
+    /// Resolve a selector against the registry at submit time, so unknown
+    /// variants fail fast instead of poisoning a batch.
+    fn resolve(&self, sel: &VariantSelector) -> Result<(String, Arc<MiniVla>), ServeError> {
+        match sel {
+            VariantSelector::Named(name) => self
+                .registry
+                .get(name)
+                .map(|m| (name.clone(), m))
+                .ok_or_else(|| ServeError::UnknownVariant(name.clone())),
+            VariantSelector::Default => {
+                let name = self.registry.default_variant().ok_or(ServeError::NoVariants)?;
+                let model = self.registry.get(&name).ok_or(ServeError::NoVariants)?;
+                Ok((name, model))
+            }
+        }
     }
 
+    /// Submit a request; blocks until the action chunk is decoded.
+    pub fn submit(&self, req: ServeRequest) -> Result<ServeResponse, ServeError> {
+        self.submit_async(req)?.wait()
+    }
+
+    /// Submit without blocking: returns a [`ResponseHandle`] immediately,
+    /// so a client can pipeline many requests into one batch window.
+    /// Observation shape is validated here against the resolved variant's
+    /// serving interface — a malformed request is a typed error at submit,
+    /// never a worker panic that would take down its whole batch.
+    pub fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+        let (variant, model) = self.resolve(&req.variant)?;
+        let cfg = &model.cfg;
+        if req.obs.visual_raw.rows != cfg.d_vis_in
+            || req.obs.visual_raw.cols != cfg.n_visual
+            || req.obs.proprio.len() != cfg.d_proprio
+            || req.obs.instr_id >= cfg.vocab
+        {
+            return Err(ServeError::InvalidObservation {
+                got: format!(
+                    "visual {}x{}, proprio {}, instr {}",
+                    req.obs.visual_raw.rows,
+                    req.obs.visual_raw.cols,
+                    req.obs.proprio.len(),
+                    req.obs.instr_id
+                ),
+            });
+        }
+        let (reply_tx, reply_rx) = channel();
+        let inner = Request {
+            obs: req.obs,
+            variant,
+            deadline: req.deadline,
+            submitted: Instant::now(),
+            seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
+            reply: reply_tx,
+        };
+        let guard = self.tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => tx.send(inner).map_err(|_| ServeError::Stopped)?,
+            None => return Err(ServeError::Stopped),
+        }
+        Ok(ResponseHandle { rx: reply_rx })
+    }
+
+    /// Convenience: one observation on the default variant.
+    pub fn submit_obs(&self, obs: Observation) -> Result<ServeResponse, ServeError> {
+        self.submit(ServeRequest::new(obs))
+    }
+
+    /// End-to-end latency over every variant (merged).
     pub fn latency_stats(&self) -> LatencyStats {
-        self.stats.lock().unwrap().clone()
+        let g = self.variant_stats.lock().unwrap();
+        let mut all = LatencyStats::new();
+        for v in g.values() {
+            all.merge(&v.total);
+        }
+        all
+    }
+
+    /// Per-variant latency/deadline statistics.
+    pub fn variant_stats(&self) -> HashMap<String, VariantStats> {
+        self.variant_stats.lock().unwrap().clone()
+    }
+
+    /// Batch-size statistics (bounded ring + exact totals).
+    pub fn batch_stats(&self) -> BatchStats {
+        self.batch_stats.lock().unwrap().clone()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batch_sizes.lock().unwrap();
-        if b.is_empty() {
-            0.0
-        } else {
-            b.iter().sum::<usize>() as f64 / b.len() as f64
-        }
+        self.batch_stats.lock().unwrap().mean()
     }
 
-    /// Shut down: close the queue and join workers.
-    pub fn shutdown(mut self) {
-        let (tx, _) = channel();
-        drop(std::mem::replace(&mut self.tx, tx));
-        for h in self.handles.drain(..) {
+    /// Shut down: close the submit queue and join workers. Explicit,
+    /// idempotent, and safe to race with in-flight `submit` calls — later
+    /// submits get [`ServeError::Stopped`] instead of panicking.
+    pub fn shutdown(&self) {
+        let tx = self.tx.lock().unwrap().take();
+        drop(tx);
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PolicyServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    cfg: &ServeConfig,
+    rx: &Mutex<Receiver<Request>>,
+    registry: &ModelRegistry,
+    variant_stats: &Mutex<HashMap<String, VariantStats>>,
+    batch_stats: &Mutex<BatchStats>,
+) {
+    loop {
+        // Collect a batch: block for the first request, then drain up to
+        // max_batch within max_wait.
+        let mut batch: Vec<Request> = Vec::new();
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+            let wait_deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let left = wait_deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match guard.recv_timeout(left) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+        }
+        batch_stats.lock().unwrap().record(batch.len());
+
+        // Group by variant, preserving arrival order within each group.
+        let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
+        for req in batch {
+            match groups.iter_mut().find(|(name, _)| *name == req.variant) {
+                Some((_, g)) => g.push(req),
+                None => groups.push((req.variant.clone(), vec![req])),
+            }
+        }
+
+        for (name, reqs) in groups {
+            // Per-group dispatch stamp: in a mixed batch, later groups
+            // queue behind earlier groups' compute — their queue time and
+            // deadline triage must include it.
+            let group_dispatch = Instant::now();
+            // Deadline triage before spending compute.
+            let mut live: Vec<Request> = Vec::new();
+            for req in reqs {
+                let queued = group_dispatch.saturating_duration_since(req.submitted);
+                if let Some(d) = req.deadline {
+                    if queued > d {
+                        let mut g = variant_stats.lock().unwrap();
+                        g.entry(name.clone()).or_default().deadline_misses += 1;
+                        let _ = req.reply.send(Err(ServeError::DeadlineExceeded { queued }));
+                        continue;
+                    }
+                }
+                live.push(req);
+            }
+            if live.is_empty() {
+                continue;
+            }
+            // The variant can have been replaced since submit; a removal
+            // cannot happen (the registry only replaces), but guard anyway.
+            let model = match registry.get(&name) {
+                Some(m) => m,
+                None => {
+                    for req in live {
+                        let _ = req.reply.send(Err(ServeError::UnknownVariant(name.clone())));
+                    }
+                    continue;
+                }
+            };
+            // One batched forward for the whole same-variant group: the
+            // packed variants execute the multi-token packed GEMM here.
+            let t0 = Instant::now();
+            let inputs: Vec<ObsInput> = live
+                .iter()
+                .map(|r| ObsInput {
+                    visual_raw: &r.obs.visual_raw,
+                    instr_id: r.obs.instr_id,
+                    proprio: &r.obs.proprio,
+                })
+                .collect();
+            let feats = model.features_batch(&inputs);
+            drop(inputs);
+            // Noise streams keyed by each request's own submission seq:
+            // batch composition never changes a served stochastic action.
+            let mut rngs: Vec<Rng> =
+                live.iter().map(|r| Rng::with_stream(0x5E4E_D1F, r.seq)).collect();
+            let actions = model.decode_batch(&feats, &mut rngs);
+            let compute = t0.elapsed();
+
+            let mut g = variant_stats.lock().unwrap();
+            let stats = g.entry(name.clone()).or_default();
+            for (req, act) in live.into_iter().zip(actions) {
+                let queue_time = group_dispatch.saturating_duration_since(req.submitted);
+                stats.requests += 1;
+                stats.queue.record(queue_time);
+                stats.compute.record(compute);
+                stats.total.record(req.submitted.elapsed());
+                let _ = req.reply.send(Ok(ServeResponse {
+                    actions: act,
+                    variant_served: name.clone(),
+                    queue_time,
+                    compute_time: compute,
+                }));
+            }
         }
     }
 }
@@ -139,9 +443,10 @@ impl PolicyServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{HeadKind, VlaConfig};
+    use crate::model::{HeadKind, MiniVla, VlaConfig};
     use crate::sim::observe::{observe, ObsParams};
     use crate::sim::tasks::libero_suite;
+    use crate::tensor::matrix::Matrix;
 
     fn sample_obs(model: &MiniVla) -> Observation {
         let task = &libero_suite("object")[0];
@@ -150,80 +455,183 @@ mod tests {
         observe(&scene, task.stages[0].instr(), 100, model, &ObsParams::clean(), &mut rng)
     }
 
+    fn single_registry(model: MiniVla) -> Arc<ModelRegistry> {
+        let r = ModelRegistry::new();
+        r.register("dense", Arc::new(model)).unwrap();
+        Arc::new(r)
+    }
+
     #[test]
     fn serves_requests_and_records_latency() {
-        let model = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Chunk)));
-        let server = PolicyServer::start(Arc::clone(&model), ServeConfig::default());
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let chunk_len = model.chunk_len();
         let obs = sample_obs(&model);
+        let server = PolicyServer::start(single_registry(model), ServeConfig::default());
         for _ in 0..12 {
-            let (act, lat) = server.submit(obs.clone());
-            assert_eq!(act.len(), model.chunk_len());
-            assert!(lat.as_nanos() > 0);
+            let rsp = server.submit(ServeRequest::new(obs.clone())).unwrap();
+            assert_eq!(rsp.actions.len(), chunk_len);
+            assert_eq!(rsp.variant_served, "dense");
+            assert!(rsp.latency().as_nanos() > 0);
         }
         let stats = server.latency_stats();
         assert_eq!(stats.count(), 12);
+        let per = server.variant_stats();
+        assert_eq!(per["dense"].requests, 12);
+        assert_eq!(per["dense"].deadline_misses, 0);
         server.shutdown();
     }
 
     #[test]
-    fn serves_packed_weights_bit_true_to_dense_twin() {
-        // The deploy property: a server running on packed 1-bit weights
-        // must produce the same actions as one running the dense
-        // dequantization of those same weights.
+    fn routes_per_request_variant_and_packed_matches_dense_twin() {
+        // The deploy property, now on ONE server: requests routed to the
+        // packed variant must produce the same actions as requests routed
+        // to the dense dequantization of those same weights.
         let mut packed_model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
-        // Give the (zero-init) head real weights so the decode is
-        // exercised, then pack every quantizable layer.
         let mut rng = Rng::new(17);
         let head_dims = packed_model.store.dims("head.main");
-        packed_model.store.set(
-            "head.main",
-            crate::tensor::matrix::Matrix::gauss(head_dims.0, head_dims.1, 0.1, &mut rng),
-        );
+        packed_model
+            .store
+            .set("head.main", Matrix::gauss(head_dims.0, head_dims.1, 0.1, &mut rng));
         let n_packed = packed_model.store.pack_quantizable(64);
         assert!(n_packed > 0);
         let mut dense_model = packed_model.clone();
         assert_eq!(dense_model.store.dequantize_all(), n_packed);
 
         let obs = sample_obs(&packed_model);
-        let packed_model = Arc::new(packed_model);
-        let dense_model = Arc::new(dense_model);
-        let srv_p = PolicyServer::start(Arc::clone(&packed_model), ServeConfig::default());
-        let srv_d = PolicyServer::start(Arc::clone(&dense_model), ServeConfig::default());
+        let registry = ModelRegistry::new();
+        registry.register("packed", Arc::new(packed_model)).unwrap();
+        registry.register("dense", Arc::new(dense_model)).unwrap();
+        let server = PolicyServer::start(Arc::new(registry), ServeConfig::default());
         for _ in 0..4 {
-            let (ap, _) = srv_p.submit(obs.clone());
-            let (ad, _) = srv_d.submit(obs.clone());
-            assert_eq!(ap.len(), ad.len());
-            for (ca, cb) in ap.iter().zip(&ad) {
+            let rp =
+                server.submit(ServeRequest::new(obs.clone()).with_variant("packed")).unwrap();
+            let rd = server.submit(ServeRequest::new(obs.clone()).with_variant("dense")).unwrap();
+            assert_eq!(rp.variant_served, "packed");
+            assert_eq!(rd.variant_served, "dense");
+            assert_eq!(rp.actions.len(), rd.actions.len());
+            for (ca, cb) in rp.actions.iter().zip(&rd.actions) {
                 for (a, b) in ca.iter().zip(cb) {
                     assert!((a - b).abs() < 1e-3, "packed {a} vs dense-twin {b}");
                 }
             }
         }
-        srv_p.shutdown();
-        srv_d.shutdown();
+        let per = server.variant_stats();
+        assert_eq!(per["packed"].requests, 4);
+        assert_eq!(per["dense"].requests, 4);
+        server.shutdown();
     }
 
     #[test]
     fn concurrent_clients_batch() {
-        let model = Arc::new(MiniVla::new(VlaConfig::tiny(HeadKind::Chunk)));
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
         let server = Arc::new(PolicyServer::start(
-            Arc::clone(&model),
+            single_registry(model),
             ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(2) },
         ));
-        let obs = sample_obs(&model);
         std::thread::scope(|s| {
             for _ in 0..4 {
                 let srv = Arc::clone(&server);
                 let o = obs.clone();
                 s.spawn(move || {
                     for _ in 0..8 {
-                        let (act, _) = srv.submit(o.clone());
-                        assert!(!act.is_empty());
+                        let rsp = srv.submit(ServeRequest::new(o.clone())).unwrap();
+                        assert!(!rsp.actions.is_empty());
                     }
                 });
             }
         });
         assert_eq!(server.latency_stats().count(), 32);
         assert!(server.mean_batch_size() >= 1.0);
+        assert_eq!(server.batch_stats().requests(), 32);
+    }
+
+    #[test]
+    fn async_submit_coalesces_one_compute_batch() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        // max_batch equals the request count, so the batch closes on count
+        // as soon as all submits land; the long max_wait only matters if
+        // the submitter is descheduled mid-burst, keeping the coalescing
+        // assertion below deterministic on loaded CI runners.
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig { workers: 1, max_batch: 8, max_wait: Duration::from_millis(500) },
+        );
+        let handles: Vec<ResponseHandle> = (0..8)
+            .map(|_| server.submit_async(ServeRequest::new(obs.clone())).unwrap())
+            .collect();
+        let mut responses = Vec::new();
+        for h in handles {
+            responses.push(h.wait().unwrap());
+        }
+        assert_eq!(responses.len(), 8);
+        // At least one dispatched batch held several coalesced requests.
+        assert!(server.batch_stats().max_recent() >= 2, "batching never coalesced");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error_not_a_panic() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(single_registry(model), ServeConfig::default());
+        let err = server
+            .submit(ServeRequest::new(obs).with_variant("no-such-variant"))
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownVariant("no-such-variant".to_string()));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stopped_server_errors_and_double_shutdown_is_safe() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(single_registry(model), ServeConfig::default());
+        server.submit(ServeRequest::new(obs.clone())).unwrap();
+        server.shutdown();
+        // Submitting after shutdown surfaces ServeError::Stopped.
+        assert_eq!(server.submit(ServeRequest::new(obs)).unwrap_err(), ServeError::Stopped);
+        // Shutdown is idempotent (and Drop will run it a third time).
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_observation_is_an_error_not_a_worker_panic() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(single_registry(model), ServeConfig::default());
+        let mut bad = obs.clone();
+        bad.proprio.push(0.0);
+        let err = server.submit(ServeRequest::new(bad)).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidObservation { .. }), "{err:?}");
+        let mut bad_instr = obs.clone();
+        bad_instr.instr_id = usize::MAX;
+        assert!(server.submit(ServeRequest::new(bad_instr)).is_err());
+        // The workers survived: well-formed requests still serve.
+        server.submit(ServeRequest::new(obs)).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_is_reported() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        // A 1 ns deadline always expires in the queue.
+        let err = server
+            .submit(ServeRequest::new(obs).with_deadline(Duration::from_nanos(1)))
+            .unwrap_err();
+        match err {
+            ServeError::DeadlineExceeded { queued } => assert!(queued.as_nanos() > 0),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let per = server.variant_stats();
+        assert_eq!(per["dense"].deadline_misses, 1);
+        assert_eq!(per["dense"].requests, 0);
+        server.shutdown();
     }
 }

@@ -1,19 +1,22 @@
 //! §Perf drivers: quantization throughput, packed-GEMV/GEMM vs dense,
-//! rollout throughput, serving latency, and the end-to-end dense-vs-packed
-//! forward comparison (tokens/s + resident weight bytes) — the
-//! measurements behind EXPERIMENTS.md §Perf.
+//! rollout throughput, serving latency, batched-vs-sequential serving
+//! forwards, and the end-to-end dense-vs-packed forward comparison
+//! (tokens/s + resident weight bytes) — the measurements behind
+//! EXPERIMENTS.md §Perf.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::rollout::{eval_tasks, ObsMode, RolloutConfig};
 use crate::coordinator::scheduler::quantize_model;
-use crate::coordinator::server::{PolicyServer, ServeConfig};
+use crate::coordinator::server::{PolicyServer, ServeConfig, ServeRequest};
 use crate::eval::harness::{build_testbed, paper_components};
 use crate::methods::HbVla;
-use crate::model::HeadKind;
+use crate::model::vla::ObsInput;
+use crate::model::{HeadKind, MiniVla};
 use crate::quant::packed::PackedBits;
-use crate::sim::observe::{observe, ObsParams};
+use crate::sim::observe::{observe, ObsParams, Observation};
 use crate::sim::tasks::libero_suite;
 use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::{matmul_mt, matvec};
@@ -38,6 +41,20 @@ pub struct PerfReport {
     /// Resident weight bytes of the dense-twin / packed stores.
     pub e2e_dense_weight_bytes: usize,
     pub e2e_packed_weight_bytes: usize,
+    /// Batched-serve forward throughput per batch size (dense vs packed,
+    /// sequential per-request loop vs `features_batch`/`decode_batch`).
+    pub batched_serve: Vec<BatchServeRow>,
+}
+
+/// One row of the batched-serve table: tokens/s at a given batch size for
+/// the sequential per-request loop vs the batched forward, on the dense
+/// twin and on the packed commit.
+pub struct BatchServeRow {
+    pub batch: usize,
+    pub dense_seq_tok_s: f64,
+    pub dense_batch_tok_s: f64,
+    pub packed_seq_tok_s: f64,
+    pub packed_batch_tok_s: f64,
 }
 
 impl PerfReport {
@@ -49,6 +66,7 @@ impl PerfReport {
              packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
+             {}\n\
              {}",
             self.quant_layers_per_sec,
             self.quant_weights_per_sec / 1e6,
@@ -61,8 +79,29 @@ impl PerfReport {
             self.packed_mem_ratio,
             self.packed_gemm_gflops,
             self.dense_gemm_gflops,
-            self.e2e_table()
+            self.e2e_table(),
+            self.batched_serve_table()
         )
+    }
+
+    /// The batched-serve table: per-request-loop vs batched forward
+    /// tokens/s at each batch size, dense twin vs packed commit.
+    pub fn batched_serve_table(&self) -> String {
+        let mut s = String::from(
+            "batched serve forward (tokens/s; seq = per-request loop, bat = features_batch):\n\
+             \x20 batch   dense seq   dense bat   packed seq   packed bat\n",
+        );
+        for row in &self.batched_serve {
+            s.push_str(&format!(
+                "  {:>5}  {:>10.0}  {:>10.0}  {:>11.0}  {:>11.0}\n",
+                row.batch,
+                row.dense_seq_tok_s,
+                row.dense_batch_tok_s,
+                row.packed_seq_tok_s,
+                row.packed_batch_tok_s
+            ));
+        }
+        s
     }
 
     /// The end-to-end dense-vs-packed table: tokens/s and resident weight
@@ -105,16 +144,24 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let r = eval_tasks(&tb.model, &tasks, &cfg);
     let rollout_secs = t1.elapsed().as_secs_f64();
 
-    // --- serving latency/throughput ---
-    let model = Arc::new(tb.model.clone());
-    let server = PolicyServer::start(Arc::clone(&model), ServeConfig::default());
+    // --- serving latency/throughput (async waves exercise coalescing) ---
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(tb.model.clone())).expect("register dense");
+    let server = PolicyServer::start(Arc::clone(&registry), ServeConfig::default());
     let mut rng = Rng::with_stream(seed, 0x9F);
     let scene = tasks[0].instantiate(&mut rng);
-    let obs = observe(&scene, tasks[0].stages[0].instr(), 100, &model, &ObsParams::clean(), &mut rng);
+    let obs =
+        observe(&scene, tasks[0].stages[0].instr(), 100, &tb.model, &ObsParams::clean(), &mut rng);
     let n_req = 400;
+    let wave = 16;
     let t2 = Instant::now();
-    for _ in 0..n_req {
-        let _ = server.submit(obs.clone());
+    for _ in 0..n_req / wave {
+        let handles: Vec<_> = (0..wave)
+            .map(|_| server.submit_async(ServeRequest::new(obs.clone())).expect("submit"))
+            .collect();
+        for h in handles {
+            let _ = h.wait().expect("serve");
+        }
     }
     let serve_secs = t2.elapsed().as_secs_f64();
     let stats = server.latency_stats();
@@ -181,6 +228,12 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     }
     let e2e_packed_secs = t8.elapsed().as_secs_f64();
 
+    // --- batched vs sequential serving forward, dense vs packed ---
+    let batched_serve = [1usize, 4, 8, 16]
+        .iter()
+        .map(|&batch| batched_serve_row(&dense_model, &packed_model, &obs, batch))
+        .collect();
+
     PerfReport {
         quant_layers_per_sec: total_layers as f64 / quant_secs,
         quant_weights_per_sec: total_weights as f64 / quant_secs,
@@ -197,5 +250,52 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         e2e_packed_tok_per_sec: toks / e2e_packed_secs,
         e2e_dense_weight_bytes: dense_model.store.resident_weight_bytes(),
         e2e_packed_weight_bytes: packed_model.store.resident_weight_bytes(),
+        batched_serve,
+    }
+}
+
+/// Measure one batch size: trunk+decode tokens/s for the per-request loop
+/// (`features` + `decode` per observation) vs the batched path
+/// (`features_batch` + `decode_batch` over the coalesced group), on the
+/// dense twin and on the packed commit.
+fn batched_serve_row(
+    dense_model: &MiniVla,
+    packed_model: &MiniVla,
+    obs: &Observation,
+    batch: usize,
+) -> BatchServeRow {
+    let rounds = (48 / batch).max(3);
+    let toks = (rounds * batch * dense_model.cfg.seq_len()) as f64;
+    let measure = |model: &MiniVla, batched: bool| -> f64 {
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            if batched {
+                let inputs: Vec<ObsInput> = (0..batch)
+                    .map(|_| ObsInput {
+                        visual_raw: &obs.visual_raw,
+                        instr_id: obs.instr_id,
+                        proprio: &obs.proprio,
+                    })
+                    .collect();
+                let feats = model.features_batch(&inputs);
+                let mut rngs: Vec<Rng> =
+                    (0..batch).map(|r| Rng::with_stream(0xBA7C, (round * batch + r) as u64)).collect();
+                std::hint::black_box(model.decode_batch(&feats, &mut rngs));
+            } else {
+                for r in 0..batch {
+                    let f = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+                    let mut rng = Rng::with_stream(0xBA7C, (round * batch + r) as u64);
+                    std::hint::black_box(model.decode(&f, &mut rng));
+                }
+            }
+        }
+        toks / t0.elapsed().as_secs_f64()
+    };
+    BatchServeRow {
+        batch,
+        dense_seq_tok_s: measure(dense_model, false),
+        dense_batch_tok_s: measure(dense_model, true),
+        packed_seq_tok_s: measure(packed_model, false),
+        packed_batch_tok_s: measure(packed_model, true),
     }
 }

@@ -13,6 +13,11 @@
 //! Budget flags: `--episodes N` (per task, default 50), `--demos N`
 //! (default 256), `--seed S`, `--threads T`, `--md` (markdown tables),
 //! `--smoke` (tiny budget for CI).
+//!
+//! `serve` flags: `--variant <name>` (dense | rtn-packed | hbvla-packed),
+//! `--workers N`, `--max-batch N`, `--max-wait-us U`, `--requests N` —
+//! the demo registers all three variants (quantize → register → serve)
+//! and routes every request to the chosen one.
 
 use hbvla::eval::tables::EvalBudget;
 use hbvla::report::Table;
@@ -90,6 +95,7 @@ fn main() {
             println!("## §Perf\n{}", rep.render());
         }
         Some("serve") => {
+            use hbvla::coordinator::{ModelRegistry, PolicyServer, ServeConfig, ServeRequest};
             use std::sync::Arc;
             let tb = hbvla::eval::build_testbed(
                 hbvla::model::HeadKind::Chunk,
@@ -97,36 +103,82 @@ fn main() {
                 budget.n_demos.min(64),
                 budget.seed,
             );
-            // `--method <m>` serves the PTQ-committed model: the workers
-            // then execute on packed 1-bit weights (`--method fp` or
-            // omitting the flag serves the dense FP checkpoint).
-            let served = match args.get("method") {
-                Some(name) if !name.eq_ignore_ascii_case("fp") => {
-                    let method = hbvla::methods::by_name(name)
-                        .unwrap_or_else(|| panic!("unknown method {name}"));
-                    let (qm, _) = hbvla::coordinator::scheduler::quantize_model(
-                        &tb.model,
-                        &tb.calib,
-                        method.as_ref(),
-                        &hbvla::eval::paper_components(),
-                        budget.threads,
-                    );
-                    qm
-                }
-                _ => tb.model.clone(),
+            // quantize → register → serve: one registry holds the dense
+            // checkpoint plus each PTQ commit; requests choose per-variant
+            // (`--variant`, default hbvla-packed — the packed 1-bit path).
+            let registry = Arc::new(ModelRegistry::new());
+            registry.register("dense", Arc::new(tb.model.clone())).expect("register dense");
+            for (variant, method_name) in [("rtn-packed", "rtn"), ("hbvla-packed", "hbvla")] {
+                let method = hbvla::methods::by_name(method_name).unwrap();
+                let rep = hbvla::coordinator::quantize_into_registry(
+                    &registry,
+                    variant,
+                    &tb.model,
+                    &tb.calib,
+                    method.as_ref(),
+                    &hbvla::eval::paper_components(),
+                    budget.threads,
+                )
+                .expect("register variant");
+                println!(
+                    "registered {variant:<13} {} packed layers, ×{:.1} smaller, \
+                     deploy rel err {:.4}",
+                    rep.packed_layers,
+                    rep.realized_compression(),
+                    rep.mean_deploy_rel_err
+                );
+            }
+            let cfg = ServeConfig {
+                workers: args.usize_or("workers", 2),
+                max_batch: args.usize_or("max-batch", 8),
+                max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 500)),
             };
-            let mem = hbvla::report::MemoryReport::from_store(&served.store);
+            // `--variant` picks the served variant; the pre-registry
+            // `--method` spelling still works — preregistered methods map
+            // to their variant, any other known method quantizes and
+            // registers on demand.
+            let variant = match (args.get("variant"), args.get("method")) {
+                (Some(v), _) => v.to_string(),
+                (None, Some(m)) => match m.to_ascii_lowercase().as_str() {
+                    "rtn" | "rtn-1b" => "rtn-packed".to_string(),
+                    "hbvla" => "hbvla-packed".to_string(),
+                    "fp" | "full" | "fullprecision" => "dense".to_string(),
+                    other => {
+                        let method = hbvla::methods::by_name(other)
+                            .unwrap_or_else(|| panic!("unknown method {other}"));
+                        let name = format!("{other}-packed");
+                        let rep = hbvla::coordinator::quantize_into_registry(
+                            &registry,
+                            &name,
+                            &tb.model,
+                            &tb.calib,
+                            method.as_ref(),
+                            &hbvla::eval::paper_components(),
+                            budget.threads,
+                        )
+                        .expect("register variant");
+                        println!(
+                            "registered {name:<13} {} packed layers, ×{:.1} smaller",
+                            rep.packed_layers,
+                            rep.realized_compression()
+                        );
+                        name
+                    }
+                },
+                (None, None) => "hbvla-packed".to_string(),
+            };
+            if registry.get(&variant).is_none() {
+                eprintln!(
+                    "unknown variant '{variant}'; registered variants: {}",
+                    registry.names().join(", ")
+                );
+                std::process::exit(2);
+            }
             println!(
-                "serving {} packed layers, {} B resident weights (×{:.1} vs dense)",
-                mem.packed_layers(),
-                mem.total_resident(),
-                mem.compression_ratio()
+                "serving variant '{variant}' with {} workers, max batch {}, max wait {:?}",
+                cfg.workers, cfg.max_batch, cfg.max_wait
             );
-            let model = Arc::new(served);
-            let server = hbvla::coordinator::server::PolicyServer::start(
-                Arc::clone(&model),
-                hbvla::coordinator::server::ServeConfig::default(),
-            );
+            let server = PolicyServer::start(Arc::clone(&registry), cfg);
             let mut rng = hbvla::util::rng::Rng::new(budget.seed);
             let task = &tb.tasks[0];
             let scene = task.instantiate(&mut rng);
@@ -134,18 +186,35 @@ fn main() {
                 &scene,
                 task.stages[0].instr(),
                 100,
-                &model,
+                &tb.model,
                 &hbvla::sim::observe::ObsParams::clean(),
                 &mut rng,
             );
-            let n = args.usize_or("requests", 1000);
+            let n = args.usize_or("requests", if args.flag("smoke") { 64 } else { 1000 });
+            // Async waves let the router coalesce real compute batches.
+            let wave = 16usize;
             let t0 = std::time::Instant::now();
-            for _ in 0..n {
-                let _ = server.submit(obs.clone());
+            let mut served = 0usize;
+            while served < n {
+                let k = wave.min(n - served);
+                let handles: Vec<_> = (0..k)
+                    .map(|_| {
+                        server
+                            .submit_async(ServeRequest::new(obs.clone()).with_variant(&variant))
+                            .expect("submit")
+                    })
+                    .collect();
+                for h in handles {
+                    let rsp = h.wait().expect("serve request failed");
+                    assert_eq!(rsp.variant_served, variant);
+                }
+                served += k;
             }
             let el = t0.elapsed().as_secs_f64();
             println!("served {n} requests in {el:.3}s ({:.0} req/s)", n as f64 / el);
-            println!("latency: {}", server.latency_stats().summary());
+            for (name, stats) in server.variant_stats() {
+                println!("  {name:<13} {}", stats.summary());
+            }
             println!("mean batch size: {:.2}", server.mean_batch_size());
             server.shutdown();
         }
@@ -160,7 +229,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
-                 [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]"
+                 [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
+                 serve flags: [--variant dense|rtn-packed|hbvla-packed] [--workers N] \
+                 [--max-batch N] [--max-wait-us U] [--requests N]"
             );
             std::process::exit(2);
         }

@@ -134,6 +134,23 @@ impl VlaConfig {
         self.mlp_mult * width
     }
 
+    /// Whether two configs can serve behind one endpoint: the request /
+    /// response interface (observation dims, vocabulary, action shape)
+    /// must match; internal widths and seeds may differ. This is the
+    /// compatibility contract [`crate::coordinator::ModelRegistry`]
+    /// enforces across its variants.
+    pub fn serve_compatible(&self, other: &VlaConfig) -> bool {
+        self.d_vis_in == other.d_vis_in
+            && self.n_visual == other.n_visual
+            && self.vocab == other.vocab
+            && self.d_proprio == other.d_proprio
+            && self.act_dim == other.act_dim
+            && self.head == other.head
+            && self.chunk == other.chunk
+            && self.bins == other.bins
+            && self.diffusion_steps == other.diffusion_steps
+    }
+
     /// Sequence length the language trunk sees:
     /// visual tokens + 1 instruction token + 1 proprio token.
     pub fn seq_len(&self) -> usize {

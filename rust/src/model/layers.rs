@@ -58,7 +58,10 @@ pub fn rmsnorm_cols(m: &mut Matrix) {
     }
 }
 
-/// Multi-head self-attention sub-layer: returns X + MHSA(X).
+/// Multi-head self-attention sub-layer: returns X + MHSA(X). The
+/// single-request form of [`attn_forward_seg`] (one segment spanning all
+/// columns), so single and batched serving share one kernel by
+/// construction.
 pub fn attn_forward(
     store: &ParamStore,
     prefix: &str,
@@ -66,6 +69,27 @@ pub fn attn_forward(
     x: &Matrix,
     hook: &mut Option<Hook>,
 ) -> Matrix {
+    attn_forward_seg(store, prefix, heads, x, x.cols, hook)
+}
+
+/// Segmented multi-head self-attention: `x` holds the column-concatenated
+/// token sequences of `x.cols / seg` independent requests, each `seg`
+/// columns wide. The Q/K/V/O projections run ONCE over the whole
+/// concatenation — on packed layers this is the multi-token packed GEMM
+/// amortizing sign-word traffic across every coalesced request — while
+/// scores/softmax/context stay local to each segment, so tokens never
+/// attend across requests. Per request the result is bit-identical to
+/// [`attn_forward`] on that request alone: every linear kernel computes
+/// output columns independently and in the same operation order.
+pub fn attn_forward_seg(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    seg: usize,
+    hook: &mut Option<Hook>,
+) -> Matrix {
+    assert!(seg > 0 && x.cols % seg == 0, "ragged batch: {} cols, segment {}", x.cols, seg);
     let nq = format!("{prefix}.wq");
     let nk = format!("{prefix}.wk");
     let nv = format!("{prefix}.wv");
@@ -76,26 +100,38 @@ pub fn attn_forward(
         h(&nv, x);
     }
     let d = store.dims(&nq).0;
-    let n = x.cols;
     let dh = d / heads;
     let q = linear(store, &nq, x);
     let k = linear(store, &nk, x);
     let v = linear(store, &nv, x);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = Matrix::zeros(d, n);
+    let mut ctx = Matrix::zeros(d, x.cols);
     for h in 0..heads {
         let r0 = h * dh;
         let r1 = r0 + dh;
-        let qh = q.slice_rows(r0, r1);
-        let kh = k.slice_rows(r0, r1);
-        let vh = v.slice_rows(r0, r1);
-        let mut s = matmul(&qh.transpose(), &kh);
-        s.scale(scale);
-        softmax_rows(&mut s);
-        let ch = matmul(&vh, &s.transpose());
-        for i in 0..dh {
-            for t in 0..n {
-                ctx.set(r0 + i, t, ch.at(i, t));
+        let qh_all = q.slice_rows(r0, r1);
+        let kh_all = k.slice_rows(r0, r1);
+        let vh_all = v.slice_rows(r0, r1);
+        for s0 in (0..x.cols).step_by(seg) {
+            // Single-segment fast path: borrow the head slices directly —
+            // the per-request (non-batched) forward pays no extra copy.
+            let (qc, kc, vc);
+            let (qh, kh, vh) = if seg == x.cols {
+                (&qh_all, &kh_all, &vh_all)
+            } else {
+                qc = qh_all.slice_cols(s0, s0 + seg);
+                kc = kh_all.slice_cols(s0, s0 + seg);
+                vc = vh_all.slice_cols(s0, s0 + seg);
+                (&qc, &kc, &vc)
+            };
+            let mut s = matmul(&qh.transpose(), kh);
+            s.scale(scale);
+            softmax_rows(&mut s);
+            let ch = matmul(vh, &s.transpose());
+            for i in 0..dh {
+                for t in 0..seg {
+                    ctx.set(r0 + i, s0 + t, ch.at(i, t));
+                }
             }
         }
     }
@@ -104,6 +140,42 @@ pub fn attn_forward(
     }
     let yo = linear(store, &no, &ctx);
     x.add(&yo)
+}
+
+/// Batched transformer block over `x.cols / seg` concatenated requests:
+/// segment-local attention ([`attn_forward_seg`]), fully batched MLP (both
+/// GEMMs see every request's tokens at once), optional per-sublayer
+/// RMS-norm matching [`block_forward_norm`] (which is the `seg == x.cols`
+/// case of this function — one kernel, parity by construction).
+pub fn block_forward_batch(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    seg: usize,
+    norm: bool,
+) -> Matrix {
+    block_forward_seg(store, prefix, heads, x, seg, norm, &mut None)
+}
+
+fn block_forward_seg(
+    store: &ParamStore,
+    prefix: &str,
+    heads: usize,
+    x: &Matrix,
+    seg: usize,
+    norm: bool,
+    hook: &mut Option<Hook>,
+) -> Matrix {
+    let mut h = attn_forward_seg(store, prefix, heads, x, seg, hook);
+    if norm {
+        rmsnorm_cols(&mut h);
+    }
+    let mut out = mlp_forward(store, prefix, &h, hook);
+    if norm {
+        rmsnorm_cols(&mut out);
+    }
+    out
 }
 
 /// MLP sub-layer: returns X + W₂·gelu(W₁·X).
@@ -146,15 +218,7 @@ pub fn block_forward_norm(
     hook: &mut Option<Hook>,
     norm: bool,
 ) -> Matrix {
-    let mut h = attn_forward(store, prefix, heads, x, hook);
-    if norm {
-        rmsnorm_cols(&mut h);
-    }
-    let mut out = mlp_forward(store, prefix, &h, hook);
-    if norm {
-        rmsnorm_cols(&mut out);
-    }
-    out
+    block_forward_seg(store, prefix, heads, x, x.cols, norm, hook)
 }
 
 #[cfg(test)]
@@ -252,6 +316,34 @@ mod tests {
         // And the FP dispatch was a plain dense matmul.
         assert_eq!(y_dense.cols, 3);
         assert_eq!(yv_dense.len(), 12);
+    }
+
+    #[test]
+    fn batched_block_bit_identical_to_per_segment_forward() {
+        // The serving-batch seam: a block run over two concatenated
+        // requests must reproduce each request's solo forward exactly —
+        // dense and packed — or batching would change served actions.
+        let mut rng = Rng::new(177);
+        let mut s = store_with_block(16, 32, &mut rng);
+        let a = Matrix::gauss(16, 5, 1.0, &mut rng);
+        let b = Matrix::gauss(16, 5, 1.0, &mut rng);
+        let x = Matrix::hcat(&[&a, &b]);
+        for packed in [false, true] {
+            if packed {
+                assert_eq!(s.pack_quantizable(8), 6);
+            }
+            let batched = block_forward_batch(&s, "b", 4, &x, 5, true);
+            let mut none: Option<Hook> = None;
+            let ya = block_forward(&s, "b", 4, &a, &mut none);
+            let mut none2: Option<Hook> = None;
+            let yb = block_forward(&s, "b", 4, &b, &mut none2);
+            for i in 0..16 {
+                for t in 0..5 {
+                    assert_eq!(batched.at(i, t), ya.at(i, t), "seg A ({i},{t}) packed={packed}");
+                    assert_eq!(batched.at(i, 5 + t), yb.at(i, t), "seg B ({i},{t}) packed={packed}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod vla;
 
 pub use config::{HeadKind, VlaConfig};
 pub use params::{ParamStore, WeightRepr};
-pub use vla::{content_codes, instr_index, MiniVla, N_CONTENT_IDS};
+pub use vla::{content_codes, instr_index, MiniVla, ObsInput, N_CONTENT_IDS};

@@ -16,7 +16,9 @@
 
 use crate::methods::traits::Component;
 use crate::model::config::{HeadKind, VlaConfig};
-use crate::model::layers::{block_forward, linear, linear_vec, rmsnorm_cols, Hook};
+use crate::model::layers::{
+    block_forward, block_forward_batch, linear, linear_vec, rmsnorm_cols, Hook,
+};
 use crate::model::params::{binary_factor, channels, grounding_proj, structured_weight, structured_weight_lattice, ParamStore};
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -33,6 +35,17 @@ pub fn content_codes() -> Matrix {
 /// Instruction index from (target content id, goal content id).
 pub fn instr_index(target_id: usize, goal_id: usize) -> usize {
     target_id * N_CONTENT_IDS + goal_id
+}
+
+/// One request's trunk inputs, borrowed — the batch element of
+/// [`MiniVla::features_batch`] (the slice form of [`MiniVla::features`]'s
+/// arguments).
+#[derive(Clone, Copy, Debug)]
+pub struct ObsInput<'a> {
+    /// d_vis_in × n_visual raw visual tokens.
+    pub visual_raw: &'a Matrix,
+    pub instr_id: usize,
+    pub proprio: &'a [f32],
 }
 
 #[derive(Clone, Debug)]
@@ -348,6 +361,94 @@ impl MiniVla {
         feat
     }
 
+    /// Batched trunk forward: run `batch.len()` requests through ONE pass
+    /// of the encoder stack by concatenating their token sequences
+    /// column-wise, so every quantizable weight product becomes a single
+    /// wide GEMM — on packed layers, the row-parallel multi-token packed
+    /// kernel of [`crate::quant::packed::PackedBits::matmul`] sweeping all
+    /// coalesced requests per sign-word fetch. Attention stays
+    /// segment-local (requests never attend to each other).
+    ///
+    /// Parity guarantee: element `r` of the result is bit-identical to
+    /// `self.features(batch[r].visual_raw, batch[r].instr_id,
+    /// batch[r].proprio, &mut None)` — every kernel on this path (dense
+    /// ikj GEMM, packed per-token-group-sum GEMM, column RMS-norm,
+    /// per-segment softmax) computes output columns independently and in
+    /// the same operation order as the single-request path. The batched
+    /// server's per-request answers therefore don't depend on which
+    /// requests happened to be coalesced together.
+    pub fn features_batch(&self, batch: &[ObsInput]) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        for o in batch {
+            assert_eq!(o.visual_raw.rows, cfg.d_vis_in);
+            assert_eq!(o.visual_raw.cols, cfg.n_visual);
+            assert_eq!(o.proprio.len(), cfg.d_proprio);
+            assert!(o.instr_id < cfg.vocab);
+        }
+
+        // Vision encoder over the concatenated visual tokens.
+        let visuals: Vec<&Matrix> = batch.iter().map(|o| o.visual_raw).collect();
+        let x0 = Matrix::hcat(&visuals);
+        let mut xv = linear(&self.store, "vis.embed", &x0);
+        rmsnorm_cols(&mut xv);
+        for b in 0..cfg.vision_blocks {
+            let p = format!("vis.{b}");
+            xv = block_forward_batch(&self.store, &p, cfg.heads, &xv, cfg.n_visual, true);
+        }
+
+        // Projector (fully batched).
+        let mut xp = linear(&self.store, "proj", &xv);
+        rmsnorm_cols(&mut xp);
+
+        // Assemble every request's LM sequence [visual | instruction |
+        // proprio] side by side.
+        let n = cfg.seq_len();
+        let dm = cfg.d_model;
+        let mut seq = Matrix::zeros(dm, batch.len() * n);
+        let instr = self.store.get("lm.embed_instr");
+        for (r, o) in batch.iter().enumerate() {
+            let c0 = r * n;
+            for t in 0..cfg.n_visual {
+                for i in 0..dm {
+                    seq.set(i, c0 + t, xp.at(i, r * cfg.n_visual + t));
+                }
+            }
+            for i in 0..dm {
+                seq.set(i, c0 + cfg.n_visual, instr.at(i, o.instr_id));
+            }
+            let pvec = linear_vec(&self.store, "lm.embed_proprio", o.proprio);
+            for i in 0..dm {
+                seq.set(i, c0 + cfg.n_visual + 1, pvec[i]);
+            }
+        }
+        rmsnorm_cols(&mut seq);
+
+        for b in 0..cfg.lm_blocks {
+            seq = block_forward_batch(&self.store, &format!("lm.{b}"), cfg.heads, &seq, n, true);
+        }
+
+        // Per-request readout, as in `features`.
+        batch
+            .iter()
+            .enumerate()
+            .map(|(r, o)| {
+                let held = o.proprio[3];
+                let mut base = Vec::with_capacity(dm + cfg.d_proprio);
+                for i in 0..dm {
+                    base.push(seq.at(i, r * n + cfg.n_visual));
+                }
+                base.extend_from_slice(o.proprio);
+                let mut feat = Vec::with_capacity(2 * base.len());
+                feat.extend_from_slice(&base);
+                feat.extend(base.iter().map(|&v| held * v));
+                feat
+            })
+            .collect()
+    }
+
     /// Apply the head's fixed tanh expansion: [f | tanh(W_e f)] — the
     /// action head's MLP nonlinearity (ridge fits the layer on top) —
     /// followed by the BC-fit standardization (head.norm).
@@ -405,6 +506,116 @@ impl MiniVla {
                     a = linear_vec(&self.store, &format!("head.diff.{t}"), &zin);
                 }
                 vec![a.into_iter().map(|v| v.clamp(-1.0, 1.0)).collect()]
+            }
+        }
+    }
+
+    /// Batched [`Self::head_features`]: stack the trunk features as
+    /// columns and run the tanh expansion through one GEMM. Returns the
+    /// head-input matrix (head_in_dim × batch).
+    fn head_features_batch(&self, feats: &[Vec<f32>]) -> Matrix {
+        let fd = self.cfg.feat_dim();
+        let hd = self.cfg.head_in_dim();
+        let mut f = Matrix::zeros(fd, feats.len());
+        for (c, v) in feats.iter().enumerate() {
+            assert_eq!(v.len(), fd, "trunk feature dim mismatch");
+            for (i, &x) in v.iter().enumerate() {
+                f.set(i, c, x);
+            }
+        }
+        let h = linear(&self.store, "head.expand", &f);
+        let norm = self.store.get("head.norm");
+        let mut out = Matrix::zeros(hd, feats.len());
+        for c in 0..feats.len() {
+            for i in 0..fd {
+                out.set(i, c, f.at(i, c));
+            }
+            for i in 0..h.rows {
+                out.set(fd + i, c, h.at(i, c).tanh());
+            }
+            for j in 0..hd {
+                let v = out.at(j, c);
+                out.set(j, c, (v - norm.at(0, j)) / norm.at(1, j).max(1e-4));
+            }
+        }
+        out
+    }
+
+    /// Batched [`Self::decode`]: every head matmul runs once over the whole
+    /// batch (packed heads execute the multi-token packed GEMM). `rngs`
+    /// holds one noise stream per request (diffusion head); request `r`
+    /// draws exactly what `decode(&feats[r], &mut rngs[r])` would.
+    ///
+    /// On a store whose head layers are packed, the returned actions are
+    /// bit-identical to per-request [`Self::decode`] calls: the packed
+    /// GEMV and multi-token GEMM share one accumulation order. (Dense f32
+    /// heads differ by float-summation-order noise only — the GEMV kernel
+    /// unrolls four accumulators, the GEMM accumulates in ikj order.)
+    pub fn decode_batch(&self, feats: &[Vec<f32>], rngs: &mut [Rng]) -> Vec<Vec<Vec<f32>>> {
+        assert_eq!(feats.len(), rngs.len(), "one rng stream per request");
+        if feats.is_empty() {
+            return Vec::new();
+        }
+        let cfg = &self.cfg;
+        let hf = self.head_features_batch(feats);
+        let nb = feats.len();
+        match cfg.head {
+            HeadKind::Chunk => {
+                let out = linear(&self.store, "head.main", &hf);
+                (0..nb)
+                    .map(|r| {
+                        (0..cfg.chunk)
+                            .map(|c| {
+                                (0..cfg.act_dim)
+                                    .map(|d| out.at(c * cfg.act_dim + d, r).clamp(-1.0, 1.0))
+                                    .collect()
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            HeadKind::Token => {
+                let pred = linear(&self.store, "head.main", &hf);
+                (0..nb)
+                    .map(|r| {
+                        let mut a = Vec::with_capacity(cfg.act_dim);
+                        for d in 0..cfg.act_dim {
+                            let v = pred.at(d, r).clamp(-1.0, 1.0);
+                            let b = (((v + 1.0) / 2.0 * cfg.bins as f32) as usize).min(cfg.bins - 1);
+                            a.push(-1.0 + 2.0 * (b as f32 + 0.5) / cfg.bins as f32);
+                        }
+                        vec![a]
+                    })
+                    .collect()
+            }
+            HeadKind::Diffusion => {
+                let hd = cfg.head_in_dim();
+                let mut a = Matrix::zeros(cfg.act_dim, nb);
+                for (c, rng) in rngs.iter_mut().enumerate() {
+                    for d in 0..cfg.act_dim {
+                        a.set(d, c, rng.gauss() as f32);
+                    }
+                }
+                // The conditioning rows (head features + bias) are constant
+                // across denoising steps; only the action rows evolve.
+                let mut zin = Matrix::zeros(cfg.act_dim + hd + 1, nb);
+                for c in 0..nb {
+                    for j in 0..hd {
+                        zin.set(cfg.act_dim + j, c, hf.at(j, c));
+                    }
+                    zin.set(cfg.act_dim + hd, c, 1.0);
+                }
+                for t in (0..cfg.diffusion_steps).rev() {
+                    for c in 0..nb {
+                        for d in 0..cfg.act_dim {
+                            zin.set(d, c, a.at(d, c));
+                        }
+                    }
+                    a = linear(&self.store, &format!("head.diff.{t}"), &zin);
+                }
+                (0..nb)
+                    .map(|r| vec![(0..cfg.act_dim).map(|d| a.at(d, r).clamp(-1.0, 1.0)).collect()])
+                    .collect()
             }
         }
     }

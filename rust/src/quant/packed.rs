@@ -421,25 +421,33 @@ impl PackedBits {
         }
         let words_per_row = cols.div_ceil(64);
         let groups_per_row = cols.div_ceil(group_size);
+        // Buffers grow as data actually arrives (no zeroed pre-allocation
+        // sized from the header), so a corrupt/truncated stream fails with
+        // an io::Error after consuming at most what is present — never an
+        // allocation-abort on a header promising terabytes.
+        fn read_u64s<R: std::io::Read>(r: &mut R, n: usize) -> std::io::Result<Vec<u64>> {
+            let mut out = Vec::new();
+            let mut b8 = [0u8; 8];
+            for _ in 0..n {
+                r.read_exact(&mut b8)?;
+                out.push(u64::from_le_bytes(b8));
+            }
+            Ok(out)
+        }
+        fn read_f32s<R: std::io::Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f32>> {
+            let mut out = Vec::new();
+            let mut b4 = [0u8; 4];
+            for _ in 0..n {
+                r.read_exact(&mut b4)?;
+                out.push(f32::from_le_bytes(b4));
+            }
+            Ok(out)
+        }
         let mut planes = Vec::with_capacity(order);
         for _ in 0..order {
-            let mut signs = vec![0u64; rows * words_per_row];
-            let mut b8 = [0u8; 8];
-            for s in signs.iter_mut() {
-                r.read_exact(&mut b8)?;
-                *s = u64::from_le_bytes(b8);
-            }
-            let mut b4 = [0u8; 4];
-            let mut alpha = vec![0f32; rows * groups_per_row];
-            for a in alpha.iter_mut() {
-                r.read_exact(&mut b4)?;
-                *a = f32::from_le_bytes(b4);
-            }
-            let mut mu = vec![0f32; rows * groups_per_row];
-            for m in mu.iter_mut() {
-                r.read_exact(&mut b4)?;
-                *m = f32::from_le_bytes(b4);
-            }
+            let signs = read_u64s(r, rows * words_per_row)?;
+            let alpha = read_f32s(r, rows * groups_per_row)?;
+            let mu = read_f32s(r, rows * groups_per_row)?;
             planes.push(PackedBits {
                 rows,
                 cols,
@@ -608,6 +616,20 @@ mod tests {
         let (d1, d2) = (p.dequantize(), q.dequantize());
         assert_eq!(d1.data, d2.data, "round-trip must be bit-exact");
         assert_eq!(p.storage_bytes(), q.storage_bytes());
+    }
+
+    #[test]
+    fn read_from_fails_cleanly_on_truncated_oversized_header() {
+        // rows and cols each pass the per-dimension cap and multiply to a
+        // terabyte-scale promise; with no payload behind the header the
+        // read must fail with an io::Error after consuming what exists —
+        // not abort on a header-sized allocation.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(1u32 << 24).to_le_bytes()); // rows
+        buf.extend_from_slice(&(1u32 << 24).to_le_bytes()); // cols
+        buf.extend_from_slice(&1u32.to_le_bytes()); // group_size = 1 (worst metadata case)
+        buf.extend_from_slice(&64u32.to_le_bytes()); // order
+        assert!(PackedBits::read_from(&mut buf.as_slice()).is_err());
     }
 
     #[test]

@@ -166,6 +166,39 @@ impl Matrix {
         }
     }
 
+    /// Vertical slice: copy of columns [c0, c1).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation [a₀ | a₁ | …]; all parts must share `rows`.
+    pub fn hcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty(), "hcat of zero matrices");
+        let rows = parts[0].rows;
+        let cols = parts
+            .iter()
+            .map(|m| {
+                assert_eq!(m.rows, rows, "hcat row mismatch");
+                m.cols
+            })
+            .sum();
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let dst = out.row_mut(i);
+            let mut off = 0;
+            for m in parts {
+                dst[off..off + m.cols].copy_from_slice(m.row(i));
+                off += m.cols;
+            }
+        }
+        out
+    }
+
     /// Horizontal slice rows [r0, r1).
     pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
         assert!(r0 <= r1 && r1 <= self.rows);

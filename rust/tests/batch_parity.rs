@@ -1,0 +1,170 @@
+//! Batched-vs-sequential forward parity: `features_batch`/`decode_batch`
+//! must reproduce N independent single-request forwards — bit-identically
+//! on a packed model, where every kernel on both paths (packed GEMV and
+//! multi-token packed GEMM) shares one accumulation order. This is the
+//! property that lets the serving router coalesce requests into one
+//! batched packed GEMM without the answer depending on which requests
+//! happened to ride in the same batch.
+
+use hbvla::model::{HeadKind, MiniVla, ObsInput, VlaConfig};
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Build (packed model, dense twin) with every quantizable layer packed at
+/// `group_size`; heads get non-zero weights so decode is exercised.
+fn twins(cfg: VlaConfig, group_size: usize) -> (MiniVla, MiniVla) {
+    let mut packed = MiniVla::new(cfg);
+    let mut rng = Rng::new(0x7A17);
+    let head_names: Vec<String> = if packed.store.contains("head.main") {
+        vec!["head.main".to_string()]
+    } else {
+        (0..packed.cfg.diffusion_steps).map(|t| format!("head.diff.{t}")).collect()
+    };
+    for name in &head_names {
+        let (hr, hc) = packed.store.dims(name);
+        packed.store.set(name, Matrix::gauss(hr, hc, 0.05, &mut rng));
+    }
+    let n = packed.store.pack_quantizable(group_size);
+    assert!(n > 0, "nothing packed");
+    let mut dense = packed.clone();
+    assert_eq!(dense.store.dequantize_all(), n);
+    (packed, dense)
+}
+
+/// N random observations with varying instruction ids.
+fn rand_batch(cfg: &VlaConfig, n: usize, seed: u64) -> Vec<(Matrix, usize, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|k| {
+            let v = Matrix::gauss(cfg.d_vis_in, cfg.n_visual, 1.0, &mut rng);
+            let p: Vec<f32> = (0..cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+            (v, k % cfg.vocab, p)
+        })
+        .collect()
+}
+
+fn as_inputs(owned: &[(Matrix, usize, Vec<f32>)]) -> Vec<ObsInput<'_>> {
+    owned
+        .iter()
+        .map(|(v, i, p)| ObsInput { visual_raw: v, instr_id: *i, proprio: p })
+        .collect()
+}
+
+#[test]
+fn features_batch_bit_identical_every_head() {
+    // On a packed model AND on its dense twin: the whole trunk routes
+    // through the linear() GEMM dispatch on both paths, so the batched
+    // trunk is exactly the single-request trunk column-by-column.
+    for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (packed, dense) = twins(cfg.clone(), 64);
+        let owned = rand_batch(&cfg, 5, 401);
+        let inputs = as_inputs(&owned);
+        for model in [&packed, &dense] {
+            let singles: Vec<Vec<f32>> = owned
+                .iter()
+                .map(|(v, i, p)| model.features(v, *i, p, &mut None))
+                .collect();
+            let batched = model.features_batch(&inputs);
+            assert_eq!(batched, singles, "{head:?} batched trunk != sequential trunk");
+        }
+    }
+}
+
+#[test]
+fn decode_batch_bit_identical_on_packed_model() {
+    // The head layers are packed too, so the batched decode (multi-token
+    // packed GEMM) is bit-identical to per-request packed GEMV decodes —
+    // including the diffusion head, given per-request noise streams.
+    for head in [HeadKind::Chunk, HeadKind::Token, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (packed, _) = twins(cfg.clone(), 64);
+        let owned = rand_batch(&cfg, 5, 402);
+        let feats: Vec<Vec<f32>> = owned
+            .iter()
+            .map(|(v, i, p)| packed.features(v, *i, p, &mut None))
+            .collect();
+        let singles: Vec<Vec<Vec<f32>>> = feats
+            .iter()
+            .enumerate()
+            .map(|(r, f)| packed.decode(f, &mut Rng::new(900 + r as u64)))
+            .collect();
+        let mut rngs: Vec<Rng> = (0..feats.len()).map(|r| Rng::new(900 + r as u64)).collect();
+        let batched = packed.decode_batch(&feats, &mut rngs);
+        assert_eq!(batched, singles, "{head:?} batched decode != sequential decode");
+    }
+}
+
+#[test]
+fn batch_parity_with_word_tail_widths() {
+    // d_model = 70 ⇒ layer widths of 70 = 64 + 6: one full sign word plus
+    // a 6-bit tail in every packed row the batch sweeps, with group sizes
+    // that do not divide the width.
+    let mut cfg = VlaConfig::tiny(HeadKind::Chunk);
+    cfg.d_model = 70;
+    cfg.heads = 2;
+    for gs in [64usize, 32] {
+        let (packed, dense) = twins(cfg.clone(), gs);
+        let owned = rand_batch(&cfg, 5, 403);
+        let inputs = as_inputs(&owned);
+        let singles: Vec<Vec<f32>> = owned
+            .iter()
+            .map(|(v, i, p)| packed.features(v, *i, p, &mut None))
+            .collect();
+        let batched = packed.features_batch(&inputs);
+        assert_eq!(batched, singles, "gs={gs} tail-width batched trunk diverged");
+        // Batched decode stays bit-true as well.
+        let mut rngs: Vec<Rng> = (0..owned.len()).map(|r| Rng::new(r as u64)).collect();
+        let acts_b = packed.decode_batch(&batched, &mut rngs);
+        for (r, f) in singles.iter().enumerate() {
+            let a = packed.decode(f, &mut Rng::new(r as u64));
+            assert_eq!(acts_b[r], a, "gs={gs} request {r} decode diverged");
+        }
+        // And the batched packed path still tracks the dense twin.
+        let batched_dense = dense.features_batch(&inputs);
+        for (fp, fd) in batched.iter().zip(&batched_dense) {
+            for (a, b) in fp.iter().zip(fd) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "packed {a} vs dense twin {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_head_decode_batch_close_to_sequential() {
+    // A dense f32 head decodes through a different float-summation order
+    // (GEMV's unrolled accumulators vs the GEMM's ikj loop): equal to
+    // rounding noise, not bit-equal. Pin the tolerance contract.
+    let cfg = VlaConfig::tiny(HeadKind::Chunk);
+    let mut model = MiniVla::new(cfg.clone());
+    let mut rng = Rng::new(0xD0);
+    let (hr, hc) = model.store.dims("head.main");
+    model.store.set("head.main", Matrix::gauss(hr, hc, 0.05, &mut rng));
+    let owned = rand_batch(&cfg, 4, 404);
+    let feats: Vec<Vec<f32>> =
+        owned.iter().map(|(v, i, p)| model.features(v, *i, p, &mut None)).collect();
+    let mut rngs: Vec<Rng> = (0..feats.len()).map(|r| Rng::new(r as u64)).collect();
+    let batched = model.decode_batch(&feats, &mut rngs);
+    for (r, f) in feats.iter().enumerate() {
+        let single = model.decode(f, &mut Rng::new(r as u64));
+        assert_eq!(batched[r].len(), single.len());
+        for (ca, cb) in batched[r].iter().zip(&single) {
+            for (a, b) in ca.iter().zip(cb) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "request {r}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_singleton_batches() {
+    let cfg = VlaConfig::tiny(HeadKind::Chunk);
+    let (packed, _) = twins(cfg.clone(), 64);
+    assert!(packed.features_batch(&[]).is_empty());
+    assert!(packed.decode_batch(&[], &mut []).is_empty());
+    // A batch of one is exactly the single-request forward.
+    let owned = rand_batch(&cfg, 1, 405);
+    let inputs = as_inputs(&owned);
+    let single = packed.features(&owned[0].0, owned[0].1, &owned[0].2, &mut None);
+    assert_eq!(packed.features_batch(&inputs), vec![single]);
+}
