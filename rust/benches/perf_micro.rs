@@ -46,6 +46,23 @@ fn main() {
         t_new * 1e3,
         t_ref / t_new
     );
+    // W1A8: integer inner loops on the same packed weights. The i8 GEMV
+    // mirrors the f32 loop's amortization (activation prepared once); the
+    // comparison line is the acceptance gate "i8 no slower than f32".
+    let act = packed.quantize_act(&x);
+    let t_i8 = bench("packed W1A8 GEMV 512x2048", 5, 200, || {
+        packed.matvec_i8(&act, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] packed GEMV activation precision: f32 {:.3}ms, i8 {:.3}ms — W1A8 ×{:.2}",
+        t_new * 1e3,
+        t_i8 * 1e3,
+        t_new / t_i8
+    );
+    bench("packed W1A8 quantize_act 2048", 5, 2000, || {
+        std::hint::black_box(packed.quantize_act(&x));
+    });
     // Packed multi-token GEMM (rows over the thread pool).
     let xb = Matrix::gauss(2048, 16, 1.0, &mut rng);
     bench("dense GEMM 512x2048x16 mt", 2, 30, || {
@@ -53,6 +70,9 @@ fn main() {
     });
     bench("packed 1-bit GEMM 512x2048x16 mt", 2, 30, || {
         std::hint::black_box(packed.matmul_mt(&xb, 8));
+    });
+    bench("packed W1A8 GEMM 512x2048x16 mt", 2, 30, || {
+        std::hint::black_box(packed.matmul_i8_mt(&xb, 8));
     });
     println!("packed memory ratio: ×{:.1}", packed.compression_ratio());
     // Full §Perf driver.

@@ -11,7 +11,7 @@ pub mod server;
 pub use metrics::{BatchStats, LatencyStats, VariantStats};
 pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
-pub use scheduler::{quantize_into_registry, quantize_model, QuantJobReport};
+pub use scheduler::{quantize_into_registry, quantize_model, register_a8_variant, QuantJobReport};
 pub use server::{
     PolicyServer, ResponseHandle, ServeConfig, ServeError, ServeRequest, ServeResponse,
     VariantSelector,

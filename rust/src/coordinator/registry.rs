@@ -28,6 +28,9 @@ pub enum RegistryError {
     /// The variant's serving interface (observation dims / action shape)
     /// differs from the variants already registered.
     IncompatibleConfig { variant: String },
+    /// A derived registration (e.g. an `-a8` activation-precision twin)
+    /// named a base variant that is not in the registry.
+    UnknownVariant { variant: String },
 }
 
 impl std::fmt::Display for RegistryError {
@@ -35,6 +38,9 @@ impl std::fmt::Display for RegistryError {
         match self {
             RegistryError::IncompatibleConfig { variant } => {
                 write!(f, "variant '{variant}' has an incompatible serving interface")
+            }
+            RegistryError::UnknownVariant { variant } => {
+                write!(f, "variant '{variant}' is not registered")
             }
         }
     }

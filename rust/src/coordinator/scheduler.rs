@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use crate::coordinator::registry::{ModelRegistry, RegistryError};
 use crate::methods::traits::{Binarizer, CalibData, Component};
-use crate::model::MiniVla;
+use crate::model::{ActPrecision, MiniVla};
 use crate::quant::group::QuantStats;
 use crate::util::threadpool::parallel_map;
 
@@ -132,6 +132,28 @@ pub fn quantize_into_registry(
     Ok(report)
 }
 
+/// Register the W1A8 twin of an already-registered packed variant under
+/// `"{base_variant}-a8"`: same weights with the activation precision
+/// switched to [`ActPrecision::Int8`], so the serving router's batched
+/// forward runs the integer packed kernels for requests naming the twin.
+/// The twin is a store *copy* (no repack — and packed layers are ~32×
+/// smaller than dense, so the duplicate is small next to one dense
+/// checkpoint; sharing the store behind one `Arc` with per-entry
+/// precision is a noted follow-on if twin counts grow). Returns the
+/// twin's name.
+pub fn register_a8_variant(
+    registry: &ModelRegistry,
+    base_variant: &str,
+) -> Result<String, RegistryError> {
+    let base = registry
+        .get(base_variant)
+        .ok_or_else(|| RegistryError::UnknownVariant { variant: base_variant.to_string() })?;
+    let name = format!("{base_variant}-a8");
+    let twin = (*base).clone().with_act_precision(ActPrecision::Int8);
+    registry.register(&name, Arc::new(twin))?;
+    Ok(name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +228,34 @@ mod tests {
             rep.mean_deploy_rel_err,
             rep.mean_rel_err
         );
+    }
+
+    #[test]
+    fn a8_twin_registers_with_int8_precision() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let registry = ModelRegistry::new();
+        let calib = HashMap::new();
+        quantize_into_registry(
+            &registry,
+            "rtn-packed",
+            &model,
+            &calib,
+            &Rtn::new(),
+            &[Component::Vision, Component::Language],
+            2,
+        )
+        .unwrap();
+        let name = register_a8_variant(&registry, "rtn-packed").unwrap();
+        assert_eq!(name, "rtn-packed-a8");
+        let twin = registry.get("rtn-packed-a8").unwrap();
+        assert_eq!(twin.store.act_precision(), ActPrecision::Int8);
+        assert_eq!(twin.cfg.act_precision, ActPrecision::Int8);
+        // The base variant keeps its f32 activations.
+        let base = registry.get("rtn-packed").unwrap();
+        assert_eq!(base.store.act_precision(), ActPrecision::F32);
+        // Unknown base is a typed error, not a panic.
+        let err = register_a8_variant(&registry, "missing").unwrap_err();
+        assert_eq!(err, RegistryError::UnknownVariant { variant: "missing".to_string() });
     }
 
     #[test]

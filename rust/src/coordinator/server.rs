@@ -8,7 +8,12 @@
 //! ([`crate::model::MiniVla::features_batch`] / `decode_batch`) — so
 //! PTQ-committed variants run the row-parallel multi-token packed GEMM of
 //! [`crate::quant::packed::PackedBits`] across the whole coalesced group,
-//! not a per-request loop. This mirrors the dynamic-batching router of
+//! not a per-request loop. Activation precision rides the variant: an
+//! `-a8` twin ([`crate::coordinator::scheduler::register_a8_variant`])
+//! carries [`crate::model::ActPrecision::Int8`] in its store, so its
+//! group's batched forward runs the W1A8 integer kernels while `-packed`
+//! requests in the same batch stay W1A32 — per-request choice, one
+//! endpoint. This mirrors the dynamic-batching router of
 //! LLM serving systems (vllm-project/router), specialized for
 //! action-policy serving where each request is one policy step with a
 //! tight latency budget.

@@ -1,7 +1,9 @@
 //! §Perf drivers: quantization throughput, packed-GEMV/GEMM vs dense,
 //! rollout throughput, serving latency, batched-vs-sequential serving
-//! forwards, and the end-to-end dense-vs-packed forward comparison
-//! (tokens/s + resident weight bytes) — the measurements behind
+//! forwards, the end-to-end dense-vs-packed forward comparison
+//! (tokens/s + resident weight bytes), and the W1A32-vs-W1A8
+//! activation-precision comparison (f32 vs integer packed kernels,
+//! GEMV/GEMM GFLOPS + end-to-end tokens/s) — the measurements behind
 //! EXPERIMENTS.md §Perf.
 
 use std::sync::Arc;
@@ -33,11 +35,17 @@ pub struct PerfReport {
     pub dense_gemv_gflops: f64,
     pub packed_gemm_gflops: f64,
     pub dense_gemm_gflops: f64,
+    /// W1A8 integer kernels on the same packed weights (per-token i8
+    /// activations, i32 group accumulation).
+    pub packed_gemv_i8_gflops: f64,
+    pub packed_gemm_i8_gflops: f64,
     pub packed_mem_ratio: f64,
     /// End-to-end policy forward on the dense-twin model.
     pub e2e_dense_tok_per_sec: f64,
     /// End-to-end policy forward with every quantizable layer packed.
     pub e2e_packed_tok_per_sec: f64,
+    /// End-to-end packed forward with Int8 activations (W1A8).
+    pub e2e_packed_a8_tok_per_sec: f64,
     /// Resident weight bytes of the dense-twin / packed stores.
     pub e2e_dense_weight_bytes: usize,
     pub e2e_packed_weight_bytes: usize,
@@ -67,6 +75,7 @@ impl PerfReport {
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
              {}\n\
+             {}\n\
              {}",
             self.quant_layers_per_sec,
             self.quant_weights_per_sec / 1e6,
@@ -80,7 +89,27 @@ impl PerfReport {
             self.packed_gemm_gflops,
             self.dense_gemm_gflops,
             self.e2e_table(),
+            self.act_table(),
             self.batched_serve_table()
+        )
+    }
+
+    /// The W1A32-vs-W1A8 comparison: f32 vs integer packed kernels on the
+    /// same packed weights (effective GFLOPS counted at the dense FLOP
+    /// equivalent), plus the end-to-end packed forward at each activation
+    /// precision.
+    pub fn act_table(&self) -> String {
+        format!(
+            "activation precision on packed weights (W1A32 f32 kernels vs W1A8 i8 kernels):\n\
+             \x20 path    GEMV GFLOP/s   GEMM GFLOP/s   e2e tokens/s\n\
+             \x20 W1A32   {:>12.2}   {:>12.2}   {:>12.0}\n\
+             \x20 W1A8    {:>12.2}   {:>12.2}   {:>12.0}\n",
+            self.packed_gemv_gflops,
+            self.packed_gemm_gflops,
+            self.e2e_packed_tok_per_sec,
+            self.packed_gemv_i8_gflops,
+            self.packed_gemm_i8_gflops,
+            self.e2e_packed_a8_tok_per_sec
         )
     }
 
@@ -205,6 +234,22 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let dense_gemm_secs = t6.elapsed().as_secs_f64();
     let gemm_flops = 2.0 * rows as f64 * cols as f64 * batch as f64 * gemm_iters as f64;
 
+    // --- W1A8 integer kernels on the same packed weights ---
+    // The f32 loop above amortizes its group sums outside the timing loop;
+    // the i8 loop mirrors that with the quantized token prepared once (one
+    // activation pass either way — the serving path pays it per token).
+    let act = packed.quantize_act(&x);
+    let t6b = Instant::now();
+    for _ in 0..iters {
+        packed.matvec_i8(&act, &mut y);
+    }
+    let packed_i8_secs = t6b.elapsed().as_secs_f64();
+    let t6c = Instant::now();
+    for _ in 0..gemm_iters {
+        std::hint::black_box(packed.matmul_i8_mt(&xb, threads));
+    }
+    let packed_gemm_i8_secs = t6c.elapsed().as_secs_f64();
+
     // --- end-to-end: order-1 packed model vs its dense twin ---
     // This measures the single-bitplane (RTN-style) commit; transform
     // methods deploy pack_deploy chains whose GEMM cost scales linearly
@@ -227,6 +272,14 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         std::hint::black_box(f);
     }
     let e2e_packed_secs = t8.elapsed().as_secs_f64();
+    // Same packed commit, Int8 activations: the W1A8 serving twin.
+    let a8_model = packed_model.clone().with_act_precision(crate::model::ActPrecision::Int8);
+    let t8b = Instant::now();
+    for _ in 0..fw_iters {
+        let f = a8_model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        std::hint::black_box(f);
+    }
+    let e2e_packed_a8_secs = t8b.elapsed().as_secs_f64();
 
     // --- batched vs sequential serving forward, dense vs packed ---
     let batched_serve = [1usize, 4, 8, 16]
@@ -245,9 +298,12 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         dense_gemv_gflops: flops / dense_secs / 1e9,
         packed_gemm_gflops: gemm_flops / packed_gemm_secs / 1e9,
         dense_gemm_gflops: gemm_flops / dense_gemm_secs / 1e9,
+        packed_gemv_i8_gflops: flops / packed_i8_secs / 1e9,
+        packed_gemm_i8_gflops: gemm_flops / packed_gemm_i8_secs / 1e9,
         packed_mem_ratio: packed.compression_ratio(),
         e2e_dense_tok_per_sec: toks / e2e_dense_secs,
         e2e_packed_tok_per_sec: toks / e2e_packed_secs,
+        e2e_packed_a8_tok_per_sec: toks / e2e_packed_a8_secs,
         e2e_dense_weight_bytes: dense_model.store.resident_weight_bytes(),
         e2e_packed_weight_bytes: packed_model.store.resident_weight_bytes(),
         batched_serve,

@@ -14,10 +14,13 @@
 //! (default 256), `--seed S`, `--threads T`, `--md` (markdown tables),
 //! `--smoke` (tiny budget for CI).
 //!
-//! `serve` flags: `--variant <name>` (dense | rtn-packed | hbvla-packed),
-//! `--workers N`, `--max-batch N`, `--max-wait-us U`, `--requests N` —
-//! the demo registers all three variants (quantize → register → serve)
-//! and routes every request to the chosen one.
+//! `serve` flags: `--variant <name>` (dense | rtn-packed | hbvla-packed |
+//! rtn-packed-a8 | hbvla-packed-a8), `--act-precision f32|int8` (maps a
+//! packed variant to its W1A8 twin), `--workers N`, `--max-batch N`,
+//! `--max-wait-us U`, `--requests N` — the demo registers the dense
+//! checkpoint, both packed commits, and their INT8-activation twins
+//! (quantize → register → serve) and routes every request to the chosen
+//! one.
 
 use hbvla::eval::tables::EvalBudget;
 use hbvla::report::Table;
@@ -127,6 +130,10 @@ fn main() {
                     rep.realized_compression(),
                     rep.mean_deploy_rel_err
                 );
+                // W1A8 twin: same packed weights, Int8 activations.
+                let a8 = hbvla::coordinator::register_a8_variant(&registry, variant)
+                    .expect("register a8 twin");
+                println!("registered {a8:<16} (W1A8: int8 activations on the same packed weights)");
             }
             let cfg = ServeConfig {
                 workers: args.usize_or("workers", 2),
@@ -166,6 +173,45 @@ fn main() {
                     }
                 },
                 (None, None) => "hbvla-packed".to_string(),
+            };
+            // `--act-precision int8` routes to the chosen variant's W1A8
+            // twin (registering it on demand for method-registered
+            // variants); `f32` (the default) leaves the choice as-is.
+            let variant = match args.get("act-precision") {
+                None => variant,
+                Some(spec) => match hbvla::model::ActPrecision::parse(spec) {
+                    Some(hbvla::model::ActPrecision::Int8) if !variant.ends_with("-a8") => {
+                        // Register the twin on demand for method-registered
+                        // variants that don't have one yet.
+                        if registry.get(&format!("{variant}-a8")).is_none()
+                            && registry.get(&variant).is_some()
+                        {
+                            hbvla::coordinator::register_a8_variant(&registry, &variant)
+                                .expect("register a8 twin");
+                        }
+                        // Int8 only changes packed-layer execution: say so
+                        // when the twin would execute identically to f32.
+                        if let Some(m) = registry.get(&variant) {
+                            if m.store.packed_layer_count() == 0 {
+                                eprintln!(
+                                    "note: variant '{variant}' has no packed layers — \
+                                     '{variant}-a8' executes identical f32 kernels"
+                                );
+                            }
+                        }
+                        format!("{variant}-a8")
+                    }
+                    // `f32` on an `-a8` twin means the base variant: the
+                    // flag always wins over the variant spelling.
+                    Some(hbvla::model::ActPrecision::F32) if variant.ends_with("-a8") => {
+                        variant.strip_suffix("-a8").unwrap().to_string()
+                    }
+                    Some(_) => variant,
+                    None => {
+                        eprintln!("--act-precision expects f32 or int8, got '{spec}'");
+                        std::process::exit(2);
+                    }
+                },
             };
             if registry.get(&variant).is_none() {
                 eprintln!(
@@ -230,7 +276,8 @@ fn main() {
             eprintln!(
                 "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
                  [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
-                 serve flags: [--variant dense|rtn-packed|hbvla-packed] [--workers N] \
+                 serve flags: [--variant dense|rtn-packed|hbvla-packed|rtn-packed-a8|hbvla-packed-a8] \
+                 [--act-precision f32|int8] [--workers N] \
                  [--max-batch N] [--max-wait-us U] [--requests N]"
             );
             std::process::exit(2);

@@ -8,6 +8,8 @@
 //! the *structure* (layer types, modality interleaving, salient activation
 //! columns) is what the quantizers see, and is faithful.
 
+use crate::quant::packed::ActPrecision;
+
 /// Which action decoder the policy uses — the axis distinguishing
 /// OpenVLA / OpenVLA-OFT / CogACT in the paper's tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +70,15 @@ pub struct VlaConfig {
     pub head: HeadKind,
     /// Weight-structure seed.
     pub seed: u64,
+    /// Activation precision the packed layers execute at (W1A32 vs W1A8).
+    /// A runtime policy, not an interface property: variants differing
+    /// only here stay [`Self::serve_compatible`] — that is what lets one
+    /// endpoint A/B `rtn-packed` against `rtn-packed-a8` per request.
+    /// The kernel dispatch reads the `ParamStore`'s copy of this policy,
+    /// seeded from here at construction; change both through
+    /// [`crate::model::MiniVla::with_act_precision`], never this field
+    /// alone on a built model.
+    pub act_precision: ActPrecision,
 }
 
 impl VlaConfig {
@@ -91,6 +102,7 @@ impl VlaConfig {
             head_hidden: 96,
             head: HeadKind::Chunk,
             seed: 0xBEEF,
+            act_precision: ActPrecision::F32,
         }
         .with_head(head)
     }
@@ -116,6 +128,7 @@ impl VlaConfig {
             head_hidden: 48,
             head: HeadKind::Chunk,
             seed: 7,
+            act_precision: ActPrecision::F32,
         }
         .with_head(head)
     }
@@ -127,6 +140,11 @@ impl VlaConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_act_precision(mut self, p: ActPrecision) -> Self {
+        self.act_precision = p;
         self
     }
 
@@ -196,5 +214,16 @@ mod tests {
         let b = VlaConfig::base(HeadKind::Token);
         assert!(t.d_model < b.d_model);
         assert_eq!(t.head, HeadKind::Token);
+    }
+
+    #[test]
+    fn act_precision_does_not_change_serving_interface() {
+        let a = VlaConfig::tiny(HeadKind::Chunk);
+        let b = a.clone().with_act_precision(ActPrecision::Int8);
+        assert_eq!(a.act_precision, ActPrecision::F32);
+        assert_eq!(b.act_precision, ActPrecision::Int8);
+        // W1A32 and W1A8 twins can serve behind one endpoint.
+        assert!(a.serve_compatible(&b));
+        assert!(b.serve_compatible(&a));
     }
 }

@@ -16,6 +16,7 @@
 //! verified there); a parity test pins the two implementations together.
 
 use crate::model::params::{ParamStore, WeightRepr};
+use crate::quant::packed::ActPrecision;
 use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::{gelu, matmul, matvec, softmax_rows};
 
@@ -23,20 +24,32 @@ use crate::tensor::ops::{gelu, matmul, matvec, softmax_rows};
 /// each quantizable matmul. Inputs are d_in × n_tokens.
 pub type Hook<'a> = &'a mut dyn FnMut(&str, &Matrix);
 
-/// Y = W · X through the layer's stored representation: dense GEMM or
-/// packed 1-bit GEMM — the quantizable-matmul dispatch point.
+/// Y = W · X through the layer's stored representation: dense GEMM for FP
+/// layers; for packed 1-bit layers the store's
+/// [`ActPrecision`] picks the kernel — f32 packed GEMM (W1A32)
+/// or the integer-inner-loop i8 GEMM (W1A8). This is the single
+/// quantizable-matmul dispatch point, so every execution path (serving,
+/// rollouts, eval drivers) inherits the activation precision with no
+/// call-site changes.
 pub fn linear(store: &ParamStore, name: &str, x: &Matrix) -> Matrix {
     match store.repr(name) {
         WeightRepr::Dense(w) => matmul(w, x),
-        WeightRepr::Packed(p) => p.matmul(x),
+        WeightRepr::Packed(p) => match store.act_precision() {
+            ActPrecision::F32 => p.matmul(x),
+            ActPrecision::Int8 => p.matmul_i8(x),
+        },
     }
 }
 
-/// y = W · x (single-token GEMV form of [`linear`]).
+/// y = W · x (single-token GEMV form of [`linear`], same per-token kernel
+/// under both activation precisions).
 pub fn linear_vec(store: &ParamStore, name: &str, x: &[f32]) -> Vec<f32> {
     match store.repr(name) {
         WeightRepr::Dense(w) => matvec(w, x),
-        WeightRepr::Packed(p) => p.matvec_owned(x),
+        WeightRepr::Packed(p) => match store.act_precision() {
+            ActPrecision::F32 => p.matvec_owned(x),
+            ActPrecision::Int8 => p.matvec_i8_owned(x),
+        },
     }
 }
 
@@ -316,6 +329,37 @@ mod tests {
         // And the FP dispatch was a plain dense matmul.
         assert_eq!(y_dense.cols, 3);
         assert_eq!(yv_dense.len(), 12);
+    }
+
+    #[test]
+    fn int8_dispatch_agrees_between_gemv_and_gemm_and_tracks_f32() {
+        let mut rng = Rng::new(178);
+        let mut s = ParamStore::new();
+        s.insert("w", Component::Language, true, Matrix::gauss(12, 70, 1.0, &mut rng));
+        s.pack_quantizable(64);
+        let x = Matrix::gauss(70, 3, 1.0, &mut rng);
+        let xv: Vec<f32> = x.col(0);
+        let y32 = linear(&s, "w", &x);
+        s.set_act_precision(crate::quant::packed::ActPrecision::Int8);
+        let y8 = linear(&s, "w", &x);
+        let yv8 = linear_vec(&s, "w", &xv);
+        // GEMV and GEMM share the per-token integer kernel: bit-equal.
+        for (a, b) in yv8.iter().zip(y8.col(0)) {
+            assert_eq!(*a, b);
+        }
+        // And the W1A8 output stays within the analytic activation
+        // round-off of W1A32: per (row, token), half the token scale
+        // pushed through the dequantized row.
+        let deq = s.dense_view("w").into_owned();
+        for t in 0..3 {
+            let scale = crate::tensor::ops::act_scale_i8(&x.col(t));
+            for r in 0..12 {
+                let abs_row: f32 = deq.row(r).iter().map(|v| v.abs()).sum();
+                let bound = 0.5 * scale * abs_row * 1.001 + 1e-3;
+                let (a, b) = (y8.at(r, t), y32.at(r, t));
+                assert!((a - b).abs() <= bound, "({r},{t}): {a} vs {b} (bound {bound})");
+            }
+        }
     }
 
     #[test]

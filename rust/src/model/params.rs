@@ -31,7 +31,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 
 use crate::methods::traits::Component;
-use crate::quant::packed::PackedBits;
+use crate::quant::packed::{ActPrecision, PackedBits};
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -113,6 +113,12 @@ pub struct Param {
 pub struct ParamStore {
     params: Vec<Param>,
     index: HashMap<String, usize>,
+    /// Activation precision the packed layers execute at
+    /// ([`crate::quant::packed::ActPrecision`]) — a store-level runtime
+    /// policy, so the `model::layers::linear`/`linear_vec` dispatch picks
+    /// it up with no call-site changes. Not serialized: checkpoints carry
+    /// weights, the serving/eval drivers choose the execution precision.
+    act_precision: ActPrecision,
 }
 
 impl ParamStore {
@@ -200,6 +206,19 @@ impl ParamStore {
 
     pub fn contains(&self, name: &str) -> bool {
         self.index.contains_key(name)
+    }
+
+    /// Activation precision the packed-layer dispatch executes at.
+    pub fn act_precision(&self) -> ActPrecision {
+        self.act_precision
+    }
+
+    /// Set the activation precision for every packed layer in this store
+    /// (dense layers are unaffected). Takes effect on the next forward —
+    /// no repack, the sign planes and (α, μ) scales are shared by both
+    /// kernels.
+    pub fn set_act_precision(&mut self, p: ActPrecision) {
+        self.act_precision = p;
     }
 
     pub fn params(&self) -> &[Param] {
@@ -521,6 +540,25 @@ mod tests {
         s.insert("p.w", Component::Language, true, Matrix::gauss(4, 16, 1.0, &mut rng));
         s.pack_quantizable(16);
         let _ = s.get("p.w");
+    }
+
+    #[test]
+    fn act_precision_is_runtime_policy_not_weights() {
+        let mut rng = Rng::new(169);
+        let mut s = ParamStore::new();
+        s.insert("p.w", Component::Language, true, Matrix::gauss(4, 64, 1.0, &mut rng));
+        assert_eq!(s.act_precision(), ActPrecision::F32);
+        s.pack_quantizable(64);
+        s.set_act_precision(ActPrecision::Int8);
+        assert_eq!(s.act_precision(), ActPrecision::Int8);
+        // Serialization carries weights only: a reloaded store starts at
+        // the F32 default, packed layers bit-exact.
+        let path = std::env::temp_dir().join("hbvla_test_act_precision.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.act_precision(), ActPrecision::F32);
+        assert_eq!(loaded.dense_view("p.w").data, s.dense_view("p.w").data);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

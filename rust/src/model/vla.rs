@@ -283,7 +283,20 @@ impl MiniVla {
             }
         }
 
+        store.set_act_precision(cfg.act_precision);
         MiniVla { cfg, store }
+    }
+
+    /// Switch the activation precision the packed layers execute at (both
+    /// the config record and the store policy the dispatch reads). No
+    /// repack: the W1A32 and W1A8 kernels read the same sign planes and
+    /// (α, μ) scales — only the policy field changes. (Cloning a model to
+    /// build an `-a8` twin still copies its store; on a packed commit
+    /// that copy is ~32× smaller than the dense checkpoint.)
+    pub fn with_act_precision(mut self, p: crate::quant::packed::ActPrecision) -> Self {
+        self.cfg.act_precision = p;
+        self.store.set_act_precision(p);
+        self
     }
 
     /// Run the trunk: visual raw tokens (d_vis_in × n_visual), instruction

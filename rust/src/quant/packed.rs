@@ -29,6 +29,54 @@ pub const DEPLOY_GROUP_SIZE: usize = 64;
 pub const DEPLOY_MAX_ORDER: usize = 4;
 pub const DEPLOY_REL_TOL: f64 = 5e-3;
 
+/// Activation precision the packed kernels execute at — the W1A8 policy
+/// knob threaded through [`crate::model::params::ParamStore`] and
+/// [`crate::model::VlaConfig`] so serving, rollouts and every eval driver
+/// pick it up through the `model::layers::linear`/`linear_vec` dispatch
+/// with no call-site changes: `F32` streams full-precision activations
+/// (W1A32), `Int8` quantizes each token to i8 with a per-token symmetric
+/// scale and runs the integer inner loops ([`PackedBits::matvec_i8`] /
+/// [`PackedBits::matmul_i8`]). Dense (FP) layers ignore it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ActPrecision {
+    /// Full-precision f32 activations (W1A32).
+    #[default]
+    F32,
+    /// Per-token symmetric INT8 activations (W1A8).
+    Int8,
+}
+
+impl ActPrecision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ActPrecision::F32 => "f32",
+            ActPrecision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI spelling (`f32` | `int8`, with common aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "a32" => Some(ActPrecision::F32),
+            "int8" | "i8" | "a8" => Some(ActPrecision::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// One token's INT8-quantized activations, produced by
+/// [`PackedBits::quantize_act`]: q (i8), the symmetric per-token scale
+/// s_tok = max|x|/127, and the per-group i32 sums of q (the μ-term of the
+/// integer kernel) — built in the same sweep that quantizes, so the W1A8
+/// path pays one activation pass exactly like the f32 path's
+/// [`PackedBits::group_sums`].
+#[derive(Clone, Debug)]
+pub struct ActI8 {
+    pub q: Vec<i8>,
+    pub scale: f32,
+    pub group_sums: Vec<i32>,
+}
+
 /// A packed 1-bit matrix: for each row, `cols` sign bits in u64 words and
 /// one (α, μ) pair per group of `group_size` consecutive columns, plus an
 /// optional residual bitplane chain (order-K packing) sharing the same
@@ -217,13 +265,175 @@ impl PackedBits {
         }
     }
 
-    /// Allocating GEMV convenience (computes the group sums itself) — the
-    /// form the [`crate::model::layers::linear_vec`] dispatch calls.
+    /// Allocating GEMV convenience — the form the
+    /// [`crate::model::layers::linear_vec`] dispatch calls. Computes the
+    /// group sums itself; callers that already hold them (or sweep many
+    /// layers over one token) should pass them via
+    /// [`Self::matvec_owned_with`] instead of paying the pass again.
     pub fn matvec_owned(&self, x: &[f32]) -> Vec<f32> {
-        let gsums = self.group_sums(x);
+        self.matvec_owned_with(x, None)
+    }
+
+    /// [`Self::matvec_owned`] with an optional precomputed group-sum
+    /// slice: `Some(sums)` skips the activation sweep entirely (the hot
+    /// loops' form — the W1A8 path analogously fuses its sums into
+    /// [`Self::quantize_act`]); `None` computes them here. The two entry
+    /// points are pinned identical by a regression test.
+    pub fn matvec_owned_with(&self, x: &[f32], group_sums: Option<&[f32]>) -> Vec<f32> {
         let mut y = vec![0.0f32; self.rows];
-        self.matvec(x, &gsums, &mut y);
+        match group_sums {
+            Some(gs) => self.matvec(x, gs, &mut y),
+            None => {
+                let gs = self.group_sums(x);
+                self.matvec(x, &gs, &mut y);
+            }
+        }
         y
+    }
+
+    /// Quantize one activation token for this layer's group layout: a
+    /// scale pass (max|x|), then ONE fused pass that quantizes each
+    /// group's slice and accumulates its i32 sum — the i8 twin of
+    /// [`Self::group_sums`], sharing a single sweep over x.
+    pub fn quantize_act(&self, x: &[f32]) -> ActI8 {
+        assert_eq!(x.len(), self.cols);
+        let scale = crate::tensor::ops::act_scale_i8(x);
+        let mut q = vec![0i8; self.cols];
+        let mut group_sums = vec![0i32; self.groups_per_row];
+        if scale > 0.0 {
+            let inv = 1.0 / scale;
+            for (g, gsum) in group_sums.iter_mut().enumerate() {
+                let s = g * self.group_size;
+                let e = (s + self.group_size).min(self.cols);
+                let mut acc = 0i32;
+                for j in s..e {
+                    let v = crate::tensor::ops::quantize_i8(x[j], inv);
+                    q[j] = v;
+                    acc += v as i32;
+                }
+                *gsum = acc;
+            }
+        }
+        ActI8 { q, scale, group_sums }
+    }
+
+    /// i8 twin of [`Self::set_sum`]: sum of q over the *set* sign bits of
+    /// row-word-base `wbase` within columns [s, e), accumulated in i32
+    /// (|q| ≤ 127 with cols capped at 2^24 keeps any group sum inside
+    /// i32 range).
+    #[inline]
+    fn set_sum_i8(&self, wbase: usize, s: usize, e: usize, q: &[i8]) -> i32 {
+        let mut acc = 0i32;
+        let mut j = s;
+        while j < e {
+            let wi = j / 64;
+            let upto = e.min((wi + 1) * 64);
+            let lo = j % 64;
+            let span = upto - j;
+            let mask = if span == 64 { u64::MAX } else { ((1u64 << span) - 1) << lo };
+            let mut bits = self.signs[wbase + wi] & mask;
+            let base = wi * 64;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                acc += q[base + b] as i32;
+                bits &= bits - 1;
+            }
+            j = upto;
+        }
+        acc
+    }
+
+    /// One (row, token) accumulation of ONE plane in the integer kernel:
+    /// per group, the two integer sums (Σ q over the group, Σ q over set
+    /// bits) are rescaled ONCE by the token scale,
+    ///   s_tok · (μ_g Σq + α_g (2 Σ_set q − Σq)),
+    /// so the inner loop stays pure integer and the f32 work is two
+    /// multiply-adds per group. Shared verbatim by [`Self::matvec_i8`]
+    /// and [`Self::matmul_i8`], which makes the two entry points
+    /// bit-identical per token — the property the batched-serve parity
+    /// tests pin.
+    #[inline]
+    fn row_acc_i8(&self, wbase: usize, gbase: usize, act: &ActI8) -> f32 {
+        let mut acc = 0.0f32;
+        for g in 0..self.groups_per_row {
+            let s = g * self.group_size;
+            let e = (s + self.group_size).min(self.cols);
+            let set = self.set_sum_i8(wbase, s, e, &act.q);
+            let gsum = act.group_sums[g];
+            // 2·set − gsum in i64: a single full-width group of extreme
+            // activations can push 2·set past i32::MAX.
+            let signed = (2 * set as i64 - gsum as i64) as f32;
+            acc += act.scale * (self.mu[gbase + g] * gsum as f32 + self.alpha[gbase + g] * signed);
+        }
+        acc
+    }
+
+    /// W1A8 packed GEMV: y = Ŵ x̂ with x̂ = s_tok · q, over all bitplanes,
+    /// i32 accumulation inside every group.
+    pub fn matvec_i8(&self, act: &ActI8, y: &mut [f32]) {
+        assert_eq!(act.q.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(act.group_sums.len(), self.groups_per_row);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            for (r, slot) in y.iter_mut().enumerate() {
+                *slot += p.row_acc_i8(r * p.words_per_row, r * p.groups_per_row, act);
+            }
+            plane = p.residual.as_deref();
+        }
+    }
+
+    /// Allocating W1A8 GEMV (quantizes the token itself) — the form the
+    /// [`crate::model::layers::linear_vec`] dispatch calls under
+    /// [`ActPrecision::Int8`].
+    pub fn matvec_i8_owned(&self, x: &[f32]) -> Vec<f32> {
+        let act = self.quantize_act(x);
+        let mut y = vec![0.0f32; self.rows];
+        self.matvec_i8(&act, &mut y);
+        y
+    }
+
+    /// One row of the W1A8 packed GEMM (i8 twin of [`Self::row_tokens`]):
+    /// plane-outer, token-inner, with the same per-(row, token)
+    /// accumulation order as [`Self::matvec_i8`].
+    fn row_tokens_i8(&self, r: usize, acts: &[ActI8], orow: &mut [f32]) {
+        orow.iter_mut().for_each(|v| *v = 0.0);
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            let wbase = r * p.words_per_row;
+            let gbase = r * p.groups_per_row;
+            for (t, slot) in orow.iter_mut().enumerate() {
+                *slot += p.row_acc_i8(wbase, gbase, &acts[t]);
+            }
+            plane = p.residual.as_deref();
+        }
+    }
+
+    /// W1A8 packed multi-token GEMM: Y = Ŵ X̂ (X: cols × n_tokens), each
+    /// token quantized to i8 with its own symmetric scale in the same
+    /// sweep that builds its per-group sums. Single-threaded form of
+    /// [`Self::matmul_i8_mt`].
+    pub fn matmul_i8(&self, x: &Matrix) -> Matrix {
+        self.matmul_i8_mt(x, 1)
+    }
+
+    /// W1A8 packed GEMM with rows distributed over `threads` workers via
+    /// [`Self::for_each_row_par`] (same work threshold and disjoint-row
+    /// write as [`Self::matmul_mt`]).
+    pub fn matmul_i8_mt(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(
+            x.rows, self.cols,
+            "packed i8 matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, x.rows, x.cols
+        );
+        let n = x.cols;
+        let xt = x.transpose();
+        // Per-token quantization + fused group sums, token-major.
+        let acts: Vec<ActI8> = (0..n).map(|t| self.quantize_act(xt.row(t))).collect();
+        let mut out = Matrix::zeros(self.rows, n);
+        self.for_each_row_par(&mut out, threads, |r, orow| self.row_tokens_i8(r, &acts, orow));
+        out
     }
 
     /// Reference GEMV processing one sign bit per iteration (the original
@@ -325,11 +535,26 @@ impl PackedBits {
             }
         }
         let mut out = Matrix::zeros(self.rows, n);
+        self.for_each_row_par(&mut out, threads, |r, orow| {
+            self.row_tokens(r, &xt, &gsums, orow)
+        });
+        out
+    }
+
+    /// Run `row_fn(r, out_row_r)` over every output row of a GEMM: serial
+    /// below the work threshold (thread spawn would dominate model-sized
+    /// layers), else rows distributed over [`parallel_for`]. The ONE
+    /// place the disjoint-row unsafe write lives — shared by the f32 and
+    /// i8 GEMMs so the threshold and safety argument cannot diverge.
+    fn for_each_row_par<F>(&self, out: &mut Matrix, threads: usize, row_fn: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let n = out.cols;
         let work = self.rows as f64 * self.cols as f64 * n as f64 * self.order() as f64;
         if threads <= 1 || work < 1.0e7 {
             for r in 0..self.rows {
-                let orow = &mut out.data[r * n..(r + 1) * n];
-                self.row_tokens(r, &xt, &gsums, orow);
+                row_fn(r, &mut out.data[r * n..(r + 1) * n]);
             }
         } else {
             let optr = SendPtr(out.data.as_mut_ptr());
@@ -337,10 +562,9 @@ impl PackedBits {
                 let optr = &optr;
                 // SAFETY: each worker writes a disjoint row of `out`.
                 let orow = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r * n), n) };
-                self.row_tokens(r, &xt, &gsums, orow);
+                row_fn(r, orow);
             });
         }
-        out
     }
 
     /// Precompute per-group sums of an activation vector (shared across all
@@ -651,6 +875,108 @@ mod tests {
         // A second bitplane doubles it.
         let p2 = PackedBits::pack_residual(&w, 64, 2, -1.0);
         assert_eq!(p2.storage_bytes(), 128);
+    }
+
+    #[test]
+    fn matvec_owned_entry_points_agree() {
+        // Regression for the group-sum recompute fix: the self-computing
+        // entry point and the precomputed-sums entry point must agree
+        // bit-for-bit (same kernel, same accumulation order).
+        let mut rng = Rng::new(101);
+        for &(rows, cols, gs) in &[(7usize, 70usize, 64usize), (5, 130, 32), (4, 64, 64)] {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            let p = PackedBits::pack_residual(&w, gs, 2, 0.0);
+            let gsums = p.group_sums(&x);
+            let y_auto = p.matvec_owned(&x);
+            let y_pre = p.matvec_owned_with(&x, Some(&gsums));
+            assert_eq!(y_auto, y_pre, "({rows},{cols},{gs})");
+        }
+    }
+
+    #[test]
+    fn quantize_act_matches_reference_quantizer() {
+        // The fused quantize+group-sum pass must produce exactly the
+        // reference quantization of tensor::ops, with group sums equal to
+        // the sums of the quantized values.
+        let mut rng = Rng::new(102);
+        let w = Matrix::gauss(3, 70, 1.0, &mut rng);
+        let p = PackedBits::pack(&w, 32);
+        let x: Vec<f32> = (0..70).map(|_| 2.0 * rng.gauss() as f32).collect();
+        let act = p.quantize_act(&x);
+        let (q_ref, s_ref) = crate::tensor::ops::quantize_vec_i8(&x);
+        assert_eq!(act.q, q_ref);
+        assert_eq!(act.scale, s_ref);
+        for (g, &gsum) in act.group_sums.iter().enumerate() {
+            let s = g * 32;
+            let e = (s + 32).min(70);
+            let expect: i32 = act.q[s..e].iter().map(|&v| v as i32).sum();
+            assert_eq!(gsum, expect, "group {g}");
+        }
+        // Zero token: zero scale, zero sums, zero output.
+        let z = p.quantize_act(&vec![0.0f32; 70]);
+        assert_eq!(z.scale, 0.0);
+        assert!(z.group_sums.iter().all(|&v| v == 0));
+        let mut y = vec![1.0f32; 3];
+        p.matvec_i8(&z, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn i8_matvec_matches_f32_within_analytic_bound() {
+        // |Ŵ x − Ŵ x̂| ≤ Σ_j |Ŵ_rj| · s_tok/2 per row: the i8 kernel's
+        // only deviation from the f32 packed kernel is the activation
+        // round-off, bounded elementwise by half the token scale.
+        let mut rng = Rng::new(103);
+        for &(rows, cols, gs, order) in
+            &[(8usize, 64usize, 32usize, 1usize), (6, 70, 64, 2), (5, 130, 128, 1), (4, 200, 7, 2)]
+        {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+            let deq = p.dequantize();
+            let gsums = p.group_sums(&x);
+            let mut y32 = vec![0.0f32; rows];
+            p.matvec(&x, &gsums, &mut y32);
+            let act = p.quantize_act(&x);
+            let mut y8 = vec![0.0f32; rows];
+            p.matvec_i8(&act, &mut y8);
+            for r in 0..rows {
+                let abs_row: f32 = deq.row(r).iter().map(|v| v.abs()).sum();
+                let bound = 0.5 * act.scale * abs_row * 1.001 + 1e-4;
+                assert!(
+                    (y32[r] - y8[r]).abs() <= bound,
+                    "({rows},{cols},{gs},{order}) row {r}: {} vs {} (bound {bound})",
+                    y32[r],
+                    y8[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_matmul_bit_identical_to_i8_matvec_per_token() {
+        // GEMM and GEMV share row_acc_i8, so each column of the W1A8 GEMM
+        // must equal the W1A8 GEMV of that column exactly — single- and
+        // multi-threaded.
+        let mut rng = Rng::new(104);
+        let w = Matrix::gauss(9, 70, 1.0, &mut rng);
+        let x = Matrix::gauss(70, 5, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        let y = p.matmul_i8(&x);
+        let xt = x.transpose();
+        for t in 0..5 {
+            let yv = p.matvec_i8_owned(xt.row(t));
+            for r in 0..9 {
+                assert_eq!(y.at(r, t), yv[r], "({r},{t})");
+            }
+        }
+        let big_w = Matrix::gauss(96, 256, 1.0, &mut rng);
+        let big_x = Matrix::gauss(256, 32, 1.0, &mut rng);
+        let bp = PackedBits::pack_residual(&big_w, 64, 2, 0.0);
+        let a = bp.matmul_i8_mt(&big_x, 1);
+        let b = bp.matmul_i8_mt(&big_x, 8);
+        assert_eq!(a.data, b.data, "mt i8 GEMM must be deterministic");
     }
 
     #[test]

@@ -117,6 +117,43 @@ pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Symmetric per-token INT8 activation scale: s = max|x| / 127, so
+/// x ≈ s · q with q ∈ [−127, 127] (0 for an all-zero token — the
+/// quantized vector is then exactly zero too). The W1A8 packed kernels
+/// ([`crate::quant::packed::PackedBits::matvec_i8`]) and every test
+/// reference share this one definition.
+pub fn act_scale_i8(x: &[f32]) -> f32 {
+    let mx = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    mx / 127.0
+}
+
+/// Quantize one activation value given the *reciprocal* scale (multiply,
+/// round half-away-from-zero, clamp to ±127 — the symmetric range that
+/// avoids the −128 asymmetry). Deterministic, so the GEMV and GEMM paths
+/// produce bit-identical q from the same token.
+#[inline]
+pub fn quantize_i8(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Reference form: quantize a whole activation vector to (q, scale).
+/// Elementwise round-trip error is ≤ scale/2 by construction (pinned in
+/// `tests/proptests.rs`).
+pub fn quantize_vec_i8(x: &[f32]) -> (Vec<i8>, f32) {
+    let s = act_scale_i8(x);
+    if s == 0.0 {
+        return (vec![0i8; x.len()], 0.0);
+    }
+    let inv = 1.0 / s;
+    (x.iter().map(|&v| quantize_i8(v, inv)).collect(), s)
+}
+
+/// Dequantize an i8 activation vector (test/diagnostic path only — the
+/// packed kernels never materialize this).
+pub fn dequantize_vec_i8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
 /// A · Aᵀ without forming the transpose (used for Hessians H = X Xᵀ with X
 /// stored as rows = features, cols = tokens: call with X directly).
 pub fn gram(a: &Matrix) -> Matrix {
@@ -302,6 +339,35 @@ mod tests {
             assert!(mean.abs() < 1e-4);
             assert!((var - 1.0).abs() < 1e-2);
         }
+    }
+
+    #[test]
+    fn i8_quantize_roundtrip_within_half_scale() {
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..97).map(|_| 3.0 * rng.gauss() as f32).collect();
+            let (q, s) = quantize_vec_i8(&x);
+            assert!(s > 0.0);
+            let back = dequantize_vec_i8(&q, s);
+            for (a, b) in x.iter().zip(&back) {
+                // s/2 in exact arithmetic; the 1e-4 relative slack covers
+                // f32 rounding of 1/s and of the scaled product.
+                assert!((a - b).abs() <= s * 0.50005 + 1e-12, "{a} vs {b} (s={s})");
+            }
+        }
+        // All-zero token: zero scale, exactly-zero quantization.
+        let (q0, s0) = quantize_vec_i8(&[0.0; 16]);
+        assert_eq!(s0, 0.0);
+        assert!(q0.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn i8_quantize_saturates_symmetric() {
+        let x = [1.0f32, -1.0, 0.5, -0.5, 0.0];
+        let (q, s) = quantize_vec_i8(&x);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
     }
 
     #[test]

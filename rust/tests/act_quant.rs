@@ -1,0 +1,211 @@
+//! W1A8 parity wall: the i8-activation packed kernels (`matvec_i8` /
+//! `matmul_i8`) against the f32 packed kernels and the dense twin, at the
+//! kernel level (all tail shapes, pinned error bounds per group size) and
+//! end-to-end (every action-head kind, full model forward under
+//! `ActPrecision::Int8` vs `F32`). These bounds are the contract the
+//! serving `-a8` variants rely on.
+
+use hbvla::model::{ActPrecision, HeadKind, MiniVla, VlaConfig};
+use hbvla::quant::packed::PackedBits;
+use hbvla::tensor::ops::{matmul, matvec};
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Analytic elementwise bound on the W1A8 deviation from the f32 packed
+/// kernel: |Ŵ x − Ŵ x̂|_r ≤ Σ_j |Ŵ_rj| · s_tok/2 (activation round-off
+/// pushed through the dequantized weights), with a small float-rounding
+/// allowance.
+fn row_bounds(p: &PackedBits, scale: f32) -> Vec<f32> {
+    let deq = p.dequantize();
+    (0..deq.rows)
+        .map(|r| 0.5 * scale * deq.row(r).iter().map(|v| v.abs()).sum::<f32>() * 1.001 + 1e-4)
+        .collect()
+}
+
+#[test]
+fn i8_matvec_vs_f32_packed_vs_dense_tail_shapes() {
+    // Shapes cover the word-tail case (70 = 64 + 6), group sizes that do
+    // not divide the width, and residual-plane chains.
+    let cases = [
+        (8usize, 64usize, 32usize, 1usize),
+        (6, 70, 64, 2),
+        (5, 130, 32, 1),
+        (4, 70, 70, 2),
+        (3, 200, 128, 1),
+    ];
+    let mut rng = Rng::new(501);
+    for &(rows, cols, gs, order) in &cases {
+        let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+        let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+        let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+        // f32 packed reference and dense twin of the packed weights.
+        let gsums = p.group_sums(&x);
+        let mut y32 = vec![0.0f32; rows];
+        p.matvec(&x, &gsums, &mut y32);
+        let y_dense = matvec(&p.dequantize(), &x);
+        // W1A8 path.
+        let act = p.quantize_act(&x);
+        let mut y8 = vec![0.0f32; rows];
+        p.matvec_i8(&act, &mut y8);
+        let bounds = row_bounds(&p, act.scale);
+        for r in 0..rows {
+            assert!(
+                (y32[r] - y8[r]).abs() <= bounds[r],
+                "({rows},{cols},{gs},{order}) row {r}: f32 {} vs i8 {} (bound {})",
+                y32[r],
+                y8[r],
+                bounds[r]
+            );
+            // Against the dense twin the i8 path carries both the kernel
+            // float noise and the activation round-off.
+            assert!(
+                (y_dense[r] - y8[r]).abs() <= bounds[r] + 1e-3 * (1.0 + y_dense[r].abs()),
+                "({rows},{cols},{gs},{order}) row {r}: dense {} vs i8 {}",
+                y_dense[r],
+                y8[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn i8_matmul_vs_dense_gemm_with_pinned_bounds_per_group_size() {
+    // The W1A8 GEMM against the dense product of the dequantized
+    // weights: elementwise within the analytic activation-round-off bound
+    // (per-token scale × row abs-sum), and the whole product within a
+    // pinned relative-Frobenius budget per group size. The activation
+    // round-off is group-size independent, so the budgets are uniform —
+    // and an order of magnitude below what a broken per-group rescale
+    // would produce.
+    let cases: [(usize, f64); 4] = [(16, 0.03), (32, 0.03), (64, 0.03), (128, 0.03)];
+    let mut rng = Rng::new(502);
+    for &(gs, max_rel_frob) in &cases {
+        let w = Matrix::gauss(12, 130, 1.0, &mut rng);
+        let x = Matrix::gauss(130, 7, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, gs, 2, 0.0);
+        let y8 = p.matmul_i8(&x);
+        let deq = p.dequantize();
+        let y_dense = matmul(&deq, &x);
+        assert_eq!((y8.rows, y8.cols), (12, 7));
+        let xt = x.transpose();
+        let scales: Vec<f32> = (0..7).map(|t| p.quantize_act(xt.row(t)).scale).collect();
+        let abs_rows: Vec<f32> =
+            (0..12).map(|r| deq.row(r).iter().map(|v| v.abs()).sum::<f32>()).collect();
+        for r in 0..12 {
+            for t in 0..7 {
+                let (a, b) = (y8.at(r, t), y_dense.at(r, t));
+                let bound = 0.5 * scales[t] * abs_rows[r] * 1.001 + 1e-3 * (1.0 + b.abs());
+                assert!((a - b).abs() <= bound, "gs={gs} ({r},{t}): i8 {a} vs dense {b}");
+            }
+        }
+        let rel = y8.dist_sq(&y_dense) / y_dense.frob_norm_sq().max(1e-12);
+        assert!(
+            rel.sqrt() <= max_rel_frob,
+            "gs={gs}: W1A8 GEMM relative error {} over pinned budget {max_rel_frob}",
+            rel.sqrt()
+        );
+    }
+}
+
+#[test]
+fn i8_gemm_columns_equal_i8_gemv() {
+    // The GEMM quantizes each token exactly as the GEMV does and shares
+    // its accumulation order: columns must match bit-for-bit — the
+    // property that makes batched W1A8 serving bit-identical per request.
+    let mut rng = Rng::new(503);
+    let w = Matrix::gauss(10, 70, 1.0, &mut rng);
+    let x = Matrix::gauss(70, 6, 1.0, &mut rng);
+    for gs in [64usize, 32, 7] {
+        let p = PackedBits::pack_residual(&w, gs, 2, 0.0);
+        let y = p.matmul_i8(&x);
+        let xt = x.transpose();
+        for t in 0..6 {
+            let yv = p.matvec_i8_owned(xt.row(t));
+            for r in 0..10 {
+                assert_eq!(y.at(r, t), yv[r], "gs={gs} ({r},{t})");
+            }
+        }
+    }
+}
+
+/// Build (W1A8 model, W1A32 twin) on the same packed store; heads get
+/// non-zero weights so decode is exercised.
+fn a8_twins(cfg: VlaConfig, group_size: usize) -> (MiniVla, MiniVla) {
+    let mut m = MiniVla::new(cfg);
+    let mut rng = Rng::new(0x7A18);
+    let head_names: Vec<String> = if m.store.contains("head.main") {
+        vec!["head.main".to_string()]
+    } else {
+        (0..m.cfg.diffusion_steps).map(|t| format!("head.diff.{t}")).collect()
+    };
+    for name in &head_names {
+        let (hr, hc) = m.store.dims(name);
+        m.store.set(name, Matrix::gauss(hr, hc, 0.05, &mut rng));
+    }
+    assert!(m.store.pack_quantizable(group_size) > 0, "nothing packed");
+    let a32 = m.clone();
+    let a8 = m.with_act_precision(ActPrecision::Int8);
+    (a8, a32)
+}
+
+#[test]
+fn w1a8_end_to_end_every_head_within_pinned_bound() {
+    // The acceptance bound for the eval drivers: with every quantizable
+    // layer packed, switching the store to Int8 activations moves the
+    // trunk features by bounded relative noise and every decoded action
+    // by less than 0.3 in the [-1, 1] action box (well inside the rollout
+    // drivers' tolerance to per-step perturbation, an order of magnitude
+    // below what a broken rescale produces).
+    for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (a8, a32) = a8_twins(cfg.clone(), 64);
+        assert_eq!(a8.store.act_precision(), ActPrecision::Int8);
+        assert_eq!(a32.store.act_precision(), ActPrecision::F32);
+        let mut rng = Rng::new(504);
+        for trial in 0..3 {
+            let v = Matrix::gauss(cfg.d_vis_in, cfg.n_visual, 1.0, &mut rng);
+            let p: Vec<f32> = (0..cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+            let f8 = a8.features(&v, 3, &p, &mut None);
+            let f32_ = a32.features(&v, 3, &p, &mut None);
+            assert_eq!(f8.len(), f32_.len());
+            assert!(f8.iter().all(|x| x.is_finite()), "{head:?} trial {trial}: non-finite W1A8");
+            let num: f32 = f8.iter().zip(&f32_).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = f32_.iter().map(|b| b * b).sum::<f32>().max(1e-6);
+            assert!(
+                (num / den).sqrt() < 0.25,
+                "{head:?} trial {trial}: feature drift {}",
+                (num / den).sqrt()
+            );
+            let acts8 = a8.decode(&f8, &mut Rng::new(700 + trial));
+            let acts32 = a32.decode(&f32_, &mut Rng::new(700 + trial));
+            assert_eq!(acts8.len(), acts32.len());
+            for (c8, c32) in acts8.iter().zip(&acts32) {
+                for (a, b) in c8.iter().zip(c32) {
+                    assert!(a.is_finite() && (-1.0..=1.0).contains(a));
+                    assert!((a - b).abs() < 0.3, "{head:?} trial {trial}: action {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn w1a8_tail_width_model_stays_bounded() {
+    // d_model = 70 ⇒ every packed layer has a 64 + 6 sign-word tail; the
+    // W1A8 forward must stay finite and close to W1A32 there too.
+    let mut cfg = VlaConfig::tiny(HeadKind::Chunk);
+    cfg.d_model = 70;
+    cfg.heads = 2;
+    for gs in [64usize, 32] {
+        let (a8, a32) = a8_twins(cfg.clone(), gs);
+        let mut rng = Rng::new(505);
+        let v = Matrix::gauss(cfg.d_vis_in, cfg.n_visual, 1.0, &mut rng);
+        let p: Vec<f32> = (0..cfg.d_proprio).map(|_| rng.gauss() as f32).collect();
+        let f8 = a8.features(&v, 3, &p, &mut None);
+        let f32_ = a32.features(&v, 3, &p, &mut None);
+        assert!(f8.iter().all(|x| x.is_finite()), "gs={gs}");
+        let num: f32 = f8.iter().zip(&f32_).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = f32_.iter().map(|b| b * b).sum::<f32>().max(1e-6);
+        assert!((num / den).sqrt() < 0.25, "gs={gs}: feature drift {}", (num / den).sqrt());
+    }
+}

@@ -6,7 +6,7 @@
 //! batched packed GEMM without the answer depending on which requests
 //! happened to ride in the same batch.
 
-use hbvla::model::{HeadKind, MiniVla, ObsInput, VlaConfig};
+use hbvla::model::{ActPrecision, HeadKind, MiniVla, ObsInput, VlaConfig};
 use hbvla::tensor::Matrix;
 use hbvla::util::rng::Rng;
 
@@ -153,6 +153,52 @@ fn dense_head_decode_batch_close_to_sequential() {
                 assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "request {r}: {a} vs {b}");
             }
         }
+    }
+}
+
+#[test]
+fn w1a8_batch_bit_identical_every_head() {
+    // The W1A8 GEMM quantizes and accumulates each token exactly as the
+    // W1A8 GEMV does, so a batched Int8-activation forward — trunk AND
+    // decode — must reproduce the per-request forwards bit-for-bit, same
+    // as the f32 packed contract above.
+    for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+        let cfg = VlaConfig::tiny(head);
+        let (packed, _) = twins(cfg.clone(), 64);
+        let a8 = packed.with_act_precision(ActPrecision::Int8);
+        let owned = rand_batch(&cfg, 5, 406);
+        let inputs = as_inputs(&owned);
+        let singles: Vec<Vec<f32>> =
+            owned.iter().map(|(v, i, p)| a8.features(v, *i, p, &mut None)).collect();
+        let batched = a8.features_batch(&inputs);
+        assert_eq!(batched, singles, "{head:?} W1A8 batched trunk != sequential trunk");
+        let single_acts: Vec<Vec<Vec<f32>>> = singles
+            .iter()
+            .enumerate()
+            .map(|(r, f)| a8.decode(f, &mut Rng::new(910 + r as u64)))
+            .collect();
+        let mut rngs: Vec<Rng> = (0..singles.len()).map(|r| Rng::new(910 + r as u64)).collect();
+        let batched_acts = a8.decode_batch(&batched, &mut rngs);
+        assert_eq!(batched_acts, single_acts, "{head:?} W1A8 batched decode != sequential");
+    }
+}
+
+#[test]
+fn w1a8_batch_parity_with_word_tail_widths() {
+    // 70 = 64 + 6 sign-word tails under Int8 activations: the i8 GEMM's
+    // masked tail word must agree with the GEMV's bit-for-bit.
+    let mut cfg = VlaConfig::tiny(HeadKind::Chunk);
+    cfg.d_model = 70;
+    cfg.heads = 2;
+    for gs in [64usize, 32] {
+        let (packed, _) = twins(cfg.clone(), gs);
+        let a8 = packed.with_act_precision(ActPrecision::Int8);
+        let owned = rand_batch(&cfg, 4, 407);
+        let inputs = as_inputs(&owned);
+        let singles: Vec<Vec<f32>> =
+            owned.iter().map(|(v, i, p)| a8.features(v, *i, p, &mut None)).collect();
+        let batched = a8.features_batch(&inputs);
+        assert_eq!(batched, singles, "gs={gs} W1A8 tail-width batched trunk diverged");
     }
 }
 

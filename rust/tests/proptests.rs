@@ -7,7 +7,7 @@ use hbvla::methods::{paper_methods, CalibData, Component};
 use hbvla::quant::group::{quantize_matrix, GroupSpec};
 use hbvla::quant::packed::PackedBits;
 use hbvla::quant::permute::{pairing_and_chaining, NormKind};
-use hbvla::tensor::ops::{gram, matvec};
+use hbvla::tensor::ops::{dequantize_vec_i8, gram, matvec, quantize_vec_i8};
 use hbvla::tensor::Matrix;
 use hbvla::util::rng::Rng;
 
@@ -83,6 +83,94 @@ fn prop_packed_matches_dense() {
         let yd = matvec(&dense, &x);
         for i in 0..r {
             assert!((y[i] - yd[i]).abs() < 1e-3 * (1.0 + yd[i].abs()), "{r}x{c} gs={gs}");
+        }
+    }
+}
+
+/// i8 activation quantize→dequantize round-trip error is ≤ s_tok/2
+/// elementwise, across random lengths, scales and degenerate tokens.
+#[test]
+fn prop_i8_roundtrip_error_below_half_scale() {
+    let mut rng = Rng::new(1007);
+    for _ in 0..50 {
+        let n = 1 + rng.below(300);
+        let mag = rng.range(1e-3, 50.0) as f32;
+        let x: Vec<f32> = (0..n).map(|_| mag * rng.gauss() as f32).collect();
+        let (q, s) = quantize_vec_i8(&x);
+        let back = dequantize_vec_i8(&q, s);
+        for (a, b) in x.iter().zip(&back) {
+            // s/2 in exact arithmetic, plus f32 slack for the reciprocal
+            // scale and the scaled product rounding.
+            assert!(
+                (a - b).abs() <= s * 0.50005 + 1e-12,
+                "n={n} mag={mag}: {a} vs {b} (s={s})"
+            );
+        }
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+}
+
+/// W1A8 packed matvec against the true dense product: aggregated over
+/// trials, refining the group partition (more groups per row) does not
+/// increase the total error — the per-group (α, μ) fit captures more of
+/// the weight structure while the activation round-off stays fixed.
+#[test]
+fn prop_w1a8_error_monotone_in_group_count() {
+    let mut rng = Rng::new(1008);
+    let mut err_coarse = 0.0f64;
+    let mut err_fine = 0.0f64;
+    for _ in 0..20 {
+        let (r, c) = random_shape(&mut rng);
+        let w = Matrix::gauss(r, c, 1.0, &mut rng);
+        let x: Vec<f32> = (0..c).map(|_| rng.gauss() as f32).collect();
+        let y_true = matvec(&w, &x);
+        // One group per row vs many groups per row.
+        for (gs, err) in [(c, &mut err_coarse), (8usize, &mut err_fine)] {
+            let p = PackedBits::pack(&w, gs);
+            let y8 = p.matvec_i8_owned(&x);
+            *err += y_true.iter().zip(&y8).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+        }
+    }
+    assert!(
+        err_fine <= err_coarse * 1.001 + 1e-9,
+        "finer groups must not increase W1A8 error: fine {err_fine} vs coarse {err_coarse}"
+    );
+}
+
+/// W1A8 matvec vs the f32 packed matvec across random shapes and group
+/// sizes (including non-multiples of 64): within the analytic
+/// activation-round-off bound, and the GEMM path bit-equals the GEMV
+/// path per token.
+#[test]
+fn prop_w1a8_matches_f32_packed_random_groups() {
+    let mut rng = Rng::new(1009);
+    for _ in 0..30 {
+        let (r, c) = random_shape(&mut rng);
+        let gs = 1 + rng.below(100); // includes non-multiples of 64
+        let w = Matrix::gauss(r, c, rng.range(0.2, 3.0) as f32, &mut rng);
+        let x: Vec<f32> = (0..c).map(|_| rng.gauss() as f32).collect();
+        let p = PackedBits::pack(&w, gs);
+        let deq = p.dequantize();
+        let mut y32 = vec![0.0f32; r];
+        p.matvec(&x, &p.group_sums(&x), &mut y32);
+        let act = p.quantize_act(&x);
+        let mut y8 = vec![0.0f32; r];
+        p.matvec_i8(&act, &mut y8);
+        for i in 0..r {
+            let abs_row: f32 = deq.row(i).iter().map(|v| v.abs()).sum();
+            let bound = 0.5 * act.scale * abs_row * 1.001 + 1e-4;
+            assert!(
+                (y32[i] - y8[i]).abs() <= bound,
+                "{r}x{c} gs={gs} row {i}: {} vs {}",
+                y32[i],
+                y8[i]
+            );
+        }
+        // Single-column GEMM equals the GEMV bit-for-bit.
+        let xm = Matrix::from_vec(c, 1, x.clone());
+        let ym = p.matmul_i8(&xm);
+        for i in 0..r {
+            assert_eq!(ym.at(i, 0), y8[i], "{r}x{c} gs={gs} row {i}");
         }
     }
 }

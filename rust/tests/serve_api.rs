@@ -13,7 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hbvla::coordinator::{
-    quantize_into_registry, ModelRegistry, PolicyServer, ServeConfig, ServeError, ServeRequest,
+    quantize_into_registry, register_a8_variant, ModelRegistry, PolicyServer, ServeConfig,
+    ServeError, ServeRequest,
 };
 use hbvla::methods::traits::Component;
 use hbvla::methods::HbVla;
@@ -104,6 +105,62 @@ fn quantize_register_serve_batched_packed_parity() {
     }
     let per = server.variant_stats();
     assert_eq!(per["hbvla-packed"].requests, 6);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_w1a32_w1a8_batch_each_request_bit_identical() {
+    // One coalesced batch holding BOTH `hbvla-packed` (W1A32) and
+    // `hbvla-packed-a8` (W1A8) requests: the router splits the batch by
+    // variant, each group runs its own batched forward, and every
+    // response must be bit-identical to its own model's sequential
+    // forward with `variant_served` naming the right twin.
+    let base = base_model();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let calib = HashMap::new();
+    let comps = [Component::Vision, Component::Language, Component::ActionHead];
+    quantize_into_registry(&registry, "hbvla-packed", &base, &calib, &HbVla::new(), &comps, 2)
+        .unwrap();
+    let a8_name = register_a8_variant(&registry, "hbvla-packed").unwrap();
+    assert_eq!(a8_name, "hbvla-packed-a8");
+    let m32 = registry.get("hbvla-packed").unwrap();
+    let m8 = registry.get("hbvla-packed-a8").unwrap();
+    assert_eq!(m8.store.act_precision(), hbvla::model::ActPrecision::Int8);
+
+    let server = PolicyServer::start(
+        Arc::clone(&registry),
+        ServeConfig { workers: 1, max_batch: 6, max_wait: Duration::from_millis(500) },
+    );
+    let obs: Vec<Observation> = (0..6).map(|k| sample_obs(&base, 80 + k)).collect();
+    // Interleave the two variants inside one burst.
+    let names = ["hbvla-packed", "hbvla-packed-a8"];
+    let handles: Vec<_> = obs
+        .iter()
+        .enumerate()
+        .map(|(k, o)| {
+            server
+                .submit_async(ServeRequest::new(o.clone()).with_variant(names[k % 2]))
+                .unwrap()
+        })
+        .collect();
+    let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    assert!(server.batch_stats().max_recent() >= 2, "requests never coalesced");
+
+    for (k, (o, rsp)) in obs.iter().zip(&responses).enumerate() {
+        let expect_variant = names[k % 2];
+        assert_eq!(rsp.variant_served, expect_variant, "request {k}");
+        let model = if k % 2 == 0 { &m32 } else { &m8 };
+        let feat = model.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+        let expect = model.decode(&feat, &mut Rng::new(0));
+        assert_eq!(
+            rsp.actions, expect,
+            "request {k} ({expect_variant}) diverged from its own sequential forward"
+        );
+    }
+    let per = server.variant_stats();
+    assert_eq!(per["hbvla-packed"].requests, 3);
+    assert_eq!(per["hbvla-packed-a8"].requests, 3);
     server.shutdown();
 }
 
