@@ -63,6 +63,57 @@ fn main() {
     bench("packed W1A8 quantize_act 2048", 5, 2000, || {
         std::hint::black_box(packed.quantize_act(&x));
     });
+    // Transform-domain exact serving: the activation-side costs (permuted
+    // gather, in-place Haar forward, fused gather+Haar+quantize_act) and
+    // the end-to-end exact GEMV vs the residual-plane repack it replaces.
+    {
+        use hbvla::quant::transform::{transform_group_size, TransformPacked};
+        let mut perm: Vec<usize> = (0..2048).collect();
+        rng.shuffle(&mut perm);
+        let wp = w.select_cols(&perm);
+        let u = hbvla::haar::haar_rows(&wp);
+        let tbits = PackedBits::pack(&u, transform_group_size(1024));
+        let inv: Vec<u32> = {
+            // TransformPacked gathers x_p[k] = x[perm[k]]; reuse the same π.
+            perm.iter().map(|&p| p as u32).collect()
+        };
+        let t = TransformPacked::new(2048, inv, tbits, None);
+        let mut xp = vec![0.0f32; 2048];
+        bench("transform permuted gather 2048", 5, 2000, || {
+            for (k, slot) in xp.iter_mut().enumerate() {
+                *slot = x[perm[k]];
+            }
+            std::hint::black_box(&xp);
+        });
+        bench("transform haar act fwd 2048 (in-place)", 5, 2000, || {
+            let z = hbvla::haar::haar_act_fwd_vec(&xp);
+            std::hint::black_box(z);
+        });
+        bench("transform fused gather+haar 2048", 5, 2000, || {
+            std::hint::black_box(t.transform_act(&x));
+        });
+        bench("transform fused gather+haar+quantize_act 2048", 5, 2000, || {
+            std::hint::black_box(t.quantize_transformed(&x));
+        });
+        let t_exact = bench("transform-exact GEMV 512x2048 (1 plane)", 5, 200, || {
+            std::hint::black_box(t.matvec_owned(&x));
+        });
+        // The deploy form this replaces: residual-plane repack of the same
+        // reconstruction, order K ≥ 1 planes.
+        let repack = PackedBits::pack_deploy(&t.dequantize());
+        let t_repack = bench("repacked residual GEMV 512x2048", 5, 200, || {
+            std::hint::black_box(repack.matvec_owned(&x));
+        });
+        println!(
+            "[bench] exact vs repacked GEMV: exact {:.3}ms (1 plane + O(n) transform), \
+             repacked {:.3}ms ({} planes) — exact ×{:.2}, memory ×{:.2} smaller",
+            t_exact * 1e3,
+            t_repack * 1e3,
+            repack.order(),
+            t_repack / t_exact,
+            repack.storage_bytes() as f64 / t.storage_bytes() as f64
+        );
+    }
     // Packed multi-token GEMM (rows over the thread pool).
     let xb = Matrix::gauss(2048, 16, 1.0, &mut rng);
     bench("dense GEMM 512x2048x16 mt", 2, 30, || {

@@ -178,14 +178,19 @@ pub struct VariantStats {
     pub compute: LatencyStats,
     pub requests: u64,
     pub deadline_misses: u64,
+    /// Requests shed at submit by deadline-aware admission control
+    /// (never queued; disjoint from `deadline_misses`, which are triaged
+    /// at dispatch).
+    pub admission_sheds: u64,
 }
 
 impl VariantStats {
     pub fn summary(&self) -> String {
         format!(
-            "requests={} misses={} total[{}] queue[{}] compute[{}]",
+            "requests={} misses={} sheds={} total[{}] queue[{}] compute[{}]",
             self.requests,
             self.deadline_misses,
+            self.admission_sheds,
             self.total.summary(),
             self.queue.summary(),
             self.compute.summary()

@@ -11,8 +11,11 @@ pub mod server;
 pub use metrics::{BatchStats, LatencyStats, VariantStats};
 pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
-pub use scheduler::{quantize_into_registry, quantize_model, register_a8_variant, QuantJobReport};
+pub use scheduler::{
+    quantize_exact_into_registry, quantize_into_registry, quantize_model, quantize_model_exact,
+    register_a8_variant, QuantJobReport,
+};
 pub use server::{
-    PolicyServer, ResponseHandle, ServeConfig, ServeError, ServeRequest, ServeResponse,
-    VariantSelector,
+    estimated_queue_wait_us, AdmissionControl, PolicyServer, ResponseHandle, ServeConfig,
+    ServeError, ServeRequest, ServeResponse, VariantSelector,
 };

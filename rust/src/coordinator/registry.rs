@@ -31,6 +31,11 @@ pub enum RegistryError {
     /// A derived registration (e.g. an `-a8` activation-precision twin)
     /// named a base variant that is not in the registry.
     UnknownVariant { variant: String },
+    /// A quantize-for-variant flow asked for a deploy representation the
+    /// method did not commit for a layer (e.g. requesting transform-exact
+    /// serving from a direct-domain method like RTN). Typed, so the flow
+    /// fails loudly instead of silently committing a different repr.
+    UnsupportedRepr { variant: String, layer: String, wanted: &'static str },
 }
 
 impl std::fmt::Display for RegistryError {
@@ -41,6 +46,13 @@ impl std::fmt::Display for RegistryError {
             }
             RegistryError::UnknownVariant { variant } => {
                 write!(f, "variant '{variant}' is not registered")
+            }
+            RegistryError::UnsupportedRepr { variant, layer, wanted } => {
+                write!(
+                    f,
+                    "variant '{variant}': method committed no {wanted} representation \
+                     for layer '{layer}'"
+                )
             }
         }
     }

@@ -29,8 +29,12 @@ pub struct QuantJobReport {
     /// dequantization where committed packed, else Ŵ) against W. Equals
     /// `mean_rel_err` up to the deploy-packing tolerance.
     pub mean_deploy_rel_err: f64,
-    /// Layers committed as packed 1-bit representations.
+    /// Layers committed as 1-bit representations (repacked OR
+    /// transform-exact).
     pub packed_layers: usize,
+    /// Subset of `packed_layers` committed in the transform-domain exact
+    /// representation ([`crate::model::params::WeightRepr::TransformPacked`]).
+    pub transform_layers: usize,
     /// Bytes the quantized store actually keeps resident (whole model,
     /// FP layers included at f32).
     pub resident_bytes: usize,
@@ -71,11 +75,15 @@ pub fn quantize_model(
             .cloned()
             .unwrap_or_else(|| CalibData::identity(w.cols, model.store.component_of(name)));
         let q = method.quantize(w, &cd);
-        // Deployed-weight error (packed dequantization vs W), computed
-        // here so the dense materialization stays inside the worker.
-        let deploy_err = match &q.packed {
-            Some(p) => w.dist_sq(&p.dequantize()) / w.frob_norm_sq().max(1e-30),
-            None => q.rel_frob_err,
+        // Deployed-weight error (deployed-form dequantization vs W),
+        // computed here so the dense materialization stays inside the
+        // worker. The deploy precedence mirrors the commit below: packed,
+        // else transform-exact, else dense Ŵ.
+        let denom = w.frob_norm_sq().max(1e-30);
+        let deploy_err = match (&q.packed, &q.transform_packed) {
+            (Some(p), _) => w.dist_sq(&p.dequantize()) / denom,
+            (None, Some(t)) => w.dist_sq(&t.dequantize()) / denom,
+            (None, None) => q.rel_frob_err,
         };
         (name.clone(), q, deploy_err)
     });
@@ -85,17 +93,26 @@ pub fn quantize_model(
     let mut err_sum = 0.0;
     let mut deploy_err_sum = 0.0;
     let mut packed_layers = 0usize;
+    let mut transform_layers = 0usize;
     for (name, q, deploy_err) in results {
         stats.add(&q.stats);
         err_sum += q.rel_frob_err;
         deploy_err_sum += deploy_err;
         layers.push((name.clone(), q.rel_frob_err));
-        match q.packed {
-            Some(p) => {
+        match (q.packed, q.transform_packed) {
+            (Some(p), _) => {
                 out.store.set_packed(&name, p);
                 packed_layers += 1;
             }
-            None => out.store.set(&name, q.w_hat),
+            // A method committing ONLY a transform-exact form is still a
+            // 1-bit commit the store executes — never silently dropped to
+            // the dense reconstruction.
+            (None, Some(t)) => {
+                out.store.set_transform_packed(&name, t);
+                packed_layers += 1;
+                transform_layers += 1;
+            }
+            (None, None) => out.store.set(&name, q.w_hat),
         }
     }
     let n = layers.len().max(1) as f64;
@@ -106,11 +123,91 @@ pub fn quantize_model(
         mean_rel_err: err_sum / n,
         mean_deploy_rel_err: deploy_err_sum / n,
         packed_layers,
+        transform_layers,
         resident_bytes: out.store.resident_weight_bytes(),
         dense_bytes: out.store.dense_weight_bytes(),
         wall_secs: start.elapsed().as_secs_f64(),
     };
     (out, report)
+}
+
+/// Quantize `components` of `model` with `method` and commit the
+/// **transform-domain exact** deploy form of every layer: the committed
+/// Haar-domain bitplane serves as
+/// [`crate::model::params::WeightRepr::TransformPacked`] (zero residual
+/// planes — see `quant::transform`). `variant` names the target variant
+/// for error reporting. A quantizable layer for which the method committed
+/// a packed form but NO transform form is a typed
+/// [`RegistryError::UnsupportedRepr`] — requesting exact serving from a
+/// direct-domain method must fail loudly, never silently fall back to the
+/// approximate repack. Layers the method leaves dense (the FP passthrough)
+/// commit dense: dense f32 is trivially exact.
+pub fn quantize_model_exact(
+    model: &MiniVla,
+    calib: &HashMap<String, CalibData>,
+    method: &dyn Binarizer,
+    components: &[Component],
+    threads: usize,
+    variant: &str,
+) -> Result<(MiniVla, QuantJobReport), RegistryError> {
+    let start = std::time::Instant::now();
+    let names = model.store.quantizable_layers(Some(components));
+    let results = parallel_map(names.len(), threads, |i| {
+        let name = &names[i];
+        let w = model.store.get(name);
+        let cd = calib
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| CalibData::identity(w.cols, model.store.component_of(name)));
+        let q = method.quantize(w, &cd);
+        let denom = w.frob_norm_sq().max(1e-30);
+        let deploy_err = match &q.transform_packed {
+            Some(t) => w.dist_sq(&t.dequantize()) / denom,
+            None => q.rel_frob_err,
+        };
+        (name.clone(), q, deploy_err)
+    });
+    let mut out = model.clone();
+    let mut stats = QuantStats::default();
+    let mut layers = Vec::with_capacity(results.len());
+    let mut err_sum = 0.0;
+    let mut deploy_err_sum = 0.0;
+    let mut transform_layers = 0usize;
+    for (name, q, deploy_err) in results {
+        stats.add(&q.stats);
+        err_sum += q.rel_frob_err;
+        deploy_err_sum += deploy_err;
+        layers.push((name.clone(), q.rel_frob_err));
+        match q.transform_packed {
+            Some(t) => {
+                out.store.set_transform_packed(&name, t);
+                transform_layers += 1;
+            }
+            None if q.packed.is_some() => {
+                return Err(RegistryError::UnsupportedRepr {
+                    variant: variant.to_string(),
+                    layer: name,
+                    wanted: "transform-exact",
+                });
+            }
+            None => out.store.set(&name, q.w_hat),
+        }
+    }
+    out.cfg.deploy_repr = crate::model::DeployRepr::TransformExact;
+    let n = layers.len().max(1) as f64;
+    let report = QuantJobReport {
+        method: method.name().to_string(),
+        layers,
+        stats,
+        mean_rel_err: err_sum / n,
+        mean_deploy_rel_err: deploy_err_sum / n,
+        packed_layers: transform_layers,
+        transform_layers,
+        resident_bytes: out.store.resident_weight_bytes(),
+        dense_bytes: out.store.dense_weight_bytes(),
+        wall_secs: start.elapsed().as_secs_f64(),
+    };
+    Ok((out, report))
 }
 
 /// The `quantize → register → serve` flow in one call: quantize `model`
@@ -128,6 +225,26 @@ pub fn quantize_into_registry(
     threads: usize,
 ) -> Result<QuantJobReport, RegistryError> {
     let (qm, report) = quantize_model(model, calib, method, components, threads);
+    registry.register(variant, Arc::new(qm))?;
+    Ok(report)
+}
+
+/// The transform-exact `quantize → register → serve` flow: quantize with
+/// [`quantize_model_exact`] (typed [`RegistryError::UnsupportedRepr`] if
+/// the method commits no transform-domain form) and publish the result
+/// under `variant` — the registry's `*-exact` twin of a `*-packed`
+/// variant, serving the committed Haar-domain bitplanes with zero residual
+/// planes.
+pub fn quantize_exact_into_registry(
+    registry: &ModelRegistry,
+    variant: &str,
+    model: &MiniVla,
+    calib: &HashMap<String, CalibData>,
+    method: &dyn Binarizer,
+    components: &[Component],
+    threads: usize,
+) -> Result<QuantJobReport, RegistryError> {
+    let (qm, report) = quantize_model_exact(model, calib, method, components, threads, variant)?;
     registry.register(variant, Arc::new(qm))?;
     Ok(report)
 }
@@ -228,6 +345,70 @@ mod tests {
             rep.mean_deploy_rel_err,
             rep.mean_rel_err
         );
+    }
+
+    #[test]
+    fn exact_commit_registers_transform_layers() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let registry = ModelRegistry::new();
+        let calib = HashMap::new();
+        let comps = [Component::Language];
+        let rep = quantize_exact_into_registry(
+            &registry,
+            "hbvla-exact",
+            &model,
+            &calib,
+            &HbVla::new(),
+            &comps,
+            2,
+        )
+        .unwrap();
+        assert!(rep.transform_layers > 0);
+        assert_eq!(rep.transform_layers, rep.packed_layers);
+        let served = registry.get("hbvla-exact").unwrap();
+        assert_eq!(served.cfg.deploy_repr, crate::model::DeployRepr::TransformExact);
+        assert_eq!(served.store.transform_packed_layer_count(), rep.transform_layers);
+        // Exact serving is exact: deploy error equals the error of the
+        // transform reconstruction itself, and it stays in the structured
+        // regime (below the 1-bit Gaussian floor).
+        assert!(rep.mean_deploy_rel_err < 0.25, "{rep:?}");
+        // The exact commit drops the residual-plane memory the repacked
+        // commit pays for the same method.
+        let (repacked, _) = quantize_model(&model, &calib, &HbVla::new(), &comps, 2);
+        assert!(
+            served.store.resident_weight_bytes() < repacked.store.resident_weight_bytes(),
+            "exact {} !< repacked {}",
+            served.store.resident_weight_bytes(),
+            repacked.store.resident_weight_bytes()
+        );
+    }
+
+    #[test]
+    fn exact_commit_from_direct_domain_method_is_typed_error() {
+        // RTN commits a packed form but no transform-domain form:
+        // requesting exact serving must surface UnsupportedRepr — not
+        // silently register the approximate repack.
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let registry = ModelRegistry::new();
+        let calib = HashMap::new();
+        let err = quantize_exact_into_registry(
+            &registry,
+            "rtn-exact",
+            &model,
+            &calib,
+            &Rtn::new(),
+            &[Component::Language],
+            2,
+        )
+        .unwrap_err();
+        match err {
+            RegistryError::UnsupportedRepr { variant, wanted, .. } => {
+                assert_eq!(variant, "rtn-exact");
+                assert_eq!(wanted, "transform-exact");
+            }
+            other => panic!("expected UnsupportedRepr, got {other:?}"),
+        }
+        assert!(registry.get("rtn-exact").is_none(), "failed flow must not register");
     }
 
     #[test]

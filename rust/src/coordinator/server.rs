@@ -42,12 +42,52 @@ pub struct ServeConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Deadline-aware admission control (see [`AdmissionControl`]).
+    pub admission: AdmissionControl,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_micros(500) }
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            admission: AdmissionControl::Off,
+        }
     }
+}
+
+/// Admission policy at `submit`: under overload, a deadline-bearing
+/// request that is predicted to out-wait its deadline is shed immediately
+/// with [`ServeError::Overloaded`] — bounding tail latency at the door
+/// instead of only triaging stale requests at dispatch (which still
+/// happens; admission is the earlier, cheaper gate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionControl {
+    /// Never shed at submit (deadline triage at dispatch only).
+    #[default]
+    Off,
+    /// Shed when queue depth × observed mean compute implies a miss:
+    /// est_wait = depth · mean_compute / (workers · mean_batch), using the
+    /// request's variant's compute statistics. Requests without deadlines
+    /// are always admitted; so is everything until the variant has served
+    /// `min_samples` requests (no shedding on cold stats).
+    DeadlineAware { min_samples: u64 },
+}
+
+/// The admission estimate: expected queue wait (µs) for a request arriving
+/// behind `depth` undispatched requests, given the observed mean per-batch
+/// compute, worker count and mean batch size. Mean compute is floored at
+/// 1 µs — compute is never free, and the floor keeps sub-µs models from
+/// disabling admission entirely. Pure, so the shed predicate is unit-
+/// testable without racing a live server.
+pub fn estimated_queue_wait_us(
+    depth: usize,
+    mean_compute_us: f64,
+    workers: usize,
+    mean_batch: f64,
+) -> f64 {
+    depth as f64 * mean_compute_us.max(1.0) / (workers.max(1) as f64 * mean_batch.max(1.0))
 }
 
 /// Which registered variant a request asks for.
@@ -124,6 +164,9 @@ pub enum ServeError {
     WorkerDropped,
     /// The request out-waited its deadline in the queue.
     DeadlineExceeded { queued: Duration },
+    /// Shed at submit by deadline-aware admission: the queue depth times
+    /// the observed mean compute predicted a deadline miss.
+    Overloaded { queue_depth: usize, estimated_wait: Duration },
     /// The observation's shape doesn't match the serving interface.
     InvalidObservation { got: String },
 }
@@ -137,6 +180,13 @@ impl std::fmt::Display for ServeError {
             ServeError::WorkerDropped => write!(f, "worker dropped the request"),
             ServeError::DeadlineExceeded { queued } => {
                 write!(f, "deadline exceeded after {}us in queue", queued.as_micros())
+            }
+            ServeError::Overloaded { queue_depth, estimated_wait } => {
+                write!(
+                    f,
+                    "overloaded: {queue_depth} queued requests imply ~{}us wait past the deadline",
+                    estimated_wait.as_micros()
+                )
             }
             ServeError::InvalidObservation { got } => {
                 write!(f, "observation does not match the serving interface ({got})")
@@ -189,8 +239,12 @@ impl ResponseHandle {
 /// Shutdown is explicit and idempotent; dropping the server shuts it down.
 pub struct PolicyServer {
     registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
     tx: Mutex<Option<Sender<Request>>>,
     next_seq: AtomicU64,
+    /// Requests submitted but not yet pulled into a dispatched batch —
+    /// the depth term of deadline-aware admission.
+    queue_depth: Arc<std::sync::atomic::AtomicUsize>,
     variant_stats: Arc<Mutex<HashMap<String, VariantStats>>>,
     batch_stats: Arc<Mutex<BatchStats>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -202,25 +256,66 @@ impl PolicyServer {
         let rx = Arc::new(Mutex::new(rx));
         let variant_stats = Arc::new(Mutex::new(HashMap::new()));
         let batch_stats = Arc::new(Mutex::new(BatchStats::new()));
+        let queue_depth = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let mut handles = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let registry = Arc::clone(&registry);
             let variant_stats = Arc::clone(&variant_stats);
             let batch_stats = Arc::clone(&batch_stats);
+            let queue_depth = Arc::clone(&queue_depth);
             let cfg = cfg.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(&cfg, &rx, &registry, &variant_stats, &batch_stats)
+                worker_loop(&cfg, &rx, &registry, &variant_stats, &batch_stats, &queue_depth)
             }));
         }
         PolicyServer {
             registry,
+            cfg,
             tx: Mutex::new(Some(tx)),
             next_seq: AtomicU64::new(0),
+            queue_depth,
             variant_stats,
             batch_stats,
             handles: Mutex::new(handles),
         }
+    }
+
+    /// Requests submitted but not yet pulled into a dispatched batch.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Deadline-aware admission gate: `Err(Overloaded)` when the observed
+    /// service rate predicts `deadline` cannot be met from the back of the
+    /// current queue. Conservative on cold stats — sheds nothing until the
+    /// variant has `min_samples` served requests.
+    fn admit(&self, variant: &str, deadline: Duration) -> Result<(), ServeError> {
+        let AdmissionControl::DeadlineAware { min_samples } = self.cfg.admission else {
+            return Ok(());
+        };
+        let depth = self.queue_depth.load(Ordering::Relaxed);
+        if depth == 0 {
+            return Ok(());
+        }
+        let mean_compute_us = {
+            let g = self.variant_stats.lock().unwrap();
+            match g.get(variant) {
+                Some(v) if v.compute.count() as u64 >= min_samples => v.compute.mean_us(),
+                _ => return Ok(()),
+            }
+        };
+        let mean_batch = self.batch_stats.lock().unwrap().mean();
+        let est_us = estimated_queue_wait_us(depth, mean_compute_us, self.cfg.workers, mean_batch);
+        if est_us > deadline.as_secs_f64() * 1e6 {
+            let mut g = self.variant_stats.lock().unwrap();
+            g.entry(variant.to_string()).or_default().admission_sheds += 1;
+            return Err(ServeError::Overloaded {
+                queue_depth: depth,
+                estimated_wait: Duration::from_micros(est_us as u64),
+            });
+        }
+        Ok(())
     }
 
     /// Resolve a selector against the registry at submit time, so unknown
@@ -268,6 +363,11 @@ impl PolicyServer {
                 ),
             });
         }
+        // Deadline-aware admission: shed at the door when the queue
+        // already implies a miss (cheaper than queueing + triaging).
+        if let Some(d) = req.deadline {
+            self.admit(&variant, d)?;
+        }
         let (reply_tx, reply_rx) = channel();
         let inner = Request {
             obs: req.obs,
@@ -277,10 +377,22 @@ impl PolicyServer {
             seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
             reply: reply_tx,
         };
-        let guard = self.tx.lock().unwrap();
-        match guard.as_ref() {
-            Some(tx) => tx.send(inner).map_err(|_| ServeError::Stopped)?,
-            None => return Err(ServeError::Stopped),
+        // Count the request BEFORE it can reach a worker: a worker that
+        // dequeued it must always observe our increment, or its decrement
+        // would saturate at 0 and leave the depth permanently inflated
+        // (spurious Overloaded sheds on an idle server). A failed send
+        // takes the increment back — the request never queued.
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let sent = {
+            let guard = self.tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(tx) => tx.send(inner).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(ServeError::Stopped);
         }
         Ok(ResponseHandle { rx: reply_rx })
     }
@@ -339,6 +451,7 @@ fn worker_loop(
     registry: &ModelRegistry,
     variant_stats: &Mutex<HashMap<String, VariantStats>>,
     batch_stats: &Mutex<BatchStats>,
+    queue_depth: &std::sync::atomic::AtomicUsize,
 ) {
     loop {
         // Collect a batch: block for the first request, then drain up to
@@ -362,6 +475,11 @@ fn worker_loop(
                 }
             }
         }
+        // These requests are now dispatching — they no longer queue behind
+        // the door for admission purposes. Every dequeued request's
+        // increment happened before its send (see `submit_async`), so the
+        // counter can never underflow here.
+        queue_depth.fetch_sub(batch.len(), Ordering::Relaxed);
         batch_stats.lock().unwrap().record(batch.len());
 
         // Group by variant, preserving arrival order within each group.
@@ -532,7 +650,7 @@ mod tests {
         let obs = sample_obs(&model);
         let server = Arc::new(PolicyServer::start(
             single_registry(model),
-            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(2) },
+            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(2), ..Default::default() },
         ));
         std::thread::scope(|s| {
             for _ in 0..4 {
@@ -561,7 +679,7 @@ mod tests {
         // assertion below deterministic on loaded CI runners.
         let server = PolicyServer::start(
             single_registry(model),
-            ServeConfig { workers: 1, max_batch: 8, max_wait: Duration::from_millis(500) },
+            ServeConfig { workers: 1, max_batch: 8, max_wait: Duration::from_millis(500), ..Default::default() },
         );
         let handles: Vec<ResponseHandle> = (0..8)
             .map(|_| server.submit_async(ServeRequest::new(obs.clone())).unwrap())
@@ -619,12 +737,73 @@ mod tests {
     }
 
     #[test]
+    fn admission_estimate_formula() {
+        // depth scales linearly; workers and batch size divide; the 1 µs
+        // compute floor keeps sub-µs models from disabling admission.
+        assert_eq!(estimated_queue_wait_us(0, 100.0, 2, 4.0), 0.0);
+        assert_eq!(estimated_queue_wait_us(8, 100.0, 2, 4.0), 100.0);
+        assert_eq!(estimated_queue_wait_us(8, 100.0, 1, 1.0), 800.0);
+        assert_eq!(estimated_queue_wait_us(4, 0.0, 1, 1.0), 4.0); // floor
+        assert_eq!(estimated_queue_wait_us(4, 100.0, 0, 0.0), 400.0); // clamped divisors
+    }
+
+    #[test]
+    fn admission_sheds_deadline_request_under_queue_pressure() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        // One worker; a huge batch window so that once a (deadline-free)
+        // request opens a batch, later submits observe queue depth ≥ 1
+        // deterministically for the whole window.
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait: Duration::from_millis(500),
+                admission: AdmissionControl::DeadlineAware { min_samples: 4 },
+            },
+        );
+        // Cold stats: deadline-bearing requests are admitted (and served)
+        // while fewer than min_samples requests have completed.
+        for _ in 0..4 {
+            server
+                .submit(ServeRequest::new(obs.clone()).with_deadline(Duration::from_secs(5)))
+                .unwrap();
+        }
+        // Warm stats, pending queue: the first async request holds a batch
+        // window open; an impossible deadline behind it must be shed at
+        // submit with Overloaded — before ever queueing.
+        let pending = server.submit_async(ServeRequest::new(obs.clone())).unwrap();
+        let err = server
+            .submit(ServeRequest::new(obs.clone()).with_deadline(Duration::from_nanos(1)))
+            .unwrap_err();
+        match err {
+            ServeError::Overloaded { queue_depth, estimated_wait } => {
+                assert!(queue_depth >= 1);
+                assert!(estimated_wait > Duration::from_nanos(1));
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // A lax deadline is still admitted under the same queue.
+        let ok = server.submit_async(
+            ServeRequest::new(obs.clone()).with_deadline(Duration::from_secs(30)),
+        );
+        assert!(ok.is_ok(), "lax deadline must be admitted");
+        pending.wait().unwrap();
+        ok.unwrap().wait().unwrap();
+        let per = server.variant_stats();
+        assert_eq!(per["dense"].admission_sheds, 1);
+        assert!(per["dense"].summary().contains("sheds=1"));
+        server.shutdown();
+    }
+
+    #[test]
     fn deadline_exceeded_is_reported() {
         let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
         let obs = sample_obs(&model);
         let server = PolicyServer::start(
             single_registry(model),
-            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(1) },
+            ServeConfig { workers: 1, max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
         );
         // A 1 ns deadline always expires in the queue.
         let err = server

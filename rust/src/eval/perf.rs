@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::rollout::{eval_tasks, ObsMode, RolloutConfig};
-use crate::coordinator::scheduler::quantize_model;
+use crate::coordinator::scheduler::{quantize_model, quantize_model_exact};
 use crate::coordinator::server::{PolicyServer, ServeConfig, ServeRequest};
 use crate::eval::harness::{build_testbed, paper_components};
 use crate::methods::HbVla;
@@ -52,6 +52,17 @@ pub struct PerfReport {
     /// Batched-serve forward throughput per batch size (dense vs packed,
     /// sequential per-request loop vs `features_batch`/`decode_batch`).
     pub batched_serve: Vec<BatchServeRow>,
+    /// HBVLA deploy-form comparison — residual-plane repack
+    /// (`hbvla-packed`) vs transform-domain exact serving (`hbvla-exact`)
+    /// of the same checkpoint: end-to-end tokens/s, resident weight bytes
+    /// (exact drops the residual planes), and closed-form action MSE
+    /// against the FP policy.
+    pub hbvla_repacked_tok_per_sec: f64,
+    pub hbvla_exact_tok_per_sec: f64,
+    pub hbvla_repacked_bytes: usize,
+    pub hbvla_exact_bytes: usize,
+    pub hbvla_repacked_action_mse: f64,
+    pub hbvla_exact_action_mse: f64,
 }
 
 /// One row of the batched-serve table: tokens/s at a given batch size for
@@ -76,6 +87,7 @@ impl PerfReport {
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
              {}\n\
              {}\n\
+             {}\n\
              {}",
             self.quant_layers_per_sec,
             self.quant_weights_per_sec / 1e6,
@@ -90,7 +102,31 @@ impl PerfReport {
             self.dense_gemm_gflops,
             self.e2e_table(),
             self.act_table(),
-            self.batched_serve_table()
+            self.batched_serve_table(),
+            self.exact_table()
+        )
+    }
+
+    /// The HBVLA exact-vs-repacked table: serving the committed Haar-domain
+    /// bitplanes (transform on the activation, zero residual planes) vs
+    /// re-packing the reconstruction with residual planes. Exact serving
+    /// should DROP memory — the residual planes existed only to absorb
+    /// reconstruction error the exact form doesn't have.
+    pub fn exact_table(&self) -> String {
+        let mem_ratio =
+            self.hbvla_repacked_bytes as f64 / self.hbvla_exact_bytes.max(1) as f64;
+        format!(
+            "hbvla deploy form (repacked residual planes vs transform-domain exact):\n\
+             \x20 form      tokens/s   resident bytes   action MSE vs FP\n\
+             \x20 repacked  {:>8.0}   {:>14}   {:>16.6}\n\
+             \x20 exact     {:>8.0}   {:>14}   {:>16.6}   (×{:.2} less memory)\n",
+            self.hbvla_repacked_tok_per_sec,
+            self.hbvla_repacked_bytes,
+            self.hbvla_repacked_action_mse,
+            self.hbvla_exact_tok_per_sec,
+            self.hbvla_exact_bytes,
+            self.hbvla_exact_action_mse,
+            mem_ratio
         )
     }
 
@@ -287,6 +323,64 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         .map(|&batch| batched_serve_row(&dense_model, &packed_model, &obs, batch))
         .collect();
 
+    // --- HBVLA deploy forms: residual-plane repack vs transform-exact ---
+    let (hb_repacked, _) =
+        quantize_model(&tb.model, &tb.calib, &HbVla::new(), &paper_components(), threads);
+    let (hb_exact, _) = quantize_model_exact(
+        &tb.model,
+        &tb.calib,
+        &HbVla::new(),
+        &paper_components(),
+        threads,
+        "hbvla-exact",
+    )
+    .expect("HBVLA commits the transform-exact form");
+    let time_fw = |model: &MiniVla| -> f64 {
+        let t = Instant::now();
+        for _ in 0..fw_iters {
+            let f = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+            std::hint::black_box(f);
+        }
+        toks / t.elapsed().as_secs_f64()
+    };
+    let hbvla_repacked_tok_per_sec = time_fw(&hb_repacked);
+    let hbvla_exact_tok_per_sec = time_fw(&hb_exact);
+    // Closed-form action MSE against the FP policy over a spread of
+    // observations (Chunk head decode is deterministic).
+    let probe_obs: Vec<Observation> = (0..8)
+        .map(|k| {
+            let mut r = Rng::with_stream(seed, 0xE0 + k);
+            let scene = tasks[k as usize % tasks.len()].instantiate(&mut r);
+            observe(
+                &scene,
+                tasks[k as usize % tasks.len()].stages[0].instr(),
+                100,
+                &tb.model,
+                &ObsParams::clean(),
+                &mut r,
+            )
+        })
+        .collect();
+    let action_mse = |model: &MiniVla| -> f64 {
+        let mut se = 0.0f64;
+        let mut n = 0usize;
+        for (k, o) in probe_obs.iter().enumerate() {
+            let fq = model.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+            let ff = tb.model.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+            let aq = model.decode(&fq, &mut Rng::with_stream(0xAC, k as u64));
+            let af = tb.model.decode(&ff, &mut Rng::with_stream(0xAC, k as u64));
+            for (ca, cb) in aq.iter().zip(&af) {
+                for (a, b) in ca.iter().zip(cb) {
+                    se += ((a - b) as f64).powi(2);
+                    n += 1;
+                }
+            }
+        }
+        se / n.max(1) as f64
+    };
+    let hbvla_repacked_action_mse = action_mse(&hb_repacked);
+    let hbvla_exact_action_mse = action_mse(&hb_exact);
+
     PerfReport {
         quant_layers_per_sec: total_layers as f64 / quant_secs,
         quant_weights_per_sec: total_weights as f64 / quant_secs,
@@ -307,6 +401,12 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         e2e_dense_weight_bytes: dense_model.store.resident_weight_bytes(),
         e2e_packed_weight_bytes: packed_model.store.resident_weight_bytes(),
         batched_serve,
+        hbvla_repacked_tok_per_sec,
+        hbvla_exact_tok_per_sec,
+        hbvla_repacked_bytes: hb_repacked.store.resident_weight_bytes(),
+        hbvla_exact_bytes: hb_exact.store.resident_weight_bytes(),
+        hbvla_repacked_action_mse,
+        hbvla_exact_action_mse,
     }
 }
 

@@ -57,6 +57,47 @@ pub fn haar_inv_vec(c: &[f32], m: usize) -> Vec<f32> {
     w
 }
 
+/// Activation-side forward for transform-domain serving: apply the
+/// *synthesis* matrix B (the map [`haar_inv_vec`] realizes on
+/// coefficients) to an activation vector x of original length m.
+///
+/// Why B and not the analysis kernels: the committed Haar-domain weights C
+/// reconstruct as Ŵ = C·B (each row synthesized by [`haar_inv_vec`]), so
+/// Ŵ·x = C·(B·x) — serving the bitplanes exactly needs z = B·x on the
+/// activation, which is the *unnormalized* pairwise sum/difference
+///   z_k = x_{2k} + x_{2k+1},   z_{J+k} = x_{2k} − x_{2k+1}
+/// (2× the [`haar_fwd_vec`] pairs), with an odd leftover carried at
+/// weight 1: z_{J−1} = x_{m−1}, z_{2J−1} = 0. The defining identity
+/// ⟨haar_act_fwd_vec(x), c⟩ = ⟨x, haar_inv_vec(c, m)⟩ is pinned in tests
+/// (unit + proptests).
+pub fn haar_act_fwd_vec(x: &[f32]) -> Vec<f32> {
+    let m = x.len();
+    let j = half_len(m);
+    let mut out = vec![0.0f32; 2 * j];
+    haar_act_fwd_into(x, &mut out);
+    out
+}
+
+/// In-place form of [`haar_act_fwd_vec`]: writes z = B·x into `out`
+/// (length 2·⌈m/2⌉). The hot-loop form — the serving path fuses this with
+/// the permuted gather and, under W1A8, the activation-scale sweep.
+#[inline]
+pub fn haar_act_fwd_into(x: &[f32], out: &mut [f32]) {
+    let m = x.len();
+    let j = half_len(m);
+    debug_assert_eq!(out.len(), 2 * j);
+    for k in 0..m / 2 {
+        let a = x[2 * k];
+        let b = x[2 * k + 1];
+        out[k] = a + b;
+        out[j + k] = a - b;
+    }
+    if m % 2 == 1 {
+        out[j - 1] = x[m - 1];
+        out[2 * j - 1] = 0.0;
+    }
+}
+
 /// Row-wise Haar (Eq. 46): transform each row of W along the column axis.
 /// Output shape: rows × 2·⌈cols/2⌉.
 pub fn haar_rows(w: &Matrix) -> Matrix {
@@ -193,6 +234,39 @@ mod tests {
         let a = haar_cols(&w);
         let b = haar_rows(&w.transpose()).transpose();
         assert!(a.dist_sq(&b) < 1e-10);
+    }
+
+    #[test]
+    fn act_fwd_is_adjoint_of_synthesis() {
+        // ⟨B·x, c⟩ = ⟨x, haar_inv(c)⟩ for every (x, c) — the identity that
+        // makes transform-domain serving exact: Ŵx = C·(B·x).
+        let mut rng = Rng::new(37);
+        for m in [1usize, 2, 5, 7, 64, 65, 70, 128] {
+            let x: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+            let j = half_len(m);
+            let c: Vec<f32> = (0..2 * j).map(|_| rng.gauss() as f32).collect();
+            let z = haar_act_fwd_vec(&x);
+            let w = haar_inv_vec(&c, m);
+            let lhs: f64 = z.iter().zip(&c).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let rhs: f64 = x.iter().zip(&w).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            assert!((lhs - rhs).abs() < 1e-4 * (1.0 + lhs.abs()), "m={m}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn act_fwd_doubles_fwd_pairs_and_carries_odd_tail_unscaled() {
+        // Even pairs: B·x = 2·haar_fwd(x); the odd leftover is carried at
+        // weight 1 (matching the synthesis w_{m−1} = c_{J−1}, NOT 2×).
+        let x = [4.0f32, 2.0, -1.0, 3.0, 5.0];
+        let z = haar_act_fwd_vec(&x);
+        let f = haar_fwd_vec(&x);
+        let j = half_len(x.len());
+        for k in 0..x.len() / 2 {
+            assert_eq!(z[k], 2.0 * f[k]);
+            assert_eq!(z[j + k], 2.0 * f[j + k]);
+        }
+        assert_eq!(z[j - 1], 5.0);
+        assert_eq!(z[2 * j - 1], 0.0);
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //! `--smoke` (tiny budget for CI).
 //!
 //! `serve` flags: `--variant <name>` (dense | rtn-packed | hbvla-packed |
-//! rtn-packed-a8 | hbvla-packed-a8), `--act-precision f32|int8` (maps a
-//! packed variant to its W1A8 twin), `--workers N`, `--max-batch N`,
-//! `--max-wait-us U`, `--requests N` — the demo registers the dense
-//! checkpoint, both packed commits, and their INT8-activation twins
+//! hbvla-exact | rtn-packed-a8 | hbvla-packed-a8), `--act-precision
+//! f32|int8` (maps a packed variant to its W1A8 twin), `--workers N`,
+//! `--max-batch N`, `--max-wait-us U`, `--requests N` — the demo registers
+//! the dense checkpoint, both packed commits, the transform-domain exact
+//! HBVLA commit (`hbvla-exact`: serves the committed Haar-domain bitplanes
+//! with zero residual planes), and the INT8-activation twins
 //! (quantize → register → serve) and routes every request to the chosen
 //! one.
 
@@ -135,10 +137,34 @@ fn main() {
                     .expect("register a8 twin");
                 println!("registered {a8:<16} (W1A8: int8 activations on the same packed weights)");
             }
+            // Transform-domain exact twin: serve the committed Haar-domain
+            // bitplanes directly (y = C·haar(Pᵀx)), zero residual planes.
+            {
+                let method = hbvla::methods::by_name("hbvla").unwrap();
+                let rep = hbvla::coordinator::quantize_exact_into_registry(
+                    &registry,
+                    "hbvla-exact",
+                    &tb.model,
+                    &tb.calib,
+                    method.as_ref(),
+                    &hbvla::eval::paper_components(),
+                    budget.threads,
+                )
+                .expect("register exact variant");
+                println!(
+                    "registered {:<13} {} transform-exact layers, ×{:.1} smaller, \
+                     deploy rel err {:.4} (zero residual planes)",
+                    "hbvla-exact",
+                    rep.transform_layers,
+                    rep.realized_compression(),
+                    rep.mean_deploy_rel_err
+                );
+            }
             let cfg = ServeConfig {
                 workers: args.usize_or("workers", 2),
                 max_batch: args.usize_or("max-batch", 8),
                 max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 500)),
+                ..Default::default()
             };
             // `--variant` picks the served variant; the pre-registry
             // `--method` spelling still works — preregistered methods map
@@ -276,7 +302,8 @@ fn main() {
             eprintln!(
                 "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
                  [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
-                 serve flags: [--variant dense|rtn-packed|hbvla-packed|rtn-packed-a8|hbvla-packed-a8] \
+                 serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
+                 rtn-packed-a8|hbvla-packed-a8] \
                  [--act-precision f32|int8] [--workers N] \
                  [--max-batch N] [--max-wait-us U] [--requests N]"
             );

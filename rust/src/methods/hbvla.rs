@@ -20,6 +20,7 @@ use crate::quant::group::{quantize_matrix_banded, GroupSpec, QuantStats};
 use crate::quant::packed::PackedBits;
 use crate::quant::permute::{pairing_and_chaining, permute_cols, unpermute_cols, NormKind};
 use crate::quant::saliency::{fill_salient_adjacent, select_salient};
+use crate::quant::transform::{transform_group_size, SalientCols, TransformPacked};
 use crate::tensor::matrix::Matrix;
 
 /// Configuration of the Haar-hybrid quantizer family.
@@ -146,11 +147,43 @@ impl Binarizer for HbVla {
             w_hat.assign_cols(&part.salient, &cur.add(&q_sal));
         }
 
-        // Deploy commitment: the inverse-Haar/-permutation reconstruction
-        // is multi-level per group, so the packed form uses residual
-        // bitplanes until it captures Ŵ (see quant::packed::DEPLOY_*).
+        // Deploy commitment, two forms:
+        //
+        // (1) Repacked (`hbvla-packed`): the inverse-Haar/-permutation
+        //     reconstruction is multi-level per group, so the packed form
+        //     uses residual bitplanes until it captures Ŵ to tolerance
+        //     (see quant::packed::DEPLOY_*) — approximate serving.
         let packed = PackedBits::pack_deploy(&w_hat);
-        QuantizedLayer::new(w, w_hat, stats).with_packed(packed)
+
+        // (2) Transform-exact (`hbvla-exact`): commit a SINGLE bitplane in
+        //     the Haar domain itself — quantize the same transformed
+        //     coefficients U with a PackedBits-expressible grouping
+        //     (contiguous per-group (α, μ), boundaries on the band seam) —
+        //     and serve it as y = C·haar(Pᵀx). Exact by construction: the
+        //     plane IS the commitment, so there is no reconstruction error
+        //     for residual planes to absorb. Salient columns ride the
+        //     side-channel as the ORDER-2 residual binarization of
+        //     W − Ŵ_nonsal at those columns (Eq. 15–17's high-fidelity
+        //     salient path, committed packed — also exact by
+        //     construction). Committing both forms unconditionally keeps
+        //     the Binarizer interface pure and lets one quantize publish
+        //     either variant; the extra work is minor next to the O(m²·d)
+        //     pairing step above.
+        let tbits = PackedBits::pack(&u, transform_group_size(j));
+        let perm32: Vec<u32> = pi.iter().map(|&p| p as u32).collect();
+        let salient_sc = if part.salient.is_empty() {
+            None
+        } else {
+            let nonsal_exact = unpermute_cols(&haar_rows_inv(&tbits.dequantize(), w.cols), &pi);
+            let resid = w.sub(&nonsal_exact).select_cols(&part.salient);
+            Some(SalientCols {
+                idx: part.salient.iter().map(|&c| c as u32).collect(),
+                bits: PackedBits::pack_residual(&resid, crate::quant::packed::DEPLOY_GROUP_SIZE, 2, 0.0),
+            })
+        };
+        let transform = TransformPacked::new(w.cols, perm32, tbits, salient_sc);
+
+        QuantizedLayer::new(w, w_hat, stats).with_packed(packed).with_transform_packed(transform)
     }
 }
 
@@ -244,6 +277,41 @@ mod tests {
         };
         assert!(err(&q_aware, &hr) <= err(&q_plain, &hr) * 1.05,
             "{} vs {}", err(&q_aware, &hr), err(&q_plain, &hr));
+    }
+
+    #[test]
+    fn transform_commit_single_plane_and_forward_exact() {
+        let mut rng = Rng::new(117);
+        let m = 96;
+        let w = Matrix::from_fn(48, m, |_, j| {
+            (if j % 2 == 0 { 1.2 } else { -1.2 }) + 0.3 * rng.gauss() as f32
+        });
+        let calib = calib_for(m, &mut rng);
+        let q = HbVla::new().quantize(&w, &calib);
+        let t = q.transform_packed.expect("HBVLA must commit the transform-exact form");
+        // Zero residual planes: the Haar-domain commitment is one plane.
+        assert_eq!(t.bits.order(), 1);
+        assert_eq!(t.dims(), (48, m));
+        // The transform forward equals the dense product of its own
+        // offline reconstruction within float roundoff.
+        let deq = t.dequantize();
+        let x: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+        let y = t.matvec_owned(&x);
+        let y_ref = crate::tensor::ops::matvec(&deq, &x);
+        for r in 0..48 {
+            assert!((y[r] - y_ref[r]).abs() < 1e-3 * (1.0 + y_ref[r].abs()), "row {r}");
+        }
+        // And the exact reconstruction stays in the same accuracy regime
+        // as the analysis reconstruction (both far below the 1-bit
+        // Gaussian floor on structured weights).
+        let rel = w.dist_sq(&deq) / w.frob_norm_sq();
+        assert!(rel < 0.25, "transform-exact reconstruction degraded: {rel}");
+        // Exact serving drops memory vs the residual-plane repack whenever
+        // the repack needed more than one plane.
+        let p = q.packed.expect("repacked form");
+        if p.order() > 1 {
+            assert!(t.storage_bytes() < p.storage_bytes());
+        }
     }
 
     #[test]

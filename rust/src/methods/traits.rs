@@ -3,6 +3,7 @@
 
 use crate::quant::group::QuantStats;
 use crate::quant::packed::PackedBits;
+use crate::quant::transform::TransformPacked;
 use crate::tensor::matrix::Matrix;
 
 /// Which VLA component a layer belongs to — drives method-specific policy
@@ -78,6 +79,13 @@ pub struct QuantizedLayer {
     /// rollouts execute on the 1-bit kernels. `None` means the layer is
     /// committed dense (e.g. the FP passthrough).
     pub packed: Option<PackedBits>,
+    /// Transform-domain exact deploy representation, when the method
+    /// quantizes in a transform domain and commits the bitplane it
+    /// actually produced there ([`TransformPacked`]: permutation + Haar
+    /// metadata + salient side-channel + ONE Haar-domain plane). Serving
+    /// this form executes y = C·haar(Pᵀx) — exact by construction, no
+    /// residual planes. `None` for direct-domain methods (RTN et al.).
+    pub transform_packed: Option<TransformPacked>,
     /// Storage accounting (bits per weight ≈ 1.08 for the paper methods).
     pub stats: QuantStats,
     /// Relative Frobenius error ‖W − Ŵ‖²_F / ‖W‖²_F.
@@ -88,13 +96,20 @@ impl QuantizedLayer {
     pub fn new(w: &Matrix, w_hat: Matrix, stats: QuantStats) -> Self {
         let denom = w.frob_norm_sq().max(1e-30);
         let rel = w.dist_sq(&w_hat) / denom;
-        QuantizedLayer { w_hat, packed: None, stats, rel_frob_err: rel }
+        QuantizedLayer { w_hat, packed: None, transform_packed: None, stats, rel_frob_err: rel }
     }
 
     /// Attach the packed deploy form of this layer.
     pub fn with_packed(mut self, p: PackedBits) -> Self {
         assert_eq!((p.rows, p.cols), (self.w_hat.rows, self.w_hat.cols), "packed shape mismatch");
         self.packed = Some(p);
+        self
+    }
+
+    /// Attach the transform-domain exact deploy form of this layer.
+    pub fn with_transform_packed(mut self, t: TransformPacked) -> Self {
+        assert_eq!(t.dims(), (self.w_hat.rows, self.w_hat.cols), "transform shape mismatch");
+        self.transform_packed = Some(t);
         self
     }
 }

@@ -10,6 +10,33 @@
 
 use crate::quant::packed::ActPrecision;
 
+/// Which committed deploy form a quantized variant's store holds — a
+/// descriptive policy record (the per-layer [`crate::model::params::WeightRepr`]
+/// is the execution truth), carried so registries, telemetry and the serve
+/// demo can report what a variant executes without inspecting layers.
+/// Like [`ActPrecision`], this is NOT part of the serving interface:
+/// `hbvla-packed` and `hbvla-exact` stay [`VlaConfig::serve_compatible`]
+/// behind one endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeployRepr {
+    /// Residual-bitplane re-pack of the method's reconstruction
+    /// (approximate to the deploy tolerance) — or a dense/FP store.
+    #[default]
+    Repacked,
+    /// Transform-domain exact serving: the committed Haar-domain plane
+    /// executes as y = C·haar(Pᵀx), zero residual planes.
+    TransformExact,
+}
+
+impl DeployRepr {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeployRepr::Repacked => "repacked",
+            DeployRepr::TransformExact => "transform-exact",
+        }
+    }
+}
+
 /// Which action decoder the policy uses — the axis distinguishing
 /// OpenVLA / OpenVLA-OFT / CogACT in the paper's tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,6 +106,10 @@ pub struct VlaConfig {
     /// [`crate::model::MiniVla::with_act_precision`], never this field
     /// alone on a built model.
     pub act_precision: ActPrecision,
+    /// Deploy-form policy record (see [`DeployRepr`]): which committed
+    /// representation the store's quantized layers hold. Descriptive, not
+    /// an interface property.
+    pub deploy_repr: DeployRepr,
 }
 
 impl VlaConfig {
@@ -103,6 +134,7 @@ impl VlaConfig {
             head: HeadKind::Chunk,
             seed: 0xBEEF,
             act_precision: ActPrecision::F32,
+            deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
     }
@@ -129,6 +161,7 @@ impl VlaConfig {
             head: HeadKind::Chunk,
             seed: 7,
             act_precision: ActPrecision::F32,
+            deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
     }
@@ -145,6 +178,11 @@ impl VlaConfig {
 
     pub fn with_act_precision(mut self, p: ActPrecision) -> Self {
         self.act_precision = p;
+        self
+    }
+
+    pub fn with_deploy_repr(mut self, r: DeployRepr) -> Self {
+        self.deploy_repr = r;
         self
     }
 
@@ -223,6 +261,18 @@ mod tests {
         assert_eq!(a.act_precision, ActPrecision::F32);
         assert_eq!(b.act_precision, ActPrecision::Int8);
         // W1A32 and W1A8 twins can serve behind one endpoint.
+        assert!(a.serve_compatible(&b));
+        assert!(b.serve_compatible(&a));
+    }
+
+    #[test]
+    fn deploy_repr_is_policy_not_interface() {
+        let a = VlaConfig::tiny(HeadKind::Chunk);
+        let b = a.clone().with_deploy_repr(DeployRepr::TransformExact);
+        assert_eq!(a.deploy_repr, DeployRepr::Repacked);
+        assert_eq!(b.deploy_repr, DeployRepr::TransformExact);
+        assert_eq!(b.deploy_repr.label(), "transform-exact");
+        // Repacked and transform-exact variants share one endpoint.
         assert!(a.serve_compatible(&b));
         assert!(b.serve_compatible(&a));
     }

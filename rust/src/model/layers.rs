@@ -38,6 +38,13 @@ pub fn linear(store: &ParamStore, name: &str, x: &Matrix) -> Matrix {
             ActPrecision::F32 => p.matmul(x),
             ActPrecision::Int8 => p.matmul_i8(x),
         },
+        // Transform-domain exact serving: per-token-column gather+Haar on
+        // the activations, then the same packed GEMM against the committed
+        // Haar-domain plane (+ salient side-channel).
+        WeightRepr::TransformPacked(t) => match store.act_precision() {
+            ActPrecision::F32 => t.matmul(x),
+            ActPrecision::Int8 => t.matmul_i8(x),
+        },
     }
 }
 
@@ -49,6 +56,10 @@ pub fn linear_vec(store: &ParamStore, name: &str, x: &[f32]) -> Vec<f32> {
         WeightRepr::Packed(p) => match store.act_precision() {
             ActPrecision::F32 => p.matvec_owned(x),
             ActPrecision::Int8 => p.matvec_i8_owned(x),
+        },
+        WeightRepr::TransformPacked(t) => match store.act_precision() {
+            ActPrecision::F32 => t.matvec_owned(x),
+            ActPrecision::Int8 => t.matvec_i8_owned(x),
         },
     }
 }

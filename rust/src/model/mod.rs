@@ -6,7 +6,7 @@ pub mod layers;
 pub mod params;
 pub mod vla;
 
-pub use config::{HeadKind, VlaConfig};
+pub use config::{DeployRepr, HeadKind, VlaConfig};
 pub use crate::quant::packed::ActPrecision;
 pub use params::{ParamStore, WeightRepr};
 pub use vla::{content_codes, instr_index, MiniVla, ObsInput, N_CONTENT_IDS};

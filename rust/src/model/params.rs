@@ -32,6 +32,7 @@ use std::io::{Read, Write};
 
 use crate::methods::traits::Component;
 use crate::quant::packed::{ActPrecision, PackedBits};
+use crate::quant::transform::TransformPacked;
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -70,8 +71,14 @@ pub mod channels {
 pub enum WeightRepr {
     /// Dense f32 master weights (FP layers, pre-quantization).
     Dense(Matrix),
-    /// Packed 1-bit signs + per-group scales — the deploy representation.
+    /// Packed 1-bit signs + per-group scales (possibly with residual
+    /// bitplanes re-packing a reconstruction) — the approximate deploy
+    /// representation.
     Packed(PackedBits),
+    /// Transform-domain exact representation: the Haar-domain plane the
+    /// method committed plus permutation + salient side-channel; the
+    /// forward executes y = C·haar(Pᵀx) — exact, zero residual planes.
+    TransformPacked(TransformPacked),
 }
 
 impl WeightRepr {
@@ -80,6 +87,7 @@ impl WeightRepr {
         match self {
             WeightRepr::Dense(m) => (m.rows, m.cols),
             WeightRepr::Packed(p) => (p.rows, p.cols),
+            WeightRepr::TransformPacked(t) => t.dims(),
         }
     }
 
@@ -88,11 +96,19 @@ impl WeightRepr {
         match self {
             WeightRepr::Dense(m) => m.rows * m.cols * 4,
             WeightRepr::Packed(p) => p.storage_bytes(),
+            WeightRepr::TransformPacked(t) => t.storage_bytes(),
         }
     }
 
+    /// Whether the layer executes on 1-bit sign planes (either the
+    /// repacked or the transform-exact form).
     pub fn is_packed(&self) -> bool {
-        matches!(self, WeightRepr::Packed(_))
+        matches!(self, WeightRepr::Packed(_) | WeightRepr::TransformPacked(_))
+    }
+
+    /// Specifically the transform-domain exact form.
+    pub fn is_transform_packed(&self) -> bool {
+        matches!(self, WeightRepr::TransformPacked(_))
     }
 }
 
@@ -157,7 +173,7 @@ impl ParamStore {
     pub fn get(&self, name: &str) -> &Matrix {
         match self.repr(name) {
             WeightRepr::Dense(m) => m,
-            WeightRepr::Packed(_) => {
+            WeightRepr::Packed(_) | WeightRepr::TransformPacked(_) => {
                 panic!("param {name} is packed; use repr()/dense_view() instead of get()")
             }
         }
@@ -170,6 +186,7 @@ impl ParamStore {
         match self.repr(name) {
             WeightRepr::Dense(m) => Cow::Borrowed(m),
             WeightRepr::Packed(p) => Cow::Owned(p.dequantize()),
+            WeightRepr::TransformPacked(t) => Cow::Owned(t.dequantize()),
         }
     }
 
@@ -180,6 +197,10 @@ impl ParamStore {
 
     pub fn is_packed(&self, name: &str) -> bool {
         self.repr(name).is_packed()
+    }
+
+    pub fn is_transform_packed(&self, name: &str) -> bool {
+        self.repr(name).is_transform_packed()
     }
 
     pub fn set(&mut self, name: &str, m: Matrix) {
@@ -197,10 +218,19 @@ impl ParamStore {
         self.params[i].repr = WeightRepr::Packed(p);
     }
 
+    /// Commit a transform-domain exact representation for a layer.
+    pub fn set_transform_packed(&mut self, name: &str, t: TransformPacked) {
+        let i = self.idx(name);
+        let old = self.params[i].repr.dims();
+        assert_eq!(old, t.dims(), "shape change for {name}");
+        self.params[i].repr = WeightRepr::TransformPacked(t);
+    }
+
     pub fn set_repr(&mut self, name: &str, repr: WeightRepr) {
         match repr {
             WeightRepr::Dense(m) => self.set(name, m),
             WeightRepr::Packed(p) => self.set_packed(name, p),
+            WeightRepr::TransformPacked(t) => self.set_transform_packed(name, t),
         }
     }
 
@@ -287,21 +317,37 @@ impl ParamStore {
     pub fn dequantize_all(&mut self) -> usize {
         let mut n = 0;
         for p in self.params.iter_mut() {
-            if let WeightRepr::Packed(pb) = &p.repr {
-                p.repr = WeightRepr::Dense(pb.dequantize());
-                n += 1;
+            match &p.repr {
+                WeightRepr::Packed(pb) => {
+                    p.repr = WeightRepr::Dense(pb.dequantize());
+                    n += 1;
+                }
+                WeightRepr::TransformPacked(t) => {
+                    p.repr = WeightRepr::Dense(t.dequantize());
+                    n += 1;
+                }
+                WeightRepr::Dense(_) => {}
             }
         }
         n
     }
 
+    /// Layers committed in the transform-domain exact representation.
+    pub fn transform_packed_layer_count(&self) -> usize {
+        self.params.iter().filter(|p| p.repr.is_transform_packed()).count()
+    }
+
     /// Serialize to a binary format (magic, count, then per-param: name,
     /// component byte, quantizable byte, repr tag, payload). Dense layers
     /// store rows/cols + f32 LE data; packed layers store the full
-    /// bitplane chain bit-exactly ([`PackedBits::write_to`]).
+    /// bitplane chain bit-exactly ([`PackedBits::write_to`]);
+    /// transform-packed layers (tag 2, format v3 `HBVLAPS3`) store
+    /// permutation + salient side-channel + the Haar-domain plane
+    /// bit-exactly ([`TransformPacked::write_to`]). v1/v2 stores still
+    /// load; v3 is always written.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"HBVLAPS2")?;
+        f.write_all(b"HBVLAPS3")?;
         f.write_all(&(self.params.len() as u32).to_le_bytes())?;
         for p in &self.params {
             let nb = p.name.as_bytes();
@@ -327,6 +373,10 @@ impl ParamStore {
                     f.write_all(&[1u8])?;
                     pb.write_to(&mut f)?;
                 }
+                WeightRepr::TransformPacked(t) => {
+                    f.write_all(&[2u8])?;
+                    t.write_to(&mut f)?;
+                }
             }
         }
         Ok(())
@@ -336,9 +386,12 @@ impl ParamStore {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        let v2 = match &magic {
-            b"HBVLAPS2" => true,
-            b"HBVLAPS1" => false,
+        // Version gates: v1 has no repr tag (all dense), v2 adds tags 0/1
+        // (dense/packed), v3 adds tag 2 (transform-packed).
+        let version = match &magic {
+            b"HBVLAPS3" => 3u8,
+            b"HBVLAPS2" => 2,
+            b"HBVLAPS1" => 1,
             _ => return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic")),
         };
         let mut u32buf = [0u8; 4];
@@ -361,13 +414,19 @@ impl ParamStore {
                 _ => Component::ActionHead,
             };
             let quantizable = two[1] != 0;
-            let tag = if v2 {
+            let tag = if version >= 2 {
                 let mut t = [0u8; 1];
                 f.read_exact(&mut t)?;
                 t[0]
             } else {
                 0
             };
+            if tag == 2 && version < 3 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "transform repr tag in pre-v3 store",
+                ));
+            }
             match tag {
                 0 => {
                     f.read_exact(&mut u32buf)?;
@@ -385,6 +444,10 @@ impl ParamStore {
                 1 => {
                     let pb = PackedBits::read_from(&mut f)?;
                     store.insert_repr(&name, component, quantizable, WeightRepr::Packed(pb));
+                }
+                2 => {
+                    let t = TransformPacked::read_from(&mut f)?;
+                    store.insert_repr(&name, component, quantizable, WeightRepr::TransformPacked(t));
                 }
                 _ => {
                     return Err(std::io::Error::new(
@@ -517,6 +580,83 @@ mod tests {
         assert_eq!(d1.data, d2.data, "packed round-trip must be bit-exact");
         assert_eq!(loaded.resident_weight_bytes(), s.resident_weight_bytes());
         assert!(loaded.resident_weight_bytes() < loaded.dense_weight_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Build a transform-packed repr by the same pipeline HBVLA commits.
+    fn sample_transform(rows: usize, cols: usize, rng: &mut Rng) -> TransformPacked {
+        use crate::quant::permute::{pairing_and_chaining, permute_cols, NormKind};
+        let w = Matrix::gauss(rows, cols, 1.0, rng);
+        let pi = pairing_and_chaining(&w, None, NormKind::L2);
+        let u = crate::haar::haar_rows(&permute_cols(&w, &pi));
+        let bits = PackedBits::pack(&u, crate::quant::transform::transform_group_size(cols.div_ceil(2)));
+        TransformPacked::new(cols, pi.iter().map(|&p| p as u32).collect(), bits, None)
+    }
+
+    #[test]
+    fn transform_store_roundtrip_v3_bit_exact() {
+        let mut rng = Rng::new(170);
+        let mut s = ParamStore::new();
+        s.insert("t.w", Component::Language, true, Matrix::gauss(6, 70, 1.0, &mut rng));
+        s.insert("fp.w", Component::Language, false, Matrix::gauss(4, 5, 1.0, &mut rng));
+        let t = sample_transform(6, 70, &mut rng);
+        s.set_transform_packed("t.w", t);
+        assert!(s.is_transform_packed("t.w"));
+        assert!(s.is_packed("t.w"), "transform layers count as 1-bit committed");
+        assert_eq!(s.transform_packed_layer_count(), 1);
+        let path = std::env::temp_dir().join("hbvla_test_transform_store.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert!(loaded.is_transform_packed("t.w"));
+        assert_eq!(
+            loaded.dense_view("t.w").data,
+            s.dense_view("t.w").data,
+            "v3 round-trip must be bit-exact"
+        );
+        assert_eq!(loaded.resident_weight_bytes(), s.resident_weight_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_and_v2_streams_still_load() {
+        // Hand-rolled v2 store: magic, count=1, one packed param — the
+        // byte layout PR 1 froze; v3 readers must keep accepting it.
+        let mut rng = Rng::new(171);
+        let w = Matrix::gauss(3, 64, 1.0, &mut rng);
+        let pb = PackedBits::pack(&w, 64);
+        let mut v2: Vec<u8> = Vec::new();
+        v2.extend_from_slice(b"HBVLAPS2");
+        v2.extend_from_slice(&1u32.to_le_bytes());
+        v2.extend_from_slice(&3u32.to_le_bytes());
+        v2.extend_from_slice(b"q.w");
+        v2.extend_from_slice(&[2u8, 1u8, 1u8]); // Language, quantizable, tag=packed
+        pb.write_to(&mut v2).unwrap();
+        let path = std::env::temp_dir().join("hbvla_test_v2_store.bin");
+        std::fs::write(&path, &v2).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert!(loaded.is_packed("q.w"));
+        assert_eq!(loaded.dense_view("q.w").data, pb.dequantize().data);
+        // v1: no repr tag, dense payload directly.
+        let mut v1: Vec<u8> = Vec::new();
+        v1.extend_from_slice(b"HBVLAPS1");
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&3u32.to_le_bytes());
+        v1.extend_from_slice(b"d.w");
+        v1.extend_from_slice(&[0u8, 1u8]); // Vision, quantizable (no tag in v1)
+        v1.extend_from_slice(&2u32.to_le_bytes());
+        v1.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            v1.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &v1).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.get("d.w").data, vec![1.0, 2.0, 3.0, 4.0]);
+        // A transform tag inside a v2 stream is corrupt, not silently read.
+        let mut bad = v2.clone();
+        let tag_pos = 8 + 4 + 4 + 3 + 2;
+        bad[tag_pos] = 2;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(ParamStore::load(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 

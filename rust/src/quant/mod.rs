@@ -3,6 +3,8 @@
 //! - [`group`] — the group-wise 1-bit primitive Q(u) = α·sign(u − μ)
 //!   (Eq. 11) with shared-mean and adaptive dense/sparse grouping;
 //! - [`packed`] — true 1-bit bitplane storage + packed GEMV (deploy path);
+//! - [`transform`] — the transform-domain exact serving form (permutation
+//!   + Haar metadata + salient side-channel around the committed plane);
 //! - [`permute`] — the sparse orthogonal transform of Algorithm 1;
 //! - [`hessian`] — standard and policy-aware rectified Hessians (Eq. 3);
 //! - [`probe`] — the block-wise gradient probe producing token-importance
@@ -17,3 +19,4 @@ pub mod packed;
 pub mod permute;
 pub mod probe;
 pub mod saliency;
+pub mod transform;

@@ -296,8 +296,18 @@ impl PackedBits {
     /// group's slice and accumulates its i32 sum — the i8 twin of
     /// [`Self::group_sums`], sharing a single sweep over x.
     pub fn quantize_act(&self, x: &[f32]) -> ActI8 {
+        self.quantize_act_with_scale(x, crate::tensor::ops::act_scale_i8(x))
+    }
+
+    /// [`Self::quantize_act`] with the symmetric token scale already in
+    /// hand — the transform-domain serving path computes max|z| inside the
+    /// same sweep that builds z (gather + Haar), so only the fused
+    /// quantize+group-sum pass remains. `scale` MUST equal
+    /// `act_scale_i8(x)` bit-for-bit for the GEMV/GEMM parity guarantees
+    /// to hold (max is order-independent in f32, so any sweep order over
+    /// the same values produces the identical scale).
+    pub fn quantize_act_with_scale(&self, x: &[f32], scale: f32) -> ActI8 {
         assert_eq!(x.len(), self.cols);
-        let scale = crate::tensor::ops::act_scale_i8(x);
         let mut q = vec![0i8; self.cols];
         let mut group_sums = vec![0i32; self.groups_per_row];
         if scale > 0.0 {

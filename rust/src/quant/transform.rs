@@ -1,0 +1,582 @@
+//! Transform-domain exact serving representation.
+//!
+//! [`TransformPacked`] is the execution form behind
+//! [`crate::model::params::WeightRepr::TransformPacked`]: the Haar-domain
+//! sign bitplane HBVLA actually commits (ONE plane — no residual chain),
+//! together with the column permutation of Algorithm 1, the Haar level
+//! metadata, and the salient-weight side-channel. Where
+//! [`crate::model::params::WeightRepr::Packed`] re-packs the method's
+//! *reconstruction* with residual bitplanes at a ≤0.5% energy tolerance
+//! (approximate serving), this form serves the committed coefficients
+//! exactly by moving the transform to the activation side:
+//!
+//! ```text
+//!   Ŵ = Pᵀ-unpermute( C · B ) + salient      (offline reconstruction)
+//!   Ŵ·x = C · B·(Pᵀx) + salient·x_sal        (what the kernels execute)
+//! ```
+//!
+//! with C the packed Haar-domain coefficient plane and B the Haar
+//! synthesis map ([`crate::haar::haar_act_fwd_vec`] applies it to
+//! activations). The activation-side work is O(m): a permuted gather fused
+//! with the pairwise sum/difference pass (and, under W1A8, with the
+//! activation-scale sweep of [`PackedBits::quantize_act_with_scale`]),
+//! followed by the unmodified packed GEMV/GEMM. Exactness is by
+//! construction — the bitplane IS the commitment, so there is no
+//! reconstruction error for residual planes to absorb, which is where the
+//! resident-memory drop over the repacked form comes from.
+//!
+//! The salient side-channel carries the Hessian-selected columns
+//! (k_sal ≤ 40) as an order-2 residual-binarized correction — the paper's
+//! high-fidelity salient treatment, committed in packed form. Like the
+//! main plane, it is exact by construction: the packed correction IS the
+//! commitment, and the forward executes it directly (a k_sal-wide gather
+//! + packed GEMV on full-precision activations).
+
+use crate::haar::half_len;
+use crate::quant::packed::{ActI8, PackedBits, DEPLOY_GROUP_SIZE};
+use crate::quant::permute::unpermute_cols;
+use crate::tensor::matrix::Matrix;
+
+/// Pick the packed group size for a Haar-domain plane whose bands are
+/// [0, half) and [half, 2·half): the largest divisor of `half` that is
+/// ≤ [`DEPLOY_GROUP_SIZE`], so group boundaries land on the band seam and
+/// no (α, μ) pair ever spans low- and high-pass coefficients (their
+/// statistics differ by construction). Degenerate halves whose largest
+/// admissible divisor is tiny (< 16, e.g. a large prime) fall back to
+/// [`DEPLOY_GROUP_SIZE`] and accept one straddling group rather than
+/// per-column metadata.
+pub fn transform_group_size(half: usize) -> usize {
+    if half == 0 {
+        return 1;
+    }
+    if half <= DEPLOY_GROUP_SIZE {
+        return half;
+    }
+    let mut best = 1;
+    for d in 1..=DEPLOY_GROUP_SIZE {
+        if half % d == 0 {
+            best = d;
+        }
+    }
+    if best >= 16 {
+        best
+    } else {
+        DEPLOY_GROUP_SIZE
+    }
+}
+
+/// The salient-weight side-channel: an order-≤2 residual-binarized
+/// correction over the salient columns (rows × k_sal), indexed by their
+/// original column positions, added on top of the non-salient transform
+/// reconstruction (Eq. 18's Ŵ = Ŵ_nonsal + Ŵ_sal — the order-2 salient
+/// path of Eqs. 15–17, committed packed and therefore served exactly).
+#[derive(Clone, Debug)]
+pub struct SalientCols {
+    /// Sorted original column indices (u16-range in the paper's bit
+    /// accounting; u32 here matches the store serialization width).
+    pub idx: Vec<u32>,
+    /// Packed correction, rows × idx.len(), order ≤ 2.
+    pub bits: PackedBits,
+}
+
+impl SalientCols {
+    /// Bytes held resident: indices + the packed correction planes.
+    pub fn storage_bytes(&self) -> usize {
+        self.idx.len() * 4 + self.bits.storage_bytes()
+    }
+}
+
+/// Packed Haar-domain layer: permutation + one-level Haar metadata + the
+/// committed coefficient bitplane + the salient side-channel.
+#[derive(Clone, Debug)]
+pub struct TransformPacked {
+    /// Original input dim m (columns of the dense layer this replaces).
+    pub cols_in: usize,
+    /// Haar decomposition levels (currently always 1; carried so the
+    /// store format doesn't change when multi-level lands).
+    pub levels: u8,
+    /// Column ordering π of Algorithm 1, length `cols_in`: the gather
+    /// x_p[k] = x[perm[k]] is the runtime Pᵀ.
+    pub perm: Vec<u32>,
+    /// Haar-domain packed coefficients C: rows × 2·⌈cols_in/2⌉, order 1.
+    pub bits: PackedBits,
+    /// Salient correction columns, if the layer has salient weights.
+    pub salient: Option<SalientCols>,
+}
+
+impl TransformPacked {
+    /// Assemble and validate. Panics on inconsistent metadata — this is a
+    /// commit-time constructor, not a deserialization path (which
+    /// validates with errors instead).
+    pub fn new(
+        cols_in: usize,
+        perm: Vec<u32>,
+        bits: PackedBits,
+        salient: Option<SalientCols>,
+    ) -> Self {
+        assert_eq!(perm.len(), cols_in, "perm length != cols_in");
+        assert_eq!(bits.cols, 2 * half_len(cols_in), "bits cols != 2*half_len(cols_in)");
+        assert_eq!(bits.order(), 1, "transform-exact serving commits exactly one bitplane");
+        let mut seen = vec![false; cols_in];
+        for &p in &perm {
+            assert!((p as usize) < cols_in && !seen[p as usize], "perm is not a permutation");
+            seen[p as usize] = true;
+        }
+        if let Some(s) = &salient {
+            assert_eq!(s.bits.rows, bits.rows, "salient rows mismatch");
+            assert_eq!(s.bits.cols, s.idx.len(), "salient idx/cols mismatch");
+            assert!(s.bits.order() <= 2, "salient side-channel is order-2 at most");
+            assert!(s.idx.windows(2).all(|w| w[0] < w[1]), "salient idx must be sorted unique");
+            assert!(s.idx.iter().all(|&j| (j as usize) < cols_in), "salient idx out of range");
+        }
+        TransformPacked { cols_in, levels: 1, perm, bits, salient }
+    }
+
+    /// Output rows of the layer.
+    pub fn rows(&self) -> usize {
+        self.bits.rows
+    }
+
+    /// (rows, cols) of the dense layer this representation replaces.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.bits.rows, self.cols_in)
+    }
+
+    /// Salient column count (the side-channel width).
+    pub fn salient_count(&self) -> usize {
+        self.salient.as_ref().map_or(0, |s| s.idx.len())
+    }
+
+    /// The activation-side transform z = B·(Pᵀx): permuted gather fused
+    /// with the pairwise sum/difference pass of
+    /// [`crate::haar::haar_act_fwd_into`] — one O(m) sweep, no scratch
+    /// gather buffer.
+    pub fn transform_act(&self, x: &[f32]) -> Vec<f32> {
+        self.transform_act_with_max(x).0
+    }
+
+    /// [`Self::transform_act`] additionally returning max|z| tracked in
+    /// the same sweep — the W1A8 path's activation-scale input
+    /// (`scale = max|z|/127`), so INT8 serving pays the same number of
+    /// activation passes as [`PackedBits::quantize_act`] does on a plain
+    /// packed layer. The max over a fixed value set is order-independent
+    /// in f32, so this equals `act_scale_i8(z)·127` bit-for-bit — the
+    /// property the sequential/batched W1A8 parity rests on.
+    pub fn transform_act_with_max(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        assert_eq!(x.len(), self.cols_in, "transform_act dim mismatch");
+        let m = self.cols_in;
+        let j = half_len(m);
+        let mut z = vec![0.0f32; 2 * j];
+        let mut mx = 0.0f32;
+        for k in 0..m / 2 {
+            let a = x[self.perm[2 * k] as usize];
+            let b = x[self.perm[2 * k + 1] as usize];
+            let lo = a + b;
+            let hi = a - b;
+            z[k] = lo;
+            z[j + k] = hi;
+            mx = mx.max(lo.abs()).max(hi.abs());
+        }
+        if m % 2 == 1 {
+            let v = x[self.perm[m - 1] as usize];
+            z[j - 1] = v;
+            // z[2j−1] stays 0 (the synthesis never reads it).
+            mx = mx.max(v.abs());
+        }
+        (z, mx)
+    }
+
+    /// Quantize one token for the W1A8 path: transform (with the fused
+    /// max sweep) then the fused quantize+group-sum pass.
+    pub fn quantize_transformed(&self, x: &[f32]) -> ActI8 {
+        let (z, mx) = self.transform_act_with_max(x);
+        self.bits.quantize_act_with_scale(&z, mx / 127.0)
+    }
+
+    /// Add the salient side-channel contribution for one token: gather the
+    /// k_sal ORIGINAL (untransformed, f32) activations at the salient
+    /// indices and run the packed correction GEMV over them — the
+    /// side-channel serves at full activation precision under both W1A32
+    /// and W1A8 (it is tiny; quantizing it would buy nothing). One shared
+    /// helper so the sequential and batched paths accumulate in the
+    /// identical order (bit-parity per request).
+    fn salient_accumulate(&self, x: &[f32], y: &mut [f32]) {
+        let Some(s) = &self.salient else { return };
+        let x_sal: Vec<f32> = s.idx.iter().map(|&j| x[j as usize]).collect();
+        let add = s.bits.matvec_owned(&x_sal);
+        for (slot, v) in y.iter_mut().zip(&add) {
+            *slot += *v;
+        }
+    }
+
+    /// y = Ŵ·x executed in the transform domain (W1A32): fused gather+Haar
+    /// on the activation, packed GEMV against the committed plane, salient
+    /// side-channel accumulation. The form the
+    /// [`crate::model::layers::linear_vec`] dispatch calls.
+    pub fn matvec_owned(&self, x: &[f32]) -> Vec<f32> {
+        let z = self.transform_act(x);
+        let mut y = self.bits.matvec_owned(&z);
+        self.salient_accumulate(x, &mut y);
+        y
+    }
+
+    /// W1A8 twin of [`Self::matvec_owned`]: the transformed activation is
+    /// quantized to i8 (scale fused into the transform sweep) and the
+    /// integer packed GEMV runs; the salient side-channel stays f32.
+    pub fn matvec_i8_owned(&self, x: &[f32]) -> Vec<f32> {
+        let act = self.quantize_transformed(x);
+        let mut y = vec![0.0f32; self.bits.rows];
+        self.bits.matvec_i8(&act, &mut y);
+        self.salient_accumulate(x, &mut y);
+        y
+    }
+
+    /// Transform every token of a TOKEN-MAJOR activation matrix (`xt`:
+    /// n × cols_in, one token per row) into the Haar domain: returns Z
+    /// (2·⌈m/2⌉ × n) with column t = B·Pᵀ·xt[t], computed by the same
+    /// per-token sweep as [`Self::transform_act`]. Token-major input so
+    /// the batched entry points transpose X exactly once and share it
+    /// with the salient pass.
+    fn transform_tokens_t(&self, xt: &Matrix) -> Matrix {
+        let j2 = 2 * half_len(self.cols_in);
+        let mut zt = Matrix::zeros(xt.rows, j2);
+        for t in 0..xt.rows {
+            let (z, _) = self.transform_act_with_max(xt.row(t));
+            zt.row_mut(t).copy_from_slice(&z);
+        }
+        zt.transpose()
+    }
+
+    /// Batched Y = Ŵ·X (W1A32): per-token-column transform, then the
+    /// unmodified multi-token packed GEMM, then the per-token salient
+    /// accumulation. Each output column is bit-identical to
+    /// [`Self::matvec_owned`] on that column alone (the packed GEMM shares
+    /// the GEMV's per-(row, token) accumulation order, and the transform
+    /// and salient helpers are the same code per token).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.cols_in, "transform matmul dim mismatch");
+        let xt = x.transpose();
+        let z = self.transform_tokens_t(&xt);
+        let mut out = self.bits.matmul(&z);
+        self.salient_accumulate_tokens_t(&xt, &mut out);
+        out
+    }
+
+    /// W1A8 batched GEMM: each transformed token is quantized with its own
+    /// symmetric scale inside [`PackedBits::matmul_i8`] (identical to the
+    /// fused sequential scale — max is sweep-order independent), salient
+    /// side-channel in f32.
+    pub fn matmul_i8(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.cols_in, "transform matmul dim mismatch");
+        let xt = x.transpose();
+        let z = self.transform_tokens_t(&xt);
+        let mut out = self.bits.matmul_i8(&z);
+        self.salient_accumulate_tokens_t(&xt, &mut out);
+        out
+    }
+
+    /// Per-token salient accumulation over a TOKEN-MAJOR batch, one row at
+    /// a time through [`Self::salient_accumulate`] (bit-parity with the
+    /// vec path; shares the caller's single transpose of X).
+    fn salient_accumulate_tokens_t(&self, xt: &Matrix, out: &mut Matrix) {
+        if self.salient.is_none() {
+            return;
+        }
+        let rows = out.rows;
+        let mut ycol = vec![0.0f32; rows];
+        for t in 0..xt.rows {
+            ycol.iter_mut().for_each(|v| *v = 0.0);
+            self.salient_accumulate(xt.row(t), &mut ycol);
+            for (r, v) in ycol.iter().enumerate() {
+                *out.at_mut(r, t) += *v;
+            }
+        }
+    }
+
+    /// Offline dense reconstruction — the ground truth the transform
+    /// forward is exact against (cold paths: export, diffing, tests):
+    /// unpermute(haar_inv(dequantized plane)) + salient scatter.
+    pub fn dequantize(&self) -> Matrix {
+        let c = self.bits.dequantize();
+        let rec = crate::haar::haar_rows_inv(&c, self.cols_in);
+        let pi: Vec<usize> = self.perm.iter().map(|&p| p as usize).collect();
+        let mut w = unpermute_cols(&rec, &pi);
+        if let Some(s) = &self.salient {
+            let corr = s.bits.dequantize();
+            for (k, &jcol) in s.idx.iter().enumerate() {
+                for r in 0..w.rows {
+                    *w.at_mut(r, jcol as usize) += corr.at(r, k);
+                }
+            }
+        }
+        w
+    }
+
+    /// Bytes held resident: the single Haar-domain plane, the permutation
+    /// (u32 per column), and the salient side-channel.
+    pub fn storage_bytes(&self) -> usize {
+        self.bits.storage_bytes()
+            + self.perm.len() * 4
+            + self.salient.as_ref().map_or(0, |s| s.storage_bytes())
+    }
+
+    /// Serialize (self-describing, little-endian): header (cols_in,
+    /// levels, salient count), permutation, salient side-channel, then the
+    /// bitplane via [`PackedBits::write_to`]. Bit-exact round-trip.
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&(self.cols_in as u32).to_le_bytes())?;
+        w.write_all(&(self.levels as u32).to_le_bytes())?;
+        let k = self.salient_count();
+        w.write_all(&(k as u32).to_le_bytes())?;
+        for &p in &self.perm {
+            w.write_all(&p.to_le_bytes())?;
+        }
+        if let Some(s) = &self.salient {
+            for &i in &s.idx {
+                w.write_all(&i.to_le_bytes())?;
+            }
+            s.bits.write_to(w)?;
+        }
+        self.bits.write_to(w)
+    }
+
+    /// Inverse of [`Self::write_to`]; validates the metadata (permutation
+    /// property, salient ranges, bitplane shape/order) instead of trusting
+    /// the stream.
+    pub fn read_from<R: std::io::Read>(r: &mut R) -> std::io::Result<Self> {
+        fn bad(msg: &str) -> std::io::Error {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+        }
+        fn read_u32<R: std::io::Read>(r: &mut R) -> std::io::Result<u32> {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b))
+        }
+        let cols_in = read_u32(r)? as usize;
+        let levels = read_u32(r)?;
+        let k = read_u32(r)? as usize;
+        const DIM_CAP: usize = 1 << 24;
+        if cols_in == 0 || cols_in > DIM_CAP || levels != 1 || k > cols_in {
+            return Err(bad("bad transform header"));
+        }
+        let mut perm = Vec::with_capacity(cols_in.min(DIM_CAP));
+        let mut seen = vec![false; cols_in];
+        for _ in 0..cols_in {
+            let p = read_u32(r)? as usize;
+            if p >= cols_in || seen[p] {
+                return Err(bad("bad transform permutation"));
+            }
+            seen[p] = true;
+            perm.push(p as u32);
+        }
+        let salient = if k > 0 {
+            let mut idx = Vec::with_capacity(k);
+            for _ in 0..k {
+                let i = read_u32(r)?;
+                if i as usize >= cols_in || idx.last().is_some_and(|&l| i <= l) {
+                    return Err(bad("bad salient indices"));
+                }
+                idx.push(i);
+            }
+            let sbits = PackedBits::read_from(r)?;
+            if sbits.cols != k || sbits.order() > 2 {
+                return Err(bad("bad salient correction"));
+            }
+            Some(SalientCols { idx, bits: sbits })
+        } else {
+            None
+        };
+        let bits = PackedBits::read_from(r)?;
+        if bits.cols != 2 * half_len(cols_in) || bits.order() != 1 {
+            return Err(bad("bad transform bitplane"));
+        }
+        if let Some(s) = &salient {
+            if s.bits.rows != bits.rows {
+                return Err(bad("salient rows mismatch"));
+            }
+        }
+        Ok(TransformPacked { cols_in, levels: 1, perm, bits, salient })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::permute::{pairing_and_chaining, permute_cols, NormKind};
+    use crate::tensor::ops::matvec;
+    use crate::util::rng::Rng;
+
+    /// Build a TransformPacked by hand from the HBVLA pipeline pieces:
+    /// permute → Haar → pack one plane, plus an optional salient
+    /// side-channel correcting towards W.
+    fn build(w: &Matrix, salient_cols: &[usize], rng: &mut Rng) -> TransformPacked {
+        let _ = rng;
+        let pi = pairing_and_chaining(w, None, NormKind::L2);
+        let u = crate::haar::haar_rows(&permute_cols(w, &pi));
+        let gs = transform_group_size(half_len(w.cols));
+        let bits = PackedBits::pack(&u, gs);
+        let perm: Vec<u32> = pi.iter().map(|&p| p as u32).collect();
+        let salient = if salient_cols.is_empty() {
+            None
+        } else {
+            // Side channel = order-2 packed residual of W at the salient
+            // columns against the transform reconstruction (the commit
+            // HBVLA makes; see methods::hbvla).
+            let partial =
+                TransformPacked::new(w.cols, perm.clone(), bits.clone(), None).dequantize();
+            let resid = w.sub(&partial).select_cols(salient_cols);
+            let idx: Vec<u32> = salient_cols.iter().map(|&j| j as u32).collect();
+            Some(SalientCols { idx, bits: PackedBits::pack_residual(&resid, 64, 2, 0.0) })
+        };
+        TransformPacked::new(w.cols, perm, bits, salient)
+    }
+
+    #[test]
+    fn forward_matches_offline_reconstruction() {
+        let mut rng = Rng::new(201);
+        for &(rows, cols) in &[(8usize, 64usize), (6, 70), (5, 33), (7, 128), (3, 9)] {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let t = build(&w, &[], &mut rng);
+            assert_eq!(t.bits.order(), 1, "zero residual planes");
+            let deq = t.dequantize();
+            let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            let y_ref = matvec(&deq, &x);
+            let y = t.matvec_owned(&x);
+            for r in 0..rows {
+                assert!(
+                    (y[r] - y_ref[r]).abs() < 1e-3 * (1.0 + y_ref[r].abs()),
+                    "({rows},{cols}) row {r}: {} vs {}",
+                    y[r],
+                    y_ref[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn salient_side_channel_served_exactly() {
+        let mut rng = Rng::new(202);
+        let w = Matrix::gauss(9, 70, 1.0, &mut rng);
+        let t = build(&w, &[3, 17, 64], &mut rng);
+        let deq = t.dequantize();
+        // The committed order-2 correction tightens the salient columns
+        // towards W versus the transform-only reconstruction…
+        let bare = build(&w, &[], &mut rng).dequantize();
+        let col_err = |m: &Matrix, j: usize| -> f64 {
+            (0..9).map(|r| ((m.at(r, j) - w.at(r, j)) as f64).powi(2)).sum()
+        };
+        for &j in &[3usize, 17, 64] {
+            assert!(col_err(&deq, j) < col_err(&bare, j), "col {j} not improved");
+        }
+        // …and, like the main plane, it is served EXACTLY: the forward
+        // matches the dense product of the full reconstruction.
+        let x: Vec<f32> = (0..70).map(|_| rng.gauss() as f32).collect();
+        let y = t.matvec_owned(&x);
+        let y_ref = matvec(&deq, &x);
+        for r in 0..9 {
+            assert!((y[r] - y_ref[r]).abs() < 1e-3 * (1.0 + y_ref[r].abs()));
+        }
+    }
+
+    #[test]
+    fn batched_gemm_bit_identical_to_gemv_per_token() {
+        let mut rng = Rng::new(203);
+        let w = Matrix::gauss(10, 70, 1.0, &mut rng);
+        let t = build(&w, &[5, 40], &mut rng);
+        let x = Matrix::gauss(70, 6, 1.0, &mut rng);
+        let xt = x.transpose();
+        let y = t.matmul(&x);
+        let y8 = t.matmul_i8(&x);
+        for tok in 0..6 {
+            let yv = t.matvec_owned(xt.row(tok));
+            let yv8 = t.matvec_i8_owned(xt.row(tok));
+            for r in 0..10 {
+                assert_eq!(y.at(r, tok), yv[r], "f32 ({r},{tok})");
+                assert_eq!(y8.at(r, tok), yv8[r], "i8 ({r},{tok})");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_path_within_activation_roundoff_of_f32() {
+        let mut rng = Rng::new(204);
+        let w = Matrix::gauss(8, 96, 1.0, &mut rng);
+        let t = build(&w, &[2, 50], &mut rng);
+        let deq = t.dequantize();
+        let x: Vec<f32> = (0..96).map(|_| rng.gauss() as f32).collect();
+        let y32 = t.matvec_owned(&x);
+        let y8 = t.matvec_i8_owned(&x);
+        // The i8 deviation is bounded by the transformed-activation
+        // round-off pushed through the committed plane (salient is f32 in
+        // both paths): |Δz| ≤ s/2 per coefficient, |y32−y8| ≤ s/2·Σ|C_r|.
+        let (_, mx) = t.transform_act_with_max(&x);
+        let s = mx / 127.0;
+        let c = t.bits.dequantize();
+        for r in 0..8 {
+            let abs_row: f32 = c.row(r).iter().map(|v| v.abs()).sum();
+            let bound = 0.5 * s * abs_row * 1.001 + 1e-4;
+            assert!((y32[r] - y8[r]).abs() <= bound, "row {r}: {} vs {}", y32[r], y8[r]);
+        }
+        assert!(deq.is_finite());
+    }
+
+    #[test]
+    fn fused_scale_equals_reference_scale() {
+        let mut rng = Rng::new(205);
+        for cols in [64usize, 65, 70, 33] {
+            let w = Matrix::gauss(4, cols, 1.0, &mut rng);
+            let t = build(&w, &[], &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| 2.0 * rng.gauss() as f32).collect();
+            let (z, mx) = t.transform_act_with_max(&x);
+            assert_eq!(mx / 127.0, crate::tensor::ops::act_scale_i8(&z), "cols={cols}");
+            let act = t.quantize_transformed(&x);
+            let act_ref = t.bits.quantize_act(&z);
+            assert_eq!(act.q, act_ref.q);
+            assert_eq!(act.scale, act_ref.scale);
+            assert_eq!(act.group_sums, act_ref.group_sums);
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip_bit_exact() {
+        let mut rng = Rng::new(206);
+        let w = Matrix::gauss(7, 70, 1.0, &mut rng);
+        let t = build(&w, &[1, 33, 69], &mut rng);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let u = TransformPacked::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(u.cols_in, 70);
+        assert_eq!(u.perm, t.perm);
+        assert_eq!(u.salient_count(), 3);
+        assert_eq!(u.dequantize().data, t.dequantize().data, "round-trip must be bit-exact");
+        assert_eq!(u.storage_bytes(), t.storage_bytes());
+        // Corrupt permutation → typed io error, not a panic.
+        let mut bad = buf.clone();
+        bad[12] = 0xFF; // first perm entry out of range
+        assert!(TransformPacked::read_from(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn group_size_respects_band_seam() {
+        assert_eq!(transform_group_size(32), 32);
+        assert_eq!(transform_group_size(64), 64);
+        assert_eq!(transform_group_size(35), 35);
+        assert_eq!(transform_group_size(68), 34); // 68 = 2·34, 34 ≤ 64
+        assert_eq!(transform_group_size(128), 64);
+        // Large prime: no admissible divisor ≥ 16 → fall back, straddle.
+        assert_eq!(transform_group_size(127), 64);
+        assert_eq!(transform_group_size(0), 1);
+    }
+
+    #[test]
+    fn storage_counts_plane_perm_and_side_channel() {
+        let mut rng = Rng::new(207);
+        let w = Matrix::gauss(4, 64, 1.0, &mut rng);
+        let t = build(&w, &[7], &mut rng);
+        let side = t.salient.as_ref().unwrap();
+        let expect = t.bits.storage_bytes() + 64 * 4 + (4 + side.bits.storage_bytes());
+        assert_eq!(t.storage_bytes(), expect);
+        // One plane in the Haar domain is far below dense f32.
+        assert!(t.storage_bytes() < 4 * 64 * 4);
+    }
+}

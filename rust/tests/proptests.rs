@@ -2,7 +2,10 @@
 //! available offline): invariants of the quantization core swept over
 //! random shapes, seeds and parameter regimes.
 
-use hbvla::haar::{haar_rows, haar_rows_inv, pairwise_highpass_energy};
+use hbvla::haar::{
+    haar_act_fwd_vec, haar_fwd_vec, haar_inv_vec, haar_rows, haar_rows_inv, half_len,
+    pairwise_highpass_energy,
+};
 use hbvla::methods::{paper_methods, CalibData, Component};
 use hbvla::quant::group::{quantize_matrix, GroupSpec};
 use hbvla::quant::packed::PackedBits;
@@ -24,6 +27,79 @@ fn prop_haar_roundtrip() {
         let w = Matrix::gauss(r, c, rng.range(0.1, 4.0) as f32, &mut rng);
         let back = haar_rows_inv(&haar_rows(&w), c);
         assert!(w.dist_sq(&back) < 1e-6, "shape {r}x{c}");
+    }
+}
+
+/// Vector-level Haar round-trip over random lengths — including odd and
+/// non-power-of-two sizes, so the `half_len` tail case (leftover sample
+/// carried in the low band with a zero high-pass partner) is swept rather
+/// than only hit at fixed lengths.
+#[test]
+fn prop_haar_vec_roundtrip_random_lengths() {
+    let mut rng = Rng::new(1010);
+    for trial in 0..200 {
+        let m = 1 + rng.below(300); // heavy odd / non-pow2 coverage
+        let mag = rng.range(0.05, 8.0) as f32;
+        let w: Vec<f32> = (0..m).map(|_| mag * rng.gauss() as f32).collect();
+        let c = haar_fwd_vec(&w);
+        assert_eq!(c.len(), 2 * half_len(m), "trial {trial} m={m}");
+        let back = haar_inv_vec(&c, m);
+        for (k, (a, b)) in w.iter().zip(&back).enumerate() {
+            assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "trial {trial} m={m} k={k}");
+        }
+    }
+}
+
+/// Parseval-style energy identity of the [1/2, ±1/2] kernels, random
+/// lengths: each even pair contributes (a²+b²)/2 to ‖c‖², and an odd
+/// leftover is carried at weight 1 — so
+///   ‖c‖² = ‖w_pairs‖²/2 + w_last² (odd m).
+/// Energy preservation up to this fixed constant is what makes Haar-domain
+/// quantization error comparable across bands.
+#[test]
+fn prop_haar_vec_energy_identity() {
+    let mut rng = Rng::new(1011);
+    for trial in 0..200 {
+        let m = 1 + rng.below(300);
+        let w: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+        let c = haar_fwd_vec(&w);
+        let ec: f64 = c.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let pairs = 2 * (m / 2);
+        let mut expect: f64 =
+            w[..pairs].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / 2.0;
+        if m % 2 == 1 {
+            expect += (w[m - 1] as f64) * (w[m - 1] as f64);
+        }
+        assert!(
+            (ec - expect).abs() < 1e-4 * (1.0 + expect),
+            "trial {trial} m={m}: {ec} vs {expect}"
+        );
+    }
+}
+
+/// The activation-side transform is the adjoint of the synthesis over
+/// random lengths: ⟨B·x, c⟩ = ⟨x, haar_inv(c)⟩ — the identity that makes
+/// transform-domain serving (y = C·B·Pᵀx) equal the offline
+/// reconstruction.
+#[test]
+fn prop_haar_act_fwd_is_adjoint_of_synthesis() {
+    let mut rng = Rng::new(1012);
+    for trial in 0..100 {
+        let m = 1 + rng.below(300);
+        let j = half_len(m);
+        let x: Vec<f32> = (0..m).map(|_| rng.gauss() as f32).collect();
+        let c: Vec<f32> = (0..2 * j).map(|_| rng.gauss() as f32).collect();
+        let lhs: f64 = haar_act_fwd_vec(&x)
+            .iter()
+            .zip(&c)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let rhs: f64 = x
+            .iter()
+            .zip(&haar_inv_vec(&c, m))
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "trial {trial} m={m}");
     }
 }
 

@@ -13,8 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hbvla::coordinator::{
-    quantize_into_registry, register_a8_variant, ModelRegistry, PolicyServer, ServeConfig,
-    ServeError, ServeRequest,
+    quantize_into_registry, register_a8_variant, AdmissionControl, ModelRegistry, PolicyServer,
+    ServeConfig, ServeError, ServeRequest,
 };
 use hbvla::methods::traits::Component;
 use hbvla::methods::HbVla;
@@ -70,7 +70,7 @@ fn quantize_register_serve_batched_packed_parity() {
     // submitter, keeping the coalescing assertion deterministic on CI.
     let server = PolicyServer::start(
         Arc::clone(&registry),
-        ServeConfig { workers: 1, max_batch: 6, max_wait: Duration::from_millis(500) },
+        ServeConfig { workers: 1, max_batch: 6, max_wait: Duration::from_millis(500), ..Default::default() },
     );
     let obs: Vec<Observation> = (0..6).map(|k| sample_obs(&base, 50 + k)).collect();
     // Async burst: the router coalesces these into multi-request batches,
@@ -130,7 +130,7 @@ fn mixed_w1a32_w1a8_batch_each_request_bit_identical() {
 
     let server = PolicyServer::start(
         Arc::clone(&registry),
-        ServeConfig { workers: 1, max_batch: 6, max_wait: Duration::from_millis(500) },
+        ServeConfig { workers: 1, max_batch: 6, max_wait: Duration::from_millis(500), ..Default::default() },
     );
     let obs: Vec<Observation> = (0..6).map(|k| sample_obs(&base, 80 + k)).collect();
     // Interleave the two variants inside one burst.
@@ -161,6 +161,49 @@ fn mixed_w1a32_w1a8_batch_each_request_bit_identical() {
     let per = server.variant_stats();
     assert_eq!(per["hbvla-packed"].requests, 3);
     assert_eq!(per["hbvla-packed-a8"].requests, 3);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_aware_admission_sheds_at_submit_not_dispatch() {
+    // ROADMAP follow-on landed: under queue pressure, a deadline the
+    // observed service rate cannot meet is refused AT SUBMIT with the
+    // typed Overloaded error — it never queues, never reaches dispatch
+    // triage, and never panics.
+    let base = base_model();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let server = PolicyServer::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(500),
+            admission: AdmissionControl::DeadlineAware { min_samples: 4 },
+        },
+    );
+    let obs = sample_obs(&base, 21);
+    // Warm the compute statistics (cold stats never shed).
+    for _ in 0..4 {
+        server.submit(ServeRequest::new(obs.clone())).unwrap();
+    }
+    // Hold a batch window open so the queue is observably non-empty…
+    let pending = server.submit_async(ServeRequest::new(obs.clone())).unwrap();
+    assert!(server.queue_depth() >= 1);
+    // …then an impossible deadline behind it is shed with Overloaded.
+    let err = server
+        .submit(ServeRequest::new(obs.clone()).with_deadline(Duration::from_nanos(1)))
+        .unwrap_err();
+    assert!(matches!(err, ServeError::Overloaded { queue_depth, .. } if queue_depth >= 1), "{err:?}");
+    // A generous deadline is still admitted and served from the same queue.
+    let lax = server
+        .submit_async(ServeRequest::new(obs.clone()).with_deadline(Duration::from_secs(30)))
+        .unwrap();
+    pending.wait().unwrap();
+    lax.wait().unwrap();
+    let per = server.variant_stats();
+    assert_eq!(per["dense"].admission_sheds, 1);
+    assert_eq!(per["dense"].deadline_misses, 0, "shed at submit, not triaged at dispatch");
     server.shutdown();
 }
 

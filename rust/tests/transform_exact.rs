@@ -1,0 +1,263 @@
+//! Transform-domain exact serving: acceptance wall.
+//!
+//! `hbvla-exact` serves the committed Haar-domain bitplanes with ZERO
+//! residual planes by executing y = C·haar(Pᵀx) on the activation side.
+//! Pinned here:
+//!   (a) forward parity with the offline reconstruction within float
+//!       roundoff — per layer (including 70 = 64+6 word-tail columns) and
+//!       end-to-end on every head kind;
+//!   (b) sequential-vs-batched bit-parity per request, f32 and W1A8,
+//!       through `features_batch` and through a live `PolicyServer`;
+//!   (c) serialized-store (v3 `HBVLAPS3`) round-trip bit-exactness;
+//! plus the memory claim — the exact commit drops the residual-plane
+//! bytes the repacked commit pays — and the typed `UnsupportedRepr` error
+//! when exact serving is requested from a direct-domain method.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hbvla::coordinator::{
+    quantize_exact_into_registry, quantize_model, quantize_model_exact, ModelRegistry,
+    PolicyServer, RegistryError, ServeConfig, ServeRequest,
+};
+use hbvla::methods::traits::{CalibData, Component};
+use hbvla::methods::{HbVla, Rtn};
+use hbvla::model::vla::ObsInput;
+use hbvla::model::{ActPrecision, DeployRepr, HeadKind, MiniVla, VlaConfig, WeightRepr};
+use hbvla::sim::observe::{observe, ObsParams, Observation};
+use hbvla::sim::tasks::libero_suite;
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+const ALL: [Component; 3] = [Component::Vision, Component::Language, Component::ActionHead];
+
+fn sample_obs(model: &MiniVla, seed: u64) -> Observation {
+    let task = &libero_suite("object")[0];
+    let mut rng = Rng::new(seed);
+    let scene = task.instantiate(&mut rng);
+    observe(&scene, task.stages[0].instr(), 100, model, &ObsParams::clean(), &mut rng)
+}
+
+fn exact_model(head: HeadKind) -> MiniVla {
+    let base = MiniVla::new(VlaConfig::tiny(head));
+    let calib = HashMap::new();
+    let (qm, rep) =
+        quantize_model_exact(&base, &calib, &HbVla::new(), &ALL, 2, "hbvla-exact").unwrap();
+    assert!(rep.transform_layers > 0);
+    assert_eq!(qm.cfg.deploy_repr, DeployRepr::TransformExact);
+    qm
+}
+
+/// (a) Layer-level: the transform forward equals the dense product of its
+/// own offline reconstruction within float roundoff — including the
+/// 70 = 64 + 6 sign-word tail and odd widths.
+#[test]
+fn layer_forward_parity_with_offline_reconstruction() {
+    let mut rng = Rng::new(31);
+    for &(rows, cols) in &[(12usize, 70usize), (8, 64), (6, 33), (9, 136), (5, 9)] {
+        let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+        let calib = CalibData::identity(cols, Component::Language);
+        let q = HbVla::new().quantize(&w, &calib);
+        let t = q.transform_packed.expect("HBVLA commits the transform form");
+        // Zero residual planes is structural, not tolerance-dependent.
+        assert_eq!(t.bits.order(), 1, "({rows},{cols})");
+        let deq = t.dequantize();
+        for trial in 0..4 {
+            let x: Vec<f32> = (0..cols).map(|_| 2.0 * rng.gauss() as f32).collect();
+            let y = t.matvec_owned(&x);
+            let y_ref = hbvla::tensor::ops::matvec(&deq, &x);
+            for r in 0..rows {
+                assert!(
+                    (y[r] - y_ref[r]).abs() < 1e-3 * (1.0 + y_ref[r].abs()),
+                    "({rows},{cols}) trial {trial} row {r}: {} vs {}",
+                    y[r],
+                    y_ref[r]
+                );
+            }
+        }
+    }
+}
+
+/// (a) End-to-end: the exact model's forward matches its dense twin (the
+/// store-wide offline reconstruction) on every head kind.
+#[test]
+fn every_head_kind_matches_dense_twin_of_exact_store() {
+    for head in [HeadKind::Token, HeadKind::Chunk, HeadKind::Diffusion] {
+        let qm = exact_model(head);
+        assert!(qm.store.transform_packed_layer_count() > 0);
+        let mut twin = qm.clone();
+        assert!(twin.store.dequantize_all() > 0);
+        let obs = sample_obs(&qm, 11);
+        let f_exact = qm.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        let f_twin = twin.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        let scale: f32 = f_twin.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+        for (k, (a, b)) in f_exact.iter().zip(&f_twin).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * scale,
+                "{head:?} feature {k}: {a} vs {b}"
+            );
+        }
+        let a_exact = qm.decode(&f_exact, &mut Rng::new(3));
+        let a_twin = twin.decode(&f_twin, &mut Rng::new(3));
+        for (ca, cb) in a_exact.iter().zip(&a_twin) {
+            for (a, b) in ca.iter().zip(cb) {
+                assert!((a - b).abs() < 1e-2, "{head:?}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// (b) Batched forward bit-parity: `features_batch` must reproduce each
+/// request's solo `features` exactly on the exact store — f32 AND W1A8
+/// (the transform is applied per token column; the packed GEMM shares the
+/// GEMV's accumulation order; the fused activation scale equals the
+/// batched one bit-for-bit).
+#[test]
+fn features_batch_bit_identical_f32_and_int8() {
+    let mut qm = exact_model(HeadKind::Chunk);
+    let obs: Vec<Observation> = (0..4).map(|k| sample_obs(&qm, 40 + k)).collect();
+    for prec in [ActPrecision::F32, ActPrecision::Int8] {
+        qm.store.set_act_precision(prec);
+        let inputs: Vec<ObsInput> = obs
+            .iter()
+            .map(|o| ObsInput {
+                visual_raw: &o.visual_raw,
+                instr_id: o.instr_id,
+                proprio: &o.proprio,
+            })
+            .collect();
+        let batched = qm.features_batch(&inputs);
+        for (k, o) in obs.iter().enumerate() {
+            let solo = qm.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+            assert_eq!(batched[k], solo, "{prec:?} request {k} diverged under batching");
+        }
+    }
+}
+
+/// (b) Through the serving router: coalesced `hbvla-exact` requests are
+/// bit-identical to the exact model's own sequential forward, per request.
+#[test]
+fn served_batches_bit_identical_to_sequential_exact_forward() {
+    let base = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let calib = HashMap::new();
+    let rep = quantize_exact_into_registry(
+        &registry,
+        "hbvla-exact",
+        &base,
+        &calib,
+        &HbVla::new(),
+        &ALL,
+        2,
+    )
+    .unwrap();
+    assert_eq!(rep.transform_layers, rep.packed_layers);
+    let served = registry.get("hbvla-exact").unwrap();
+    assert!(served.store.transform_packed_layer_count() > 0);
+
+    let server = PolicyServer::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            workers: 1,
+            max_batch: 6,
+            max_wait: Duration::from_millis(500),
+            ..Default::default()
+        },
+    );
+    let obs: Vec<Observation> = (0..6).map(|k| sample_obs(&base, 60 + k)).collect();
+    let handles: Vec<_> = obs
+        .iter()
+        .map(|o| {
+            server.submit_async(ServeRequest::new(o.clone()).with_variant("hbvla-exact")).unwrap()
+        })
+        .collect();
+    let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    assert!(server.batch_stats().max_recent() >= 2, "requests never coalesced");
+    for (o, rsp) in obs.iter().zip(&responses) {
+        assert_eq!(rsp.variant_served, "hbvla-exact");
+        let feat = served.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+        let expect = served.decode(&feat, &mut Rng::new(0));
+        assert_eq!(rsp.actions, expect, "batched exact serve diverged from sequential");
+    }
+    server.shutdown();
+}
+
+/// (c) Store serialization v3: the transform-packed store round-trips
+/// bit-exactly through disk, and the reloaded model's forward is
+/// bit-identical.
+#[test]
+fn v3_store_roundtrip_bit_exact_and_forward_identical() {
+    let qm = exact_model(HeadKind::Chunk);
+    let path = std::env::temp_dir().join("hbvla_transform_exact_store.bin");
+    qm.store.save(&path).unwrap();
+    let loaded_store = hbvla::model::ParamStore::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(
+        loaded_store.transform_packed_layer_count(),
+        qm.store.transform_packed_layer_count()
+    );
+    assert_eq!(loaded_store.resident_weight_bytes(), qm.store.resident_weight_bytes());
+    for p in qm.store.params() {
+        let (a, b) = (qm.store.dense_view(&p.name), loaded_store.dense_view(&p.name));
+        assert_eq!(a.data, b.data, "layer {} not bit-exact through v3", p.name);
+    }
+    let loaded = MiniVla { cfg: qm.cfg.clone(), store: loaded_store };
+    let obs = sample_obs(&qm, 77);
+    let f0 = qm.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+    let f1 = loaded.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+    assert_eq!(f0, f1, "reloaded exact store must forward bit-identically");
+}
+
+/// Exact serving drops the residual-plane memory: same checkpoint, same
+/// method, the `hbvla-exact` store is strictly smaller resident than the
+/// `hbvla-packed` store (which pays order-K planes to absorb
+/// reconstruction error the exact form doesn't have) — and every
+/// transform layer holds exactly one plane.
+#[test]
+fn exact_store_smaller_than_repacked_store() {
+    let base = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let calib = HashMap::new();
+    let (repacked, rep_r) = quantize_model(&base, &calib, &HbVla::new(), &ALL, 2);
+    let (exact, rep_e) =
+        quantize_model_exact(&base, &calib, &HbVla::new(), &ALL, 2, "hbvla-exact").unwrap();
+    assert_eq!(rep_r.packed_layers, rep_e.packed_layers);
+    assert!(
+        exact.store.resident_weight_bytes() < repacked.store.resident_weight_bytes(),
+        "exact {} !< repacked {}",
+        exact.store.resident_weight_bytes(),
+        repacked.store.resident_weight_bytes()
+    );
+    for p in exact.store.params() {
+        if let WeightRepr::TransformPacked(t) = &p.repr {
+            assert_eq!(t.bits.order(), 1, "layer {} has residual planes", p.name);
+        }
+    }
+    // Both deploy forms stay in the structured-accuracy regime.
+    assert!(rep_e.mean_deploy_rel_err < 0.25, "{rep_e:?}");
+}
+
+/// Requesting exact serving from a direct-domain method is a typed error
+/// (`UnsupportedRepr`), never a silent fallback to the repack.
+#[test]
+fn exact_from_direct_domain_method_is_typed_error() {
+    let base = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let registry = ModelRegistry::new();
+    let calib = HashMap::new();
+    let err = quantize_exact_into_registry(
+        &registry,
+        "rtn-exact",
+        &base,
+        &calib,
+        &Rtn::new(),
+        &[Component::Language],
+        2,
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, RegistryError::UnsupportedRepr { ref variant, .. } if variant == "rtn-exact"),
+        "{err:?}"
+    );
+    assert!(registry.get("rtn-exact").is_none());
+}
