@@ -50,7 +50,7 @@ fn main() {
     // mirrors the f32 loop's amortization (activation prepared once); the
     // comparison line is the acceptance gate "i8 no slower than f32".
     let act = packed.quantize_act(&x);
-    let t_i8 = bench("packed W1A8 GEMV 512x2048", 5, 200, || {
+    let t_i8 = bench("packed W1A8 GEMV 512x2048 (sliced)", 5, 200, || {
         packed.matvec_i8(&act, &mut y);
         std::hint::black_box(&y);
     });
@@ -60,9 +60,71 @@ fn main() {
         t_i8 * 1e3,
         t_new / t_i8
     );
-    bench("packed W1A8 quantize_act 2048", 5, 2000, || {
+    // Bit-sliced popcount vs trailing_zeros extraction: same packed
+    // weights, bit-identical outputs — the inner-loop change alone.
+    let t_i8_ext = bench("packed W1A8 GEMV 512x2048 (extraction)", 5, 200, || {
+        packed.matvec_i8_extract(&act, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] W1A8 inner loop: extraction {:.3}ms, bit-sliced {:.3}ms — sliced ×{:.2}",
+        t_i8_ext * 1e3,
+        t_i8 * 1e3,
+        t_i8_ext / t_i8
+    );
+    // Same comparison at a model-shaped layer (d_model-scale GEMV).
+    {
+        let wm = Matrix::gauss(128, 512, 1.0, &mut rng);
+        let pm = PackedBits::pack_residual(&wm, 64, 2, 0.0);
+        let xm: Vec<f32> = (0..512).map(|_| rng.gauss() as f32).collect();
+        let am = pm.quantize_act(&xm);
+        let mut ym = vec![0.0f32; 128];
+        let tm_s = bench("packed W1A8 GEMV 128x512 o2 (sliced)", 10, 2000, || {
+            pm.matvec_i8(&am, &mut ym);
+            std::hint::black_box(&ym);
+        });
+        let tm_e = bench("packed W1A8 GEMV 128x512 o2 (extraction)", 10, 2000, || {
+            pm.matvec_i8_extract(&am, &mut ym);
+            std::hint::black_box(&ym);
+        });
+        println!(
+            "[bench] model-shape W1A8 inner loop: extraction {:.4}ms, sliced {:.4}ms — ×{:.2}",
+            tm_e * 1e3,
+            tm_s * 1e3,
+            tm_e / tm_s
+        );
+    }
+    bench("packed W1A8 quantize_act 2048 (fused slice)", 5, 2000, || {
         std::hint::black_box(packed.quantize_act(&x));
     });
+    // Static-scale quantization: the max sweep skipped (the
+    // ActScaleMode::Static hot path) vs the per-token two-pass form.
+    let s_tok = hbvla::tensor::ops::act_scale_i8(&x);
+    bench("packed W1A8 quantize_act 2048 (static scale)", 5, 2000, || {
+        std::hint::black_box(packed.quantize_act_with_scale(&x, s_tok));
+    });
+    // Dispatch overhead: persistent-pool parallel_for vs the per-call
+    // thread-spawn reference, at tiny n where dispatch dominates.
+    {
+        use hbvla::util::threadpool::{parallel_for, parallel_for_spawn};
+        let sink = std::sync::atomic::AtomicUsize::new(0);
+        let t_pool = bench("parallel_for n=8 pooled dispatch", 20, 2000, || {
+            parallel_for(8, 8, |i| {
+                sink.fetch_add(i, std::sync::atomic::Ordering::Relaxed);
+            });
+        });
+        let t_spawn = bench("parallel_for n=8 per-call spawn", 5, 200, || {
+            parallel_for_spawn(8, 8, |i| {
+                sink.fetch_add(i, std::sync::atomic::Ordering::Relaxed);
+            });
+        });
+        println!(
+            "[bench] parallel_for dispatch: spawn {:.1}us, pool {:.1}us — pool ×{:.1} cheaper",
+            t_spawn * 1e6,
+            t_pool * 1e6,
+            t_spawn / t_pool
+        );
+    }
     // Transform-domain exact serving: the activation-side costs (permuted
     // gather, in-place Haar forward, fused gather+Haar+quantize_act) and
     // the end-to-end exact GEMV vs the residual-plane repack it replaces.
@@ -122,8 +184,11 @@ fn main() {
     bench("packed 1-bit GEMM 512x2048x16 mt", 2, 30, || {
         std::hint::black_box(packed.matmul_mt(&xb, 8));
     });
-    bench("packed W1A8 GEMM 512x2048x16 mt", 2, 30, || {
+    bench("packed W1A8 GEMM 512x2048x16 mt (sliced)", 2, 30, || {
         std::hint::black_box(packed.matmul_i8_mt(&xb, 8));
+    });
+    bench("packed W1A8 GEMM 512x2048x16 mt (extraction)", 2, 30, || {
+        std::hint::black_box(packed.matmul_i8_extract_mt(&xb, 8));
     });
     println!("packed memory ratio: ×{:.1}", packed.compression_ratio());
     // Full §Perf driver.

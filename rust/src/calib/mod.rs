@@ -4,6 +4,8 @@
 
 pub mod capture;
 pub mod demos;
+pub mod scales;
 
 pub use capture::{capture_calibration, CaptureConfig};
 pub use demos::collect_demos;
+pub use scales::{apply_act_scales, calibrate_act_scales, calibrate_static_scales};

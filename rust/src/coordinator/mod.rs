@@ -13,7 +13,7 @@ pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
 pub use scheduler::{
     quantize_exact_into_registry, quantize_into_registry, quantize_model, quantize_model_exact,
-    register_a8_variant, QuantJobReport,
+    register_a8_variant, register_static_scale_variant, QuantJobReport,
 };
 pub use server::{
     estimated_queue_wait_us, AdmissionControl, PolicyServer, ResponseHandle, ServeConfig,

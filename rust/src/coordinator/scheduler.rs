@@ -271,6 +271,31 @@ pub fn register_a8_variant(
     Ok(name)
 }
 
+/// Register the calibrated-static-scale twin of an already-registered
+/// variant under `"{base_variant}-static"`: the base model is cloned,
+/// `calib::scales` sweeps the demo stream once to pin per-layer static
+/// activation scales (max|x| — or max|z| for transform-exact layers —
+/// over the stream, /127), and the twin serves with
+/// [`crate::model::ActScaleMode::Static`] + [`ActPrecision::Int8`] so
+/// the W1A8 hot path skips the per-token max sweeps. Returns (twin name,
+/// calibrated layer count). Layers the sweep never saw stay on the
+/// per-token fallback.
+pub fn register_static_scale_variant(
+    registry: &ModelRegistry,
+    base_variant: &str,
+    demos: &[Vec<crate::sim::episode::DemoStep>],
+    max_steps: usize,
+) -> Result<(String, usize), RegistryError> {
+    let base = registry
+        .get(base_variant)
+        .ok_or_else(|| RegistryError::UnknownVariant { variant: base_variant.to_string() })?;
+    let name = format!("{base_variant}-static");
+    let mut twin = (*base).clone().with_act_precision(ActPrecision::Int8);
+    let layers = crate::calib::scales::calibrate_static_scales(&mut twin, demos, max_steps);
+    registry.register(&name, Arc::new(twin))?;
+    Ok((name, layers))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +461,40 @@ mod tests {
         assert_eq!(base.store.act_precision(), ActPrecision::F32);
         // Unknown base is a typed error, not a panic.
         let err = register_a8_variant(&registry, "missing").unwrap_err();
+        assert_eq!(err, RegistryError::UnknownVariant { variant: "missing".to_string() });
+    }
+
+    #[test]
+    fn static_scale_twin_registers_calibrated_and_serves_same_interface() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let registry = ModelRegistry::new();
+        let calib = HashMap::new();
+        quantize_into_registry(
+            &registry,
+            "rtn-packed",
+            &model,
+            &calib,
+            &Rtn::new(),
+            &[Component::Vision, Component::Language],
+            2,
+        )
+        .unwrap();
+        let tasks = crate::sim::tasks::libero_suite("object");
+        let demos = crate::calib::demos::collect_demos(&model, &tasks, 1, 5);
+        let (name, layers) =
+            register_static_scale_variant(&registry, "rtn-packed", &demos, 4).unwrap();
+        assert_eq!(name, "rtn-packed-static");
+        assert!(layers > 0, "no layers calibrated");
+        let twin = registry.get(&name).unwrap();
+        assert_eq!(twin.store.act_precision(), ActPrecision::Int8);
+        assert_eq!(twin.store.act_scale_mode(), crate::model::ActScaleMode::Static);
+        assert_eq!(twin.store.static_scale_count(), layers);
+        // The base keeps per-token scales and F32 activations.
+        let base = registry.get("rtn-packed").unwrap();
+        assert_eq!(base.store.act_scale_mode(), crate::model::ActScaleMode::PerToken);
+        assert_eq!(base.store.static_scale_count(), 0);
+        // Unknown base is a typed error.
+        let err = register_static_scale_variant(&registry, "missing", &demos, 4).unwrap_err();
         assert_eq!(err, RegistryError::UnknownVariant { variant: "missing".to_string() });
     }
 

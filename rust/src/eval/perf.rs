@@ -24,7 +24,17 @@ use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::{matmul_mt, matvec};
 use crate::util::rng::Rng;
 
+/// PR index stamped into the machine-readable bench baseline — bump this
+/// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
+/// tooling keyed on the schema's own `pr` field stays truthful.
+pub const BENCH_PR: u32 = 5;
+
 pub struct PerfReport {
+    /// Run parameters (recorded so `BENCH_*.json` baselines are
+    /// self-describing across PRs).
+    pub threads: usize,
+    pub seed: u64,
+    pub smoke: bool,
     pub quant_layers_per_sec: f64,
     pub quant_weights_per_sec: f64,
     pub rollout_eps_per_sec: f64,
@@ -35,10 +45,19 @@ pub struct PerfReport {
     pub dense_gemv_gflops: f64,
     pub packed_gemm_gflops: f64,
     pub dense_gemm_gflops: f64,
-    /// W1A8 integer kernels on the same packed weights (per-token i8
-    /// activations, i32 group accumulation).
+    /// W1A8 integer kernels on the same packed weights: the bit-sliced
+    /// popcount hot path, and the `trailing_zeros` extraction reference
+    /// it replaced (kept like `matvec_per_bit` — the sliced/extract ratio
+    /// is the PR-5 kernel speedup the bench baseline tracks).
     pub packed_gemv_i8_gflops: f64,
     pub packed_gemm_i8_gflops: f64,
+    pub packed_gemv_i8_extract_gflops: f64,
+    pub packed_gemm_i8_extract_gflops: f64,
+    /// Mean per-call dispatch overhead of an 8-item trivial
+    /// `parallel_for` on the persistent pool vs the per-call spawn
+    /// reference — the dispatch cost the threshold retune is based on.
+    pub pool_dispatch_us: f64,
+    pub spawn_dispatch_us: f64,
     pub packed_mem_ratio: f64,
     /// End-to-end policy forward on the dense-twin model.
     pub e2e_dense_tok_per_sec: f64,
@@ -63,6 +82,11 @@ pub struct PerfReport {
     pub hbvla_exact_bytes: usize,
     pub hbvla_repacked_action_mse: f64,
     pub hbvla_exact_action_mse: f64,
+    /// Per-token vs calibrated-static activation scales on the W1A8
+    /// serving variants (`rtn-packed-a8` / `hbvla-packed-a8` /
+    /// `hbvla-exact` under Int8): end-to-end tokens/s and closed-form
+    /// action MSE vs the FP policy for BOTH modes side by side.
+    pub act_scale_rows: Vec<ActScaleRow>,
 }
 
 /// One row of the batched-serve table: tokens/s at a given batch size for
@@ -76,6 +100,17 @@ pub struct BatchServeRow {
     pub packed_batch_tok_s: f64,
 }
 
+/// One row of the activation-scale-mode table: a W1A8 variant measured
+/// under per-token dynamic scales and under calibrated static scales.
+pub struct ActScaleRow {
+    pub variant: String,
+    pub calibrated_layers: usize,
+    pub per_token_tok_s: f64,
+    pub static_tok_s: f64,
+    pub per_token_action_mse: f64,
+    pub static_action_mse: f64,
+}
+
 impl PerfReport {
     pub fn render(&self) -> String {
         format!(
@@ -84,7 +119,9 @@ impl PerfReport {
              serving:      p50={}us p99={}us throughput={:.0} req/s\n\
              packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
+             {}\n\
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
+             {}\n\
              {}\n\
              {}\n\
              {}\n\
@@ -100,10 +137,157 @@ impl PerfReport {
             self.packed_mem_ratio,
             self.packed_gemm_gflops,
             self.dense_gemm_gflops,
+            self.kernel_table(),
             self.e2e_table(),
             self.act_table(),
             self.batched_serve_table(),
-            self.exact_table()
+            self.exact_table(),
+            self.act_scale_table()
+        )
+    }
+
+    /// The PR-5 kernel table: bit-sliced popcount vs extraction W1A8
+    /// kernels on identical packed weights (bit-identical outputs — only
+    /// the inner loop differs), plus the pooled-vs-spawn dispatch
+    /// overhead the for_each_row_par threshold retune rests on.
+    pub fn kernel_table(&self) -> String {
+        format!(
+            "W1A8 inner loop (bit-sliced popcount vs trailing_zeros extraction):\n\
+             \x20 kernel      GEMV GFLOP/s   GEMM GFLOP/s\n\
+             \x20 sliced      {:>12.2}   {:>12.2}\n\
+             \x20 extraction  {:>12.2}   {:>12.2}   (sliced ×{:.2} / ×{:.2})\n\
+             parallel_for dispatch (8 trivial items): pool {:.1}us, spawn {:.1}us — ×{:.1} cheaper\n",
+            self.packed_gemv_i8_gflops,
+            self.packed_gemm_i8_gflops,
+            self.packed_gemv_i8_extract_gflops,
+            self.packed_gemm_i8_extract_gflops,
+            self.packed_gemv_i8_gflops / self.packed_gemv_i8_extract_gflops.max(1e-9),
+            self.packed_gemm_i8_gflops / self.packed_gemm_i8_extract_gflops.max(1e-9),
+            self.pool_dispatch_us,
+            self.spawn_dispatch_us,
+            self.spawn_dispatch_us / self.pool_dispatch_us.max(1e-9)
+        )
+    }
+
+    /// The activation-scale-mode table: per-token dynamic vs calibrated
+    /// static scales on each W1A8 serving variant (tokens/s + action MSE
+    /// vs FP side by side — the accuracy cost of skipping the max sweep).
+    pub fn act_scale_table(&self) -> String {
+        let mut s = String::from(
+            "activation scales on W1A8 variants (per-token dynamic vs calibrated static):\n\
+             \x20 variant           layers   tok/s dyn   tok/s stat   MSE dyn      MSE stat\n",
+        );
+        for r in &self.act_scale_rows {
+            s.push_str(&format!(
+                "  {:<16} {:>7}  {:>10.0}  {:>11.0}   {:<11.6} {:<11.6}\n",
+                r.variant,
+                r.calibrated_layers,
+                r.per_token_tok_s,
+                r.static_tok_s,
+                r.per_token_action_mse,
+                r.static_action_mse
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable form of the whole report (hand-rolled JSON — no
+    /// serde offline). This is the `BENCH_*.json` schema CI validates and
+    /// archives per PR so kernel/dispatch speedups stay provable across
+    /// the perf trajectory:
+    /// `schema` pins the layout; every throughput is in the unit its key
+    /// names (GFLOP/s, tokens/s, req/s, µs).
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.6}")
+            } else {
+                "0.0".to_string()
+            }
+        }
+        let batched: Vec<String> = self
+            .batched_serve
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"batch\":{},\"dense_seq_tok_s\":{},\"dense_batch_tok_s\":{},\
+                     \"packed_seq_tok_s\":{},\"packed_batch_tok_s\":{}}}",
+                    r.batch,
+                    num(r.dense_seq_tok_s),
+                    num(r.dense_batch_tok_s),
+                    num(r.packed_seq_tok_s),
+                    num(r.packed_batch_tok_s)
+                )
+            })
+            .collect();
+        let act_scale: Vec<String> = self
+            .act_scale_rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"variant\":\"{}\",\"calibrated_layers\":{},\"per_token_tok_s\":{},\
+                     \"static_tok_s\":{},\"per_token_action_mse\":{},\"static_action_mse\":{}}}",
+                    r.variant,
+                    r.calibrated_layers,
+                    num(r.per_token_tok_s),
+                    num(r.static_tok_s),
+                    num(r.per_token_action_mse),
+                    num(r.static_action_mse)
+                )
+            })
+            .collect();
+        format!(
+            "{{\n\
+             \x20 \"schema\": \"hbvla-bench-v1\",\n\
+             \x20 \"pr\": {BENCH_PR},\n\
+             \x20 \"threads\": {},\n\
+             \x20 \"seed\": {},\n\
+             \x20 \"smoke\": {},\n\
+             \x20 \"quant\": {{\"layers_per_s\": {}, \"mweights_per_s\": {}}},\n\
+             \x20 \"rollout_eps_per_s\": {},\n\
+             \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"qps\": {}}},\n\
+             \x20 \"gemv_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
+             \x20 \"gemm_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
+             \x20 \"dispatch_us\": {{\"pool\": {}, \"spawn\": {}}},\n\
+             \x20 \"packed_mem_ratio\": {},\n\
+             \x20 \"e2e\": {{\"dense_tok_s\": {}, \"packed_tok_s\": {}, \"packed_a8_tok_s\": {}, \"dense_bytes\": {}, \"packed_bytes\": {}}},\n\
+             \x20 \"batched_serve\": [{}],\n\
+             \x20 \"hbvla_deploy\": {{\"repacked_tok_s\": {}, \"exact_tok_s\": {}, \"repacked_bytes\": {}, \"exact_bytes\": {}, \"repacked_action_mse\": {}, \"exact_action_mse\": {}}},\n\
+             \x20 \"act_scale\": [{}]\n\
+             }}\n",
+            self.threads,
+            self.seed,
+            self.smoke,
+            num(self.quant_layers_per_sec),
+            num(self.quant_weights_per_sec / 1e6),
+            num(self.rollout_eps_per_sec),
+            self.serve_p50_us,
+            self.serve_p99_us,
+            num(self.serve_qps),
+            num(self.dense_gemv_gflops),
+            num(self.packed_gemv_gflops),
+            num(self.packed_gemv_i8_gflops),
+            num(self.packed_gemv_i8_extract_gflops),
+            num(self.dense_gemm_gflops),
+            num(self.packed_gemm_gflops),
+            num(self.packed_gemm_i8_gflops),
+            num(self.packed_gemm_i8_extract_gflops),
+            num(self.pool_dispatch_us),
+            num(self.spawn_dispatch_us),
+            num(self.packed_mem_ratio),
+            num(self.e2e_dense_tok_per_sec),
+            num(self.e2e_packed_tok_per_sec),
+            num(self.e2e_packed_a8_tok_per_sec),
+            self.e2e_dense_weight_bytes,
+            self.e2e_packed_weight_bytes,
+            batched.join(","),
+            num(self.hbvla_repacked_tok_per_sec),
+            num(self.hbvla_exact_tok_per_sec),
+            self.hbvla_repacked_bytes,
+            self.hbvla_exact_bytes,
+            num(self.hbvla_repacked_action_mse),
+            num(self.hbvla_exact_action_mse),
+            act_scale.join(",")
         )
     }
 
@@ -188,12 +372,21 @@ impl PerfReport {
 }
 
 pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
+    run_perf_opts(threads, seed, false)
+}
+
+/// [`run_perf`] with a smoke switch: `smoke = true` shrinks every
+/// iteration budget (CI runs this to emit the `BENCH_*.json` baseline on
+/// the small testbed without burning minutes; the relative comparisons —
+/// sliced vs extraction, pool vs spawn, static vs per-token — stay
+/// meaningful at the reduced budget, absolute numbers are noisier).
+pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
     let tasks = libero_suite("object");
-    let tb = build_testbed(HeadKind::Chunk, tasks.clone(), 32, seed);
+    let tb = build_testbed(HeadKind::Chunk, tasks.clone(), if smoke { 12 } else { 32 }, seed);
 
     // --- PTQ throughput ---
     let t0 = Instant::now();
-    let reps = 3;
+    let reps = if smoke { 1 } else { 3 };
     let mut total_layers = 0usize;
     let mut total_weights = 0usize;
     for _ in 0..reps {
@@ -204,7 +397,12 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let quant_secs = t0.elapsed().as_secs_f64();
 
     // --- rollout throughput ---
-    let cfg = RolloutConfig { episodes_per_task: 6, mode: ObsMode::VisualMatching, seed, threads };
+    let cfg = RolloutConfig {
+        episodes_per_task: if smoke { 2 } else { 6 },
+        mode: ObsMode::VisualMatching,
+        seed,
+        threads,
+    };
     let t1 = Instant::now();
     let r = eval_tasks(&tb.model, &tasks, &cfg);
     let rollout_secs = t1.elapsed().as_secs_f64();
@@ -217,7 +415,7 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let scene = tasks[0].instantiate(&mut rng);
     let obs =
         observe(&scene, tasks[0].stages[0].instr(), 100, &tb.model, &ObsParams::clean(), &mut rng);
-    let n_req = 400;
+    let n_req = if smoke { 64 } else { 400 };
     let wave = 16;
     let t2 = Instant::now();
     for _ in 0..n_req / wave {
@@ -241,7 +439,7 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let packed = PackedBits::pack(&w, 128);
     let gsums = packed.group_sums(&x);
     let mut y = vec![0.0f32; rows];
-    let iters = 200;
+    let iters = if smoke { 40 } else { 200 };
     let t3 = Instant::now();
     for _ in 0..iters {
         packed.matvec(&x, &gsums, &mut y);
@@ -257,7 +455,7 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     // --- packed vs dense multi-token GEMM (rows over the thread pool) ---
     let batch = 16usize;
     let xb = Matrix::gauss(cols, batch, 1.0, &mut wr);
-    let gemm_iters = 30;
+    let gemm_iters = if smoke { 8 } else { 30 };
     let t5 = Instant::now();
     for _ in 0..gemm_iters {
         std::hint::black_box(packed.matmul_mt(&xb, threads));
@@ -285,6 +483,39 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         std::hint::black_box(packed.matmul_i8_mt(&xb, threads));
     }
     let packed_gemm_i8_secs = t6c.elapsed().as_secs_f64();
+    // The extraction-kernel references the sliced kernels replaced (same
+    // packed weights, bit-identical outputs — this ratio is the PR-5
+    // kernel win the baseline archives).
+    let t6d = Instant::now();
+    for _ in 0..iters {
+        packed.matvec_i8_extract(&act, &mut y);
+    }
+    let packed_i8_extract_secs = t6d.elapsed().as_secs_f64();
+    let t6e = Instant::now();
+    for _ in 0..gemm_iters {
+        std::hint::black_box(packed.matmul_i8_extract_mt(&xb, threads));
+    }
+    let packed_gemm_i8_extract_secs = t6e.elapsed().as_secs_f64();
+
+    // --- parallel_for dispatch overhead: pool vs per-call spawn ---
+    let dispatch_iters = if smoke { 200 } else { 1000 };
+    let sink = std::sync::atomic::AtomicUsize::new(0);
+    let t6f = Instant::now();
+    for _ in 0..dispatch_iters {
+        crate::util::threadpool::parallel_for(8, 8, |i| {
+            sink.fetch_add(i, std::sync::atomic::Ordering::Relaxed);
+        });
+    }
+    let pool_dispatch_us = t6f.elapsed().as_secs_f64() / dispatch_iters as f64 * 1e6;
+    let spawn_iters = if smoke { 50 } else { 200 };
+    let t6g = Instant::now();
+    for _ in 0..spawn_iters {
+        crate::util::threadpool::parallel_for_spawn(8, 8, |i| {
+            sink.fetch_add(i, std::sync::atomic::Ordering::Relaxed);
+        });
+    }
+    let spawn_dispatch_us = t6g.elapsed().as_secs_f64() / spawn_iters as f64 * 1e6;
+    std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
 
     // --- end-to-end: order-1 packed model vs its dense twin ---
     // This measures the single-bitplane (RTN-style) commit; transform
@@ -292,9 +523,13 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     // with plane count — the table row is labeled accordingly.
     let mut packed_model = tb.model.clone();
     packed_model.store.pack_quantizable(64);
+    // Pin the kernel thread budget to this run's --threads so the
+    // emitted baseline's "threads" field describes what actually ran
+    // (clones below inherit the pinned budget).
+    packed_model.store.set_exec_threads(threads);
     let mut dense_model = packed_model.clone();
     dense_model.store.dequantize_all();
-    let fw_iters = 60usize;
+    let fw_iters = if smoke { 12 } else { 60 };
     let toks = (fw_iters * tb.model.cfg.seq_len()) as f64;
     let t7 = Instant::now();
     for _ in 0..fw_iters {
@@ -318,15 +553,16 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let e2e_packed_a8_secs = t8b.elapsed().as_secs_f64();
 
     // --- batched vs sequential serving forward, dense vs packed ---
-    let batched_serve = [1usize, 4, 8, 16]
+    let batch_sizes: &[usize] = if smoke { &[1, 4, 8] } else { &[1, 4, 8, 16] };
+    let batched_serve = batch_sizes
         .iter()
         .map(|&batch| batched_serve_row(&dense_model, &packed_model, &obs, batch))
         .collect();
 
     // --- HBVLA deploy forms: residual-plane repack vs transform-exact ---
-    let (hb_repacked, _) =
+    let (mut hb_repacked, _) =
         quantize_model(&tb.model, &tb.calib, &HbVla::new(), &paper_components(), threads);
-    let (hb_exact, _) = quantize_model_exact(
+    let (mut hb_exact, _) = quantize_model_exact(
         &tb.model,
         &tb.calib,
         &HbVla::new(),
@@ -335,6 +571,8 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         "hbvla-exact",
     )
     .expect("HBVLA commits the transform-exact form");
+    hb_repacked.store.set_exec_threads(threads);
+    hb_exact.store.set_exec_threads(threads);
     let time_fw = |model: &MiniVla| -> f64 {
         let t = Instant::now();
         for _ in 0..fw_iters {
@@ -347,7 +585,7 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let hbvla_exact_tok_per_sec = time_fw(&hb_exact);
     // Closed-form action MSE against the FP policy over a spread of
     // observations (Chunk head decode is deterministic).
-    let probe_obs: Vec<Observation> = (0..8)
+    let probe_obs: Vec<Observation> = (0..if smoke { 4 } else { 8 })
         .map(|k| {
             let mut r = Rng::with_stream(seed, 0xE0 + k);
             let scene = tasks[k as usize % tasks.len()].instantiate(&mut r);
@@ -381,7 +619,41 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
     let hbvla_repacked_action_mse = action_mse(&hb_repacked);
     let hbvla_exact_action_mse = action_mse(&hb_exact);
 
+    // --- per-token vs calibrated-static activation scales (W1A8) ---
+    // Each serving variant measured at Int8 under both scale modes; the
+    // static twin is calibrated on a small demo stream exactly like
+    // `serve --act-scale static` does.
+    let (n_calib_demos, calib_steps) = crate::calib::scales::calib_recipe(smoke);
+    let calib_demos = crate::calib::demos::collect_demos(
+        &tb.model,
+        &tasks,
+        n_calib_demos,
+        seed ^ crate::calib::scales::CALIB_SEED_STREAM,
+    );
+    let measure_scale_modes = |variant: &str, base: &MiniVla| -> ActScaleRow {
+        let dyn_m = base.clone().with_act_precision(crate::model::ActPrecision::Int8);
+        let mut stat_m = dyn_m.clone();
+        let layers =
+            crate::calib::scales::calibrate_static_scales(&mut stat_m, &calib_demos, calib_steps);
+        ActScaleRow {
+            variant: variant.to_string(),
+            calibrated_layers: layers,
+            per_token_tok_s: time_fw(&dyn_m),
+            static_tok_s: time_fw(&stat_m),
+            per_token_action_mse: action_mse(&dyn_m),
+            static_action_mse: action_mse(&stat_m),
+        }
+    };
+    let act_scale_rows = vec![
+        measure_scale_modes("rtn-packed-a8", &packed_model),
+        measure_scale_modes("hbvla-packed-a8", &hb_repacked),
+        measure_scale_modes("hbvla-exact", &hb_exact),
+    ];
+
     PerfReport {
+        threads,
+        seed,
+        smoke,
         quant_layers_per_sec: total_layers as f64 / quant_secs,
         quant_weights_per_sec: total_weights as f64 / quant_secs,
         rollout_eps_per_sec: r.episodes as f64 / rollout_secs,
@@ -394,6 +666,10 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         dense_gemm_gflops: gemm_flops / dense_gemm_secs / 1e9,
         packed_gemv_i8_gflops: flops / packed_i8_secs / 1e9,
         packed_gemm_i8_gflops: gemm_flops / packed_gemm_i8_secs / 1e9,
+        packed_gemv_i8_extract_gflops: flops / packed_i8_extract_secs / 1e9,
+        packed_gemm_i8_extract_gflops: gemm_flops / packed_gemm_i8_extract_secs / 1e9,
+        pool_dispatch_us,
+        spawn_dispatch_us,
         packed_mem_ratio: packed.compression_ratio(),
         e2e_dense_tok_per_sec: toks / e2e_dense_secs,
         e2e_packed_tok_per_sec: toks / e2e_packed_secs,
@@ -407,6 +683,7 @@ pub fn run_perf(threads: usize, seed: u64) -> PerfReport {
         hbvla_exact_bytes: hb_exact.store.resident_weight_bytes(),
         hbvla_repacked_action_mse,
         hbvla_exact_action_mse,
+        act_scale_rows,
     }
 }
 

@@ -16,7 +16,9 @@
 //!
 //! `serve` flags: `--variant <name>` (dense | rtn-packed | hbvla-packed |
 //! hbvla-exact | rtn-packed-a8 | hbvla-packed-a8), `--act-precision
-//! f32|int8` (maps a packed variant to its W1A8 twin), `--workers N`,
+//! f32|int8` (maps a packed variant to its W1A8 twin), `--act-scale
+//! per-token|static` (static = calibrate per-layer W1A8 scales once and
+//! skip the per-token max sweep on the hot path), `--workers N`,
 //! `--max-batch N`, `--max-wait-us U`, `--requests N` — the demo registers
 //! the dense checkpoint, both packed commits, the transform-domain exact
 //! HBVLA commit (`hbvla-exact`: serves the committed Haar-domain bitplanes
@@ -96,8 +98,17 @@ fn main() {
             println!("{}", hbvla::report::MemoryReport::from_store(&qm.store).render());
         }
         Some("perf") => {
-            let rep = hbvla::eval::perf::run_perf(budget.threads, budget.seed);
+            let rep =
+                hbvla::eval::perf::run_perf_opts(budget.threads, budget.seed, args.flag("smoke"));
             println!("## §Perf\n{}", rep.render());
+            // `--json PATH` additionally emits the machine-readable
+            // baseline (schema hbvla-bench-v1) — the BENCH_*.json perf
+            // trajectory CI validates and archives per PR.
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, rep.to_json())
+                    .unwrap_or_else(|e| panic!("write bench json {path}: {e}"));
+                println!("wrote machine-readable bench baseline to {path}");
+            }
         }
         Some("serve") => {
             use hbvla::coordinator::{ModelRegistry, PolicyServer, ServeConfig, ServeRequest};
@@ -246,6 +257,87 @@ fn main() {
                 );
                 std::process::exit(2);
             }
+            // `--act-scale static` registers the calibrated-static-scale
+            // twin of the chosen variant (a one-sweep calibration over a
+            // small demo stream pins per-layer W1A8 scales; the hot path
+            // then skips the per-token max sweeps) and serves it.
+            // `per-token` (the default) leaves the choice as-is.
+            let variant = match args.get("act-scale") {
+                None => variant,
+                Some(spec) => match hbvla::model::ActScaleMode::parse(spec) {
+                    Some(hbvla::model::ActScaleMode::PerToken) => variant,
+                    Some(hbvla::model::ActScaleMode::Static) => {
+                        // Static scales only exist for INT8 activations:
+                        // the twin registration forces Int8, so an
+                        // explicit f32 request cannot be honored — fail
+                        // loudly instead of silently serving W1A8.
+                        if args.get("act-precision").and_then(hbvla::model::ActPrecision::parse)
+                            == Some(hbvla::model::ActPrecision::F32)
+                        {
+                            eprintln!(
+                                "--act-scale static implies int8 activations and cannot be \
+                                 combined with --act-precision f32"
+                            );
+                            std::process::exit(2);
+                        }
+                        // Same calibration recipe the perf baseline's
+                        // act-scale rows measure (calib::scales keeps
+                        // them from drifting apart).
+                        let (eps, steps) =
+                            hbvla::calib::scales::calib_recipe(args.flag("smoke"));
+                        let demos = hbvla::calib::collect_demos(
+                            &tb.model,
+                            &tb.tasks,
+                            eps,
+                            budget.seed ^ hbvla::calib::scales::CALIB_SEED_STREAM,
+                        );
+                        let (name, layers) = hbvla::coordinator::register_static_scale_variant(
+                            &registry,
+                            &variant,
+                            &demos,
+                            steps,
+                        )
+                        .expect("register static-scale twin");
+                        println!(
+                            "registered {name:<20} ({layers} layers with calibrated static \
+                             activation scales, W1A8, max sweep skipped on the hot path)"
+                        );
+                        // Mirror the --act-precision no-op note: a
+                        // variant with nothing to calibrate (e.g. dense)
+                        // serves unchanged kernels under the twin name.
+                        if layers == 0 {
+                            eprintln!(
+                                "note: variant '{variant}' has no packed layers to \
+                                 calibrate — '{name}' executes the same kernels"
+                            );
+                        }
+                        name
+                    }
+                    None => {
+                        eprintln!("--act-scale expects per-token or static, got '{spec}'");
+                        std::process::exit(2);
+                    }
+                },
+            };
+            // An explicit --threads pins the kernel fan-out budget on
+            // every registered variant (matching `perf`); without the
+            // flag, serving uses the machine default. The per-variant
+            // clone is startup-only and sequential (one store at a
+            // time), which is acceptable at demo scale; pinning at
+            // registration would avoid it if variant counts grow.
+            if args.get("threads").is_some() {
+                for name in registry.names() {
+                    if let Some(m) = registry.get(&name) {
+                        let mut pinned = (*m).clone();
+                        pinned.store.set_exec_threads(budget.threads);
+                        registry.register(&name, Arc::new(pinned)).expect("re-register pinned");
+                    }
+                }
+                println!(
+                    "pinned kernel thread budget to {} on all registered variants",
+                    budget.threads
+                );
+            }
             println!(
                 "serving variant '{variant}' with {} workers, max batch {}, max wait {:?}",
                 cfg.workers, cfg.max_batch, cfg.max_wait
@@ -302,9 +394,10 @@ fn main() {
             eprintln!(
                 "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
                  [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
+                 perf flags: [--json PATH] (machine-readable BENCH baseline)\n\
                  serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
                  rtn-packed-a8|hbvla-packed-a8] \
-                 [--act-precision f32|int8] [--workers N] \
+                 [--act-precision f32|int8] [--act-scale per-token|static] [--workers N] \
                  [--max-batch N] [--max-wait-us U] [--requests N]"
             );
             std::process::exit(2);

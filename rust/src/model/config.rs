@@ -8,7 +8,7 @@
 //! the *structure* (layer types, modality interleaving, salient activation
 //! columns) is what the quantizers see, and is faithful.
 
-use crate::quant::packed::ActPrecision;
+use crate::quant::packed::{ActPrecision, ActScaleMode};
 
 /// Which committed deploy form a quantized variant's store holds — a
 /// descriptive policy record (the per-layer [`crate::model::params::WeightRepr`]
@@ -106,6 +106,13 @@ pub struct VlaConfig {
     /// [`crate::model::MiniVla::with_act_precision`], never this field
     /// alone on a built model.
     pub act_precision: ActPrecision,
+    /// How the W1A8 kernels obtain activation scales (per-token dynamic
+    /// vs calibrated static — see [`ActScaleMode`]). Runtime policy like
+    /// [`Self::act_precision`]: variants differing only here stay
+    /// [`Self::serve_compatible`]. The dispatch reads the `ParamStore`'s
+    /// copy, seeded from here at construction; change both through
+    /// [`crate::model::MiniVla::with_act_scale_mode`].
+    pub act_scale_mode: ActScaleMode,
     /// Deploy-form policy record (see [`DeployRepr`]): which committed
     /// representation the store's quantized layers hold. Descriptive, not
     /// an interface property.
@@ -134,6 +141,7 @@ impl VlaConfig {
             head: HeadKind::Chunk,
             seed: 0xBEEF,
             act_precision: ActPrecision::F32,
+            act_scale_mode: ActScaleMode::PerToken,
             deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
@@ -161,6 +169,7 @@ impl VlaConfig {
             head: HeadKind::Chunk,
             seed: 7,
             act_precision: ActPrecision::F32,
+            act_scale_mode: ActScaleMode::PerToken,
             deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
@@ -178,6 +187,11 @@ impl VlaConfig {
 
     pub fn with_act_precision(mut self, p: ActPrecision) -> Self {
         self.act_precision = p;
+        self
+    }
+
+    pub fn with_act_scale_mode(mut self, m: ActScaleMode) -> Self {
+        self.act_scale_mode = m;
         self
     }
 

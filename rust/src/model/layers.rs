@@ -18,7 +18,7 @@
 use crate::model::params::{ParamStore, WeightRepr};
 use crate::quant::packed::ActPrecision;
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{gelu, matmul, matvec, softmax_rows};
+use crate::tensor::ops::{gelu, matmul, matmul_mt, matvec, softmax_rows};
 
 /// Activation hook: called with (layer_name, layer_input) right before
 /// each quantizable matmul. Inputs are d_in × n_tokens.
@@ -32,34 +32,54 @@ pub type Hook<'a> = &'a mut dyn FnMut(&str, &Matrix);
 /// rollouts, eval drivers) inherits the activation precision with no
 /// call-site changes.
 pub fn linear(store: &ParamStore, name: &str, x: &Matrix) -> Matrix {
+    let threads = store.exec_threads();
     match store.repr(name) {
-        WeightRepr::Dense(w) => matmul(w, x),
+        // Dense layers thread under the same budget (threshold inside
+        // matmul_mt), so dense-vs-packed comparisons measure kernels,
+        // not a threading asymmetry.
+        WeightRepr::Dense(w) => matmul_mt(w, x, threads),
+        // Packed GEMMs fan rows over the persistent pool when the
+        // problem crosses the work threshold (bit-identical at every
+        // thread count), honoring the store's pinned thread budget;
+        // under W1A8 + ActScaleMode::Static the store supplies the
+        // calibrated per-layer scale and the max sweeps are skipped.
         WeightRepr::Packed(p) => match store.act_precision() {
-            ActPrecision::F32 => p.matmul(x),
-            ActPrecision::Int8 => p.matmul_i8(x),
+            ActPrecision::F32 => p.matmul_mt(x, threads),
+            ActPrecision::Int8 => {
+                p.matmul_i8_with_scale(x, threads, store.active_static_scale(name))
+            }
         },
-        // Transform-domain exact serving: per-token-column gather+Haar on
-        // the activations, then the same packed GEMM against the committed
-        // Haar-domain plane (+ salient side-channel).
+        // Transform-domain exact serving: per-token gather+Haar on the
+        // activations, then the same packed GEMM against the committed
+        // Haar-domain plane (+ salient side-channel). Static scales for
+        // these layers are calibrated over the TRANSFORMED z.
         WeightRepr::TransformPacked(t) => match store.act_precision() {
-            ActPrecision::F32 => t.matmul(x),
-            ActPrecision::Int8 => t.matmul_i8(x),
+            ActPrecision::F32 => t.matmul_mt(x, threads),
+            ActPrecision::Int8 => {
+                t.matmul_i8_scaled_mt(x, store.active_static_scale(name), threads)
+            }
         },
     }
 }
 
 /// y = W · x (single-token GEMV form of [`linear`], same per-token kernel
-/// under both activation precisions).
+/// under both activation precisions; large layers row-parallelize over
+/// the pool, bit-identically, within the store's thread budget).
 pub fn linear_vec(store: &ParamStore, name: &str, x: &[f32]) -> Vec<f32> {
+    let threads = store.exec_threads();
     match store.repr(name) {
         WeightRepr::Dense(w) => matvec(w, x),
         WeightRepr::Packed(p) => match store.act_precision() {
-            ActPrecision::F32 => p.matvec_owned(x),
-            ActPrecision::Int8 => p.matvec_i8_owned(x),
+            ActPrecision::F32 => p.matvec_owned_mt(x, None, threads),
+            ActPrecision::Int8 => {
+                p.matvec_i8_owned_mt(x, store.active_static_scale(name), threads)
+            }
         },
         WeightRepr::TransformPacked(t) => match store.act_precision() {
-            ActPrecision::F32 => t.matvec_owned(x),
-            ActPrecision::Int8 => t.matvec_i8_owned(x),
+            ActPrecision::F32 => t.matvec_owned_mt(x, threads),
+            ActPrecision::Int8 => {
+                t.matvec_i8_owned_mt(x, store.active_static_scale(name), threads)
+            }
         },
     }
 }

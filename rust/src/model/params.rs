@@ -31,7 +31,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 
 use crate::methods::traits::Component;
-use crate::quant::packed::{ActPrecision, PackedBits};
+use crate::quant::packed::{ActPrecision, ActScaleMode, PackedBits};
 use crate::quant::transform::TransformPacked;
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -121,6 +121,13 @@ pub struct Param {
     /// Whether PTQ methods may quantize this matrix (embeddings and
     /// norm-adjacent vectors are kept FP, as in the paper's setup).
     pub quantizable: bool,
+    /// Calibrated static activation scale for the W1A8 path
+    /// ([`crate::calib::scales`] pins it; for transform-exact layers the
+    /// scale is over the TRANSFORMED z). `None` until a calibration pass
+    /// runs. Serialized (format v4) — it is a checkpoint artifact like
+    /// the weights, unlike the runtime [`ActScaleMode`] policy that
+    /// decides whether it is USED.
+    pub static_act_scale: Option<f32>,
 }
 
 /// Named parameter store with component tags — the unit the coordinator's
@@ -135,6 +142,17 @@ pub struct ParamStore {
     /// it up with no call-site changes. Not serialized: checkpoints carry
     /// weights, the serving/eval drivers choose the execution precision.
     act_precision: ActPrecision,
+    /// How the W1A8 kernels obtain activation scales
+    /// ([`ActScaleMode`]): per-token max sweeps, or the calibrated
+    /// static per-layer scales held on each [`Param`]. Runtime policy
+    /// like `act_precision` — not serialized (the SCALES are).
+    act_scale_mode: ActScaleMode,
+    /// Thread budget the packed kernels may fan out over through the
+    /// `model::layers` dispatch. 0 (the default) means "use the machine
+    /// default" ([`crate::util::threadpool::default_threads`]); drivers
+    /// honoring a `--threads` budget pin it here so every GEMM/GEMV the
+    /// model executes respects it. Runtime policy, not serialized.
+    exec_threads: usize,
 }
 
 impl ParamStore {
@@ -155,7 +173,13 @@ impl ParamStore {
     ) {
         assert!(!self.index.contains_key(name), "duplicate param {name}");
         self.index.insert(name.to_string(), self.params.len());
-        self.params.push(Param { name: name.to_string(), component, repr, quantizable });
+        self.params.push(Param {
+            name: name.to_string(),
+            component,
+            repr,
+            quantizable,
+            static_act_scale: None,
+        });
     }
 
     fn idx(&self, name: &str) -> usize {
@@ -251,6 +275,63 @@ impl ParamStore {
         self.act_precision = p;
     }
 
+    /// Activation-scale policy the W1A8 dispatch reads.
+    pub fn act_scale_mode(&self) -> ActScaleMode {
+        self.act_scale_mode
+    }
+
+    /// Set the activation-scale policy (takes effect on the next
+    /// forward; no repack, no scale recomputation).
+    pub fn set_act_scale_mode(&mut self, m: ActScaleMode) {
+        self.act_scale_mode = m;
+    }
+
+    /// Record a calibrated static activation scale for a layer (must be
+    /// positive — non-positive calibration results are rejected so the
+    /// kernels never divide by zero).
+    pub fn set_static_act_scale(&mut self, name: &str, scale: f32) {
+        assert!(scale > 0.0 && scale.is_finite(), "bad static scale {scale} for {name}");
+        let i = self.idx(name);
+        self.params[i].static_act_scale = Some(scale);
+    }
+
+    /// The calibrated static scale recorded for a layer, if any.
+    pub fn static_act_scale(&self, name: &str) -> Option<f32> {
+        self.params[self.idx(name)].static_act_scale
+    }
+
+    /// The static scale the W1A8 kernels should USE for this layer right
+    /// now: `Some` only under [`ActScaleMode::Static`] AND when a
+    /// calibrated scale exists (uncalibrated layers fall back to
+    /// per-token, so a partially calibrated store still serves). This is
+    /// the one accessor the `model::layers` dispatch reads.
+    pub fn active_static_scale(&self, name: &str) -> Option<f32> {
+        match self.act_scale_mode {
+            ActScaleMode::PerToken => None,
+            ActScaleMode::Static => self.static_act_scale(name),
+        }
+    }
+
+    /// How many layers hold a calibrated static scale.
+    pub fn static_scale_count(&self) -> usize {
+        self.params.iter().filter(|p| p.static_act_scale.is_some()).count()
+    }
+
+    /// The thread budget the kernel dispatch should use: the pinned
+    /// `--threads`-style budget when set, else the machine default.
+    pub fn exec_threads(&self) -> usize {
+        if self.exec_threads == 0 {
+            crate::util::threadpool::default_threads()
+        } else {
+            self.exec_threads
+        }
+    }
+
+    /// Pin the kernel thread budget (0 restores the machine default).
+    pub fn set_exec_threads(&mut self, threads: usize) {
+        self.exec_threads = threads;
+    }
+
     pub fn params(&self) -> &[Param] {
         &self.params
     }
@@ -338,16 +419,18 @@ impl ParamStore {
     }
 
     /// Serialize to a binary format (magic, count, then per-param: name,
-    /// component byte, quantizable byte, repr tag, payload). Dense layers
-    /// store rows/cols + f32 LE data; packed layers store the full
-    /// bitplane chain bit-exactly ([`PackedBits::write_to`]);
-    /// transform-packed layers (tag 2, format v3 `HBVLAPS3`) store
-    /// permutation + salient side-channel + the Haar-domain plane
-    /// bit-exactly ([`TransformPacked::write_to`]). v1/v2 stores still
-    /// load; v3 is always written.
+    /// component byte, quantizable byte, [v4+] static-act-scale field,
+    /// repr tag, payload). Dense layers store rows/cols + f32 LE data;
+    /// packed layers store the full bitplane chain bit-exactly
+    /// ([`PackedBits::write_to`]); transform-packed layers (tag 2, v3+)
+    /// store permutation + salient side-channel + the Haar-domain plane
+    /// bit-exactly ([`TransformPacked::write_to`]). Format v4
+    /// (`HBVLAPS4`) adds one per-param field: a presence byte + f32 LE
+    /// calibrated static activation scale. v1/v2/v3 stores still load
+    /// (scales default to `None`); v4 is always written.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"HBVLAPS3")?;
+        f.write_all(b"HBVLAPS4")?;
         f.write_all(&(self.params.len() as u32).to_le_bytes())?;
         for p in &self.params {
             let nb = p.name.as_bytes();
@@ -360,6 +443,13 @@ impl ParamStore {
                 Component::ActionHead => 3,
             };
             f.write_all(&[comp, p.quantizable as u8])?;
+            match p.static_act_scale {
+                Some(s) => {
+                    f.write_all(&[1u8])?;
+                    f.write_all(&s.to_le_bytes())?;
+                }
+                None => f.write_all(&[0u8])?,
+            }
             match &p.repr {
                 WeightRepr::Dense(m) => {
                     f.write_all(&[0u8])?;
@@ -387,9 +477,11 @@ impl ParamStore {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         // Version gates: v1 has no repr tag (all dense), v2 adds tags 0/1
-        // (dense/packed), v3 adds tag 2 (transform-packed).
+        // (dense/packed), v3 adds tag 2 (transform-packed), v4 adds the
+        // per-param calibrated static activation scale.
         let version = match &magic {
-            b"HBVLAPS3" => 3u8,
+            b"HBVLAPS4" => 4u8,
+            b"HBVLAPS3" => 3,
             b"HBVLAPS2" => 2,
             b"HBVLAPS1" => 1,
             _ => return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic")),
@@ -414,6 +506,33 @@ impl ParamStore {
                 _ => Component::ActionHead,
             };
             let quantizable = two[1] != 0;
+            let static_act_scale = if version >= 4 {
+                let mut has = [0u8; 1];
+                f.read_exact(&mut has)?;
+                match has[0] {
+                    0 => None,
+                    1 => {
+                        let mut sb = [0u8; 4];
+                        f.read_exact(&mut sb)?;
+                        let s = f32::from_le_bytes(sb);
+                        if !(s > 0.0 && s.is_finite()) {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::InvalidData,
+                                "bad static act scale",
+                            ));
+                        }
+                        Some(s)
+                    }
+                    _ => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            "bad static-scale presence byte",
+                        ))
+                    }
+                }
+            } else {
+                None
+            };
             let tag = if version >= 2 {
                 let mut t = [0u8; 1];
                 f.read_exact(&mut t)?;
@@ -455,6 +574,9 @@ impl ParamStore {
                         "bad repr tag",
                     ))
                 }
+            }
+            if let Some(s) = static_act_scale {
+                store.set_static_act_scale(&name, s);
             }
         }
         Ok(store)
@@ -698,6 +820,69 @@ mod tests {
         let loaded = ParamStore::load(&path).unwrap();
         assert_eq!(loaded.act_precision(), ActPrecision::F32);
         assert_eq!(loaded.dense_view("p.w").data, s.dense_view("p.w").data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn static_scales_round_trip_v4_and_mode_gates_use() {
+        let mut rng = Rng::new(172);
+        let mut s = ParamStore::new();
+        s.insert("a.w", Component::Language, true, Matrix::gauss(4, 64, 1.0, &mut rng));
+        s.insert("b.w", Component::Language, true, Matrix::gauss(4, 64, 1.0, &mut rng));
+        s.pack_quantizable(64);
+        s.set_static_act_scale("a.w", 0.125);
+        assert_eq!(s.static_scale_count(), 1);
+        // Scales are stored regardless of mode; USE is gated by the mode,
+        // and uncalibrated layers fall back to per-token (None).
+        assert_eq!(s.active_static_scale("a.w"), None, "per-token mode ignores scales");
+        s.set_act_scale_mode(ActScaleMode::Static);
+        assert_eq!(s.active_static_scale("a.w"), Some(0.125));
+        assert_eq!(s.active_static_scale("b.w"), None, "uncalibrated layer falls back");
+        // v4 round-trips the scale bit-exactly; the MODE is runtime
+        // policy and resets to the default.
+        let path = std::env::temp_dir().join("hbvla_test_static_scale_store.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.static_act_scale("a.w"), Some(0.125));
+        assert_eq!(loaded.static_act_scale("b.w"), None);
+        assert_eq!(loaded.act_scale_mode(), ActScaleMode::PerToken);
+        assert_eq!(loaded.dense_view("a.w").data, s.dense_view("a.w").data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn exec_threads_budget_defaults_and_pins() {
+        let mut s = ParamStore::new();
+        assert!(s.exec_threads() >= 1, "default budget must be usable");
+        s.set_exec_threads(3);
+        assert_eq!(s.exec_threads(), 3);
+        s.set_exec_threads(0);
+        assert!(s.exec_threads() >= 1, "0 restores the machine default");
+    }
+
+    #[test]
+    fn legacy_v3_stream_still_loads_without_scales() {
+        // Hand-rolled v3 store (the pre-static-scale byte layout PR 4
+        // froze): magic, count=1, name, [comp, quantizable], tag=dense,
+        // rows/cols/data — no scale field. v4 readers must keep
+        // accepting it, with scales defaulting to None.
+        let mut v3: Vec<u8> = Vec::new();
+        v3.extend_from_slice(b"HBVLAPS3");
+        v3.extend_from_slice(&1u32.to_le_bytes());
+        v3.extend_from_slice(&3u32.to_le_bytes());
+        v3.extend_from_slice(b"d.w");
+        v3.extend_from_slice(&[2u8, 1u8, 0u8]); // Language, quantizable, tag=dense
+        v3.extend_from_slice(&2u32.to_le_bytes());
+        v3.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            v3.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = std::env::temp_dir().join("hbvla_test_v3_store.bin");
+        std::fs::write(&path, &v3).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.get("d.w").data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(loaded.static_act_scale("d.w"), None);
+        assert_eq!(loaded.static_scale_count(), 0);
         std::fs::remove_file(path).ok();
     }
 

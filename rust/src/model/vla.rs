@@ -284,6 +284,7 @@ impl MiniVla {
         }
 
         store.set_act_precision(cfg.act_precision);
+        store.set_act_scale_mode(cfg.act_scale_mode);
         MiniVla { cfg, store }
     }
 
@@ -296,6 +297,17 @@ impl MiniVla {
     pub fn with_act_precision(mut self, p: crate::quant::packed::ActPrecision) -> Self {
         self.cfg.act_precision = p;
         self.store.set_act_precision(p);
+        self
+    }
+
+    /// Switch how the W1A8 kernels obtain activation scales (per-token
+    /// dynamic vs calibrated static — both the config record and the
+    /// store policy the dispatch reads). Under `Static`, layers without a
+    /// calibrated scale keep the per-token sweep, so this is safe to set
+    /// before OR after `calib::scales` ran.
+    pub fn with_act_scale_mode(mut self, m: crate::quant::packed::ActScaleMode) -> Self {
+        self.cfg.act_scale_mode = m;
+        self.store.set_act_scale_mode(m);
         self
     }
 

@@ -17,8 +17,10 @@
 //! per token, shared by every row) and the sum of x over *set* sign bits,
 //! which the inner loop extracts a full 64-bit word at a time.
 
+use std::cell::RefCell;
+
 use crate::tensor::matrix::Matrix;
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::{default_threads, parallel_for};
 
 /// Deploy-path packing defaults: group 64 keeps scale granularity fine
 /// enough that residual planes converge fast on multi-level
@@ -28,6 +30,20 @@ use crate::util::threadpool::parallel_for;
 pub const DEPLOY_GROUP_SIZE: usize = 64;
 pub const DEPLOY_MAX_ORDER: usize = 4;
 pub const DEPLOY_REL_TOL: f64 = 5e-3;
+
+/// Minimum GEMM work (rows × cols × tokens × planes) before
+/// [`PackedBits::for_each_row_par`] fans rows out over the persistent
+/// pool. Retuned DOWN from 1e7 when per-call thread spawning was replaced
+/// by pooled dispatch (~µs instead of ~100µs per call): below this the
+/// serial loop still wins, above it the pool pays for itself even at
+/// serve-batch sizes.
+pub const PAR_WORK_MIN: f64 = 5.0e5;
+
+/// Minimum GEMV work (rows × cols × planes) before the single-token
+/// kernels parallelize across rows. Single-token dispatch is the serving
+/// hot path, so the bar is a little higher than the GEMM's relative to
+/// per-item cost — only genuinely large layers fan out.
+pub const GEMV_PAR_MIN: f64 = 4.0e5;
 
 /// Activation precision the packed kernels execute at — the W1A8 policy
 /// knob threaded through [`crate::model::params::ParamStore`] and
@@ -64,17 +80,110 @@ impl ActPrecision {
     }
 }
 
+/// How the W1A8 path obtains each token's symmetric activation scale —
+/// the second activation-policy knob next to [`ActPrecision`], threaded
+/// through [`crate::model::params::ParamStore`] / [`crate::model::VlaConfig`]
+/// the same way:
+///
+/// - `PerToken`: s_tok = max|x|/127 swept at runtime per token (the PR-3
+///   behavior — always exact-range, pays one max pass per token).
+/// - `Static`: a calibration pass (`calib::scales`) pinned one scale per
+///   layer (QuantVLA-style); the hot path skips the max sweep entirely
+///   and runs the fused quantize+group-sum+bit-slice pass directly.
+///   Out-of-range activations saturate at ±127 — the intended behavior
+///   for calibrated scales.
+///
+/// Layers without a calibrated scale fall back to per-token under
+/// `Static`, so a partially calibrated store still serves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ActScaleMode {
+    /// Per-token dynamic scale (max|x|/127 swept on the hot path).
+    #[default]
+    PerToken,
+    /// Calibrated static per-layer scale (max sweep skipped).
+    Static,
+}
+
+impl ActScaleMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ActScaleMode::PerToken => "per-token",
+            ActScaleMode::Static => "static",
+        }
+    }
+
+    /// Parse a CLI spelling (`per-token` | `static`, with aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "per-token" | "pertoken" | "per_token" | "dynamic" => Some(ActScaleMode::PerToken),
+            "static" | "calibrated" => Some(ActScaleMode::Static),
+            _ => None,
+        }
+    }
+}
+
 /// One token's INT8-quantized activations, produced by
 /// [`PackedBits::quantize_act`]: q (i8), the symmetric per-token scale
 /// s_tok = max|x|/127, and the per-group i32 sums of q (the μ-term of the
 /// integer kernel) — built in the same sweep that quantizes, so the W1A8
 /// path pays one activation pass exactly like the f32 path's
 /// [`PackedBits::group_sums`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ActI8 {
     pub q: Vec<i8>,
     pub scale: f32,
     pub group_sums: Vec<i32>,
+    /// Column bit-slices of q, built in the same fused pass: 8 `u64`
+    /// planes per 64-column word, word-major (`slices[w*8 + b]`). Plane b
+    /// holds bit b of q[j] read as a `u8` (two's complement), so the sum
+    /// of q over any sign-word subset S is
+    ///   Σ_{b=0..6} 2^b·popcnt(S ∧ Q_b) − 128·popcnt(S ∧ Q_7)
+    /// — 8 AND+POPCNT per word, branchless, integer-exact. This is what
+    /// [`PackedBits::set_sum_i8_sliced`] consumes; the serial
+    /// `trailing_zeros` extraction ([`PackedBits::set_sum_i8`]) stays as
+    /// the bench/test reference.
+    pub slices: Vec<u64>,
+}
+
+/// Per-thread scratch for the multi-token GEMMs: the activation
+/// transpose, the per-token f32 group sums and the quantized-token pool
+/// are reused across calls, so a coalesced server batch sweeping many
+/// layers pays the allocations once instead of per layer. Buffers are
+/// TAKEN out of the cell for the duration of a call and put back after
+/// (re-entrancy safe: a nested GEMM on the same thread simply finds the
+/// cell empty and allocates its own).
+#[derive(Default)]
+struct GemmScratch {
+    xt: Matrix,
+    gsums: Vec<f32>,
+    acts: Vec<ActI8>,
+}
+
+thread_local! {
+    static GEMM_SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::default());
+}
+
+/// Take/put access to the scratch transpose buffer for sibling modules
+/// (the transform-domain path transposes its own activations before
+/// feeding the token-major GEMM entries).
+pub(crate) fn take_scratch_xt() -> Matrix {
+    GEMM_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut().xt))
+}
+
+pub(crate) fn put_scratch_xt(xt: Matrix) {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().xt = xt);
+}
+
+/// Pop/push one quantized-token buffer from the shared pool — the
+/// single-token (GEMV) serving path reuses ActI8 allocations across
+/// layers through these, like the GEMM entries do through the pool
+/// directly. Pop on an empty pool just allocates (re-entrancy safe).
+pub(crate) fn take_scratch_act() -> ActI8 {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().acts.pop()).unwrap_or_default()
+}
+
+pub(crate) fn put_scratch_act(act: ActI8) {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().acts.push(act));
 }
 
 /// A packed 1-bit matrix: for each row, `cols` sign bits in u64 words and
@@ -210,58 +319,108 @@ impl PackedBits {
     }
 
     /// Sum of `x` over the *set* sign bits of row-word-base `wbase` within
-    /// columns [s, e): the word-at-a-time inner loop. The bit mask for each
-    /// word is built once; set bits are then consumed with
-    /// `trailing_zeros` + `bits &= bits − 1` — no per-bit shifts.
+    /// columns [s, e): the word-at-a-time inner loop. Boundary masks are
+    /// applied only on the first/last word of the span (interior words run
+    /// unmasked — no per-word branch on a recomputed span); set bits are
+    /// consumed with `trailing_zeros` + `bits &= bits − 1`.
     #[inline]
     fn set_sum(&self, wbase: usize, s: usize, e: usize, x: &[f32]) -> f32 {
+        debug_assert!(s < e);
         let mut acc = 0.0f32;
-        let mut j = s;
-        while j < e {
-            let wi = j / 64;
-            let upto = e.min((wi + 1) * 64);
-            let lo = j % 64;
-            let span = upto - j;
-            let mask = if span == 64 { u64::MAX } else { ((1u64 << span) - 1) << lo };
-            let mut bits = self.signs[wbase + wi] & mask;
+        let w0 = s / 64;
+        let w1 = (e - 1) / 64;
+        for wi in w0..=w1 {
+            let mut bits = self.signs[wbase + wi];
+            if wi == w0 {
+                bits &= u64::MAX << (s % 64);
+            }
+            if wi == w1 {
+                let top = e - wi * 64; // 1..=64 valid bits in the last word
+                if top < 64 {
+                    bits &= (1u64 << top) - 1;
+                }
+            }
             let base = wi * 64;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
                 acc += x[base + b];
                 bits &= bits - 1;
             }
-            j = upto;
         }
         acc
     }
 
-    /// Accumulate this plane's contribution to y (one GEMV plane pass).
-    fn accumulate_matvec(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
-        for (r, slot) in y.iter_mut().enumerate() {
-            let wbase = r * self.words_per_row;
-            let gbase = r * self.groups_per_row;
+    /// One row's full GEMV dot (all bitplanes, plane contributions added
+    /// in chain order — the accumulation order every f32 entry point
+    /// shares, which is what keeps serial/parallel and GEMV/GEMM outputs
+    /// bit-identical).
+    #[inline]
+    fn row_dot(&self, r: usize, x: &[f32], group_sums: &[f32]) -> f32 {
+        let mut out = 0.0f32;
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            let wbase = r * p.words_per_row;
+            let gbase = r * p.groups_per_row;
             let mut acc = 0.0f32;
-            for g in 0..self.groups_per_row {
-                let s = g * self.group_size;
-                let e = (s + self.group_size).min(self.cols);
-                let set = self.set_sum(wbase, s, e, x);
+            for g in 0..p.groups_per_row {
+                let s = g * p.group_size;
+                let e = (s + p.group_size).min(p.cols);
+                let set = p.set_sum(wbase, s, e, x);
                 let gsum = group_sums[g];
-                acc += self.mu[gbase + g] * gsum + self.alpha[gbase + g] * (2.0 * set - gsum);
+                acc += p.mu[gbase + g] * gsum + p.alpha[gbase + g] * (2.0 * set - gsum);
             }
-            *slot += acc;
+            out += acc;
+            plane = p.residual.as_deref();
         }
+        out
     }
 
     /// Packed GEMV: y = Ŵ x without materializing Ŵ (all bitplanes).
+    /// Serial form — [`Self::matvec_mt`] fans rows out over the pool.
     pub fn matvec(&self, x: &[f32], group_sums: &[f32], y: &mut [f32]) {
+        self.matvec_mt(x, group_sums, y, 1);
+    }
+
+    /// Row-parallel packed GEMV: rows are distributed over the persistent
+    /// pool when the layer is large enough ([`GEMV_PAR_MIN`]); below the
+    /// threshold (or at `threads == 1`) the serial loop runs. Each row's
+    /// value is computed by the same [`Self::row_dot`] either way, so the
+    /// output is bit-identical at every thread count.
+    pub fn matvec_mt(&self, x: &[f32], group_sums: &[f32], y: &mut [f32], threads: usize) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         assert_eq!(group_sums.len(), self.groups_per_row);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        let mut plane = Some(self);
-        while let Some(p) = plane {
-            p.accumulate_matvec(x, group_sums, y);
-            plane = p.residual.as_deref();
+        self.for_each_y_par(y, threads, |r| self.row_dot(r, x, group_sums));
+    }
+
+    /// Row-parallel driver for the single-token GEMVs: serial below the
+    /// [`GEMV_PAR_MIN`] work threshold, else contiguous row chunks over
+    /// the pool. The GEMV sibling of [`Self::for_each_row_par`] — these
+    /// two drivers are the ONLY places the disjoint-row unsafe write
+    /// lives, shared by every f32/i8 entry point so the threshold and
+    /// safety argument cannot diverge.
+    fn for_each_y_par<F>(&self, y: &mut [f32], threads: usize, row_fn: F)
+    where
+        F: Fn(usize) -> f32 + Sync,
+    {
+        let work = self.rows as f64 * self.cols as f64 * self.order() as f64;
+        if threads <= 1 || work < GEMV_PAR_MIN {
+            for (r, slot) in y.iter_mut().enumerate() {
+                *slot = row_fn(r);
+            }
+        } else {
+            let chunks = (threads * 4).min(self.rows);
+            let per = self.rows.div_ceil(chunks);
+            let yptr = SendPtr(y.as_mut_ptr());
+            parallel_for(chunks, threads, |c| {
+                let yptr = &yptr;
+                let r0 = c * per;
+                let r1 = ((c + 1) * per).min(self.rows);
+                for r in r0..r1 {
+                    // SAFETY: chunks cover disjoint row ranges of y.
+                    unsafe { *yptr.0.add(r) = row_fn(r) };
+                }
+            });
         }
     }
 
@@ -280,12 +439,24 @@ impl PackedBits {
     /// [`Self::quantize_act`]); `None` computes them here. The two entry
     /// points are pinned identical by a regression test.
     pub fn matvec_owned_with(&self, x: &[f32], group_sums: Option<&[f32]>) -> Vec<f32> {
+        self.matvec_owned_mt(x, group_sums, default_threads())
+    }
+
+    /// [`Self::matvec_owned_with`] with an explicit thread budget — the
+    /// form the `model::layers` dispatch calls so a pinned `--threads`
+    /// budget reaches the GEMV fan-out.
+    pub fn matvec_owned_mt(
+        &self,
+        x: &[f32],
+        group_sums: Option<&[f32]>,
+        threads: usize,
+    ) -> Vec<f32> {
         let mut y = vec![0.0f32; self.rows];
         match group_sums {
-            Some(gs) => self.matvec(x, gs, &mut y),
+            Some(gs) => self.matvec_mt(x, gs, &mut y, threads),
             None => {
                 let gs = self.group_sums(x);
-                self.matvec(x, &gs, &mut y);
+                self.matvec_mt(x, &gs, &mut y, threads);
             }
         }
         y
@@ -293,44 +464,125 @@ impl PackedBits {
 
     /// Quantize one activation token for this layer's group layout: a
     /// scale pass (max|x|), then ONE fused pass that quantizes each
-    /// group's slice and accumulates its i32 sum — the i8 twin of
-    /// [`Self::group_sums`], sharing a single sweep over x.
+    /// group's slice, accumulates its i32 sum AND builds the 8 column
+    /// bit-slices — the i8 twin of [`Self::group_sums`], sharing a single
+    /// sweep over x; the slices amortize over every row and residual
+    /// plane of the GEMV/GEMM that consumes them.
     pub fn quantize_act(&self, x: &[f32]) -> ActI8 {
         self.quantize_act_with_scale(x, crate::tensor::ops::act_scale_i8(x))
     }
 
     /// [`Self::quantize_act`] with the symmetric token scale already in
-    /// hand — the transform-domain serving path computes max|z| inside the
-    /// same sweep that builds z (gather + Haar), so only the fused
-    /// quantize+group-sum pass remains. `scale` MUST equal
-    /// `act_scale_i8(x)` bit-for-bit for the GEMV/GEMM parity guarantees
-    /// to hold (max is order-independent in f32, so any sweep order over
-    /// the same values produces the identical scale).
+    /// hand — used by the transform-domain serving path (max|z| computed
+    /// inside the sweep that builds z) and by the calibrated-static-scale
+    /// mode ([`ActScaleMode::Static`]), where the max sweep is skipped
+    /// entirely. With `scale == act_scale_i8(x)` the result is bit-equal
+    /// to [`Self::quantize_act`] (max is order-independent in f32); with
+    /// a calibrated scale, out-of-range values saturate at ±127 — the
+    /// intended static-scale behavior.
     pub fn quantize_act_with_scale(&self, x: &[f32], scale: f32) -> ActI8 {
+        let mut act = ActI8::default();
+        self.quantize_act_with_scale_into(x, scale, &mut act);
+        act
+    }
+
+    /// In-place form of [`Self::quantize_act_with_scale`]: reuses the
+    /// caller's buffers (the GEMM scratch pool feeds quantized tokens
+    /// through here so coalesced server batches stop re-allocating per
+    /// layer). One fused pass builds q, the per-group i32 sums and the
+    /// column bit-slices together.
+    pub fn quantize_act_with_scale_into(&self, x: &[f32], scale: f32, act: &mut ActI8) {
         assert_eq!(x.len(), self.cols);
-        let mut q = vec![0i8; self.cols];
-        let mut group_sums = vec![0i32; self.groups_per_row];
-        if scale > 0.0 {
-            let inv = 1.0 / scale;
-            for (g, gsum) in group_sums.iter_mut().enumerate() {
-                let s = g * self.group_size;
-                let e = (s + self.group_size).min(self.cols);
-                let mut acc = 0i32;
-                for j in s..e {
-                    let v = crate::tensor::ops::quantize_i8(x[j], inv);
-                    q[j] = v;
-                    acc += v as i32;
-                }
-                *gsum = acc;
-            }
+        act.scale = scale;
+        // q and group_sums are fully overwritten by the fused loop below
+        // (groups tile every column), so resize WITHOUT the clear-first
+        // memset; slices accumulates with |= and genuinely needs zeroing.
+        act.q.resize(self.cols, 0);
+        act.group_sums.resize(self.groups_per_row, 0);
+        act.slices.clear();
+        act.slices.resize(self.words_per_row * 8, 0);
+        if scale <= 0.0 {
+            // This path skips the loop, so zero the reused buffers here.
+            act.q.iter_mut().for_each(|v| *v = 0);
+            act.group_sums.iter_mut().for_each(|v| *v = 0);
+            return;
         }
-        ActI8 { q, scale, group_sums }
+        let inv = 1.0 / scale;
+        for g in 0..self.groups_per_row {
+            let s = g * self.group_size;
+            let e = (s + self.group_size).min(self.cols);
+            let mut acc = 0i32;
+            for j in s..e {
+                let v = crate::tensor::ops::quantize_i8(x[j], inv);
+                act.q[j] = v;
+                acc += v as i32;
+                // Spread the byte's bits over the word's 8 planes.
+                let u = v as u8 as u64;
+                let base = (j / 64) * 8;
+                let bit = (j % 64) as u32;
+                for (b, plane) in act.slices[base..base + 8].iter_mut().enumerate() {
+                    *plane |= ((u >> b) & 1) << bit;
+                }
+            }
+            act.group_sums[g] = acc;
+        }
+    }
+
+    /// Bit-sliced set-bit sum: Σ q[j] over the set sign bits of
+    /// row-word-base `wbase` within columns [s, e), computed from the
+    /// token's column bit-planes as
+    ///   Σ_{b=0..6} 2^b·popcnt(S ∧ Q_b) − 128·popcnt(S ∧ Q_7)
+    /// (two's-complement plane weights: bit 7 of an i8 carries −128).
+    /// 8 AND+POPCNT per 64 columns, branchless — no serial dependent
+    /// chain on `trailing_zeros` — and integer-exact, so the result is
+    /// bit-identical to the extraction loop [`Self::set_sum_i8`].
+    /// Accumulation stays in i32: Σ2^b·popcnt ≤ 127·2^24 < i32::MAX at
+    /// the serialization dimension cap.
+    #[inline]
+    fn set_sum_i8_sliced(&self, wbase: usize, s: usize, e: usize, slices: &[u64]) -> i32 {
+        debug_assert!(s < e);
+        let mut pos = 0i32;
+        let mut hi = 0i32;
+        let w0 = s / 64;
+        let w1 = (e - 1) / 64;
+        for wi in w0..=w1 {
+            let mut sbits = self.signs[wbase + wi];
+            if wi == w0 {
+                sbits &= u64::MAX << (s % 64);
+            }
+            if wi == w1 {
+                let top = e - wi * 64;
+                if top < 64 {
+                    sbits &= (1u64 << top) - 1;
+                }
+            }
+            if sbits == 0 {
+                continue;
+            }
+            let p = &slices[wi * 8..wi * 8 + 8];
+            pos += (sbits & p[0]).count_ones() as i32
+                + 2 * (sbits & p[1]).count_ones() as i32
+                + 4 * (sbits & p[2]).count_ones() as i32
+                + 8 * (sbits & p[3]).count_ones() as i32
+                + 16 * (sbits & p[4]).count_ones() as i32
+                + 32 * (sbits & p[5]).count_ones() as i32
+                + 64 * (sbits & p[6]).count_ones() as i32;
+            hi += (sbits & p[7]).count_ones() as i32;
+        }
+        // The final value Σq fits i32 (|q| ≤ 127, ≤ 2^24 columns), but
+        // the intermediate 128·hi alone can reach exactly 2^31 when a
+        // single group spans the full dimension cap with every negative
+        // bit set — widen just this combination.
+        (pos as i64 - 128 * hi as i64) as i32
     }
 
     /// i8 twin of [`Self::set_sum`]: sum of q over the *set* sign bits of
     /// row-word-base `wbase` within columns [s, e), accumulated in i32
     /// (|q| ≤ 127 with cols capped at 2^24 keeps any group sum inside
-    /// i32 range).
+    /// i32 range). One activation is consumed per `trailing_zeros` — a
+    /// serial dependent chain the bit-sliced kernel replaces on the hot
+    /// path; kept as the independent reference implementation for parity
+    /// tests and the extraction-vs-sliced bench.
     #[inline]
     fn set_sum_i8(&self, wbase: usize, s: usize, e: usize, q: &[i8]) -> i32 {
         let mut acc = 0i32;
@@ -355,20 +607,27 @@ impl PackedBits {
 
     /// One (row, token) accumulation of ONE plane in the integer kernel:
     /// per group, the two integer sums (Σ q over the group, Σ q over set
-    /// bits) are rescaled ONCE by the token scale,
+    /// bits — the latter via the bit-sliced popcount kernel) are rescaled
+    /// ONCE by the token scale,
     ///   s_tok · (μ_g Σq + α_g (2 Σ_set q − Σq)),
     /// so the inner loop stays pure integer and the f32 work is two
     /// multiply-adds per group. Shared verbatim by [`Self::matvec_i8`]
     /// and [`Self::matmul_i8`], which makes the two entry points
     /// bit-identical per token — the property the batched-serve parity
-    /// tests pin.
+    /// tests pin. Falls back to the extraction loop for an `ActI8` built
+    /// without slices (never the case on in-tree paths).
     #[inline]
     fn row_acc_i8(&self, wbase: usize, gbase: usize, act: &ActI8) -> f32 {
+        let sliced = act.slices.len() == self.words_per_row * 8;
         let mut acc = 0.0f32;
         for g in 0..self.groups_per_row {
             let s = g * self.group_size;
             let e = (s + self.group_size).min(self.cols);
-            let set = self.set_sum_i8(wbase, s, e, &act.q);
+            let set = if sliced {
+                self.set_sum_i8_sliced(wbase, s, e, &act.slices)
+            } else {
+                self.set_sum_i8(wbase, s, e, &act.q)
+            };
             let gsum = act.group_sums[g];
             // 2·set − gsum in i64: a single full-width group of extreme
             // activations can push 2·set past i32::MAX.
@@ -378,19 +637,69 @@ impl PackedBits {
         acc
     }
 
+    /// Reference (row, token) accumulation using the `trailing_zeros`
+    /// extraction loop — the PR-3 kernel, kept (like
+    /// [`Self::matvec_per_bit`]) as an independent implementation for the
+    /// bit-exactness parity wall and the extraction-vs-sliced bench.
+    #[inline]
+    fn row_acc_i8_extract(&self, wbase: usize, gbase: usize, act: &ActI8) -> f32 {
+        let mut acc = 0.0f32;
+        for g in 0..self.groups_per_row {
+            let s = g * self.group_size;
+            let e = (s + self.group_size).min(self.cols);
+            let set = self.set_sum_i8(wbase, s, e, &act.q);
+            let gsum = act.group_sums[g];
+            let signed = (2 * set as i64 - gsum as i64) as f32;
+            acc += act.scale * (self.mu[gbase + g] * gsum as f32 + self.alpha[gbase + g] * signed);
+        }
+        acc
+    }
+
+    /// One row's full W1A8 dot over all bitplanes (plane contributions in
+    /// chain order — shared accumulation order with the GEMM).
+    #[inline]
+    fn row_dot_i8(&self, r: usize, act: &ActI8) -> f32 {
+        let mut out = 0.0f32;
+        let mut plane = Some(self);
+        while let Some(p) = plane {
+            out += p.row_acc_i8(r * p.words_per_row, r * p.groups_per_row, act);
+            plane = p.residual.as_deref();
+        }
+        out
+    }
+
     /// W1A8 packed GEMV: y = Ŵ x̂ with x̂ = s_tok · q, over all bitplanes,
-    /// i32 accumulation inside every group.
+    /// bit-sliced popcount inner loop, i32 accumulation inside every
+    /// group. Serial form — [`Self::matvec_i8_mt`] fans rows out.
     pub fn matvec_i8(&self, act: &ActI8, y: &mut [f32]) {
+        self.matvec_i8_mt(act, y, 1);
+    }
+
+    /// Row-parallel W1A8 GEMV (same threshold/parity contract as
+    /// [`Self::matvec_mt`]).
+    pub fn matvec_i8_mt(&self, act: &ActI8, y: &mut [f32], threads: usize) {
         assert_eq!(act.q.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         assert_eq!(act.group_sums.len(), self.groups_per_row);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        let mut plane = Some(self);
-        while let Some(p) = plane {
-            for (r, slot) in y.iter_mut().enumerate() {
-                *slot += p.row_acc_i8(r * p.words_per_row, r * p.groups_per_row, act);
+        self.for_each_y_par(y, threads, |r| self.row_dot_i8(r, act));
+    }
+
+    /// Reference W1A8 GEMV on the extraction kernel (bench/test twin of
+    /// [`Self::matvec_i8`], same role as [`Self::matvec_per_bit`] for the
+    /// f32 path). Bit-identical to the sliced kernel by construction —
+    /// pinned by unit and property tests.
+    pub fn matvec_i8_extract(&self, act: &ActI8, y: &mut [f32]) {
+        assert_eq!(act.q.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(act.group_sums.len(), self.groups_per_row);
+        for (r, slot) in y.iter_mut().enumerate() {
+            let mut out = 0.0f32;
+            let mut plane = Some(self);
+            while let Some(p) = plane {
+                out += p.row_acc_i8_extract(r * p.words_per_row, r * p.groups_per_row, act);
+                plane = p.residual.as_deref();
             }
-            plane = p.residual.as_deref();
+            *slot = out;
         }
     }
 
@@ -398,9 +707,29 @@ impl PackedBits {
     /// [`crate::model::layers::linear_vec`] dispatch calls under
     /// [`ActPrecision::Int8`].
     pub fn matvec_i8_owned(&self, x: &[f32]) -> Vec<f32> {
-        let act = self.quantize_act(x);
+        self.matvec_i8_owned_with_scale(x, None)
+    }
+
+    /// [`Self::matvec_i8_owned`] with an optional calibrated static scale
+    /// ([`ActScaleMode::Static`]): `Some(s)` skips the max|x| sweep and
+    /// runs the single fused quantize+group-sum+bit-slice pass; `None`
+    /// computes the per-token scale first.
+    pub fn matvec_i8_owned_with_scale(&self, x: &[f32], scale: Option<f32>) -> Vec<f32> {
+        self.matvec_i8_owned_mt(x, scale, default_threads())
+    }
+
+    /// [`Self::matvec_i8_owned_with_scale`] with an explicit thread
+    /// budget (the dispatch form — see [`Self::matvec_owned_mt`]). The
+    /// quantized-token buffers come from the shared scratch pool, so
+    /// sequential serving sweeping many layers per token reuses them
+    /// instead of allocating three Vecs per layer.
+    pub fn matvec_i8_owned_mt(&self, x: &[f32], scale: Option<f32>, threads: usize) -> Vec<f32> {
+        let mut act = take_scratch_act();
+        let s = scale.unwrap_or_else(|| crate::tensor::ops::act_scale_i8(x));
+        self.quantize_act_with_scale_into(x, s, &mut act);
         let mut y = vec![0.0f32; self.rows];
-        self.matvec_i8(&act, &mut y);
+        self.matvec_i8_mt(&act, &mut y, threads);
+        put_scratch_act(act);
         y
     }
 
@@ -422,8 +751,8 @@ impl PackedBits {
 
     /// W1A8 packed multi-token GEMM: Y = Ŵ X̂ (X: cols × n_tokens), each
     /// token quantized to i8 with its own symmetric scale in the same
-    /// sweep that builds its per-group sums. Single-threaded form of
-    /// [`Self::matmul_i8_mt`].
+    /// sweep that builds its per-group sums and bit-slices.
+    /// Single-threaded form of [`Self::matmul_i8_mt`].
     pub fn matmul_i8(&self, x: &Matrix) -> Matrix {
         self.matmul_i8_mt(x, 1)
     }
@@ -432,17 +761,136 @@ impl PackedBits {
     /// [`Self::for_each_row_par`] (same work threshold and disjoint-row
     /// write as [`Self::matmul_mt`]).
     pub fn matmul_i8_mt(&self, x: &Matrix, threads: usize) -> Matrix {
+        self.matmul_i8_with_scale(x, threads, None)
+    }
+
+    /// [`Self::matmul_i8_mt`] with an optional calibrated static token
+    /// scale (`Some(s)` = every token quantized at s, max sweeps skipped —
+    /// the [`ActScaleMode::Static`] GEMM). The activation transpose and
+    /// the quantized-token pool come from the per-thread scratch, so a
+    /// server batch sweeping many layers reuses them instead of
+    /// re-allocating per call.
+    pub fn matmul_i8_with_scale(&self, x: &Matrix, threads: usize, scale: Option<f32>) -> Matrix {
         assert_eq!(
             x.rows, self.cols,
             "packed i8 matmul shape mismatch: {}x{} @ {}x{}",
             self.rows, self.cols, x.rows, x.cols
         );
+        let mut xt = take_scratch_xt();
+        x.transpose_into(&mut xt);
+        let out = self.matmul_i8_t(&xt, threads, scale);
+        put_scratch_xt(xt);
+        out
+    }
+
+    /// W1A8 GEMM over a TOKEN-MAJOR activation matrix (`xt`: n_tokens ×
+    /// cols, one token per row) — the transpose-free entry the
+    /// transform-domain path feeds directly.
+    pub fn matmul_i8_t(&self, xt: &Matrix, threads: usize, scale: Option<f32>) -> Matrix {
+        assert_eq!(xt.cols, self.cols, "token-major i8 matmul dim mismatch");
+        // Per-token quantization + fused group sums + bit-slices, reusing
+        // the thread's quantized-token pool across calls.
+        self.matmul_i8_tokens_with(xt.rows, threads, |t, act| {
+            let row = xt.row(t);
+            let s = scale.unwrap_or_else(|| crate::tensor::ops::act_scale_i8(row));
+            self.quantize_act_with_scale_into(row, s, act);
+        })
+    }
+
+    /// W1A8 GEMM over tokens produced by a caller-supplied quantizer
+    /// (token index → fills the pooled [`ActI8`] in place): the
+    /// transform-domain path quantizes straight out of its fused
+    /// gather+Haar sweep into the shared scratch pool through this
+    /// entry, so batched exact serving reuses quantized-token buffers
+    /// across layers exactly like the direct packed path.
+    pub fn matmul_i8_tokens_with<Q>(&self, n_tokens: usize, threads: usize, quantize: Q) -> Matrix
+    where
+        Q: Fn(usize, &mut ActI8),
+    {
+        let mut acts = GEMM_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut().acts));
+        // Grow-only: a smaller batch must not free the larger batch's
+        // buffers (mixed batch sizes would otherwise re-pay the
+        // allocations the pool exists to amortize).
+        if acts.len() < n_tokens {
+            acts.resize_with(n_tokens, ActI8::default);
+        }
+        for (t, act) in acts[..n_tokens].iter_mut().enumerate() {
+            quantize(t, act);
+        }
+        let out = self.matmul_i8_acts(&acts[..n_tokens], threads);
+        GEMM_SCRATCH.with(|s| s.borrow_mut().acts = acts);
+        out
+    }
+
+    /// W1A8 GEMM over PRE-QUANTIZED tokens: the entry for callers that
+    /// already hold each token's [`ActI8`] — the transform-domain path
+    /// quantizes straight out of its fused gather+Haar+max sweep and
+    /// feeds the acts here, so no activation is ever swept twice.
+    pub fn matmul_i8_acts(&self, acts: &[ActI8], threads: usize) -> Matrix {
+        for a in acts {
+            assert_eq!(a.q.len(), self.cols, "pre-quantized token dim mismatch");
+            assert_eq!(a.group_sums.len(), self.groups_per_row);
+        }
+        let mut out = Matrix::zeros(self.rows, acts.len());
+        self.for_each_row_par(&mut out, threads, |r, orow| self.row_tokens_i8(r, acts, orow));
+        out
+    }
+
+    /// Reference W1A8 GEMM on the extraction kernel (bench/test twin of
+    /// [`Self::matmul_i8`]). Single-threaded form of
+    /// [`Self::matmul_i8_extract_mt`].
+    pub fn matmul_i8_extract(&self, x: &Matrix) -> Matrix {
+        self.matmul_i8_extract_mt(x, 1)
+    }
+
+    /// Reference-path quantizer: q + per-group sums only, NO bit-slices
+    /// — exactly what the pre-slicing kernel built. Keeps the
+    /// extraction-vs-sliced bench honest: the reference must not pay
+    /// the slicing cost its inner loop never consumes.
+    pub fn quantize_act_extract(&self, x: &[f32]) -> ActI8 {
+        assert_eq!(x.len(), self.cols);
+        let scale = crate::tensor::ops::act_scale_i8(x);
+        let mut q = vec![0i8; self.cols];
+        let mut group_sums = vec![0i32; self.groups_per_row];
+        if scale > 0.0 {
+            let inv = 1.0 / scale;
+            for (g, gsum) in group_sums.iter_mut().enumerate() {
+                let s = g * self.group_size;
+                let e = (s + self.group_size).min(self.cols);
+                let mut acc = 0i32;
+                for j in s..e {
+                    let v = crate::tensor::ops::quantize_i8(x[j], inv);
+                    q[j] = v;
+                    acc += v as i32;
+                }
+                *gsum = acc;
+            }
+        }
+        ActI8 { q, scale, group_sums, slices: Vec::new() }
+    }
+
+    /// Threaded extraction-reference GEMM — same row distribution and
+    /// threshold as the sliced kernel, so the extraction-vs-sliced bench
+    /// isolates the inner-loop change rather than the threading (tokens
+    /// are quantized WITHOUT bit-slices, like the pre-slicing kernel).
+    pub fn matmul_i8_extract_mt(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.rows, self.cols, "packed i8 matmul shape mismatch");
         let n = x.cols;
         let xt = x.transpose();
-        // Per-token quantization + fused group sums, token-major.
-        let acts: Vec<ActI8> = (0..n).map(|t| self.quantize_act(xt.row(t))).collect();
+        let acts: Vec<ActI8> = (0..n).map(|t| self.quantize_act_extract(xt.row(t))).collect();
         let mut out = Matrix::zeros(self.rows, n);
-        self.for_each_row_par(&mut out, threads, |r, orow| self.row_tokens_i8(r, &acts, orow));
+        self.for_each_row_par(&mut out, threads, |r, orow| {
+            orow.iter_mut().for_each(|v| *v = 0.0);
+            let mut plane = Some(self);
+            while let Some(p) = plane {
+                let wbase = r * p.words_per_row;
+                let gbase = r * p.groups_per_row;
+                for (t, slot) in orow.iter_mut().enumerate() {
+                    *slot += p.row_acc_i8_extract(wbase, gbase, &acts[t]);
+                }
+                plane = p.residual.as_deref();
+            }
+        });
         out
     }
 
@@ -521,20 +969,37 @@ impl PackedBits {
         self.matmul_mt(x, 1)
     }
 
-    /// Packed GEMM with rows distributed over `threads` workers via
-    /// [`parallel_for`]. Falls back to single-thread for small problems
-    /// (thread spawn would dominate model-sized layers).
+    /// Packed GEMM with rows distributed over `threads` workers of the
+    /// persistent pool. Falls back to single-thread below the
+    /// [`PAR_WORK_MIN`] work threshold. The activation transpose and the
+    /// per-token group sums come from the per-thread scratch (reused
+    /// across layers of a coalesced serving batch).
     pub fn matmul_mt(&self, x: &Matrix, threads: usize) -> Matrix {
         assert_eq!(
             x.rows, self.cols,
             "packed matmul shape mismatch: {}x{} @ {}x{}",
             self.rows, self.cols, x.rows, x.cols
         );
-        let n = x.cols;
-        let xt = x.transpose();
+        let mut xt = take_scratch_xt();
+        x.transpose_into(&mut xt);
+        let out = self.matmul_t(&xt, threads);
+        put_scratch_xt(xt);
+        out
+    }
+
+    /// Packed GEMM over a TOKEN-MAJOR activation matrix (`xt`: n_tokens ×
+    /// cols, one token per row) — the transpose-free entry for callers
+    /// that already hold tokens as rows (the transform-domain batched
+    /// path, which would otherwise transpose twice per layer).
+    pub fn matmul_t(&self, xt: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(xt.cols, self.cols, "token-major matmul dim mismatch");
+        let n = xt.rows;
         let g = self.groups_per_row;
-        // Per-token per-group activation sums, token-major.
-        let mut gsums = vec![0.0f32; n * g];
+        // Per-token per-group activation sums, token-major, in the
+        // thread's reusable scratch.
+        let mut gsums = GEMM_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut().gsums));
+        gsums.clear();
+        gsums.resize(n * g, 0.0);
         for t in 0..n {
             let xrow = xt.row(t);
             let tg = &mut gsums[t * g..(t + 1) * g];
@@ -546,23 +1011,26 @@ impl PackedBits {
         }
         let mut out = Matrix::zeros(self.rows, n);
         self.for_each_row_par(&mut out, threads, |r, orow| {
-            self.row_tokens(r, &xt, &gsums, orow)
+            self.row_tokens(r, xt, &gsums, orow)
         });
+        GEMM_SCRATCH.with(|s| s.borrow_mut().gsums = gsums);
         out
     }
 
     /// Run `row_fn(r, out_row_r)` over every output row of a GEMM: serial
-    /// below the work threshold (thread spawn would dominate model-sized
-    /// layers), else rows distributed over [`parallel_for`]. The ONE
-    /// place the disjoint-row unsafe write lives — shared by the f32 and
-    /// i8 GEMMs so the threshold and safety argument cannot diverge.
+    /// below the [`PAR_WORK_MIN`] work threshold (retuned from 1e7 when
+    /// pooled dispatch replaced per-call thread spawning), else rows
+    /// distributed over [`parallel_for`]. Together with the GEMV driver
+    /// [`Self::for_each_y_par`] this is where the disjoint-row unsafe
+    /// write lives — shared by every f32 and i8 entry point so the
+    /// threshold and safety argument cannot diverge.
     fn for_each_row_par<F>(&self, out: &mut Matrix, threads: usize, row_fn: F)
     where
         F: Fn(usize, &mut [f32]) + Sync,
     {
         let n = out.cols;
         let work = self.rows as f64 * self.cols as f64 * n as f64 * self.order() as f64;
-        if threads <= 1 || work < 1.0e7 {
+        if threads <= 1 || work < PAR_WORK_MIN {
             for r in 0..self.rows {
                 row_fn(r, &mut out.data[r * n..(r + 1) * n]);
             }
@@ -791,13 +1259,132 @@ mod tests {
 
     #[test]
     fn packed_matmul_mt_matches_st() {
+        // Serial-vs-parallel bit-parity at the retuned threshold: work =
+        // 96·256·32·2 ≈ 1.6e6 > PAR_WORK_MIN, so threads=4 genuinely fans
+        // rows over the pool — and the output must be IDENTICAL (each row
+        // is computed by the same per-row code regardless of thread
+        // count), f32 and i8 both.
         let mut rng = Rng::new(97);
         let w = Matrix::gauss(96, 256, 1.0, &mut rng);
         let x = Matrix::gauss(256, 32, 1.0, &mut rng);
         let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        assert!(96.0 * 256.0 * 32.0 * 2.0 >= PAR_WORK_MIN, "test no longer crosses threshold");
         let a = p.matmul_mt(&x, 1);
-        let b = p.matmul_mt(&x, 8);
-        assert!(a.dist_sq(&b) < 1e-8, "dist={}", a.dist_sq(&b));
+        let b = p.matmul_mt(&x, 4);
+        assert_eq!(a.data, b.data, "f32 GEMM must be thread-count invariant");
+        let a8 = p.matmul_i8_mt(&x, 1);
+        let b8 = p.matmul_i8_mt(&x, 4);
+        assert_eq!(a8.data, b8.data, "i8 GEMM must be thread-count invariant");
+    }
+
+    #[test]
+    fn matvec_mt_bit_identical_to_serial() {
+        // Row-parallel single-token GEMV: above GEMV_PAR_MIN the rows fan
+        // out; output must be bit-identical to the serial loop (f32 and
+        // i8).
+        let mut rng = Rng::new(105);
+        let w = Matrix::gauss(256, 1030, 1.0, &mut rng); // 1030 = 16·64 + 6 tail
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        assert!(256.0 * 1030.0 * 2.0 >= GEMV_PAR_MIN, "test no longer crosses threshold");
+        let x: Vec<f32> = (0..1030).map(|_| rng.gauss() as f32).collect();
+        let gsums = p.group_sums(&x);
+        let mut y1 = vec![0.0f32; 256];
+        let mut y4 = vec![0.0f32; 256];
+        p.matvec_mt(&x, &gsums, &mut y1, 1);
+        p.matvec_mt(&x, &gsums, &mut y4, 4);
+        assert_eq!(y1, y4, "f32 GEMV must be thread-count invariant");
+        let act = p.quantize_act(&x);
+        let mut z1 = vec![0.0f32; 256];
+        let mut z4 = vec![0.0f32; 256];
+        p.matvec_i8_mt(&act, &mut z1, 1);
+        p.matvec_i8_mt(&act, &mut z4, 4);
+        assert_eq!(z1, z4, "i8 GEMV must be thread-count invariant");
+    }
+
+    #[test]
+    fn sliced_kernel_bit_identical_to_extraction() {
+        // The tentpole identity: Σ_{b=0..6} 2^b·popcnt(S∧Q_b) −
+        // 128·popcnt(S∧Q_7) over the fused column bit-slices must equal
+        // the trailing_zeros extraction sum exactly, for every entry
+        // point, on tails and multi-plane chains.
+        let mut rng = Rng::new(106);
+        for &(rows, cols, gs, order) in
+            &[(8usize, 64usize, 32usize, 1usize), (6, 70, 64, 2), (5, 130, 128, 3), (4, 200, 7, 2)]
+        {
+            let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+            let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+            let x: Vec<f32> = (0..cols).map(|_| 2.0 * rng.gauss() as f32).collect();
+            let act = p.quantize_act(&x);
+            let mut y_sliced = vec![0.0f32; rows];
+            let mut y_extract = vec![0.0f32; rows];
+            p.matvec_i8(&act, &mut y_sliced);
+            p.matvec_i8_extract(&act, &mut y_extract);
+            assert_eq!(y_sliced, y_extract, "({rows},{cols},{gs},{order}) GEMV");
+            let xb = Matrix::gauss(cols, 5, 1.0, &mut rng);
+            let g_sliced = p.matmul_i8(&xb);
+            let g_extract = p.matmul_i8_extract(&xb);
+            assert_eq!(g_sliced.data, g_extract.data, "({rows},{cols},{gs},{order}) GEMM");
+        }
+    }
+
+    #[test]
+    fn sliced_kernel_handles_saturated_tokens() {
+        // q = ±127 everywhere (all 7 magnitude bits + sign patterns that
+        // exercise every plane, including the −128-weight plane 7 which
+        // is set for every negative q).
+        let mut rng = Rng::new(107);
+        let w = Matrix::gauss(6, 70, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        let x: Vec<f32> = (0..70).map(|j| if j % 2 == 0 { 3.0 } else { -3.0 }).collect();
+        let act = p.quantize_act(&x);
+        assert!(act.q.iter().all(|&v| v == 127 || v == -127));
+        let mut y_sliced = vec![0.0f32; 6];
+        let mut y_extract = vec![0.0f32; 6];
+        p.matvec_i8(&act, &mut y_sliced);
+        p.matvec_i8_extract(&act, &mut y_extract);
+        assert_eq!(y_sliced, y_extract);
+    }
+
+    #[test]
+    fn static_scale_quantization_saturates_and_matches_per_token_at_own_scale() {
+        let mut rng = Rng::new(108);
+        let w = Matrix::gauss(4, 70, 1.0, &mut rng);
+        let p = PackedBits::pack(&w, 32);
+        let x: Vec<f32> = (0..70).map(|_| rng.gauss() as f32).collect();
+        // A static scale equal to the token's own per-token scale must
+        // reproduce the per-token path bit-for-bit…
+        let s_tok = crate::tensor::ops::act_scale_i8(&x);
+        let y_static = p.matvec_i8_owned_with_scale(&x, Some(s_tok));
+        let y_dyn = p.matvec_i8_owned(&x);
+        assert_eq!(y_static, y_dyn);
+        // …and a too-small calibrated scale saturates at ±127 instead of
+        // overflowing (every |q| stays in range).
+        let act = p.quantize_act_with_scale(&x, s_tok * 0.25);
+        assert!(act.q.iter().all(|&v| (-127..=127).contains(&v)));
+        assert!(act.q.iter().any(|&v| v == 127 || v == -127), "nothing saturated");
+        // GEMM static path agrees with the GEMV static path per token.
+        let xb = Matrix::gauss(70, 3, 1.0, &mut rng);
+        let g = p.matmul_i8_with_scale(&xb, 1, Some(0.02));
+        let xbt = xb.transpose();
+        for t in 0..3 {
+            let yv = p.matvec_i8_owned_with_scale(xbt.row(t), Some(0.02));
+            for r in 0..4 {
+                assert_eq!(g.at(r, t), yv[r], "({r},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        // The token-major entry (transpose-free) must agree bit-for-bit
+        // with the column-major wrapper.
+        let mut rng = Rng::new(109);
+        let w = Matrix::gauss(9, 70, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        let x = Matrix::gauss(70, 6, 1.0, &mut rng);
+        let xt = x.transpose();
+        assert_eq!(p.matmul(&x).data, p.matmul_t(&xt, 1).data);
+        assert_eq!(p.matmul_i8(&x).data, p.matmul_i8_t(&xt, 1, None).data);
     }
 
     #[test]

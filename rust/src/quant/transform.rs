@@ -150,9 +150,26 @@ impl TransformPacked {
     /// The activation-side transform z = B·(Pᵀx): permuted gather fused
     /// with the pairwise sum/difference pass of
     /// [`crate::haar::haar_act_fwd_into`] — one O(m) sweep, no scratch
-    /// gather buffer.
+    /// gather buffer and NO max tracking (this is the
+    /// [`crate::quant::packed::ActScaleMode::Static`] hot path, where the
+    /// calibrated scale makes the max sweep unnecessary; the W1A32 path
+    /// uses it too). Same arithmetic per element as
+    /// [`Self::transform_act_with_max`], so z is bit-identical.
     pub fn transform_act(&self, x: &[f32]) -> Vec<f32> {
-        self.transform_act_with_max(x).0
+        assert_eq!(x.len(), self.cols_in, "transform_act dim mismatch");
+        let m = self.cols_in;
+        let j = half_len(m);
+        let mut z = vec![0.0f32; 2 * j];
+        for k in 0..m / 2 {
+            let a = x[self.perm[2 * k] as usize];
+            let b = x[self.perm[2 * k + 1] as usize];
+            z[k] = a + b;
+            z[j + k] = a - b;
+        }
+        if m % 2 == 1 {
+            z[j - 1] = x[self.perm[m - 1] as usize];
+        }
+        z
     }
 
     /// [`Self::transform_act`] additionally returning max|z| tracked in
@@ -186,11 +203,40 @@ impl TransformPacked {
         (z, mx)
     }
 
+    /// The ONE per-token transform→quantize sequence every W1A8 entry
+    /// point shares (GEMV, GEMM, pooled or owned): `None` = per-token
+    /// scale from the fused max sweep; `Some(s)` = calibrated static
+    /// z-domain scale through the max-free transform (the scale
+    /// `calib::scales` pins for transform-exact layers is max|z|/127,
+    /// NOT max|x| — the kernel quantizes z; out-of-range coefficients
+    /// saturate at ±127).
+    fn quantize_transformed_scaled_into(&self, x: &[f32], scale: Option<f32>, act: &mut ActI8) {
+        match scale {
+            Some(s) => {
+                let z = self.transform_act(x);
+                self.bits.quantize_act_with_scale_into(&z, s, act);
+            }
+            None => {
+                let (z, mx) = self.transform_act_with_max(x);
+                self.bits.quantize_act_with_scale_into(&z, mx / 127.0, act);
+            }
+        }
+    }
+
     /// Quantize one token for the W1A8 path: transform (with the fused
-    /// max sweep) then the fused quantize+group-sum pass.
+    /// max sweep) then the fused quantize+group-sum+bit-slice pass.
     pub fn quantize_transformed(&self, x: &[f32]) -> ActI8 {
-        let (z, mx) = self.transform_act_with_max(x);
-        self.bits.quantize_act_with_scale(&z, mx / 127.0)
+        let mut act = ActI8::default();
+        self.quantize_transformed_scaled_into(x, None, &mut act);
+        act
+    }
+
+    /// [`Self::quantize_transformed`] with a calibrated static z-domain
+    /// scale (see [`Self::quantize_transformed_scaled_into`]).
+    pub fn quantize_transformed_with_scale(&self, x: &[f32], scale: f32) -> ActI8 {
+        let mut act = ActI8::default();
+        self.quantize_transformed_scaled_into(x, Some(scale), &mut act);
+        act
     }
 
     /// Add the salient side-channel contribution for one token: gather the
@@ -214,8 +260,15 @@ impl TransformPacked {
     /// side-channel accumulation. The form the
     /// [`crate::model::layers::linear_vec`] dispatch calls.
     pub fn matvec_owned(&self, x: &[f32]) -> Vec<f32> {
+        self.matvec_owned_mt(x, crate::util::threadpool::default_threads())
+    }
+
+    /// [`Self::matvec_owned`] with an explicit thread budget (the
+    /// `model::layers` dispatch form — a pinned `--threads` budget
+    /// reaches the packed GEMV fan-out).
+    pub fn matvec_owned_mt(&self, x: &[f32], threads: usize) -> Vec<f32> {
         let z = self.transform_act(x);
-        let mut y = self.bits.matvec_owned(&z);
+        let mut y = self.bits.matvec_owned_mt(&z, None, threads);
         self.salient_accumulate(x, &mut y);
         y
     }
@@ -224,54 +277,109 @@ impl TransformPacked {
     /// quantized to i8 (scale fused into the transform sweep) and the
     /// integer packed GEMV runs; the salient side-channel stays f32.
     pub fn matvec_i8_owned(&self, x: &[f32]) -> Vec<f32> {
-        let act = self.quantize_transformed(x);
+        self.matvec_i8_owned_with_scale(x, None)
+    }
+
+    /// [`Self::matvec_i8_owned`] with an optional calibrated static
+    /// z-domain scale ([`crate::quant::packed::ActScaleMode::Static`]).
+    pub fn matvec_i8_owned_with_scale(&self, x: &[f32], scale: Option<f32>) -> Vec<f32> {
+        self.matvec_i8_owned_mt(x, scale, crate::util::threadpool::default_threads())
+    }
+
+    /// [`Self::matvec_i8_owned_with_scale`] with an explicit thread
+    /// budget (the dispatch form). Quantizes into a pooled [`ActI8`]
+    /// (same buffers the GEMM entries reuse), static scales through the
+    /// max-free transform — the per-token computation mirrors
+    /// [`Self::quantize_transformed`] exactly.
+    pub fn matvec_i8_owned_mt(&self, x: &[f32], scale: Option<f32>, threads: usize) -> Vec<f32> {
+        let mut act = crate::quant::packed::take_scratch_act();
+        self.quantize_transformed_scaled_into(x, scale, &mut act);
         let mut y = vec![0.0f32; self.bits.rows];
-        self.bits.matvec_i8(&act, &mut y);
+        self.bits.matvec_i8_mt(&act, &mut y, threads);
         self.salient_accumulate(x, &mut y);
+        crate::quant::packed::put_scratch_act(act);
         y
     }
 
     /// Transform every token of a TOKEN-MAJOR activation matrix (`xt`:
-    /// n × cols_in, one token per row) into the Haar domain: returns Z
-    /// (2·⌈m/2⌉ × n) with column t = B·Pᵀ·xt[t], computed by the same
-    /// per-token sweep as [`Self::transform_act`]. Token-major input so
-    /// the batched entry points transpose X exactly once and share it
-    /// with the salient pass.
+    /// n × cols_in, one token per row) into the Haar domain: returns Zt
+    /// TOKEN-MAJOR (n × 2·⌈m/2⌉) with row t = B·Pᵀ·xt[t], computed by the
+    /// same per-token sweep as [`Self::transform_act`]. Token-major
+    /// throughout so the batched entry points transpose X exactly once
+    /// and feed the packed GEMM's token-major entry directly — the old
+    /// path transposed Zt here only for the GEMM to transpose it back.
     fn transform_tokens_t(&self, xt: &Matrix) -> Matrix {
         let j2 = 2 * half_len(self.cols_in);
         let mut zt = Matrix::zeros(xt.rows, j2);
         for t in 0..xt.rows {
-            let (z, _) = self.transform_act_with_max(xt.row(t));
+            // Max-free sweep: the f32 GEMM never needs a scale.
+            let z = self.transform_act(xt.row(t));
             zt.row_mut(t).copy_from_slice(&z);
         }
-        zt.transpose()
+        zt
     }
 
-    /// Batched Y = Ŵ·X (W1A32): per-token-column transform, then the
-    /// unmodified multi-token packed GEMM, then the per-token salient
-    /// accumulation. Each output column is bit-identical to
-    /// [`Self::matvec_owned`] on that column alone (the packed GEMM shares
-    /// the GEMV's per-(row, token) accumulation order, and the transform
-    /// and salient helpers are the same code per token).
+    /// Batched Y = Ŵ·X (W1A32): per-token transform, then the multi-token
+    /// packed GEMM (token-major entry — no intermediate transposes), then
+    /// the per-token salient accumulation. Each output column is
+    /// bit-identical to [`Self::matvec_owned`] on that column alone (the
+    /// packed GEMM shares the GEMV's per-(row, token) accumulation order,
+    /// and the transform and salient helpers are the same code per
+    /// token).
     pub fn matmul(&self, x: &Matrix) -> Matrix {
+        self.matmul_mt(x, crate::util::threadpool::default_threads())
+    }
+
+    /// [`Self::matmul`] with an explicit thread budget (the dispatch
+    /// form).
+    pub fn matmul_mt(&self, x: &Matrix, threads: usize) -> Matrix {
         assert_eq!(x.rows, self.cols_in, "transform matmul dim mismatch");
-        let xt = x.transpose();
-        let z = self.transform_tokens_t(&xt);
-        let mut out = self.bits.matmul(&z);
+        let mut xt = crate::quant::packed::take_scratch_xt();
+        x.transpose_into(&mut xt);
+        let zt = self.transform_tokens_t(&xt);
+        let mut out = self.bits.matmul_t(&zt, threads);
         self.salient_accumulate_tokens_t(&xt, &mut out);
+        crate::quant::packed::put_scratch_xt(xt);
         out
     }
 
     /// W1A8 batched GEMM: each transformed token is quantized with its own
-    /// symmetric scale inside [`PackedBits::matmul_i8`] (identical to the
-    /// fused sequential scale — max is sweep-order independent), salient
+    /// symmetric scale inside the packed GEMM (identical to the fused
+    /// sequential scale — max is sweep-order independent), salient
     /// side-channel in f32.
     pub fn matmul_i8(&self, x: &Matrix) -> Matrix {
+        self.matmul_i8_with_scale(x, None)
+    }
+
+    /// [`Self::matmul_i8`] with an optional calibrated static z-domain
+    /// scale applied to every token (the static-scale batched path).
+    /// Each token is quantized straight out of the fused
+    /// gather+Haar+max sweep — the max that sweep tracks IS the per-token
+    /// scale, so z is never swept a second time (exactly the sequential
+    /// [`Self::quantize_transformed`] computation, which keeps the
+    /// GEMV/GEMM bit-parity by construction).
+    pub fn matmul_i8_with_scale(&self, x: &Matrix, scale: Option<f32>) -> Matrix {
+        self.matmul_i8_scaled_mt(x, scale, crate::util::threadpool::default_threads())
+    }
+
+    /// [`Self::matmul_i8_with_scale`] with an explicit thread budget
+    /// (the dispatch form).
+    pub fn matmul_i8_scaled_mt(&self, x: &Matrix, scale: Option<f32>, threads: usize) -> Matrix {
         assert_eq!(x.rows, self.cols_in, "transform matmul dim mismatch");
-        let xt = x.transpose();
-        let z = self.transform_tokens_t(&xt);
-        let mut out = self.bits.matmul_i8(&z);
+        let mut xt = crate::quant::packed::take_scratch_xt();
+        x.transpose_into(&mut xt);
+        // Tokens quantize straight out of the fused transform sweep into
+        // the shared scratch pool (no re-sweep of z, no per-call ActI8
+        // allocations): static scales use the max-free transform — the
+        // calibrated scale is the whole point of skipping the sweep —
+        // per-token scales come from the max the sweep tracks anyway
+        // (both mirror the sequential GEMV paths, so GEMV/GEMM stay
+        // bit-identical per token).
+        let mut out = self.bits.matmul_i8_tokens_with(xt.rows, threads, |t, act| {
+            self.quantize_transformed_scaled_into(xt.row(t), scale, act)
+        });
         self.salient_accumulate_tokens_t(&xt, &mut out);
+        crate::quant::packed::put_scratch_xt(xt);
         out
     }
 
@@ -534,6 +642,30 @@ mod tests {
             assert_eq!(act.q, act_ref.q);
             assert_eq!(act.scale, act_ref.scale);
             assert_eq!(act.group_sums, act_ref.group_sums);
+        }
+    }
+
+    #[test]
+    fn static_z_scale_gemv_gemm_agree_and_match_per_token_at_own_scale() {
+        let mut rng = Rng::new(208);
+        let w = Matrix::gauss(8, 70, 1.0, &mut rng);
+        let t = build(&w, &[4, 20], &mut rng);
+        let x: Vec<f32> = (0..70).map(|_| rng.gauss() as f32).collect();
+        // Static scale equal to the token's own fused scale reproduces
+        // the per-token path bit-for-bit.
+        let (_, mx) = t.transform_act_with_max(&x);
+        let y_static = t.matvec_i8_owned_with_scale(&x, Some(mx / 127.0));
+        let y_dyn = t.matvec_i8_owned(&x);
+        assert_eq!(y_static, y_dyn);
+        // GEMM and GEMV agree per token under a shared static z-scale.
+        let xb = Matrix::gauss(70, 4, 1.0, &mut rng);
+        let g = t.matmul_i8_with_scale(&xb, Some(0.03));
+        let xbt = xb.transpose();
+        for tok in 0..4 {
+            let yv = t.matvec_i8_owned_with_scale(xbt.row(tok), Some(0.03));
+            for r in 0..8 {
+                assert_eq!(g.at(r, tok), yv[r], "({r},{tok})");
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -128,6 +128,20 @@ impl Matrix {
 
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-owned buffer (resized as needed) — the
+    /// allocation-free form the packed GEMM scratch reuses across layers
+    /// of a coalesced serving batch.
+    pub fn transpose_into(&self, t: &mut Matrix) {
+        t.rows = self.cols;
+        t.cols = self.rows;
+        // Resize WITHOUT clearing first: the blocked loop below writes
+        // every element, so stale contents of a reused buffer are fine
+        // and the full-size zero-fill memset is skipped.
+        t.data.resize(self.rows * self.cols, 0.0);
         // Blocked transpose for cache friendliness.
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
@@ -139,7 +153,6 @@ impl Matrix {
                 }
             }
         }
-        t
     }
 
     /// Select columns by index into a new matrix.

@@ -41,13 +41,15 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
-/// Threaded GEMM: rows of A are distributed over `threads` workers.
-/// Falls back to single-thread for small problems.
+/// Threaded GEMM: rows of A are distributed over `threads` workers of
+/// the persistent pool. Falls back to single-thread for small problems
+/// (threshold retuned down from 2e7 when pooled dispatch replaced
+/// per-call thread spawning).
 pub fn matmul_mt(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    if threads <= 1 || flops < 2.0e7 {
+    if threads <= 1 || flops < 4.0e6 {
         return matmul(a, b);
     }
     let mut c = Matrix::zeros(m, n);

@@ -1,19 +1,239 @@
-//! A small scoped thread pool.
+//! Thread-parallel primitives backed by ONE persistent worker pool.
 //!
-//! `rayon` is not available offline, so the layer-parallel PTQ scheduler and
-//! the rollout engine use this pool: a fixed set of workers pulling closures
-//! from an MPMC channel built on `std::sync::mpsc` + a mutex-wrapped
-//! receiver. `scope` provides structured parallelism: it blocks until every
-//! job submitted inside the scope has finished, so borrows of stack data are
-//! expressed safely via `std::thread::scope` underneath.
+//! `rayon` is not available offline, so the layer-parallel PTQ scheduler,
+//! the rollout engine and the packed GEMM/GEMV kernels all share this
+//! module. Historically every `parallel_for` call spawned fresh OS threads
+//! through `std::thread::scope`; at serving granularity (one GEMM per
+//! layer per batch) the spawn cost dominated small problems and forced the
+//! kernels to keep high serial-fallback thresholds. The current design
+//! keeps a lazily-initialized **global worker pool** (started on first
+//! use, `default_threads()` workers, jobs over the same MPMC
+//! channel-behind-a-mutex the serving [`Pool`] uses) and turns
+//! `parallel_for` into: submit K helper jobs that pull indices from a
+//! shared atomic counter, run the same loop on the calling thread, then
+//! wait for the helpers to drain.
+//!
+//! Structured-parallelism safety: helpers register as *running* under a
+//! per-call lock before touching the caller's closure; at drain time the
+//! caller flips a cancelled flag under the same lock (helpers that have
+//! not started become no-ops and never dereference the stack pointer)
+//! and blocks until the running count reaches zero. Borrowing stack data
+//! from the closure is sound because of that handshake — and one call's
+//! latency never waits on another call's queue backlog, since queued
+//! helpers are cancelled rather than awaited (the caller itself drains
+//! the remaining items).
+//!
+//! Nesting: a `parallel_for` issued FROM a pool worker runs serially
+//! inline. Helper jobs therefore never block on pool progress, which is
+//! the no-deadlock invariant of the design (a blocked worker waiting for
+//! queued helpers that only blocked workers could run). The outer level
+//! owns the pool's parallelism; inner levels (e.g. a threaded GEMM inside
+//! a layer-parallel PTQ job) degrade to the serial loop instead of
+//! oversubscribing.
+//!
+//! Panics in the closure are caught per item, the pool workers survive,
+//! and `parallel_for` re-raises after the barrier.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Run `f(i)` for i in 0..n across at most `threads` OS threads, blocking
-/// until all items complete. Items are pulled dynamically (work stealing by
-/// atomic counter), so uneven item costs balance well.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set for the lifetime of every global-pool worker thread: nested
+    /// `parallel_for` calls detect it and run inline (see module docs).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+struct GlobalPool {
+    tx: std::sync::mpsc::Sender<Job>,
+    threads: usize,
+    /// Workers currently blocked waiting for a job — the submission
+    /// heuristic: `parallel_for` only enqueues up to this many helpers,
+    /// so a saturated pool degrades to the caller's serial loop instead
+    /// of queuing dead jobs that would all cancel at drain time.
+    idle: Arc<AtomicUsize>,
+}
+
+static GLOBAL: OnceLock<GlobalPool> = OnceLock::new();
+
+/// The process-wide worker pool, started on first use. Workers are
+/// detached (the pool lives for the process); a panicking job is caught
+/// so the worker survives to run the next one.
+fn global_pool() -> &'static GlobalPool {
+    GLOBAL.get_or_init(|| {
+        let threads = default_threads().max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let idle = Arc::new(AtomicUsize::new(0));
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let idle = Arc::clone(&idle);
+            std::thread::Builder::new()
+                .name(format!("hbvla-pool-{i}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    loop {
+                        idle.fetch_add(1, Ordering::Relaxed);
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        idle.fetch_sub(1, Ordering::Relaxed);
+                        match job {
+                            Ok(job) => {
+                                // The job itself reports panics to its
+                                // submitter (see parallel_for); this catch
+                                // only keeps the worker alive.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
+                            Err(_) => break, // channel closed (never, in practice)
+                        }
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        GlobalPool { tx, threads, idle }
+    })
+}
+
+/// Worker count of the global pool (starts it if needed).
+pub fn pool_threads() -> usize {
+    global_pool().threads
+}
+
+/// Whether the current thread IS a global-pool worker (used by the
+/// kernels to avoid nested submission; exposed for tests).
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// Run `f(i)` for i in 0..n across at most `threads` workers of the
+/// persistent pool (plus the calling thread), blocking until all items
+/// complete. Items are pulled dynamically (work stealing by atomic
+/// counter), so uneven item costs balance well. Called from inside a pool
+/// worker it degrades to the serial loop (see module docs).
 pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 || in_pool_worker() {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let pool = global_pool();
+    // The caller participates, so at most threads−1 helpers are
+    // submitted — and never more than the pool's currently-idle worker
+    // count (a racy heuristic: a stale read only costs some parallelism
+    // for this one call, while submitting into a saturated pool would
+    // queue boxed jobs that all cancel unrun at drain time).
+    let helpers = (threads - 1).min(pool.threads).min(pool.idle.load(Ordering::Relaxed));
+    if helpers == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // Per-call handshake: helpers that have not STARTED by the time the
+    // caller drains the work are cancelled (they check under the lock and
+    // never touch the caller's stack), so one call's latency never waits
+    // on another call's queue backlog — the caller only joins helpers
+    // that are actively running its own closure.
+    struct HelperSync {
+        /// Erased pointer to the caller's `run` closure + its caller.
+        raw: *const (),
+        call: unsafe fn(*const ()),
+        /// (cancelled, actively running helper count).
+        state: Mutex<(bool, usize)>,
+        cvar: Condvar,
+    }
+    // SAFETY: `raw` points at a Sync closure on the caller's stack; it is
+    // only dereferenced by helpers that registered under the lock before
+    // `cancelled` was set, and the caller blocks until their count drops
+    // to zero — after cancellation the pointer is never read again.
+    unsafe impl Send for HelperSync {}
+    unsafe impl Sync for HelperSync {}
+    fn erase<R: Fn() + Sync>(r: &R) -> (*const (), unsafe fn(*const ())) {
+        unsafe fn call<R: Fn()>(p: *const ()) {
+            (*(p as *const R))();
+        }
+        (r as *const R as *const (), call::<R>)
+    }
+
+    let counter = AtomicUsize::new(0);
+    let panicked = AtomicBool::new(false);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let run = || loop {
+        if panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let i = counter.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+            panicked.store(true, Ordering::Relaxed);
+            payload.lock().unwrap().get_or_insert(p);
+        }
+    };
+    let (raw, call) = erase(&run);
+    let sync = Arc::new(HelperSync {
+        raw,
+        call,
+        state: Mutex::new((false, 0)),
+        cvar: Condvar::new(),
+    });
+    for _ in 0..helpers {
+        let sync = Arc::clone(&sync);
+        let job: Job = Box::new(move || {
+            {
+                let mut g = sync.state.lock().unwrap();
+                if g.0 {
+                    return; // cancelled before starting: caller is gone
+                }
+                g.1 += 1;
+            }
+            // SAFETY: registered as running under the lock above, so the
+            // caller's drain below waits for this dereference to finish.
+            unsafe { (sync.call)(sync.raw) };
+            let mut g = sync.state.lock().unwrap();
+            g.1 -= 1;
+            if g.1 == 0 {
+                sync.cvar.notify_all();
+            }
+        });
+        pool.tx.send(job).expect("global pool closed");
+    }
+    run();
+    {
+        let mut g = sync.state.lock().unwrap();
+        g.0 = true; // unstarted helpers become no-ops
+        while g.1 > 0 {
+            g = sync.cvar.wait(g).unwrap();
+        }
+    }
+    if panicked.load(Ordering::Relaxed) {
+        match payload.lock().unwrap().take() {
+            Some(p) => std::panic::resume_unwind(p),
+            None => panic!("parallel_for worker panicked"),
+        }
+    }
+}
+
+/// The pre-pool implementation — fresh scoped OS threads on every call.
+/// Kept ONLY as the dispatch-overhead reference for
+/// `benches/perf_micro.rs` and the §Perf baseline; production paths all
+/// use [`parallel_for`].
+pub fn parallel_for_spawn<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
@@ -59,11 +279,17 @@ where
 }
 
 /// Default worker count: physical parallelism minus one (leave a core for
-/// the coordinator), at least 1.
+/// the coordinator), at least 1. Cached after the first query — the
+/// kernel dispatch consults this per layer per token, and
+/// `available_parallelism` is a syscall-backed probe that has no
+/// business on that path.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get().saturating_sub(1).max(1))
-        .unwrap_or(4)
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(4)
+    })
 }
 
 /// A persistent pool for the serving path: submit boxed jobs, each tagged
@@ -74,8 +300,6 @@ pub struct Pool {
     pending: Arc<(Mutex<usize>, Condvar)>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl Pool {
     pub fn new(threads: usize) -> Self {
@@ -174,6 +398,60 @@ mod tests {
     #[test]
     fn parallel_for_empty() {
         parallel_for(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_for_reuses_pool_across_calls() {
+        // Many successive calls against the persistent pool: coverage must
+        // hold every round (the pool is shared process-wide, so this also
+        // exercises interleaving with other tests' submissions).
+        for round in 0..50 {
+            let hits = AtomicU64::new(0);
+            parallel_for(64, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 64, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_for_completes_without_deadlock() {
+        // Outer items fan out over the pool; inner calls from pool workers
+        // degrade to serial loops (the no-deadlock invariant).
+        let hits = AtomicU64::new(0);
+        parallel_for(4, 4, |_| {
+            parallel_for(10, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn parallel_for_propagates_panic_and_pool_survives() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_for(16, 4, |i| {
+                if i == 7 {
+                    panic!("intentional test panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool workers caught the panic and keep serving jobs.
+        let hits = AtomicU64::new(0);
+        parallel_for(100, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn spawn_reference_covers_all() {
+        let hits = AtomicU64::new(0);
+        parallel_for_spawn(300, 6, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 300 * 301 / 2);
     }
 
     #[test]

@@ -251,6 +251,91 @@ fn prop_w1a8_matches_f32_packed_random_groups() {
     }
 }
 
+/// Bit-sliced popcount kernel ≡ trailing_zeros extraction kernel,
+/// BIT-EXACTLY, over random shapes, random group sizes (non-multiples of
+/// 64 included), random residual-plane orders, and activation regimes
+/// including saturated q = ±127 tokens — GEMV and GEMM both. The sliced
+/// kernel is the hot path; the extraction kernel is the retained
+/// reference (like `matvec_per_bit` for f32), so this is the wall that
+/// lets the hot path evolve without silently changing results.
+#[test]
+fn prop_bit_sliced_kernel_equals_extraction_bit_exact() {
+    let mut rng = Rng::new(1011);
+    for trial in 0..40 {
+        let (r, c) = random_shape(&mut rng);
+        let gs = 1 + rng.below(100);
+        let order = 1 + rng.below(3); // random residual-plane chains
+        let w = Matrix::gauss(r, c, rng.range(0.2, 3.0) as f32, &mut rng);
+        let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+        // Three activation regimes: gaussian, saturating (every q hits
+        // ±127), and sparse-with-zeros.
+        let regime = trial % 3;
+        let x: Vec<f32> = (0..c)
+            .map(|j| match regime {
+                0 => rng.gauss() as f32,
+                1 => {
+                    if (j + trial) % 2 == 0 {
+                        5.0
+                    } else {
+                        -5.0
+                    }
+                }
+                _ => {
+                    if rng.flip(0.5) {
+                        0.0
+                    } else {
+                        rng.gauss() as f32
+                    }
+                }
+            })
+            .collect();
+        let act = p.quantize_act(&x);
+        if regime == 1 {
+            assert!(act.q.iter().all(|&v| v == 127 || v == -127), "trial {trial}");
+        }
+        let mut y_sliced = vec![0.0f32; r];
+        let mut y_extract = vec![0.0f32; r];
+        p.matvec_i8(&act, &mut y_sliced);
+        p.matvec_i8_extract(&act, &mut y_extract);
+        assert_eq!(y_sliced, y_extract, "trial {trial} {r}x{c} gs={gs} order={order} GEMV");
+        let n = 1 + rng.below(6);
+        let xm = Matrix::gauss(c, n, rng.range(0.2, 2.0) as f32, &mut rng);
+        let g_sliced = p.matmul_i8(&xm);
+        let g_extract = p.matmul_i8_extract(&xm);
+        assert_eq!(
+            g_sliced.data, g_extract.data,
+            "trial {trial} {r}x{c} gs={gs} order={order} GEMM"
+        );
+    }
+}
+
+/// The 70 = 64+6 tail shape, pinned explicitly (one full sign word plus a
+/// 6-bit tail word) across every entry point of the sliced kernel,
+/// including the threaded GEMM at threads ∈ {1, 4} — sized PAST the
+/// parallel work threshold so the threads=4 run genuinely exercises the
+/// row fan-out (asserted, so a threshold retune can't quietly make this
+/// vacuous).
+#[test]
+fn prop_bit_sliced_tail_shapes_and_thread_invariance() {
+    use hbvla::quant::packed::PAR_WORK_MIN;
+    let mut rng = Rng::new(1012);
+    let (rows, n, order) = (128usize, 32usize, 2usize);
+    for &cols in &[70usize, 64, 65, 128, 129] {
+        assert!(
+            (rows * cols * n * order) as f64 >= PAR_WORK_MIN,
+            "cols={cols}: test no longer crosses the parallel threshold"
+        );
+        let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, order, 0.0);
+        let x = Matrix::gauss(cols, n, 1.0, &mut rng);
+        let a1 = p.matmul_i8_mt(&x, 1);
+        let a4 = p.matmul_i8_mt(&x, 4);
+        let e1 = p.matmul_i8_extract(&x);
+        assert_eq!(a1.data, a4.data, "cols={cols} thread variance");
+        assert_eq!(a1.data, e1.data, "cols={cols} sliced vs extraction");
+    }
+}
+
 /// Every method, on every random layer: finite output, correct shape,
 /// strictly-positive bit accounting, error strictly below "all zeros".
 #[test]
