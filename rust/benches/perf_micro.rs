@@ -72,6 +72,31 @@ fn main() {
         t_i8 * 1e3,
         t_i8_ext / t_i8
     );
+    // Wide-lane dispatch: the forced-lane sliced kernel at every lane
+    // this machine can run (outputs bit-identical across lanes — only
+    // the word-level inner loop differs).
+    {
+        use hbvla::quant::packed::SimdLane;
+        println!("[bench] active SIMD lane: {}", SimdLane::active().label());
+        let mut per_lane = Vec::new();
+        for lane in SimdLane::available() {
+            let t = bench(&format!("packed W1A8 GEMV 512x2048 ({})", lane.label()), 5, 200, || {
+                packed.matvec_i8_lane(&act, &mut y, 1, lane);
+                std::hint::black_box(&y);
+            });
+            per_lane.push((lane.label(), t));
+        }
+        if let Some(&(_, t0)) = per_lane.first() {
+            for &(label, t) in per_lane.iter().skip(1) {
+                println!(
+                    "[bench] W1A8 lane {label}: {:.3}ms vs scalar {:.3}ms — ×{:.2}",
+                    t * 1e3,
+                    t0 * 1e3,
+                    t0 / t
+                );
+            }
+        }
+    }
     // Same comparison at a model-shaped layer (d_model-scale GEMV).
     {
         let wm = Matrix::gauss(128, 512, 1.0, &mut rng);

@@ -8,4 +8,7 @@ pub mod scales;
 
 pub use capture::{capture_calibration, CaptureConfig};
 pub use demos::collect_demos;
-pub use scales::{apply_act_scales, calibrate_act_scales, calibrate_static_scales};
+pub use scales::{
+    apply_act_scales, calibrate_act_scales, calibrate_act_scales_clip, calibrate_static_scales,
+    calibrate_static_scales_clip, ScaleClip,
+};

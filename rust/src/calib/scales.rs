@@ -47,28 +47,106 @@ use crate::model::{ActScaleMode, MiniVla};
 use crate::sim::episode::DemoStep;
 use crate::tensor::matrix::Matrix;
 
-/// Track one token against a layer's quantization domain: plain max|x|
-/// for direct packed layers, max|z| through the fused transform sweep
-/// for transform-exact layers, nothing for dense (FP) layers.
+/// How the calibrated static scale clips the observed activation range.
+/// `Max` (the QuantVLA-style default) covers the single largest |·| the
+/// stream ever produced — robust, but one outlier token inflates the
+/// scale (and thus the round-off) for every other token of the layer.
+/// `Percentile` pins s = p99.9(|·|)/127 instead: the 0.1% outlier tail
+/// saturates at ±127 while the bulk quantizes on a tighter grid. The
+/// perf baseline's act-scale table sweeps both so the tokens/s ↔
+/// action-MSE trade is recorded, and `serve --act-clip` picks at run
+/// time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScaleClip {
+    /// s = max|·|/127 — no calibration-set saturation.
+    #[default]
+    Max,
+    /// s = p99.9(|·|)/127 — clip the outlier tail, tighten the grid.
+    Percentile,
+}
+
+impl ScaleClip {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleClip::Max => "max",
+            ScaleClip::Percentile => "p999",
+        }
+    }
+
+    /// Parse a CLI spelling (`serve --act-clip ...`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "max" => Some(ScaleClip::Max),
+            "p999" | "percentile" | "p99.9" => Some(ScaleClip::Percentile),
+            _ => None,
+        }
+    }
+}
+
+/// Per-layer calibration accumulator: the running max is always kept
+/// (percentile clipping falls back to it when the tail is degenerate);
+/// the raw |·| samples are only collected under [`ScaleClip::Percentile`]
+/// so the default path stays allocation-light and bit-identical to the
+/// historical max-only sweep.
+#[derive(Default)]
+struct CalibAcc {
+    maxabs: f32,
+    samples: Vec<f32>,
+}
+
+/// Track one token against a layer's quantization domain: plain |x| for
+/// direct packed layers, |z| through the fused transform sweep for
+/// transform-exact layers, nothing for dense (FP) layers.
 fn track_token(
-    maxabs: &mut HashMap<String, f32>,
+    accs: &mut HashMap<String, CalibAcc>,
     store: &crate::model::ParamStore,
     name: &str,
     token: &[f32],
+    clip: ScaleClip,
 ) {
     match store.repr(name) {
         WeightRepr::Packed(_) => {
-            let m = maxabs.entry(name.to_string()).or_insert(0.0);
+            let acc = accs.entry(name.to_string()).or_default();
             for v in token {
-                *m = m.max(v.abs());
+                acc.maxabs = acc.maxabs.max(v.abs());
+            }
+            if clip == ScaleClip::Percentile {
+                acc.samples.extend(token.iter().map(|v| v.abs()));
             }
         }
         WeightRepr::TransformPacked(t) => {
-            let (_, mx) = t.transform_act_with_max(token);
-            let m = maxabs.entry(name.to_string()).or_insert(0.0);
-            *m = m.max(mx);
+            let (z, mx) = t.transform_act_with_max(token);
+            let acc = accs.entry(name.to_string()).or_default();
+            acc.maxabs = acc.maxabs.max(mx);
+            if clip == ScaleClip::Percentile {
+                acc.samples.extend(z.iter().map(|v| v.abs()));
+            }
         }
         WeightRepr::Dense(_) => {}
+    }
+}
+
+/// Nearest-rank 99.9th percentile of the collected |·| samples; falls
+/// back to the running max when the percentile is degenerate (≤ 0, e.g.
+/// a mostly-zero layer where the tail IS the signal).
+fn clip_point(acc: &CalibAcc, clip: ScaleClip) -> f32 {
+    match clip {
+        ScaleClip::Max => acc.maxabs,
+        ScaleClip::Percentile => {
+            let n = acc.samples.len();
+            if n == 0 {
+                return acc.maxabs;
+            }
+            let mut s = acc.samples.clone();
+            s.sort_unstable_by(f32::total_cmp);
+            let idx = ((n as f64 * 0.999).ceil() as usize).saturating_sub(1).min(n - 1);
+            let p = s[idx];
+            if p > 0.0 {
+                p
+            } else {
+                acc.maxabs
+            }
+        }
     }
 }
 
@@ -88,7 +166,20 @@ pub fn calibrate_act_scales(
     demos: &[Vec<DemoStep>],
     max_steps: usize,
 ) -> HashMap<String, f32> {
-    let mut maxabs: HashMap<String, f32> = HashMap::new();
+    calibrate_act_scales_clip(model, demos, max_steps, ScaleClip::Max)
+}
+
+/// [`calibrate_act_scales`] with an explicit clip policy: `Max` is the
+/// historical (bit-identical) max-covering sweep; `Percentile` collects
+/// the full |·| sample stream per layer and pins the 99.9th-percentile
+/// clip point instead (outlier tokens saturate at serve time).
+pub fn calibrate_act_scales_clip(
+    model: &MiniVla,
+    demos: &[Vec<DemoStep>],
+    max_steps: usize,
+    clip: ScaleClip,
+) -> HashMap<String, f32> {
+    let mut accs: HashMap<String, CalibAcc> = HashMap::new();
     // Spread the step budget across the collected trajectories instead
     // of letting the first (task-0) demo exhaust it: every task the
     // stream covers must contribute, or a layer whose activation range
@@ -109,7 +200,7 @@ pub fn calibrate_act_scales(
                         return;
                     }
                     for tok in 0..x.cols {
-                        track_token(&mut maxabs, &model.store, name, &x.col(tok));
+                        track_token(&mut accs, &model.store, name, &x.col(tok), clip);
                     }
                 };
                 let mut hook: Option<crate::model::layers::Hook> = Some(&mut hook_fn);
@@ -122,19 +213,21 @@ pub fn calibrate_act_scales(
             };
             // Deterministic head layers (see doc above).
             if model.store.contains("head.expand") {
-                track_token(&mut maxabs, &model.store, "head.expand", &feat);
+                track_token(&mut accs, &model.store, "head.expand", &feat, clip);
                 if model.store.contains("head.main") {
                     let hf = model.head_features(&feat);
-                    track_token(&mut maxabs, &model.store, "head.main", &hf);
+                    track_token(&mut accs, &model.store, "head.main", &hf, clip);
                 }
             }
             steps += 1;
         }
     }
-    maxabs
-        .into_iter()
-        .filter(|(_, m)| *m > 0.0 && m.is_finite())
-        .map(|(name, m)| (name, m / 127.0))
+    accs.into_iter()
+        .filter(|(_, a)| a.maxabs > 0.0 && a.maxabs.is_finite())
+        .map(|(name, a)| {
+            let m = clip_point(&a, clip);
+            (name, m / 127.0)
+        })
         .collect()
 }
 
@@ -160,7 +253,17 @@ pub fn calibrate_static_scales(
     demos: &[Vec<DemoStep>],
     max_steps: usize,
 ) -> usize {
-    let scales = calibrate_act_scales(model, demos, max_steps);
+    calibrate_static_scales_clip(model, demos, max_steps, ScaleClip::Max)
+}
+
+/// [`calibrate_static_scales`] with an explicit [`ScaleClip`] policy.
+pub fn calibrate_static_scales_clip(
+    model: &mut MiniVla,
+    demos: &[Vec<DemoStep>],
+    max_steps: usize,
+    clip: ScaleClip,
+) -> usize {
+    let scales = calibrate_act_scales_clip(model, demos, max_steps, clip);
     let n = apply_act_scales(model, &scales);
     model.cfg.act_scale_mode = ActScaleMode::Static;
     model.store.set_act_scale_mode(ActScaleMode::Static);
@@ -228,6 +331,43 @@ mod tests {
             "static-scale forward drifted: rel err {}",
             num / den
         );
+    }
+
+    #[test]
+    fn clip_labels_and_parse_round_trip() {
+        assert_eq!(ScaleClip::default(), ScaleClip::Max);
+        for c in [ScaleClip::Max, ScaleClip::Percentile] {
+            assert_eq!(ScaleClip::parse(c.label()), Some(c));
+        }
+        assert_eq!(ScaleClip::parse("percentile"), Some(ScaleClip::Percentile));
+        assert_eq!(ScaleClip::parse("p99.9"), Some(ScaleClip::Percentile));
+        assert_eq!(ScaleClip::parse("bogus"), None);
+    }
+
+    #[test]
+    fn percentile_clip_tightens_without_degenerating() {
+        let (model, demos) = packed_model_with_demos();
+        let smax = calibrate_act_scales_clip(&model, &demos, 8, ScaleClip::Max);
+        let sp = calibrate_act_scales_clip(&model, &demos, 8, ScaleClip::Percentile);
+        // Same layer coverage, and the Max path is bit-identical to the
+        // historical API.
+        let legacy = calibrate_act_scales(&model, &demos, 8);
+        assert_eq!(smax, legacy);
+        assert_eq!(smax.len(), sp.len());
+        for (name, &m) in &smax {
+            let p = sp[name];
+            assert!(p > 0.0 && p.is_finite(), "{name}: p999 scale {p}");
+            // Nearest-rank p99.9 can never exceed the max.
+            assert!(p <= m * 1.0001, "{name}: p999 {p} above max {m}");
+        }
+        // A static model calibrated under the percentile clip still
+        // serves finite features on the calibration stream.
+        let mut stat = model.clone().with_act_precision(ActPrecision::Int8);
+        let n = calibrate_static_scales_clip(&mut stat, &demos, 8, ScaleClip::Percentile);
+        assert!(n > 0);
+        let obs = &demos[0][0].obs;
+        let f = stat.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+        assert!(f.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -286,12 +286,38 @@ pub fn register_static_scale_variant(
     demos: &[Vec<crate::sim::episode::DemoStep>],
     max_steps: usize,
 ) -> Result<(String, usize), RegistryError> {
+    register_static_scale_variant_clip(
+        registry,
+        base_variant,
+        demos,
+        max_steps,
+        crate::calib::ScaleClip::Max,
+    )
+}
+
+/// [`register_static_scale_variant`] with an explicit
+/// [`crate::calib::ScaleClip`] policy. The max-clip twin keeps the
+/// historical `"{base}-static"` name (bit-identical to the old flow);
+/// the percentile twin registers as `"{base}-static-p999"` so both can
+/// serve side by side for the tokens/s ↔ action-MSE comparison the perf
+/// baseline records.
+pub fn register_static_scale_variant_clip(
+    registry: &ModelRegistry,
+    base_variant: &str,
+    demos: &[Vec<crate::sim::episode::DemoStep>],
+    max_steps: usize,
+    clip: crate::calib::ScaleClip,
+) -> Result<(String, usize), RegistryError> {
     let base = registry
         .get(base_variant)
         .ok_or_else(|| RegistryError::UnknownVariant { variant: base_variant.to_string() })?;
-    let name = format!("{base_variant}-static");
+    let name = match clip {
+        crate::calib::ScaleClip::Max => format!("{base_variant}-static"),
+        crate::calib::ScaleClip::Percentile => format!("{base_variant}-static-p999"),
+    };
     let mut twin = (*base).clone().with_act_precision(ActPrecision::Int8);
-    let layers = crate::calib::scales::calibrate_static_scales(&mut twin, demos, max_steps);
+    let layers =
+        crate::calib::scales::calibrate_static_scales_clip(&mut twin, demos, max_steps, clip);
     registry.register(&name, Arc::new(twin))?;
     Ok((name, layers))
 }
@@ -496,6 +522,42 @@ mod tests {
         // Unknown base is a typed error.
         let err = register_static_scale_variant(&registry, "missing", &demos, 4).unwrap_err();
         assert_eq!(err, RegistryError::UnknownVariant { variant: "missing".to_string() });
+    }
+
+    #[test]
+    fn percentile_clip_twin_registers_under_suffixed_name() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let registry = ModelRegistry::new();
+        let calib = HashMap::new();
+        quantize_into_registry(
+            &registry,
+            "rtn-packed",
+            &model,
+            &calib,
+            &Rtn::new(),
+            &[Component::Vision, Component::Language],
+            2,
+        )
+        .unwrap();
+        let tasks = crate::sim::tasks::libero_suite("object");
+        let demos = crate::calib::demos::collect_demos(&model, &tasks, 1, 5);
+        let (name, layers) = register_static_scale_variant_clip(
+            &registry,
+            "rtn-packed",
+            &demos,
+            4,
+            crate::calib::ScaleClip::Percentile,
+        )
+        .unwrap();
+        assert_eq!(name, "rtn-packed-static-p999");
+        assert!(layers > 0);
+        let twin = registry.get(&name).unwrap();
+        assert_eq!(twin.store.act_scale_mode(), crate::model::ActScaleMode::Static);
+        assert_eq!(twin.store.static_scale_count(), layers);
+        // It coexists with the max-clip twin under the historical name.
+        let (mname, _) = register_static_scale_variant(&registry, "rtn-packed", &demos, 4).unwrap();
+        assert_eq!(mname, "rtn-packed-static");
+        assert!(registry.get("rtn-packed-static").is_some());
     }
 
     #[test]

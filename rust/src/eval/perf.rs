@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 /// PR index stamped into the machine-readable bench baseline — bump this
 /// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
 /// tooling keyed on the schema's own `pr` field stays truthful.
-pub const BENCH_PR: u32 = 5;
+pub const BENCH_PR: u32 = 6;
 
 pub struct PerfReport {
     /// Run parameters (recorded so `BENCH_*.json` baselines are
@@ -85,8 +85,37 @@ pub struct PerfReport {
     /// Per-token vs calibrated-static activation scales on the W1A8
     /// serving variants (`rtn-packed-a8` / `hbvla-packed-a8` /
     /// `hbvla-exact` under Int8): end-to-end tokens/s and closed-form
-    /// action MSE vs the FP policy for BOTH modes side by side.
+    /// action MSE vs the FP policy for BOTH modes side by side — swept
+    /// over both [`crate::calib::ScaleClip`] policies (max and p99.9).
     pub act_scale_rows: Vec<ActScaleRow>,
+    /// The SIMD lane the forced-lane dispatch resolves to on this
+    /// machine (`scalar`/`wide4`/`avx2`) — recorded so archived
+    /// baselines say which kernel produced their numbers.
+    pub simd_lane_active: String,
+    /// Per-lane W1A8 sliced-kernel throughput on identical packed
+    /// weights (bit-identical outputs; only the word-level inner loop
+    /// differs). The wide4-vs-scalar and avx2-vs-scalar ratios are the
+    /// PR-6 kernel win the baseline archives.
+    pub simd_lanes: Vec<SimdLaneRow>,
+    /// f32 vs INT8 attention core on the W1A8 commit: end-to-end
+    /// tokens/s and closed-form action MSE vs the FP policy.
+    pub attn_rows: Vec<AttnPrecRow>,
+}
+
+/// One row of the SIMD-lane table: the forced-lane W1A8 GEMV/GEMM
+/// throughput for one [`crate::quant::packed::SimdLane`].
+pub struct SimdLaneRow {
+    pub lane: String,
+    pub gemv_gflops: f64,
+    pub gemm_gflops: f64,
+}
+
+/// One row of the attention-precision table: the a8 serving model with
+/// its attention core pinned to one [`crate::model::AttnPrecision`].
+pub struct AttnPrecRow {
+    pub precision: String,
+    pub tok_s: f64,
+    pub action_mse: f64,
 }
 
 /// One row of the batched-serve table: tokens/s at a given batch size for
@@ -104,6 +133,8 @@ pub struct BatchServeRow {
 /// under per-token dynamic scales and under calibrated static scales.
 pub struct ActScaleRow {
     pub variant: String,
+    /// Clip policy of the static calibration (`max` or `p999`).
+    pub clip: String,
     pub calibrated_layers: usize,
     pub per_token_tok_s: f64,
     pub static_tok_s: f64,
@@ -120,7 +151,9 @@ impl PerfReport {
              packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
              {}\n\
+             {}\n\
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
+             {}\n\
              {}\n\
              {}\n\
              {}\n\
@@ -138,12 +171,49 @@ impl PerfReport {
             self.packed_gemm_gflops,
             self.dense_gemm_gflops,
             self.kernel_table(),
+            self.lane_table(),
             self.e2e_table(),
             self.act_table(),
+            self.attn_table(),
             self.batched_serve_table(),
             self.exact_table(),
             self.act_scale_table()
         )
+    }
+
+    /// The PR-6 wide-lane table: the forced-lane W1A8 sliced kernel at
+    /// every lane this machine can run (outputs bit-identical across
+    /// lanes AND to the extraction reference — only the word-level inner
+    /// loop differs).
+    pub fn lane_table(&self) -> String {
+        let mut s = format!(
+            "W1A8 sliced kernel by SIMD lane (active: {}):\n\
+             \x20 lane     GEMV GFLOP/s   GEMM GFLOP/s\n",
+            self.simd_lane_active
+        );
+        for r in &self.simd_lanes {
+            s.push_str(&format!(
+                "  {:<7} {:>12.2}   {:>12.2}\n",
+                r.lane, r.gemv_gflops, r.gemm_gflops
+            ));
+        }
+        s
+    }
+
+    /// The attention-core table: f32 vs INT8 scores+context on the W1A8
+    /// serving model (the last f32 GEMM traffic in the a8 forward).
+    pub fn attn_table(&self) -> String {
+        let mut s = String::from(
+            "attention core on the W1A8 commit (f32 vs int8 scores+context):\n\
+             \x20 precision   e2e tokens/s   action MSE vs FP\n",
+        );
+        for r in &self.attn_rows {
+            s.push_str(&format!(
+                "  {:<9} {:>14.0}   {:>16.6}\n",
+                r.precision, r.tok_s, r.action_mse
+            ));
+        }
+        s
     }
 
     /// The PR-5 kernel table: bit-sliced popcount vs extraction W1A8
@@ -175,12 +245,13 @@ impl PerfReport {
     pub fn act_scale_table(&self) -> String {
         let mut s = String::from(
             "activation scales on W1A8 variants (per-token dynamic vs calibrated static):\n\
-             \x20 variant           layers   tok/s dyn   tok/s stat   MSE dyn      MSE stat\n",
+             \x20 variant           clip  layers   tok/s dyn   tok/s stat   MSE dyn      MSE stat\n",
         );
         for r in &self.act_scale_rows {
             s.push_str(&format!(
-                "  {:<16} {:>7}  {:>10.0}  {:>11.0}   {:<11.6} {:<11.6}\n",
+                "  {:<16} {:<5} {:>6}  {:>10.0}  {:>11.0}   {:<11.6} {:<11.6}\n",
                 r.variant,
+                r.clip,
                 r.calibrated_layers,
                 r.per_token_tok_s,
                 r.static_tok_s,
@@ -225,14 +296,40 @@ impl PerfReport {
             .iter()
             .map(|r| {
                 format!(
-                    "{{\"variant\":\"{}\",\"calibrated_layers\":{},\"per_token_tok_s\":{},\
+                    "{{\"variant\":\"{}\",\"clip\":\"{}\",\"calibrated_layers\":{},\
+                     \"per_token_tok_s\":{},\
                      \"static_tok_s\":{},\"per_token_action_mse\":{},\"static_action_mse\":{}}}",
                     r.variant,
+                    r.clip,
                     r.calibrated_layers,
                     num(r.per_token_tok_s),
                     num(r.static_tok_s),
                     num(r.per_token_action_mse),
                     num(r.static_action_mse)
+                )
+            })
+            .collect();
+        let lanes: Vec<String> = self
+            .simd_lanes
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"lane\":\"{}\",\"gemv_gflops\":{},\"gemm_gflops\":{}}}",
+                    r.lane,
+                    num(r.gemv_gflops),
+                    num(r.gemm_gflops)
+                )
+            })
+            .collect();
+        let attn: Vec<String> = self
+            .attn_rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"precision\":\"{}\",\"tok_s\":{},\"action_mse\":{}}}",
+                    r.precision,
+                    num(r.tok_s),
+                    num(r.action_mse)
                 )
             })
             .collect();
@@ -248,9 +345,12 @@ impl PerfReport {
              \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"qps\": {}}},\n\
              \x20 \"gemv_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
              \x20 \"gemm_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
+             \x20 \"simd_lane_active\": \"{}\",\n\
+             \x20 \"simd_lanes\": [{}],\n\
              \x20 \"dispatch_us\": {{\"pool\": {}, \"spawn\": {}}},\n\
              \x20 \"packed_mem_ratio\": {},\n\
              \x20 \"e2e\": {{\"dense_tok_s\": {}, \"packed_tok_s\": {}, \"packed_a8_tok_s\": {}, \"dense_bytes\": {}, \"packed_bytes\": {}}},\n\
+             \x20 \"attn_precision\": [{}],\n\
              \x20 \"batched_serve\": [{}],\n\
              \x20 \"hbvla_deploy\": {{\"repacked_tok_s\": {}, \"exact_tok_s\": {}, \"repacked_bytes\": {}, \"exact_bytes\": {}, \"repacked_action_mse\": {}, \"exact_action_mse\": {}}},\n\
              \x20 \"act_scale\": [{}]\n\
@@ -272,6 +372,8 @@ impl PerfReport {
             num(self.packed_gemm_gflops),
             num(self.packed_gemm_i8_gflops),
             num(self.packed_gemm_i8_extract_gflops),
+            self.simd_lane_active,
+            lanes.join(","),
             num(self.pool_dispatch_us),
             num(self.spawn_dispatch_us),
             num(self.packed_mem_ratio),
@@ -280,6 +382,7 @@ impl PerfReport {
             num(self.e2e_packed_a8_tok_per_sec),
             self.e2e_dense_weight_bytes,
             self.e2e_packed_weight_bytes,
+            attn.join(","),
             batched.join(","),
             num(self.hbvla_repacked_tok_per_sec),
             num(self.hbvla_exact_tok_per_sec),
@@ -497,6 +600,32 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
     }
     let packed_gemm_i8_extract_secs = t6e.elapsed().as_secs_f64();
 
+    // --- forced-lane sliced kernels: every lane this machine can run ---
+    // Same packed weights, same quantized token; GEMV single-threaded so
+    // the per-lane inner loop (not the fan-out) is what's measured, GEMM
+    // under the run's thread budget like the rows above.
+    let simd_lane_active = crate::quant::packed::SimdLane::active().label().to_string();
+    let simd_lanes: Vec<SimdLaneRow> = crate::quant::packed::SimdLane::available()
+        .into_iter()
+        .map(|lane| {
+            let tg = Instant::now();
+            for _ in 0..iters {
+                packed.matvec_i8_lane(&act, &mut y, 1, lane);
+            }
+            let gemv_secs = tg.elapsed().as_secs_f64();
+            let tm = Instant::now();
+            for _ in 0..gemm_iters {
+                std::hint::black_box(packed.matmul_i8_lane(&xb, threads, lane));
+            }
+            let gemm_secs = tm.elapsed().as_secs_f64();
+            SimdLaneRow {
+                lane: lane.label().to_string(),
+                gemv_gflops: flops / gemv_secs / 1e9,
+                gemm_gflops: gemm_flops / gemm_secs / 1e9,
+            }
+        })
+        .collect();
+
     // --- parallel_for dispatch overhead: pool vs per-call spawn ---
     let dispatch_iters = if smoke { 200 } else { 1000 };
     let sink = std::sync::atomic::AtomicUsize::new(0);
@@ -619,6 +748,23 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
     let hbvla_repacked_action_mse = action_mse(&hb_repacked);
     let hbvla_exact_action_mse = action_mse(&hb_exact);
 
+    // --- attention-core precision on the W1A8 commit ---
+    // The a8 twin inherits INT8 attention; pinning f32 back isolates the
+    // attention-core cost/accuracy from the packed-GEMM precision.
+    let attn_f32 = a8_model.clone().with_attn_precision(crate::model::AttnPrecision::F32);
+    let attn_rows = vec![
+        AttnPrecRow {
+            precision: "f32".to_string(),
+            tok_s: time_fw(&attn_f32),
+            action_mse: action_mse(&attn_f32),
+        },
+        AttnPrecRow {
+            precision: "int8".to_string(),
+            tok_s: time_fw(&a8_model),
+            action_mse: action_mse(&a8_model),
+        },
+    ];
+
     // --- per-token vs calibrated-static activation scales (W1A8) ---
     // Each serving variant measured at Int8 under both scale modes; the
     // static twin is calibrated on a small demo stream exactly like
@@ -630,25 +776,32 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         n_calib_demos,
         seed ^ crate::calib::scales::CALIB_SEED_STREAM,
     );
-    let measure_scale_modes = |variant: &str, base: &MiniVla| -> ActScaleRow {
-        let dyn_m = base.clone().with_act_precision(crate::model::ActPrecision::Int8);
-        let mut stat_m = dyn_m.clone();
-        let layers =
-            crate::calib::scales::calibrate_static_scales(&mut stat_m, &calib_demos, calib_steps);
-        ActScaleRow {
-            variant: variant.to_string(),
-            calibrated_layers: layers,
-            per_token_tok_s: time_fw(&dyn_m),
-            static_tok_s: time_fw(&stat_m),
-            per_token_action_mse: action_mse(&dyn_m),
-            static_action_mse: action_mse(&stat_m),
-        }
-    };
-    let act_scale_rows = vec![
-        measure_scale_modes("rtn-packed-a8", &packed_model),
-        measure_scale_modes("hbvla-packed-a8", &hb_repacked),
-        measure_scale_modes("hbvla-exact", &hb_exact),
-    ];
+    let measure_scale_modes =
+        |variant: &str, base: &MiniVla, clip: crate::calib::ScaleClip| -> ActScaleRow {
+            let dyn_m = base.clone().with_act_precision(crate::model::ActPrecision::Int8);
+            let mut stat_m = dyn_m.clone();
+            let layers = crate::calib::scales::calibrate_static_scales_clip(
+                &mut stat_m,
+                &calib_demos,
+                calib_steps,
+                clip,
+            );
+            ActScaleRow {
+                variant: variant.to_string(),
+                clip: clip.label().to_string(),
+                calibrated_layers: layers,
+                per_token_tok_s: time_fw(&dyn_m),
+                static_tok_s: time_fw(&stat_m),
+                per_token_action_mse: action_mse(&dyn_m),
+                static_action_mse: action_mse(&stat_m),
+            }
+        };
+    let mut act_scale_rows = Vec::new();
+    for clip in [crate::calib::ScaleClip::Max, crate::calib::ScaleClip::Percentile] {
+        act_scale_rows.push(measure_scale_modes("rtn-packed-a8", &packed_model, clip));
+        act_scale_rows.push(measure_scale_modes("hbvla-packed-a8", &hb_repacked, clip));
+        act_scale_rows.push(measure_scale_modes("hbvla-exact", &hb_exact, clip));
+    }
 
     PerfReport {
         threads,
@@ -684,6 +837,9 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         hbvla_repacked_action_mse,
         hbvla_exact_action_mse,
         act_scale_rows,
+        simd_lane_active,
+        simd_lanes,
+        attn_rows,
     }
 }
 

@@ -18,7 +18,10 @@
 //! hbvla-exact | rtn-packed-a8 | hbvla-packed-a8), `--act-precision
 //! f32|int8` (maps a packed variant to its W1A8 twin), `--act-scale
 //! per-token|static` (static = calibrate per-layer W1A8 scales once and
-//! skip the per-token max sweep on the hot path), `--workers N`,
+//! skip the per-token max sweep on the hot path), `--act-clip max|p999`
+//! (how the static calibration clips the observed range), `--attn-precision
+//! f32|int8` (attention-core override; W1A8 twins default to INT8
+//! attention), `--workers N`,
 //! `--max-batch N`, `--max-wait-us U`, `--requests N` — the demo registers
 //! the dense checkpoint, both packed commits, the transform-domain exact
 //! HBVLA commit (`hbvla-exact`: serves the committed Haar-domain bitplanes
@@ -257,6 +260,15 @@ fn main() {
                 );
                 std::process::exit(2);
             }
+            // `--act-clip` is a static-calibration policy: reject it
+            // where it would be silently ignored.
+            if args.get("act-clip").is_some()
+                && args.get("act-scale").and_then(hbvla::model::ActScaleMode::parse)
+                    != Some(hbvla::model::ActScaleMode::Static)
+            {
+                eprintln!("--act-clip only applies with --act-scale static");
+                std::process::exit(2);
+            }
             // `--act-scale static` registers the calibrated-static-scale
             // twin of the chosen variant (a one-sweep calibration over a
             // small demo stream pins per-layer W1A8 scales; the hot path
@@ -280,6 +292,17 @@ fn main() {
                             );
                             std::process::exit(2);
                         }
+                        // `--act-clip max|p999` picks how the calibrated
+                        // scale clips the observed range (max covers
+                        // everything; p999 clips the 0.1% outlier tail
+                        // and saturates it at serve time).
+                        let clip = match args.get("act-clip") {
+                            None => hbvla::calib::ScaleClip::Max,
+                            Some(spec) => hbvla::calib::ScaleClip::parse(spec).unwrap_or_else(|| {
+                                eprintln!("--act-clip expects max or p999, got '{spec}'");
+                                std::process::exit(2);
+                            }),
+                        };
                         // Same calibration recipe the perf baseline's
                         // act-scale rows measure (calib::scales keeps
                         // them from drifting apart).
@@ -291,16 +314,20 @@ fn main() {
                             eps,
                             budget.seed ^ hbvla::calib::scales::CALIB_SEED_STREAM,
                         );
-                        let (name, layers) = hbvla::coordinator::register_static_scale_variant(
-                            &registry,
-                            &variant,
-                            &demos,
-                            steps,
-                        )
-                        .expect("register static-scale twin");
+                        let (name, layers) =
+                            hbvla::coordinator::scheduler::register_static_scale_variant_clip(
+                                &registry,
+                                &variant,
+                                &demos,
+                                steps,
+                                clip,
+                            )
+                            .expect("register static-scale twin");
                         println!(
                             "registered {name:<20} ({layers} layers with calibrated static \
-                             activation scales, W1A8, max sweep skipped on the hot path)"
+                             activation scales [clip={}], W1A8, max sweep skipped on the hot \
+                             path)",
+                            clip.label()
                         );
                         // Mirror the --act-precision no-op note: a
                         // variant with nothing to calibrate (e.g. dense)
@@ -319,6 +346,31 @@ fn main() {
                     }
                 },
             };
+            // `--attn-precision f32|int8` overrides the attention-core
+            // precision of the chosen variant (W1A8 twins inherit INT8
+            // attention by default; `f32` pins the f32 scores/context
+            // back for A/B runs). The override re-registers the variant
+            // under the SAME name — attention precision is a runtime
+            // policy, not an interface property, so the serving name
+            // stays stable.
+            if let Some(spec) = args.get("attn-precision") {
+                match hbvla::model::AttnPrecision::parse(spec) {
+                    Some(p) => {
+                        let m = registry.get(&variant).expect("variant vanished");
+                        if m.store.attn_precision() != p {
+                            let pinned = (*m).clone().with_attn_precision(p);
+                            registry
+                                .register(&variant, Arc::new(pinned))
+                                .expect("re-register attn override");
+                        }
+                        println!("attention core pinned to {} on '{variant}'", p.label());
+                    }
+                    None => {
+                        eprintln!("--attn-precision expects f32 or int8, got '{spec}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
             // An explicit --threads pins the kernel fan-out budget on
             // every registered variant (matching `perf`); without the
             // flag, serving uses the machine default. The per-variant
@@ -397,7 +449,8 @@ fn main() {
                  perf flags: [--json PATH] (machine-readable BENCH baseline)\n\
                  serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
                  rtn-packed-a8|hbvla-packed-a8] \
-                 [--act-precision f32|int8] [--act-scale per-token|static] [--workers N] \
+                 [--act-precision f32|int8] [--act-scale per-token|static] [--act-clip max|p999] \
+                 [--attn-precision f32|int8] [--workers N] \
                  [--max-batch N] [--max-wait-us U] [--requests N]"
             );
             std::process::exit(2);

@@ -8,7 +8,7 @@
 //! the *structure* (layer types, modality interleaving, salient activation
 //! columns) is what the quantizers see, and is faithful.
 
-use crate::quant::packed::{ActPrecision, ActScaleMode};
+use crate::quant::packed::{ActPrecision, ActScaleMode, AttnPrecision};
 
 /// Which committed deploy form a quantized variant's store holds — a
 /// descriptive policy record (the per-layer [`crate::model::params::WeightRepr`]
@@ -113,6 +113,14 @@ pub struct VlaConfig {
     /// copy, seeded from here at construction; change both through
     /// [`crate::model::MiniVla::with_act_scale_mode`].
     pub act_scale_mode: ActScaleMode,
+    /// Precision of the attention core (f32 vs per-token INT8 scores +
+    /// context GEMM — see [`AttnPrecision`]). Runtime policy like
+    /// [`Self::act_precision`]: variants differing only here stay
+    /// [`Self::serve_compatible`]. Follows the activation precision
+    /// through [`crate::model::MiniVla::with_act_precision`] (so `*-a8`
+    /// variants inherit INT8 attention) and is overridden independently
+    /// via [`crate::model::MiniVla::with_attn_precision`].
+    pub attn_precision: AttnPrecision,
     /// Deploy-form policy record (see [`DeployRepr`]): which committed
     /// representation the store's quantized layers hold. Descriptive, not
     /// an interface property.
@@ -142,6 +150,7 @@ impl VlaConfig {
             seed: 0xBEEF,
             act_precision: ActPrecision::F32,
             act_scale_mode: ActScaleMode::PerToken,
+            attn_precision: AttnPrecision::F32,
             deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
@@ -170,6 +179,7 @@ impl VlaConfig {
             seed: 7,
             act_precision: ActPrecision::F32,
             act_scale_mode: ActScaleMode::PerToken,
+            attn_precision: AttnPrecision::F32,
             deploy_repr: DeployRepr::Repacked,
         }
         .with_head(head)
@@ -192,6 +202,11 @@ impl VlaConfig {
 
     pub fn with_act_scale_mode(mut self, m: ActScaleMode) -> Self {
         self.act_scale_mode = m;
+        self
+    }
+
+    pub fn with_attn_precision(mut self, p: AttnPrecision) -> Self {
+        self.attn_precision = p;
         self
     }
 
@@ -275,6 +290,17 @@ mod tests {
         assert_eq!(a.act_precision, ActPrecision::F32);
         assert_eq!(b.act_precision, ActPrecision::Int8);
         // W1A32 and W1A8 twins can serve behind one endpoint.
+        assert!(a.serve_compatible(&b));
+        assert!(b.serve_compatible(&a));
+    }
+
+    #[test]
+    fn attn_precision_does_not_change_serving_interface() {
+        let a = VlaConfig::tiny(HeadKind::Chunk);
+        let b = a.clone().with_attn_precision(AttnPrecision::Int8);
+        assert_eq!(a.attn_precision, AttnPrecision::F32);
+        assert_eq!(b.attn_precision, AttnPrecision::Int8);
+        // f32-attention and i8-attention twins share one endpoint.
         assert!(a.serve_compatible(&b));
         assert!(b.serve_compatible(&a));
     }

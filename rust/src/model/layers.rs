@@ -16,9 +16,11 @@
 //! verified there); a parity test pins the two implementations together.
 
 use crate::model::params::{ParamStore, WeightRepr};
-use crate::quant::packed::ActPrecision;
+use crate::quant::packed::{put_scratch_attn, take_scratch_attn, ActPrecision, AttnPrecision};
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{gelu, matmul, matmul_mt, matvec, softmax_rows};
+use crate::tensor::ops::{
+    act_scale_i8, dot_i8, gelu, matmul, matmul_mt, matvec, quantize_i8, softmax_rows,
+};
 
 /// Activation hook: called with (layer_name, layer_input) right before
 /// each quantizable matmul. Inputs are d_in × n_tokens.
@@ -150,17 +152,42 @@ pub fn attn_forward_seg(
     let v = linear(store, &nv, x);
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = Matrix::zeros(d, x.cols);
+    match store.attn_precision() {
+        AttnPrecision::F32 => attn_context_f32(&q, &k, &v, heads, dh, scale, seg, &mut ctx),
+        AttnPrecision::Int8 => attn_context_i8(&q, &k, &v, heads, dh, scale, seg, &mut ctx),
+    }
+    if let Some(h) = hook {
+        h(&no, &ctx);
+    }
+    let yo = linear(store, &no, &ctx);
+    x.add(&yo)
+}
+
+/// f32 attention core: per (head, segment) scores → softmax → context,
+/// written straight into `ctx` (no per-head transpose or copy-back
+/// matrices — the context dot products target the output slots directly).
+#[allow(clippy::too_many_arguments)]
+fn attn_context_f32(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    heads: usize,
+    dh: usize,
+    scale: f32,
+    seg: usize,
+    ctx: &mut Matrix,
+) {
     for h in 0..heads {
         let r0 = h * dh;
         let r1 = r0 + dh;
         let qh_all = q.slice_rows(r0, r1);
         let kh_all = k.slice_rows(r0, r1);
         let vh_all = v.slice_rows(r0, r1);
-        for s0 in (0..x.cols).step_by(seg) {
+        for s0 in (0..q.cols).step_by(seg) {
             // Single-segment fast path: borrow the head slices directly —
             // the per-request (non-batched) forward pays no extra copy.
             let (qc, kc, vc);
-            let (qh, kh, vh) = if seg == x.cols {
+            let (qh, kh, vh) = if seg == q.cols {
                 (&qh_all, &kh_all, &vh_all)
             } else {
                 qc = qh_all.slice_cols(s0, s0 + seg);
@@ -171,19 +198,170 @@ pub fn attn_forward_seg(
             let mut s = matmul(&qh.transpose(), kh);
             s.scale(scale);
             softmax_rows(&mut s);
-            let ch = matmul(vh, &s.transpose());
+            // ctx[r0+i][s0+t] = Σ_u vh[i,u]·s[t,u]: the second transpose
+            // and the elementwise copy-back the old code paid are gone —
+            // both vh rows and s rows are contiguous, so this is a plain
+            // dot per output slot, accumulated in the same ascending-u
+            // order as the GEMM it replaces.
             for i in 0..dh {
-                for t in 0..seg {
-                    ctx.set(r0 + i, s0 + t, ch.at(i, t));
+                let vrow = vh.row(i);
+                let crow = &mut ctx.row_mut(r0 + i)[s0..s0 + seg];
+                for (t, slot) in crow.iter_mut().enumerate() {
+                    let srow = s.row(t);
+                    let mut acc = 0.0f32;
+                    for (a, b) in vrow.iter().zip(srow) {
+                        acc += a * b;
+                    }
+                    *slot = acc;
                 }
             }
         }
     }
-    if let Some(h) = hook {
-        h(&no, &ctx);
+}
+
+/// Column-max scales for one head's rows over one segment: `scales[t]` =
+/// max_i |m[r0+i, s0+t]| / 127 and `inv[t]` its reciprocal (both 0 for an
+/// all-zero token, so the quantized column is exactly zero).
+fn head_col_scales(
+    m: &Matrix,
+    r0: usize,
+    dh: usize,
+    s0: usize,
+    seg: usize,
+    scales: &mut Vec<f32>,
+    inv: &mut Vec<f32>,
+) {
+    scales.clear();
+    scales.resize(seg, 0.0);
+    for i in 0..dh {
+        let row = &m.row(r0 + i)[s0..s0 + seg];
+        for (sm, xv) in scales.iter_mut().zip(row) {
+            *sm = sm.max(xv.abs());
+        }
     }
-    let yo = linear(store, &no, &ctx);
-    x.add(&yo)
+    inv.clear();
+    inv.resize(seg, 0.0);
+    for (iv, sm) in inv.iter_mut().zip(scales.iter_mut()) {
+        if *sm > 0.0 {
+            *sm /= 127.0;
+            *iv = 1.0 / *sm;
+        }
+    }
+}
+
+/// Quantize one head's segment token-major: `q8[t*dh + i]` = round(m[r0+i,
+/// s0+t] / scale_t), so the score kernel's per-token rows are contiguous.
+fn quant_cols_token_major(
+    m: &Matrix,
+    r0: usize,
+    dh: usize,
+    s0: usize,
+    seg: usize,
+    inv: &[f32],
+    q8: &mut Vec<i8>,
+) {
+    q8.clear();
+    q8.resize(seg * dh, 0);
+    for i in 0..dh {
+        let row = &m.row(r0 + i)[s0..s0 + seg];
+        for (t, (xv, iv)) in row.iter().zip(inv).enumerate() {
+            q8[t * dh + i] = quantize_i8(*xv, *iv);
+        }
+    }
+}
+
+/// Quantize one head's segment d-major: `q8[i*seg + u]` = round(m[r0+i,
+/// s0+u] / scale_u), so the context kernel's per-dimension rows are
+/// contiguous.
+fn quant_cols_d_major(
+    m: &Matrix,
+    r0: usize,
+    dh: usize,
+    s0: usize,
+    seg: usize,
+    inv: &[f32],
+    q8: &mut Vec<i8>,
+) {
+    q8.clear();
+    q8.resize(seg * dh, 0);
+    for i in 0..dh {
+        let row = &m.row(r0 + i)[s0..s0 + seg];
+        let dst = &mut q8[i * seg..(i + 1) * seg];
+        for ((slot, xv), iv) in dst.iter_mut().zip(row).zip(inv) {
+            *slot = quantize_i8(*xv, *iv);
+        }
+    }
+}
+
+/// INT8 attention core (the `*-a8` serve path): per (head, segment) the
+/// Q/K columns quantize to i8 with per-token scales, scores accumulate in
+/// i32 via [`dot_i8`] and rescale ONCE by `scale·sq[t]·sk[u]` before
+/// softmax; the probability row then folds the per-token V scales in,
+/// re-quantizes to i8, and the context GEMM runs i8×i8→i32 with a single
+/// f32 rescale per output slot (DESIGN.md §INT8 Attention). Everything is
+/// segment-local and per-token, so batched serving stays bit-identical to
+/// sequential — the same argument as the segmented f32 path. All buffers
+/// come from the pooled [`crate::quant::packed::GemmScratch`], so steady-
+/// state serving allocates nothing here.
+#[allow(clippy::too_many_arguments)]
+fn attn_context_i8(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    heads: usize,
+    dh: usize,
+    scale: f32,
+    seg: usize,
+    ctx: &mut Matrix,
+) {
+    let mut sc = take_scratch_attn();
+    for h in 0..heads {
+        let r0 = h * dh;
+        for s0 in (0..q.cols).step_by(seg) {
+            head_col_scales(q, r0, dh, s0, seg, &mut sc.sq, &mut sc.inv);
+            quant_cols_token_major(q, r0, dh, s0, seg, &sc.inv, &mut sc.qq);
+            head_col_scales(k, r0, dh, s0, seg, &mut sc.sk, &mut sc.inv);
+            quant_cols_token_major(k, r0, dh, s0, seg, &sc.inv, &mut sc.qk);
+            // i32 score accumulation is overflow-safe by a wide margin:
+            // |q·k| ≤ dh · 127² ≈ dh · 16 K, and dh here is ≤ a few
+            // hundred — orders of magnitude below i32::MAX.
+            sc.scores.rows = seg;
+            sc.scores.cols = seg;
+            sc.scores.data.clear();
+            sc.scores.data.resize(seg * seg, 0.0);
+            for t in 0..seg {
+                let qt = &sc.qq[t * dh..(t + 1) * dh];
+                let f = scale * sc.sq[t];
+                let srow = &mut sc.scores.data[t * seg..(t + 1) * seg];
+                for (u, slot) in srow.iter_mut().enumerate() {
+                    let ku = &sc.qk[u * dh..(u + 1) * dh];
+                    *slot = f * sc.sk[u] * dot_i8(qt, ku) as f32;
+                }
+            }
+            softmax_rows(&mut sc.scores);
+            head_col_scales(v, r0, dh, s0, seg, &mut sc.sv, &mut sc.inv);
+            quant_cols_d_major(v, r0, dh, s0, seg, &sc.inv, &mut sc.qv);
+            for t in 0..seg {
+                let prow = &sc.scores.data[t * seg..(t + 1) * seg];
+                // Fold the per-token V scales into the probability row so
+                // ONE row scale covers the whole context column.
+                sc.pr.clear();
+                sc.pr.extend(prow.iter().zip(&sc.sv).map(|(p, svu)| p * svu));
+                let sr = act_scale_i8(&sc.pr);
+                let inv_sr = if sr > 0.0 { 1.0 / sr } else { 0.0 };
+                sc.qr.clear();
+                sc.qr.resize(seg, 0);
+                for (slot, rv) in sc.qr.iter_mut().zip(&sc.pr) {
+                    *slot = quantize_i8(*rv, inv_sr);
+                }
+                for i in 0..dh {
+                    let vrow = &sc.qv[i * seg..(i + 1) * seg];
+                    ctx.row_mut(r0 + i)[s0 + t] = sr * dot_i8(vrow, &sc.qr) as f32;
+                }
+            }
+        }
+    }
+    put_scratch_attn(sc);
 }
 
 /// Batched transformer block over `x.cols / seg` concatenated requests:
@@ -418,6 +596,74 @@ mod tests {
                     assert_eq!(batched.at(i, 5 + t), yb.at(i, t), "seg B ({i},{t}) packed={packed}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn int8_attention_tracks_f32_attention() {
+        // Same store, same input: the INT8 attention core must stay
+        // within quantization round-off of the f32 core (per-token
+        // scales keep the relative error near 0.5/127 per tensor).
+        let mut rng = Rng::new(179);
+        let mut s = store_with_block(16, 32, &mut rng);
+        let x = Matrix::gauss(16, 7, 1.0, &mut rng);
+        let mut none: Option<Hook> = None;
+        let yf = attn_forward(&s, "b", 4, &x, &mut none);
+        s.set_attn_precision(AttnPrecision::Int8);
+        let mut none2: Option<Hook> = None;
+        let yi = attn_forward(&s, "b", 4, &x, &mut none2);
+        let rel = yi.dist_sq(&yf) / yf.frob_norm_sq().max(1.0);
+        assert!(rel < 2e-3, "i8 attention drifted: rel dist_sq = {rel}");
+        // And the paths genuinely differ (the i8 core really ran).
+        assert!(yi.dist_sq(&yf) > 0.0, "i8 path produced bit-identical f32 output");
+    }
+
+    #[test]
+    fn batched_int8_attention_bit_identical_to_solo() {
+        // The serving-batch seam under INT8 attention: scores, softmax
+        // and context are all segment-local with per-token scales, so
+        // batching two requests must reproduce each solo forward
+        // bitwise — same contract the f32 path pins above.
+        let mut rng = Rng::new(180);
+        let mut s = store_with_block(16, 32, &mut rng);
+        s.set_attn_precision(AttnPrecision::Int8);
+        let a = Matrix::gauss(16, 5, 1.0, &mut rng);
+        let b = Matrix::gauss(16, 5, 1.0, &mut rng);
+        let x = Matrix::hcat(&[&a, &b]);
+        for packed in [false, true] {
+            if packed {
+                assert_eq!(s.pack_quantizable(8), 6);
+            }
+            let batched = block_forward_batch(&s, "b", 4, &x, 5, true);
+            let mut none: Option<Hook> = None;
+            let ya = block_forward(&s, "b", 4, &a, &mut none);
+            let mut none2: Option<Hook> = None;
+            let yb = block_forward(&s, "b", 4, &b, &mut none2);
+            for i in 0..16 {
+                for t in 0..5 {
+                    assert_eq!(batched.at(i, t), ya.at(i, t), "seg A ({i},{t}) packed={packed}");
+                    assert_eq!(batched.at(i, 5 + t), yb.at(i, t), "seg B ({i},{t}) packed={packed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_attention_survives_zero_tokens() {
+        // All-zero tokens yield zero per-token scales; the 0-guard must
+        // produce exactly-zero quantized columns and context (no NaN
+        // from a 0/0 reciprocal), matching the f32 core bitwise.
+        let mut rng = Rng::new(181);
+        let mut s = store_with_block(16, 32, &mut rng);
+        let x = Matrix::zeros(16, 4);
+        let mut none: Option<Hook> = None;
+        let yf = attn_forward(&s, "b", 4, &x, &mut none);
+        s.set_attn_precision(AttnPrecision::Int8);
+        let mut none2: Option<Hook> = None;
+        let yi = attn_forward(&s, "b", 4, &x, &mut none2);
+        assert!(yi.is_finite());
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            assert_eq!(a, b);
         }
     }
 

@@ -7,6 +7,6 @@ pub mod params;
 pub mod vla;
 
 pub use config::{DeployRepr, HeadKind, VlaConfig};
-pub use crate::quant::packed::{ActPrecision, ActScaleMode};
+pub use crate::quant::packed::{ActPrecision, ActScaleMode, AttnPrecision};
 pub use params::{ParamStore, WeightRepr};
 pub use vla::{content_codes, instr_index, MiniVla, ObsInput, N_CONTENT_IDS};

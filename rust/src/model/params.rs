@@ -31,7 +31,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 
 use crate::methods::traits::Component;
-use crate::quant::packed::{ActPrecision, ActScaleMode, PackedBits};
+use crate::quant::packed::{ActPrecision, ActScaleMode, AttnPrecision, PackedBits};
 use crate::quant::transform::TransformPacked;
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -147,6 +147,11 @@ pub struct ParamStore {
     /// static per-layer scales held on each [`Param`]. Runtime policy
     /// like `act_precision` — not serialized (the SCALES are).
     act_scale_mode: ActScaleMode,
+    /// Precision of the attention core ([`AttnPrecision`]): f32, or
+    /// per-token INT8 scores + context GEMM. Runtime policy like
+    /// `act_precision` — `model::layers::attn_forward_seg` reads it with
+    /// no call-site changes, and it is not serialized.
+    attn_precision: AttnPrecision,
     /// Thread budget the packed kernels may fan out over through the
     /// `model::layers` dispatch. 0 (the default) means "use the machine
     /// default" ([`crate::util::threadpool::default_threads`]); drivers
@@ -284,6 +289,20 @@ impl ParamStore {
     /// forward; no repack, no scale recomputation).
     pub fn set_act_scale_mode(&mut self, m: ActScaleMode) {
         self.act_scale_mode = m;
+    }
+
+    /// Precision the attention core executes at.
+    pub fn attn_precision(&self) -> AttnPrecision {
+        self.attn_precision
+    }
+
+    /// Set the attention-core precision (takes effect on the next
+    /// forward; attention has no packed weights, so nothing to repack).
+    /// Note [`Self::set_act_precision`] deliberately does NOT touch this:
+    /// the store-level knobs are independent — the `MiniVla` builder is
+    /// where `*-a8` variants inherit INT8 attention.
+    pub fn set_attn_precision(&mut self, p: AttnPrecision) {
+        self.attn_precision = p;
     }
 
     /// Record a calibrated static activation scale for a layer (must be
@@ -821,6 +840,20 @@ mod tests {
         assert_eq!(loaded.act_precision(), ActPrecision::F32);
         assert_eq!(loaded.dense_view("p.w").data, s.dense_view("p.w").data);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn attn_precision_is_independent_runtime_policy() {
+        let mut s = ParamStore::new();
+        assert_eq!(s.attn_precision(), AttnPrecision::F32);
+        s.set_attn_precision(AttnPrecision::Int8);
+        assert_eq!(s.attn_precision(), AttnPrecision::Int8);
+        // The store-level activation knob does NOT drag attention along —
+        // coupling lives in the MiniVla builder, so store-level tests and
+        // tools can flip the linears' precision in isolation.
+        s.set_act_precision(ActPrecision::Int8);
+        s.set_act_precision(ActPrecision::F32);
+        assert_eq!(s.attn_precision(), AttnPrecision::Int8);
     }
 
     #[test]

@@ -285,6 +285,7 @@ impl MiniVla {
 
         store.set_act_precision(cfg.act_precision);
         store.set_act_scale_mode(cfg.act_scale_mode);
+        store.set_attn_precision(cfg.attn_precision);
         MiniVla { cfg, store }
     }
 
@@ -294,9 +295,32 @@ impl MiniVla {
     /// (α, μ) scales — only the policy field changes. (Cloning a model to
     /// build an `-a8` twin still copies its store; on a packed commit
     /// that copy is ~32× smaller than the dense checkpoint.)
+    ///
+    /// The attention-core precision FOLLOWS this knob: `Int8` activations
+    /// bring INT8 attention along (and `F32` brings f32 attention back),
+    /// which is how every `*-a8` variant inherits the quantized attention
+    /// path with zero call-site changes. Use
+    /// [`Self::with_attn_precision`] AFTER this to override attention
+    /// independently (e.g. W1A8 linears with f32 attention for A/B runs).
     pub fn with_act_precision(mut self, p: crate::quant::packed::ActPrecision) -> Self {
         self.cfg.act_precision = p;
         self.store.set_act_precision(p);
+        let ap = match p {
+            crate::quant::packed::ActPrecision::F32 => crate::quant::packed::AttnPrecision::F32,
+            crate::quant::packed::ActPrecision::Int8 => crate::quant::packed::AttnPrecision::Int8,
+        };
+        self.cfg.attn_precision = ap;
+        self.store.set_attn_precision(ap);
+        self
+    }
+
+    /// Switch the attention-core precision alone (both the config record
+    /// and the store policy `attn_forward_seg` reads). Independent of the
+    /// linears' activation precision; call after
+    /// [`Self::with_act_precision`] to override the default coupling.
+    pub fn with_attn_precision(mut self, p: crate::quant::packed::AttnPrecision) -> Self {
+        self.cfg.attn_precision = p;
+        self.store.set_attn_precision(p);
         self
     }
 

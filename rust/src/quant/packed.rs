@@ -122,6 +122,121 @@ impl ActScaleMode {
     }
 }
 
+/// Precision of the attention core (per-head QKᵀ scores, softmax input
+/// scaling, and the probability×V context product) — the third runtime
+/// policy knob next to [`ActPrecision`] / [`ActScaleMode`], threaded
+/// through [`crate::model::params::ParamStore`] /
+/// [`crate::model::VlaConfig`] the same way so
+/// `model::layers::attn_forward_seg` picks it up with no call-site
+/// changes. `F32` keeps the PR-2 float attention; `Int8` quantizes each
+/// head's Q/K/V columns to i8 with per-token symmetric scales, computes
+/// scores with i32 accumulation and ONE rescale before softmax, and runs
+/// an i8 context GEMM (DESIGN.md §INT8 Attention).
+/// [`crate::model::MiniVla::with_act_precision`] flips this knob together
+/// with the activation precision, so every `*-a8` variant inherits INT8
+/// attention; [`crate::model::MiniVla::with_attn_precision`] overrides it
+/// independently. Not part of the serving interface
+/// ([`crate::model::VlaConfig::serve_compatible`] ignores it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AttnPrecision {
+    /// Full-precision f32 attention core.
+    #[default]
+    F32,
+    /// Per-token symmetric INT8 scores + context GEMM.
+    Int8,
+}
+
+impl AttnPrecision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttnPrecision::F32 => "f32",
+            AttnPrecision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI spelling (`f32` | `int8`, with common aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Some(AttnPrecision::F32),
+            "int8" | "i8" => Some(AttnPrecision::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// Which inner-loop implementation the bit-sliced W1A8 popcount kernels
+/// execute — the wide-lane axis of the kernel rebuild. All lanes compute
+/// the identical integer sums (popcounts are exact, the plane weights are
+/// powers of two), so every lane is bit-identical to the extraction
+/// reference [`PackedBits::matvec_i8_extract`] on every shape, tail and
+/// thread count — pinned by the forced-lane entries
+/// ([`PackedBits::matvec_i8_lane`] / [`PackedBits::matmul_i8_lane`]) in
+/// the unit and property walls, which exercise EVERY available lane
+/// regardless of what the hot path auto-selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLane {
+    /// One sign word per step (the PR-5 kernel) — the portable baseline
+    /// and the fallback every other lane is checked against.
+    Scalar,
+    /// Portable 4×-unrolled path: four sign words per step with
+    /// independent per-plane counters, so the popcount chains of
+    /// neighboring words overlap instead of serializing. Runs everywhere.
+    Wide4,
+    /// `std::arch` AVX2 path: all 8 planes of a word are AND+popcounted
+    /// in two 256-bit ops (Mula nibble-LUT popcount). Selected by runtime
+    /// feature detection — never compiled-in assumed — and falls back to
+    /// [`SimdLane::Wide4`] off x86_64 or when the CPU lacks AVX2.
+    Avx2,
+}
+
+impl SimdLane {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdLane::Scalar => "scalar",
+            SimdLane::Wide4 => "wide4",
+            SimdLane::Avx2 => "avx2",
+        }
+    }
+
+    /// Lanes executable on THIS machine: the portable lanes always, the
+    /// AVX2 lane only when runtime detection reports support. Test walls
+    /// iterate this so CI covers every lane the hardware can run.
+    pub fn available() -> Vec<SimdLane> {
+        let mut lanes = vec![SimdLane::Scalar, SimdLane::Wide4];
+        if avx2_available() {
+            lanes.push(SimdLane::Avx2);
+        }
+        lanes
+    }
+
+    /// The lane the hot path runs: the best available one, detected once
+    /// per process (a `OnceLock`, so the per-call cost is one load).
+    pub fn active() -> SimdLane {
+        static ACTIVE: std::sync::OnceLock<SimdLane> = std::sync::OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            if avx2_available() {
+                SimdLane::Avx2
+            } else {
+                SimdLane::Wide4
+            }
+        })
+    }
+}
+
+/// Runtime AVX2 feature detection (always false off x86_64). The kernels
+/// gate the `std::arch` path on this at runtime, so one binary serves
+/// both AVX2 and pre-AVX2 machines with the portable lane as fallback.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 /// One token's INT8-quantized activations, produced by
 /// [`PackedBits::quantize_act`]: q (i8), the symmetric per-token scale
 /// s_tok = max|x|/127, and the per-group i32 sums of q (the μ-term of the
@@ -157,10 +272,186 @@ struct GemmScratch {
     xt: Matrix,
     gsums: Vec<f32>,
     acts: Vec<ActI8>,
+    attn: Vec<AttnScratch>,
+    zbufs: Vec<Vec<f32>>,
 }
 
 thread_local! {
     static GEMM_SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::default());
+}
+
+/// Per-thread scratch for the INT8 attention core
+/// (`model::layers::attn_forward_seg` under [`AttnPrecision::Int8`]):
+/// token-major i8 Q/K, d-major i8 V, one quantized probability row, the
+/// per-token scale vectors and the score matrix — pooled alongside the
+/// GEMM scratch so a batched serve step quantizes attention without
+/// per-head heap allocation. Same take/put discipline as the rest of the
+/// pool (pop on empty allocates; re-entrancy safe).
+#[derive(Default)]
+pub(crate) struct AttnScratch {
+    /// Token-major i8 queries: `qq[t*dh + i]`.
+    pub qq: Vec<i8>,
+    /// Token-major i8 keys: `qk[u*dh + i]`.
+    pub qk: Vec<i8>,
+    /// d-major i8 values: `qv[i*seg + u]` (contiguous per feature row for
+    /// the context GEMM's inner dot).
+    pub qv: Vec<i8>,
+    /// One quantized probability row of the context GEMM.
+    pub qr: Vec<i8>,
+    /// Per-token symmetric scales for Q / K / V columns.
+    pub sq: Vec<f32>,
+    pub sk: Vec<f32>,
+    pub sv: Vec<f32>,
+    /// Transient inverse-scale vector, reused by each quantize stage.
+    pub inv: Vec<f32>,
+    /// One f32 probability row with the V scales folded in, pre-quantize.
+    pub pr: Vec<f32>,
+    /// Per-segment score matrix (reused across heads/segments).
+    pub scores: Matrix,
+}
+
+pub(crate) fn take_scratch_attn() -> AttnScratch {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().attn.pop()).unwrap_or_default()
+}
+
+pub(crate) fn put_scratch_attn(a: AttnScratch) {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().attn.push(a));
+}
+
+/// Pop/push one transform-domain z buffer — the Haar butterfly writes
+/// into a pooled buffer (`transform::HaarTransform::transform_act_into`)
+/// before quantizing straight into the pooled [`ActI8`], so the
+/// transform-packed serving path is allocation-free per layer too.
+pub(crate) fn take_scratch_z() -> Vec<f32> {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().zbufs.pop()).unwrap_or_default()
+}
+
+pub(crate) fn put_scratch_z(z: Vec<f32>) {
+    GEMM_SCRATCH.with(|s| s.borrow_mut().zbufs.push(z));
+}
+
+/// Sum of `x[base + b]` over the set bits b of one (already masked) sign
+/// word — the per-word body the wide f32 lane unrolls four copies of.
+#[inline(always)]
+fn word_set_sum(mut bits: u64, base: usize, x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    while bits != 0 {
+        let b = bits.trailing_zeros() as usize;
+        acc += x[base + b];
+        bits &= bits - 1;
+    }
+    acc
+}
+
+/// Add one (already masked) sign word's per-plane popcounts into the 8
+/// counters: `cnt[b] += popcnt(sbits ∧ planes[b])`. The per-word body of
+/// the portable wide lane; exact by construction (popcounts are integer).
+#[inline(always)]
+fn slice_counts(cnt: &mut [u32; 8], sbits: u64, planes: &[u64]) {
+    if sbits == 0 {
+        return;
+    }
+    for (c, p) in cnt.iter_mut().zip(planes) {
+        *c += (sbits & p).count_ones();
+    }
+}
+
+/// Fold the 8 per-plane popcounts into the signed i8 set-sum
+/// Σ_{b=0..6} 2^b·cnt[b] − 128·cnt[7], widened to i64 for the combine
+/// (group sums are far below i32 range; the widening only guards the
+/// intermediate products).
+#[inline(always)]
+fn combine_counts(cnt: &[u32; 8]) -> i32 {
+    let pos = cnt[0] as i64
+        + 2 * cnt[1] as i64
+        + 4 * cnt[2] as i64
+        + 8 * cnt[3] as i64
+        + 16 * cnt[4] as i64
+        + 32 * cnt[5] as i64
+        + 64 * cnt[6] as i64;
+    (pos - 128 * cnt[7] as i64) as i32
+}
+
+/// AVX2 lane of the bit-sliced popcount kernel. Free functions (not
+/// methods) so the `#[target_feature]` boundary is explicit; compiled
+/// only on x86_64 and *called* only when [`avx2_available`] reported
+/// support at runtime.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount via the Mula nibble-LUT algorithm: split
+    /// each byte into nibbles, table-lookup their popcounts with
+    /// `_mm256_shuffle_epi8`, then `_mm256_sad_epu8` horizontally sums
+    /// the 8 byte-counts of each u64 lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt8 = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt8, _mm256_setzero_si256())
+    }
+
+    /// Bit-sliced i8 set-sum over columns [s, e) of the row at `wbase`:
+    /// all 8 planes of each sign word are ANDed and popcounted in two
+    /// 256-bit ops (planes 0–3 and 4–7), accumulating per-plane counts in
+    /// u64 lanes; the final combine applies the plane weights exactly as
+    /// the portable lanes do, so the result is bit-identical to them.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers gate on [`super::avx2_available`]).
+    /// `slices` must hold 8 plane words per sign word of the span, as
+    /// built by `quantize_act_with_scale_into`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn set_sum_sliced(
+        signs: &[u64],
+        wbase: usize,
+        s: usize,
+        e: usize,
+        slices: &[u64],
+    ) -> i32 {
+        let w0 = s / 64;
+        let w1 = (e - 1) / 64;
+        let mut acc_lo = _mm256_setzero_si256(); // planes 0..=3 counts, u64 lanes
+        let mut acc_hi = _mm256_setzero_si256(); // planes 4..=7
+        for wi in w0..=w1 {
+            let mut sbits = signs[wbase + wi];
+            if wi == w0 {
+                sbits &= u64::MAX << (s % 64);
+            }
+            if wi == w1 {
+                let top = e - wi * 64;
+                if top < 64 {
+                    sbits &= (1u64 << top) - 1;
+                }
+            }
+            if sbits == 0 {
+                continue;
+            }
+            let sv = _mm256_set1_epi64x(sbits as i64);
+            let base = slices.as_ptr().add(wi * 8);
+            let plo = _mm256_loadu_si256(base as *const __m256i);
+            let phi = _mm256_loadu_si256(base.add(4) as *const __m256i);
+            acc_lo = _mm256_add_epi64(acc_lo, popcnt_epi64(_mm256_and_si256(sv, plo)));
+            acc_hi = _mm256_add_epi64(acc_hi, popcnt_epi64(_mm256_and_si256(sv, phi)));
+        }
+        let mut cnt = [0u64; 8];
+        _mm256_storeu_si256(cnt.as_mut_ptr() as *mut __m256i, acc_lo);
+        _mm256_storeu_si256(cnt.as_mut_ptr().add(4) as *mut __m256i, acc_hi);
+        let pos = cnt[0] as i64
+            + 2 * cnt[1] as i64
+            + 4 * cnt[2] as i64
+            + 8 * cnt[3] as i64
+            + 16 * cnt[4] as i64
+            + 32 * cnt[5] as i64
+            + 64 * cnt[6] as i64;
+        (pos - 128 * cnt[7] as i64) as i32
+    }
 }
 
 /// Take/put access to the scratch transpose buffer for sibling modules
@@ -319,35 +610,51 @@ impl PackedBits {
     }
 
     /// Sum of `x` over the *set* sign bits of row-word-base `wbase` within
-    /// columns [s, e): the word-at-a-time inner loop. Boundary masks are
-    /// applied only on the first/last word of the span (interior words run
-    /// unmasked — no per-word branch on a recomputed span); set bits are
-    /// consumed with `trailing_zeros` + `bits &= bits − 1`.
+    /// columns [s, e): the wide-lane inner loop. Boundary masks are
+    /// applied only on the first/last word of the span; interior words run
+    /// unmasked, 4 per step, with four independent per-word accumulators
+    /// (`word_set_sum`) combined pairwise — the popcount/extraction chains
+    /// of neighboring words overlap instead of serializing on one f32 add
+    /// chain. This reorders the f32 summation relative to the PR-5 serial
+    /// loop, which is fine: every f32 entry point (GEMV, GEMM, serial,
+    /// parallel) shares THIS one function, so their mutual bit-identity
+    /// contracts are untouched, and the dense-twin comparisons are
+    /// tolerance-based.
     #[inline]
     fn set_sum(&self, wbase: usize, s: usize, e: usize, x: &[f32]) -> f32 {
         debug_assert!(s < e);
-        let mut acc = 0.0f32;
         let w0 = s / 64;
         let w1 = (e - 1) / 64;
-        for wi in w0..=w1 {
-            let mut bits = self.signs[wbase + wi];
-            if wi == w0 {
-                bits &= u64::MAX << (s % 64);
+        let lo_mask = u64::MAX << (s % 64);
+        if w0 == w1 {
+            let mut bits = self.signs[wbase + w0] & lo_mask;
+            let top = e - w0 * 64; // 1..=64 valid bits in the last word
+            if top < 64 {
+                bits &= (1u64 << top) - 1;
             }
-            if wi == w1 {
-                let top = e - wi * 64; // 1..=64 valid bits in the last word
-                if top < 64 {
-                    bits &= (1u64 << top) - 1;
-                }
-            }
-            let base = wi * 64;
-            while bits != 0 {
-                let b = bits.trailing_zeros() as usize;
-                acc += x[base + b];
-                bits &= bits - 1;
-            }
+            return word_set_sum(bits, w0 * 64, x);
         }
-        acc
+        let mut acc = word_set_sum(self.signs[wbase + w0] & lo_mask, w0 * 64, x);
+        let mut wi = w0 + 1;
+        while wi + 4 <= w1 {
+            let a0 = word_set_sum(self.signs[wbase + wi], wi * 64, x);
+            let a1 = word_set_sum(self.signs[wbase + wi + 1], (wi + 1) * 64, x);
+            let a2 = word_set_sum(self.signs[wbase + wi + 2], (wi + 2) * 64, x);
+            let a3 = word_set_sum(self.signs[wbase + wi + 3], (wi + 3) * 64, x);
+            acc += (a0 + a1) + (a2 + a3);
+            wi += 4;
+        }
+        while wi < w1 {
+            acc += word_set_sum(self.signs[wbase + wi], wi * 64, x);
+            wi += 1;
+        }
+        let top = e - w1 * 64; // 1..=64 valid bits in the last word
+        let bits = if top < 64 {
+            self.signs[wbase + w1] & ((1u64 << top) - 1)
+        } else {
+            self.signs[wbase + w1]
+        };
+        acc + word_set_sum(bits, w1 * 64, x)
     }
 
     /// One row's full GEMV dot (all bitplanes, plane contributions added
@@ -576,6 +883,99 @@ impl PackedBits {
         (pos as i64 - 128 * hi as i64) as i32
     }
 
+    /// Portable wide lane of the bit-sliced kernel: boundary words are
+    /// masked once up front, then the interior runs 4 sign words per
+    /// step against their 32 contiguous plane words, accumulating all 8
+    /// plane popcounts in independent `u32` counters — four AND+POPCNT
+    /// chains in flight per plane instead of one. Integer-exact, so
+    /// bit-identical to [`Self::set_sum_i8_sliced`] by construction
+    /// (counter headroom: ≤ 2^24 columns ⇒ each count ≤ 2^24 < u32 max;
+    /// the weighted combine widens to i64 as the scalar lane does).
+    #[inline]
+    fn set_sum_i8_sliced_wide4(&self, wbase: usize, s: usize, e: usize, slices: &[u64]) -> i32 {
+        debug_assert!(s < e);
+        let w0 = s / 64;
+        let w1 = (e - 1) / 64;
+        let lo_mask = u64::MAX << (s % 64);
+        let mut cnt = [0u32; 8];
+        if w0 == w1 {
+            let mut sbits = self.signs[wbase + w0] & lo_mask;
+            let top = e - w0 * 64;
+            if top < 64 {
+                sbits &= (1u64 << top) - 1;
+            }
+            slice_counts(&mut cnt, sbits, &slices[w0 * 8..w0 * 8 + 8]);
+            return combine_counts(&cnt);
+        }
+        slice_counts(&mut cnt, self.signs[wbase + w0] & lo_mask, &slices[w0 * 8..w0 * 8 + 8]);
+        let mut wi = w0 + 1;
+        while wi + 4 <= w1 {
+            let p = &slices[wi * 8..wi * 8 + 32];
+            let s0 = self.signs[wbase + wi];
+            let s1 = self.signs[wbase + wi + 1];
+            let s2 = self.signs[wbase + wi + 2];
+            let s3 = self.signs[wbase + wi + 3];
+            for (b, c) in cnt.iter_mut().enumerate() {
+                *c += (s0 & p[b]).count_ones()
+                    + (s1 & p[b + 8]).count_ones()
+                    + (s2 & p[b + 16]).count_ones()
+                    + (s3 & p[b + 24]).count_ones();
+            }
+            wi += 4;
+        }
+        while wi < w1 {
+            slice_counts(&mut cnt, self.signs[wbase + wi], &slices[wi * 8..wi * 8 + 8]);
+            wi += 1;
+        }
+        let top = e - w1 * 64;
+        let tail = if top < 64 {
+            self.signs[wbase + w1] & ((1u64 << top) - 1)
+        } else {
+            self.signs[wbase + w1]
+        };
+        slice_counts(&mut cnt, tail, &slices[w1 * 8..w1 * 8 + 8]);
+        combine_counts(&cnt)
+    }
+
+    /// AVX2 lane wrapper — only reachable through
+    /// [`Self::set_sum_i8_sliced_lane`] after runtime detection.
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    fn set_sum_i8_sliced_avx2(&self, wbase: usize, s: usize, e: usize, slices: &[u64]) -> i32 {
+        debug_assert!(s < e);
+        // SAFETY: callers only select `SimdLane::Avx2` when
+        // `avx2_available()` reported CPU support (`SimdLane::active` /
+        // `SimdLane::available`), and `slices` is a full 8-planes-per-word
+        // buffer built by `quantize_act_with_scale_into`.
+        unsafe { avx2::set_sum_sliced(&self.signs, wbase, s, e, slices) }
+    }
+
+    /// Lane dispatcher for the bit-sliced set-sum: all lanes compute the
+    /// identical integer result, so this is purely a speed choice. The
+    /// hot path passes [`SimdLane::active`] (resolved once per call tree,
+    /// not per group); the forced-lane entries pass an explicit lane so
+    /// the test walls pin every lane against the extraction reference.
+    /// `Avx2` on a non-x86_64 build (or an undetected CPU — guarded by
+    /// the callers) degrades to the portable wide lane.
+    #[inline]
+    fn set_sum_i8_sliced_lane(
+        &self,
+        wbase: usize,
+        s: usize,
+        e: usize,
+        slices: &[u64],
+        lane: SimdLane,
+    ) -> i32 {
+        match lane {
+            SimdLane::Scalar => self.set_sum_i8_sliced(wbase, s, e, slices),
+            SimdLane::Wide4 => self.set_sum_i8_sliced_wide4(wbase, s, e, slices),
+            #[cfg(target_arch = "x86_64")]
+            SimdLane::Avx2 => self.set_sum_i8_sliced_avx2(wbase, s, e, slices),
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdLane::Avx2 => self.set_sum_i8_sliced_wide4(wbase, s, e, slices),
+        }
+    }
+
     /// i8 twin of [`Self::set_sum`]: sum of q over the *set* sign bits of
     /// row-word-base `wbase` within columns [s, e), accumulated in i32
     /// (|q| ≤ 127 with cols capped at 2^24 keeps any group sum inside
@@ -617,14 +1017,14 @@ impl PackedBits {
     /// tests pin. Falls back to the extraction loop for an `ActI8` built
     /// without slices (never the case on in-tree paths).
     #[inline]
-    fn row_acc_i8(&self, wbase: usize, gbase: usize, act: &ActI8) -> f32 {
+    fn row_acc_i8(&self, wbase: usize, gbase: usize, act: &ActI8, lane: SimdLane) -> f32 {
         let sliced = act.slices.len() == self.words_per_row * 8;
         let mut acc = 0.0f32;
         for g in 0..self.groups_per_row {
             let s = g * self.group_size;
             let e = (s + self.group_size).min(self.cols);
             let set = if sliced {
-                self.set_sum_i8_sliced(wbase, s, e, &act.slices)
+                self.set_sum_i8_sliced_lane(wbase, s, e, &act.slices, lane)
             } else {
                 self.set_sum_i8(wbase, s, e, &act.q)
             };
@@ -658,11 +1058,11 @@ impl PackedBits {
     /// One row's full W1A8 dot over all bitplanes (plane contributions in
     /// chain order — shared accumulation order with the GEMM).
     #[inline]
-    fn row_dot_i8(&self, r: usize, act: &ActI8) -> f32 {
+    fn row_dot_i8(&self, r: usize, act: &ActI8, lane: SimdLane) -> f32 {
         let mut out = 0.0f32;
         let mut plane = Some(self);
         while let Some(p) = plane {
-            out += p.row_acc_i8(r * p.words_per_row, r * p.groups_per_row, act);
+            out += p.row_acc_i8(r * p.words_per_row, r * p.groups_per_row, act, lane);
             plane = p.residual.as_deref();
         }
         out
@@ -676,12 +1076,22 @@ impl PackedBits {
     }
 
     /// Row-parallel W1A8 GEMV (same threshold/parity contract as
-    /// [`Self::matvec_mt`]).
+    /// [`Self::matvec_mt`]) on the auto-selected [`SimdLane::active`].
     pub fn matvec_i8_mt(&self, act: &ActI8, y: &mut [f32], threads: usize) {
+        self.matvec_i8_lane(act, y, threads, SimdLane::active());
+    }
+
+    /// Forced-lane W1A8 GEMV: identical to [`Self::matvec_i8_mt`] except
+    /// the sliced inner loop runs the EXPLICIT `lane`. The parity walls
+    /// call this for every [`SimdLane::available`] lane so each one is
+    /// pinned bit-identical to [`Self::matvec_i8_extract`] regardless of
+    /// which lane the host auto-selects or what `RUSTFLAGS` built the
+    /// binary with.
+    pub fn matvec_i8_lane(&self, act: &ActI8, y: &mut [f32], threads: usize, lane: SimdLane) {
         assert_eq!(act.q.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         assert_eq!(act.group_sums.len(), self.groups_per_row);
-        self.for_each_y_par(y, threads, |r| self.row_dot_i8(r, act));
+        self.for_each_y_par(y, threads, |r| self.row_dot_i8(r, act, lane));
     }
 
     /// Reference W1A8 GEMV on the extraction kernel (bench/test twin of
@@ -736,14 +1146,14 @@ impl PackedBits {
     /// One row of the W1A8 packed GEMM (i8 twin of [`Self::row_tokens`]):
     /// plane-outer, token-inner, with the same per-(row, token)
     /// accumulation order as [`Self::matvec_i8`].
-    fn row_tokens_i8(&self, r: usize, acts: &[ActI8], orow: &mut [f32]) {
+    fn row_tokens_i8(&self, r: usize, acts: &[ActI8], orow: &mut [f32], lane: SimdLane) {
         orow.iter_mut().for_each(|v| *v = 0.0);
         let mut plane = Some(self);
         while let Some(p) = plane {
             let wbase = r * p.words_per_row;
             let gbase = r * p.groups_per_row;
             for (t, slot) in orow.iter_mut().enumerate() {
-                *slot += p.row_acc_i8(wbase, gbase, &acts[t]);
+                *slot += p.row_acc_i8(wbase, gbase, &acts[t], lane);
             }
             plane = p.residual.as_deref();
         }
@@ -827,12 +1237,49 @@ impl PackedBits {
     /// quantizes straight out of its fused gather+Haar+max sweep and
     /// feeds the acts here, so no activation is ever swept twice.
     pub fn matmul_i8_acts(&self, acts: &[ActI8], threads: usize) -> Matrix {
+        self.matmul_i8_acts_lane(acts, threads, SimdLane::active())
+    }
+
+    /// Forced-lane form of [`Self::matmul_i8_acts`] — the GEMM sibling of
+    /// [`Self::matvec_i8_lane`], used by the lane parity walls and the
+    /// wide-lane-vs-scalar bench table.
+    pub fn matmul_i8_acts_lane(&self, acts: &[ActI8], threads: usize, lane: SimdLane) -> Matrix {
         for a in acts {
             assert_eq!(a.q.len(), self.cols, "pre-quantized token dim mismatch");
             assert_eq!(a.group_sums.len(), self.groups_per_row);
         }
         let mut out = Matrix::zeros(self.rows, acts.len());
-        self.for_each_row_par(&mut out, threads, |r, orow| self.row_tokens_i8(r, acts, orow));
+        self.for_each_row_par(&mut out, threads, |r, orow| {
+            self.row_tokens_i8(r, acts, orow, lane)
+        });
+        out
+    }
+
+    /// Forced-lane W1A8 GEMM over a column-major activation matrix:
+    /// quantizes each token per-token exactly like [`Self::matmul_i8_mt`]
+    /// and runs the explicit `lane` — bit-identical to
+    /// [`Self::matmul_i8_extract`] on every lane (pinned by proptests).
+    pub fn matmul_i8_lane(&self, x: &Matrix, threads: usize, lane: SimdLane) -> Matrix {
+        assert_eq!(
+            x.rows, self.cols,
+            "packed i8 matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, x.rows, x.cols
+        );
+        let mut xt = take_scratch_xt();
+        x.transpose_into(&mut xt);
+        let n_tokens = xt.rows;
+        let mut acts = GEMM_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut().acts));
+        if acts.len() < n_tokens {
+            acts.resize_with(n_tokens, ActI8::default);
+        }
+        for (t, act) in acts[..n_tokens].iter_mut().enumerate() {
+            let row = xt.row(t);
+            let s = crate::tensor::ops::act_scale_i8(row);
+            self.quantize_act_with_scale_into(row, s, act);
+        }
+        let out = self.matmul_i8_acts_lane(&acts[..n_tokens], threads, lane);
+        GEMM_SCRATCH.with(|s| s.borrow_mut().acts = acts);
+        put_scratch_xt(xt);
         out
     }
 
@@ -1343,6 +1790,99 @@ mod tests {
         p.matvec_i8(&act, &mut y_sliced);
         p.matvec_i8_extract(&act, &mut y_extract);
         assert_eq!(y_sliced, y_extract);
+    }
+
+    #[test]
+    fn every_simd_lane_bit_identical_to_extraction() {
+        // The wide-lane tentpole contract: EVERY lane the host can run —
+        // scalar, the portable 4×-unrolled lane, and (when detected) the
+        // AVX2 lane — must reproduce the extraction reference exactly, on
+        // word-aligned shapes, 70 = 64+6 tails, long multi-word interiors
+        // that exercise the 4-word unrolled block, group sizes that split
+        // words, multi-plane chains, and at thread counts 1 and 4.
+        let mut rng = Rng::new(109);
+        let shapes = [
+            (8usize, 64usize, 32usize, 1usize),
+            (6, 70, 64, 2),
+            (5, 130, 128, 3),
+            (4, 200, 7, 2),
+            (3, 1030, 512, 2), // 16 words + 6-bit tail: interior unroll + remainder
+        ];
+        for lane in SimdLane::available() {
+            for &(rows, cols, gs, order) in &shapes {
+                let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+                let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+                let x: Vec<f32> = (0..cols).map(|_| 2.0 * rng.gauss() as f32).collect();
+                let act = p.quantize_act(&x);
+                let mut y_extract = vec![0.0f32; rows];
+                p.matvec_i8_extract(&act, &mut y_extract);
+                for threads in [1usize, 4] {
+                    let mut y_lane = vec![0.0f32; rows];
+                    p.matvec_i8_lane(&act, &mut y_lane, threads, lane);
+                    assert_eq!(
+                        y_lane,
+                        y_extract,
+                        "{} ({rows},{cols},{gs},{order}) t={threads} GEMV",
+                        lane.label()
+                    );
+                }
+                let xb = Matrix::gauss(cols, 5, 1.0, &mut rng);
+                let g_lane = p.matmul_i8_lane(&xb, 2, lane);
+                let g_extract = p.matmul_i8_extract(&xb);
+                assert_eq!(
+                    g_lane.data,
+                    g_extract.data,
+                    "{} ({rows},{cols},{gs},{order}) GEMM",
+                    lane.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_simd_lane_handles_saturated_tokens() {
+        // ±127 everywhere lights all 8 planes (plane 7 on every negative
+        // q) — the combine-weight edge case, on every available lane.
+        let mut rng = Rng::new(110);
+        let w = Matrix::gauss(6, 70, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, 2, 0.0);
+        let x: Vec<f32> = (0..70).map(|j| if j % 2 == 0 { 3.0 } else { -3.0 }).collect();
+        let act = p.quantize_act(&x);
+        assert!(act.q.iter().all(|&v| v == 127 || v == -127));
+        let mut y_extract = vec![0.0f32; 6];
+        p.matvec_i8_extract(&act, &mut y_extract);
+        for lane in SimdLane::available() {
+            let mut y_lane = vec![0.0f32; 6];
+            p.matvec_i8_lane(&act, &mut y_lane, 1, lane);
+            assert_eq!(y_lane, y_extract, "{}", lane.label());
+        }
+    }
+
+    #[test]
+    fn simd_lane_policy_is_consistent() {
+        let avail = SimdLane::available();
+        // The portable lanes run everywhere; the active lane is always an
+        // available one; labels are distinct (they key the bench tables).
+        assert!(avail.contains(&SimdLane::Scalar) && avail.contains(&SimdLane::Wide4));
+        assert!(avail.contains(&SimdLane::active()));
+        assert_eq!(avail.contains(&SimdLane::Avx2), avx2_available());
+        let labels: Vec<&str> = avail.iter().map(|l| l.label()).collect();
+        for (i, a) in labels.iter().enumerate() {
+            assert!(labels[i + 1..].iter().all(|b| b != a), "duplicate lane label {a}");
+        }
+    }
+
+    #[test]
+    fn attn_precision_labels_and_parse_round_trip() {
+        assert_eq!(AttnPrecision::parse("f32"), Some(AttnPrecision::F32));
+        assert_eq!(AttnPrecision::parse("fp32"), Some(AttnPrecision::F32));
+        assert_eq!(AttnPrecision::parse("int8"), Some(AttnPrecision::Int8));
+        assert_eq!(AttnPrecision::parse("i8"), Some(AttnPrecision::Int8));
+        assert_eq!(AttnPrecision::parse("w1a8"), None);
+        for p in [AttnPrecision::F32, AttnPrecision::Int8] {
+            assert_eq!(AttnPrecision::parse(p.label()), Some(p));
+        }
+        assert_eq!(AttnPrecision::default(), AttnPrecision::F32);
     }
 
     #[test]

@@ -156,10 +156,29 @@ impl TransformPacked {
     /// uses it too). Same arithmetic per element as
     /// [`Self::transform_act_with_max`], so z is bit-identical.
     pub fn transform_act(&self, x: &[f32]) -> Vec<f32> {
+        let mut z = Vec::new();
+        self.transform_act_into(x, &mut z);
+        z
+    }
+
+    /// [`Self::transform_act`] writing into a caller-owned buffer (resized
+    /// to 2·⌈m/2⌉, NOT pre-cleared): the serving hot paths feed pooled
+    /// buffers through here so the coalesced W1A8 forward allocates
+    /// nothing per token. Every slot is written explicitly — including the
+    /// odd-m copy slot and its zero padding slot — so a stale reused
+    /// buffer can never leak a previous token's coefficients.
+    pub fn transform_act_into(&self, x: &[f32], z: &mut Vec<f32>) {
+        z.resize(2 * half_len(self.cols_in), 0.0);
+        self.transform_act_slice(x, z);
+    }
+
+    /// Core sweep of [`Self::transform_act_into`] over an exact-size
+    /// slice (lets the batched path target matrix rows directly).
+    fn transform_act_slice(&self, x: &[f32], z: &mut [f32]) {
         assert_eq!(x.len(), self.cols_in, "transform_act dim mismatch");
         let m = self.cols_in;
         let j = half_len(m);
-        let mut z = vec![0.0f32; 2 * j];
+        debug_assert_eq!(z.len(), 2 * j);
         for k in 0..m / 2 {
             let a = x[self.perm[2 * k] as usize];
             let b = x[self.perm[2 * k + 1] as usize];
@@ -168,8 +187,11 @@ impl TransformPacked {
         }
         if m % 2 == 1 {
             z[j - 1] = x[self.perm[m - 1] as usize];
+            // Explicit: the synthesis never reads z[2j−1], but a reused
+            // buffer must not carry a stale value into the quantizer's
+            // max sweep.
+            z[2 * j - 1] = 0.0;
         }
-        z
     }
 
     /// [`Self::transform_act`] additionally returning max|z| tracked in
@@ -180,10 +202,19 @@ impl TransformPacked {
     /// in f32, so this equals `act_scale_i8(z)·127` bit-for-bit — the
     /// property the sequential/batched W1A8 parity rests on.
     pub fn transform_act_with_max(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        let mut z = Vec::new();
+        let mx = self.transform_act_with_max_into(x, &mut z);
+        (z, mx)
+    }
+
+    /// [`Self::transform_act_with_max`] into a caller-owned buffer (same
+    /// write-every-slot discipline as [`Self::transform_act_into`], so
+    /// pooled buffers are safe); returns max|z|.
+    pub fn transform_act_with_max_into(&self, x: &[f32], z: &mut Vec<f32>) -> f32 {
         assert_eq!(x.len(), self.cols_in, "transform_act dim mismatch");
         let m = self.cols_in;
         let j = half_len(m);
-        let mut z = vec![0.0f32; 2 * j];
+        z.resize(2 * j, 0.0);
         let mut mx = 0.0f32;
         for k in 0..m / 2 {
             let a = x[self.perm[2 * k] as usize];
@@ -197,10 +228,12 @@ impl TransformPacked {
         if m % 2 == 1 {
             let v = x[self.perm[m - 1] as usize];
             z[j - 1] = v;
-            // z[2j−1] stays 0 (the synthesis never reads it).
+            // The synthesis never reads z[2j−1]; zero it anyway so a
+            // stale pooled buffer can't leak into the quantizer sweep.
+            z[2 * j - 1] = 0.0;
             mx = mx.max(v.abs());
         }
-        (z, mx)
+        mx
     }
 
     /// The ONE per-token transform→quantize sequence every W1A8 entry
@@ -211,16 +244,21 @@ impl TransformPacked {
     /// NOT max|x| — the kernel quantizes z; out-of-range coefficients
     /// saturate at ±127).
     fn quantize_transformed_scaled_into(&self, x: &[f32], scale: Option<f32>, act: &mut ActI8) {
+        // The z buffer comes from the shared scratch pool: steady-state
+        // coalesced serving quantizes transform-domain tokens straight
+        // into the pooled ActI8 with zero per-token allocations.
+        let mut z = crate::quant::packed::take_scratch_z();
         match scale {
             Some(s) => {
-                let z = self.transform_act(x);
+                self.transform_act_into(x, &mut z);
                 self.bits.quantize_act_with_scale_into(&z, s, act);
             }
             None => {
-                let (z, mx) = self.transform_act_with_max(x);
+                let mx = self.transform_act_with_max_into(x, &mut z);
                 self.bits.quantize_act_with_scale_into(&z, mx / 127.0, act);
             }
         }
+        crate::quant::packed::put_scratch_z(z);
     }
 
     /// Quantize one token for the W1A8 path: transform (with the fused
@@ -267,9 +305,11 @@ impl TransformPacked {
     /// `model::layers` dispatch form — a pinned `--threads` budget
     /// reaches the packed GEMV fan-out).
     pub fn matvec_owned_mt(&self, x: &[f32], threads: usize) -> Vec<f32> {
-        let z = self.transform_act(x);
+        let mut z = crate::quant::packed::take_scratch_z();
+        self.transform_act_into(x, &mut z);
         let mut y = self.bits.matvec_owned_mt(&z, None, threads);
         self.salient_accumulate(x, &mut y);
+        crate::quant::packed::put_scratch_z(z);
         y
     }
 
@@ -312,9 +352,9 @@ impl TransformPacked {
         let j2 = 2 * half_len(self.cols_in);
         let mut zt = Matrix::zeros(xt.rows, j2);
         for t in 0..xt.rows {
-            // Max-free sweep: the f32 GEMM never needs a scale.
-            let z = self.transform_act(xt.row(t));
-            zt.row_mut(t).copy_from_slice(&z);
+            // Max-free sweep straight into the output row: the f32 GEMM
+            // never needs a scale, and no per-token z vector exists.
+            self.transform_act_slice(xt.row(t), zt.row_mut(t));
         }
         zt
     }
@@ -666,6 +706,28 @@ mod tests {
             for r in 0..8 {
                 assert_eq!(g.at(r, tok), yv[r], "({r},{tok})");
             }
+        }
+    }
+
+    #[test]
+    fn transform_into_reused_buffer_matches_fresh() {
+        // The pooled-buffer contract: a reused (stale, wrong-sized) z
+        // buffer must yield exactly the fresh-allocation transform —
+        // including the odd-m copy slot and its zero padding slot, which
+        // are the two slots a lazy rewrite would leave stale.
+        let mut rng = Rng::new(209);
+        for cols in [64usize, 33, 70, 9] {
+            let w = Matrix::gauss(4, cols, 1.0, &mut rng);
+            let t = build(&w, &[], &mut rng);
+            let mut z = vec![f32::NAN; 5]; // wrong size AND poisoned
+            let xa: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+            t.transform_act_into(&xa, &mut z);
+            assert_eq!(z, t.transform_act(&xa), "cols={cols} first use");
+            let xb: Vec<f32> = (0..cols).map(|_| 3.0 * rng.gauss() as f32).collect();
+            let mx = t.transform_act_with_max_into(&xb, &mut z);
+            let (zf, mxf) = t.transform_act_with_max(&xb);
+            assert_eq!(z, zf, "cols={cols} reuse");
+            assert_eq!(mx, mxf, "cols={cols} max");
         }
     }
 

@@ -138,6 +138,15 @@ pub fn quantize_i8(v: f32, inv_scale: f32) -> i8 {
     (v * inv_scale).round().clamp(-127.0, 127.0) as i8
 }
 
+/// i8·i8 dot product with i32 accumulation — the inner loop of the INT8
+/// attention core (scores and context GEMM). |a·b| ≤ 127² per term, so
+/// i32 holds sums over > 10⁵ terms: far past any head dim or segment.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
 /// Reference form: quantize a whole activation vector to (q, scale).
 /// Elementwise round-trip error is ≤ scale/2 by construction (pinned in
 /// `tests/proptests.rs`).

@@ -33,6 +33,17 @@
 //!
 //! Panics in the closure are caught per item, the pool workers survive,
 //! and `parallel_for` re-raises after the barrier.
+//!
+//! Bit-parity across thread counts: every kernel that fans out over this
+//! pool partitions OUTPUT elements (packed GEMM rows, PTQ layers), so
+//! each element is computed by exactly one thread in a fixed operation
+//! order — results are bit-identical at any thread count and on any
+//! [`crate::quant::packed::SimdLane`]. The INT8 attention core
+//! deliberately does NOT head-parallelize over this pool: attention runs
+//! inside `linear`-dominated forwards that already own the pool at the
+//! outer level (nested calls degrade to serial anyway), and the per-head
+//! score/context loops are small enough that fan-out overhead would
+//! exceed the work at MiniVLA scale.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

@@ -8,7 +8,7 @@ use hbvla::haar::{
 };
 use hbvla::methods::{paper_methods, CalibData, Component};
 use hbvla::quant::group::{quantize_matrix, GroupSpec};
-use hbvla::quant::packed::PackedBits;
+use hbvla::quant::packed::{PackedBits, SimdLane};
 use hbvla::quant::permute::{pairing_and_chaining, NormKind};
 use hbvla::tensor::ops::{dequantize_vec_i8, gram, matvec, quantize_vec_i8};
 use hbvla::tensor::Matrix;
@@ -333,6 +333,99 @@ fn prop_bit_sliced_tail_shapes_and_thread_invariance() {
         let e1 = p.matmul_i8_extract(&x);
         assert_eq!(a1.data, a4.data, "cols={cols} thread variance");
         assert_eq!(a1.data, e1.data, "cols={cols} sliced vs extraction");
+    }
+}
+
+/// Every wide lane this machine can run (scalar, wide4, and avx2 when
+/// detected) produces BIT-IDENTICAL output to the trailing_zeros
+/// extraction reference — same sweep as the sliced-vs-extraction wall:
+/// random shapes, random group sizes, random residual-plane orders, and
+/// the saturated q = ±127 regime where popcount totals are largest. The
+/// lane is forced explicitly so the test covers lanes the runtime
+/// dispatcher would not pick on this machine.
+#[test]
+fn prop_forced_lane_kernels_equal_extraction_bit_exact() {
+    let mut rng = Rng::new(1013);
+    let lanes = SimdLane::available();
+    for trial in 0..25 {
+        let (r, c) = random_shape(&mut rng);
+        let gs = 1 + rng.below(100);
+        let order = 1 + rng.below(3);
+        let w = Matrix::gauss(r, c, rng.range(0.2, 3.0) as f32, &mut rng);
+        let p = PackedBits::pack_residual(&w, gs, order, 0.0);
+        let saturate = trial % 2 == 1;
+        let x: Vec<f32> = (0..c)
+            .map(|j| {
+                if saturate {
+                    if (j + trial) % 2 == 0 {
+                        5.0
+                    } else {
+                        -5.0
+                    }
+                } else {
+                    rng.gauss() as f32
+                }
+            })
+            .collect();
+        let act = p.quantize_act(&x);
+        let mut y_extract = vec![0.0f32; r];
+        p.matvec_i8_extract(&act, &mut y_extract);
+        let n = 1 + rng.below(6);
+        let xm = Matrix::gauss(c, n, rng.range(0.2, 2.0) as f32, &mut rng);
+        let g_extract = p.matmul_i8_extract(&xm);
+        for &lane in &lanes {
+            let mut y = vec![0.0f32; r];
+            p.matvec_i8_lane(&act, &mut y, 1, lane);
+            assert_eq!(
+                y,
+                y_extract,
+                "trial {trial} {r}x{c} gs={gs} order={order} GEMV lane={}",
+                lane.label()
+            );
+            for threads in [1usize, 4] {
+                let g = p.matmul_i8_lane(&xm, threads, lane);
+                assert_eq!(
+                    g.data,
+                    g_extract.data,
+                    "trial {trial} {r}x{c} gs={gs} order={order} GEMM lane={} threads={threads}",
+                    lane.label()
+                );
+            }
+        }
+    }
+}
+
+/// The 70 = 64+6 tail shape per forced lane: one full sign word plus a
+/// 6-bit tail word is exactly where a wide accumulator loop can over-read
+/// or mis-mask, so every lane is pinned against extraction on the word
+/// boundary family, at threads ∈ {1, 4}.
+#[test]
+fn prop_forced_lane_tail_words_bit_exact() {
+    let mut rng = Rng::new(1014);
+    let (rows, n, order) = (96usize, 8usize, 2usize);
+    for &cols in &[70usize, 64, 65, 127, 128, 129, 257] {
+        let w = Matrix::gauss(rows, cols, 1.0, &mut rng);
+        let p = PackedBits::pack_residual(&w, 64, order, 0.0);
+        let xm = Matrix::gauss(cols, n, 1.0, &mut rng);
+        let reference = p.matmul_i8_extract(&xm);
+        let x: Vec<f32> = (0..cols).map(|_| rng.gauss() as f32).collect();
+        let act = p.quantize_act(&x);
+        let mut y_ref = vec![0.0f32; rows];
+        p.matvec_i8_extract(&act, &mut y_ref);
+        for lane in SimdLane::available() {
+            for threads in [1usize, 4] {
+                let g = p.matmul_i8_lane(&xm, threads, lane);
+                assert_eq!(
+                    g.data,
+                    reference.data,
+                    "cols={cols} lane={} threads={threads}",
+                    lane.label()
+                );
+            }
+            let mut y = vec![0.0f32; rows];
+            p.matvec_i8_lane(&act, &mut y, 1, lane);
+            assert_eq!(y, y_ref, "cols={cols} lane={} GEMV", lane.label());
+        }
     }
 }
 
