@@ -79,16 +79,18 @@ impl LatencyStats {
         self.sum_us as f64 / self.count as f64
     }
 
-    /// Percentile over the retained window (the most recent
-    /// [`LATENCY_WINDOW`] samples).
+    /// Nearest-rank percentile over the retained window (the most recent
+    /// [`LATENCY_WINDOW`] samples): the smallest sample with at least
+    /// `p·n` samples ≤ it, so high quantiles (p99.9) report an observed
+    /// value instead of an interpolated one.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.window.is_empty() {
             return 0;
         }
         let mut v = self.window.clone();
         v.sort_unstable();
-        let idx = ((p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round()) as usize;
-        v[idx]
+        let rank = (p.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
     }
 
     pub fn p50_us(&self) -> u64 {
@@ -99,13 +101,18 @@ impl LatencyStats {
         self.percentile_us(0.99)
     }
 
+    pub fn p999_us(&self) -> u64 {
+        self.percentile_us(0.999)
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "n={} mean={:.1}us p50={}us p99={}us",
+            "n={} mean={:.1}us p50={}us p99={}us p999={}us",
             self.count(),
             self.mean_us(),
             self.p50_us(),
-            self.p99_us()
+            self.p99_us(),
+            self.p999_us()
         )
     }
 }
@@ -213,6 +220,26 @@ mod tests {
         assert!(s.p50_us() <= s.p99_us());
         assert_eq!(s.percentile_us(0.0), 1);
         assert_eq!(s.percentile_us(1.0), 100);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        // 1000 samples 1..=1000: nearest-rank p is exactly sample ⌈p·n⌉.
+        let mut s = LatencyStats::new();
+        for i in 1..=1000 {
+            s.record_us(i);
+        }
+        assert_eq!(s.p50_us(), 500);
+        assert_eq!(s.p99_us(), 990);
+        assert_eq!(s.p999_us(), 999);
+        assert_eq!(s.percentile_us(1.0), 1000);
+        assert_eq!(s.percentile_us(0.0), 1);
+        // On a tiny window every quantile is an observed sample.
+        let mut t = LatencyStats::new();
+        t.record_us(7);
+        assert_eq!(t.p50_us(), 7);
+        assert_eq!(t.p999_us(), 7);
+        assert!(s.summary().contains("p999="));
     }
 
     #[test]

@@ -166,7 +166,11 @@ pub enum ServeError {
     DeadlineExceeded { queued: Duration },
     /// Shed at submit by deadline-aware admission: the queue depth times
     /// the observed mean compute predicted a deadline miss.
-    Overloaded { queue_depth: usize, estimated_wait: Duration },
+    /// `retry_after_us` is the predicted excess wait past the deadline —
+    /// the queue drains roughly linearly, so a client that backs off this
+    /// long before resubmitting should find an admittable queue instead of
+    /// hot-looping on `Overloaded`.
+    Overloaded { queue_depth: usize, estimated_wait: Duration, retry_after_us: u64 },
     /// The observation's shape doesn't match the serving interface.
     InvalidObservation { got: String },
 }
@@ -181,10 +185,11 @@ impl std::fmt::Display for ServeError {
             ServeError::DeadlineExceeded { queued } => {
                 write!(f, "deadline exceeded after {}us in queue", queued.as_micros())
             }
-            ServeError::Overloaded { queue_depth, estimated_wait } => {
+            ServeError::Overloaded { queue_depth, estimated_wait, retry_after_us } => {
                 write!(
                     f,
-                    "overloaded: {queue_depth} queued requests imply ~{}us wait past the deadline",
+                    "overloaded: {queue_depth} queued requests imply ~{}us wait past the \
+                     deadline (retry after {retry_after_us}us)",
                     estimated_wait.as_micros()
                 )
             }
@@ -245,10 +250,21 @@ pub struct PolicyServer {
     /// Requests submitted but not yet pulled into a dispatched batch —
     /// the depth term of deadline-aware admission.
     queue_depth: Arc<std::sync::atomic::AtomicUsize>,
+    /// Workers whose index is ≥ this value retire at their next idle tick
+    /// or batch boundary (never mid-batch, so no reply is ever dropped).
+    target_workers: Arc<std::sync::atomic::AtomicUsize>,
+    /// Workers currently running their loop; the service-rate term of
+    /// deadline-aware admission, so estimates track worker loss.
+    live_workers: Arc<std::sync::atomic::AtomicUsize>,
     variant_stats: Arc<Mutex<HashMap<String, VariantStats>>>,
     batch_stats: Arc<Mutex<BatchStats>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
+
+/// How long an idle worker blocks on the queue before re-checking the
+/// shrink target. Bounds worker-loss reaction time; long enough that the
+/// re-lock cost is noise next to any real batch.
+const WORKER_IDLE_TICK: Duration = Duration::from_millis(2);
 
 impl PolicyServer {
     pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Self {
@@ -257,16 +273,31 @@ impl PolicyServer {
         let variant_stats = Arc::new(Mutex::new(HashMap::new()));
         let batch_stats = Arc::new(Mutex::new(BatchStats::new()));
         let queue_depth = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let n_workers = cfg.workers.max(1);
+        let target_workers = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
+        let live_workers = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
         let mut handles = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
+        for idx in 0..n_workers {
             let rx = Arc::clone(&rx);
             let registry = Arc::clone(&registry);
             let variant_stats = Arc::clone(&variant_stats);
             let batch_stats = Arc::clone(&batch_stats);
             let queue_depth = Arc::clone(&queue_depth);
+            let target_workers = Arc::clone(&target_workers);
+            let live_workers = Arc::clone(&live_workers);
             let cfg = cfg.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(&cfg, &rx, &registry, &variant_stats, &batch_stats, &queue_depth)
+                worker_loop(
+                    idx,
+                    &cfg,
+                    &rx,
+                    &registry,
+                    &variant_stats,
+                    &batch_stats,
+                    &queue_depth,
+                    &target_workers,
+                );
+                live_workers.fetch_sub(1, Ordering::Relaxed);
             }));
         }
         PolicyServer {
@@ -275,10 +306,28 @@ impl PolicyServer {
             tx: Mutex::new(Some(tx)),
             next_seq: AtomicU64::new(0),
             queue_depth,
+            target_workers,
+            live_workers,
             variant_stats,
             batch_stats,
             handles: Mutex::new(handles),
         }
+    }
+
+    /// Worker-loss drill / degraded operation: retire workers down to
+    /// `target` (floored at 1 — the server never becomes headless). A
+    /// retiring worker finishes its in-flight batch and replies to every
+    /// request in it; shrink can only lose *capacity*, never requests.
+    /// Growing back is not supported — restart the server instead.
+    pub fn shrink_workers(&self, target: usize) {
+        let target = target.clamp(1, self.cfg.workers.max(1));
+        self.target_workers.fetch_min(target, Ordering::Relaxed);
+    }
+
+    /// Workers currently running their dispatch loop (tracks
+    /// [`Self::shrink_workers`] with a latency of one idle tick / batch).
+    pub fn live_workers(&self) -> usize {
+        self.live_workers.load(Ordering::Relaxed)
     }
 
     /// Requests submitted but not yet pulled into a dispatched batch.
@@ -306,13 +355,22 @@ impl PolicyServer {
             }
         };
         let mean_batch = self.batch_stats.lock().unwrap().mean();
-        let est_us = estimated_queue_wait_us(depth, mean_compute_us, self.cfg.workers, mean_batch);
-        if est_us > deadline.as_secs_f64() * 1e6 {
+        // Live workers, not the configured count: after a worker-loss
+        // drill the service rate really is lower and estimates must say so.
+        let workers = self.live_workers().max(1);
+        let est_us = estimated_queue_wait_us(depth, mean_compute_us, workers, mean_batch);
+        let deadline_us = deadline.as_secs_f64() * 1e6;
+        if est_us > deadline_us {
             let mut g = self.variant_stats.lock().unwrap();
             g.entry(variant.to_string()).or_default().admission_sheds += 1;
+            // The queue drains ~linearly at the estimated service rate, so
+            // once the predicted excess past the deadline has elapsed the
+            // same deadline should clear admission. Floored at 1 µs so a
+            // backoff loop always makes forward progress.
             return Err(ServeError::Overloaded {
                 queue_depth: depth,
                 estimated_wait: Duration::from_micros(est_us as u64),
+                retry_after_us: ((est_us - deadline_us).max(1.0)) as u64,
             });
         }
         Ok(())
@@ -445,23 +503,34 @@ impl Drop for PolicyServer {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
+    idx: usize,
     cfg: &ServeConfig,
     rx: &Mutex<Receiver<Request>>,
     registry: &ModelRegistry,
     variant_stats: &Mutex<HashMap<String, VariantStats>>,
     batch_stats: &Mutex<BatchStats>,
     queue_depth: &std::sync::atomic::AtomicUsize,
+    target_workers: &std::sync::atomic::AtomicUsize,
 ) {
     loop {
-        // Collect a batch: block for the first request, then drain up to
-        // max_batch within max_wait.
+        // Retirement check between batches only: a retiring worker never
+        // abandons requests it already dequeued.
+        if idx >= target_workers.load(Ordering::Relaxed) {
+            break;
+        }
+        // Collect a batch: wait for the first request (bounded by the idle
+        // tick so the shrink target is re-checked — and the rx lock
+        // RELEASED, letting the surviving workers rotate in), then drain
+        // up to max_batch within max_wait.
         let mut batch: Vec<Request> = Vec::new();
         {
             let guard = rx.lock().unwrap();
-            match guard.recv() {
+            match guard.recv_timeout(WORKER_IDLE_TICK) {
                 Ok(r) => batch.push(r),
-                Err(_) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
             }
             let wait_deadline = Instant::now() + cfg.max_wait;
             while batch.len() < cfg.max_batch {
@@ -778,9 +847,13 @@ mod tests {
             .submit(ServeRequest::new(obs.clone()).with_deadline(Duration::from_nanos(1)))
             .unwrap_err();
         match err {
-            ServeError::Overloaded { queue_depth, estimated_wait } => {
+            ServeError::Overloaded { queue_depth, estimated_wait, retry_after_us } => {
                 assert!(queue_depth >= 1);
                 assert!(estimated_wait > Duration::from_nanos(1));
+                // Excess past a ~zero deadline ≈ the whole estimated wait,
+                // and never below the 1 µs forward-progress floor.
+                assert!(retry_after_us >= 1);
+                assert!(retry_after_us <= estimated_wait.as_micros() as u64 + 1);
             }
             other => panic!("expected Overloaded, got {other:?}"),
         }
@@ -794,6 +867,36 @@ mod tests {
         let per = server.variant_stats();
         assert_eq!(per["dense"].admission_sheds, 1);
         assert!(per["dense"].summary().contains("sheds=1"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn shrink_workers_degrades_without_dropping_requests() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig { workers: 4, ..Default::default() },
+        );
+        assert_eq!(server.live_workers(), 4);
+        server.shrink_workers(1);
+        // Retired workers park on the idle tick; give them a few ticks.
+        for _ in 0..200 {
+            if server.live_workers() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(server.live_workers(), 1);
+        // The survivor still serves, and shrink never goes below 1 —
+        // nor back up (growth is a restart, not a runtime op).
+        server.shrink_workers(0);
+        server.shrink_workers(8);
+        for _ in 0..6 {
+            server.submit(ServeRequest::new(obs.clone())).unwrap();
+        }
+        assert_eq!(server.live_workers(), 1);
+        assert_eq!(server.latency_stats().count(), 6);
         server.shutdown();
     }
 

@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 /// PR index stamped into the machine-readable bench baseline — bump this
 /// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
 /// tooling keyed on the schema's own `pr` field stays truthful.
-pub const BENCH_PR: u32 = 6;
+pub const BENCH_PR: u32 = 7;
 
 pub struct PerfReport {
     /// Run parameters (recorded so `BENCH_*.json` baselines are
@@ -40,6 +40,7 @@ pub struct PerfReport {
     pub rollout_eps_per_sec: f64,
     pub serve_p50_us: u64,
     pub serve_p99_us: u64,
+    pub serve_p999_us: u64,
     pub serve_qps: f64,
     pub packed_gemv_gflops: f64,
     pub dense_gemv_gflops: f64,
@@ -147,7 +148,7 @@ impl PerfReport {
         format!(
             "quantization: {:.1} layers/s ({:.2} Mweights/s)\n\
              rollout:      {:.1} episodes/s\n\
-             serving:      p50={}us p99={}us throughput={:.0} req/s\n\
+             serving:      p50={}us p99={}us p999={}us throughput={:.0} req/s\n\
              packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
              {}\n\
@@ -164,6 +165,7 @@ impl PerfReport {
             self.rollout_eps_per_sec,
             self.serve_p50_us,
             self.serve_p99_us,
+            self.serve_p999_us,
             self.serve_qps,
             self.packed_gemv_gflops,
             self.dense_gemv_gflops,
@@ -342,7 +344,7 @@ impl PerfReport {
              \x20 \"smoke\": {},\n\
              \x20 \"quant\": {{\"layers_per_s\": {}, \"mweights_per_s\": {}}},\n\
              \x20 \"rollout_eps_per_s\": {},\n\
-             \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"qps\": {}}},\n\
+             \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \"qps\": {}}},\n\
              \x20 \"gemv_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
              \x20 \"gemm_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
              \x20 \"simd_lane_active\": \"{}\",\n\
@@ -363,6 +365,7 @@ impl PerfReport {
             num(self.rollout_eps_per_sec),
             self.serve_p50_us,
             self.serve_p99_us,
+            self.serve_p999_us,
             num(self.serve_qps),
             num(self.dense_gemv_gflops),
             num(self.packed_gemv_gflops),
@@ -531,7 +534,7 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
     }
     let serve_secs = t2.elapsed().as_secs_f64();
     let stats = server.latency_stats();
-    let (p50, p99) = (stats.p50_us(), stats.p99_us());
+    let (p50, p99, p999) = (stats.p50_us(), stats.p99_us(), stats.p999_us());
     server.shutdown();
 
     // --- packed vs dense GEMV ---
@@ -812,6 +815,7 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         rollout_eps_per_sec: r.episodes as f64 / rollout_secs,
         serve_p50_us: p50,
         serve_p99_us: p99,
+        serve_p999_us: p999,
         serve_qps: n_req as f64 / serve_secs,
         packed_gemv_gflops: flops / packed_secs / 1e9,
         dense_gemv_gflops: flops / dense_secs / 1e9,

@@ -1,0 +1,162 @@
+//! Action divergence vs horizon — the paper's error-accumulation claim,
+//! measured closed-loop.
+//!
+//! For every executed step of a served episode, the ℓ2 distance to the
+//! dense reference trajectory's action *at the same step index* (same
+//! seed, same scene, same observation noise stream) is accumulated into
+//! one of [`DIVERGENCE_BINS`] step-index bins. A quantized variant whose
+//! error compounds shows monotonically growing `mean_l2` across bins;
+//! a variant serving the reference model exactly shows all-zero bins —
+//! which is precisely the fleet determinism test's anchor.
+
+/// Step-index bins per horizon. Eight is enough to see the shape of the
+/// accumulation curve without drowning the JSON report.
+pub const DIVERGENCE_BINS: usize = 8;
+
+/// One rendered bin: steps in `[from, to)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DivergenceBin {
+    pub from: usize,
+    pub to: usize,
+    pub mean_l2: f64,
+    pub count: u64,
+}
+
+/// Accumulates per-step ℓ2 divergence, binned by step index over a fixed
+/// horizon. Merging is exact (sums + counts), so per-robot trackers fold
+/// into per-variant ones without approximation.
+#[derive(Clone, Debug)]
+pub struct DivergenceTracker {
+    horizon: usize,
+    sum_l2: [f64; DIVERGENCE_BINS],
+    count: [u64; DIVERGENCE_BINS],
+}
+
+impl DivergenceTracker {
+    pub fn new(horizon: usize) -> Self {
+        DivergenceTracker {
+            horizon: horizon.max(1),
+            sum_l2: [0.0; DIVERGENCE_BINS],
+            count: [0; DIVERGENCE_BINS],
+        }
+    }
+
+    fn bin_of(&self, step: usize) -> usize {
+        (step * DIVERGENCE_BINS / self.horizon).min(DIVERGENCE_BINS - 1)
+    }
+
+    /// Record one executed step: ℓ2 between the served action and the
+    /// reference action at the same step index.
+    pub fn record(&mut self, step: usize, served: &[f32], reference: &[f32]) {
+        let mut s = 0.0f64;
+        for (a, b) in served.iter().zip(reference) {
+            let d = (*a - *b) as f64;
+            s += d * d;
+        }
+        let b = self.bin_of(step);
+        self.sum_l2[b] += s.sqrt();
+        self.count[b] += 1;
+    }
+
+    /// Fold another tracker (same horizon) into this one.
+    pub fn merge(&mut self, other: &DivergenceTracker) {
+        debug_assert_eq!(self.horizon, other.horizon);
+        for i in 0..DIVERGENCE_BINS {
+            self.sum_l2[i] += other.sum_l2[i];
+            self.count[i] += other.count[i];
+        }
+    }
+
+    /// Steps recorded across all bins.
+    pub fn total_steps(&self) -> u64 {
+        self.count.iter().sum()
+    }
+
+    /// Largest per-bin mean — a quick "is anything diverging" scalar.
+    pub fn max_mean_l2(&self) -> f64 {
+        self.bins().iter().map(|b| b.mean_l2).fold(0.0, f64::max)
+    }
+
+    pub fn bins(&self) -> Vec<DivergenceBin> {
+        (0..DIVERGENCE_BINS)
+            .map(|i| {
+                let from = i * self.horizon / DIVERGENCE_BINS;
+                let to = if i + 1 == DIVERGENCE_BINS {
+                    self.horizon
+                } else {
+                    (i + 1) * self.horizon / DIVERGENCE_BINS
+                };
+                DivergenceBin {
+                    from,
+                    to,
+                    mean_l2: if self.count[i] > 0 {
+                        self.sum_l2[i] / self.count[i] as f64
+                    } else {
+                        0.0
+                    },
+                    count: self.count[i],
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_partition_the_horizon() {
+        let t = DivergenceTracker::new(64);
+        let bins = t.bins();
+        assert_eq!(bins.len(), DIVERGENCE_BINS);
+        assert_eq!(bins[0].from, 0);
+        assert_eq!(bins.last().unwrap().to, 64);
+        for w in bins.windows(2) {
+            assert_eq!(w[0].to, w[1].from);
+        }
+    }
+
+    #[test]
+    fn records_into_step_bins_and_merges_exactly() {
+        let mut a = DivergenceTracker::new(8);
+        // Step 0 (bin 0): l2 = 5 (3-4-5 triangle); step 7 (bin 7): l2 = 1.
+        a.record(0, &[3.0, 0.0], &[0.0, 4.0]);
+        a.record(7, &[1.0, 0.0], &[0.0, 0.0]);
+        let mut b = DivergenceTracker::new(8);
+        b.record(0, &[0.0, 0.0], &[0.0, 0.0]);
+        a.merge(&b);
+        let bins = a.bins();
+        assert_eq!(bins[0].count, 2);
+        assert!((bins[0].mean_l2 - 2.5).abs() < 1e-12);
+        assert_eq!(bins[7].count, 1);
+        assert!((bins[7].mean_l2 - 1.0).abs() < 1e-12);
+        assert_eq!(a.total_steps(), 3);
+        assert!((a.max_mean_l2() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn short_horizon_clamps_into_last_bin() {
+        // Horizon shorter than the bin count: every step still lands in a
+        // valid bin.
+        let mut t = DivergenceTracker::new(3);
+        for step in 0..3 {
+            t.record(step, &[1.0], &[0.0]);
+        }
+        assert_eq!(t.total_steps(), 3);
+        // Past-horizon steps (defensive) clamp instead of panicking.
+        t.record(99, &[1.0], &[0.0]);
+        assert_eq!(t.total_steps(), 4);
+    }
+
+    #[test]
+    fn identical_trajectories_are_zero() {
+        let mut t = DivergenceTracker::new(16);
+        for step in 0..16 {
+            let a = [0.25f32, -0.5, 1.0];
+            t.record(step, &a, &a);
+        }
+        assert_eq!(t.max_mean_l2(), 0.0);
+        assert_eq!(t.total_steps(), 16);
+    }
+}

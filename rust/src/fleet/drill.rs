@@ -1,0 +1,132 @@
+//! Scripted fault drills: controlled failure injection while the fleet
+//! is live, verifying graceful degradation (typed errors only — never a
+//! hang, never a panic, never a silently-dropped request).
+
+/// The three fault families the harness can inject mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Drill {
+    /// N robots synchronize their submits into one burst: the driver
+    /// parks ready-to-submit robots until the gather target is reached,
+    /// then releases them back-to-back — a queue-depth spike that must
+    /// surface as `Overloaded`/`DeadlineExceeded`, not as stalls.
+    Overload,
+    /// Traffic skews to one variant mid-run: half the robots permanently
+    /// switch their assignment to the hot variant, collapsing the
+    /// server's variant mix.
+    Hotspot,
+    /// The server loses workers mid-run (`shrink_workers`): capacity
+    /// halves, in-flight requests must still all be answered.
+    WorkerLoss,
+}
+
+impl Drill {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Drill::Overload => "overload",
+            Drill::Hotspot => "hotspot",
+            Drill::WorkerLoss => "worker-loss",
+        }
+    }
+}
+
+/// Parse a `--drill` spec: `none`, `overload`, `hotspot`, `worker-loss`,
+/// `all`, or a comma list of the named drills. `None` = unknown token.
+pub fn parse_drills(spec: &str) -> Option<Vec<Drill>> {
+    let spec = spec.trim().to_ascii_lowercase();
+    if spec.is_empty() || spec == "none" {
+        return Some(Vec::new());
+    }
+    if spec == "all" {
+        return Some(vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss]);
+    }
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let d = match tok.trim() {
+            "overload" => Drill::Overload,
+            "hotspot" => Drill::Hotspot,
+            "worker-loss" | "workerloss" | "worker_loss" => Drill::WorkerLoss,
+            _ => return None,
+        };
+        if !out.contains(&d) {
+            out.push(d);
+        }
+    }
+    Some(out)
+}
+
+/// What actually happened when the drills fired — rendered into the
+/// fleet report so a run is auditable after the fact.
+#[derive(Clone, Debug, Default)]
+pub struct DrillReport {
+    /// Overload bursts released, and the size of the largest one.
+    pub overload_bursts: u64,
+    pub max_burst_size: u64,
+    /// Robots whose assignment switched to the hot variant.
+    pub hotspot_switched: u64,
+    pub hotspot_variant: Option<String>,
+    /// Live workers observed immediately before / after the loss drill
+    /// (after = the shrink target; convergence is asserted by tests).
+    pub workers_before_loss: usize,
+    pub workers_after_loss: usize,
+}
+
+/// One drill armed at a progress trigger point.
+#[derive(Clone, Debug)]
+pub struct Scheduled {
+    pub drill: Drill,
+    /// Fires once fleet progress (responses-received or robots-done
+    /// fraction, whichever leads) crosses this fraction. Progress-based,
+    /// not time-based, so drill timing is reproducible across machines.
+    pub at_progress: f64,
+    pub fired: bool,
+}
+
+/// Spreads the requested drills across the run (a single drill fires
+/// mid-run; several fire at evenly spaced progress points).
+pub fn schedule(drills: &[Drill]) -> Vec<Scheduled> {
+    let n = drills.len();
+    drills
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| Scheduled {
+            drill: d,
+            at_progress: (i + 1) as f64 / (n + 1) as f64,
+            fired: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_specs() {
+        assert_eq!(parse_drills("none"), Some(vec![]));
+        assert_eq!(parse_drills(""), Some(vec![]));
+        assert_eq!(parse_drills("overload"), Some(vec![Drill::Overload]));
+        assert_eq!(
+            parse_drills("all"),
+            Some(vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss])
+        );
+        assert_eq!(
+            parse_drills("worker-loss,hotspot"),
+            Some(vec![Drill::WorkerLoss, Drill::Hotspot])
+        );
+        // Duplicates collapse; unknown tokens are a typed parse failure.
+        assert_eq!(parse_drills("overload,overload"), Some(vec![Drill::Overload]));
+        assert_eq!(parse_drills("chaos-monkey"), None);
+    }
+
+    #[test]
+    fn schedule_spreads_progress_points() {
+        let s = schedule(&[Drill::Overload, Drill::Hotspot, Drill::WorkerLoss]);
+        assert_eq!(s.len(), 3);
+        assert!((s[0].at_progress - 0.25).abs() < 1e-12);
+        assert!((s[1].at_progress - 0.50).abs() < 1e-12);
+        assert!((s[2].at_progress - 0.75).abs() < 1e-12);
+        let single = schedule(&[Drill::WorkerLoss]);
+        assert!((single[0].at_progress - 0.5).abs() < 1e-12);
+        assert!(schedule(&[]).is_empty());
+    }
+}

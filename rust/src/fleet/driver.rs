@@ -1,0 +1,426 @@
+//! The fleet driver: builds N seeded robots over a heterogeneous task
+//! mix, replays their dense references locally, then drives every robot
+//! against a shared [`PolicyServer`] until all episodes finish — while a
+//! drill scheduler injects scripted faults at fixed progress points.
+//!
+//! The driver is a single-threaded poll loop over robot state machines;
+//! all concurrency lives server-side. That keeps the client determinism
+//! argument trivial: robot trajectories depend only on their episode
+//! seeds and the served actions (bit-identical across batch compositions
+//! and worker counts for deterministic heads), never on poll timing.
+//! Timing only moves *latency* samples and, under deadline budgets, the
+//! shed/miss split — which is exactly what the fault drills probe.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::server::{PolicyServer, ServeError, ServeRequest};
+use crate::fleet::drill::{schedule, Drill, DrillReport};
+use crate::fleet::report::{FleetReport, FleetVariantRow};
+use crate::fleet::robot::{Phase, Robot};
+use crate::model::MiniVla;
+use crate::sim::episode::{CursorState, EpisodeCursor};
+use crate::sim::observe::ObsParams;
+use crate::sim::tasks::{libero_suite, simpler_suite, Task};
+
+/// Floor/ceiling on error backoff, and the fixed backoff for transient
+/// errors that carry no retry hint.
+const BACKOFF_MIN_US: u64 = 50;
+const BACKOFF_MAX_US: u64 = 20_000;
+const ERROR_BACKOFF_US: u64 = 500;
+/// Largest overload-drill burst (robots gathered before release).
+const OVERLOAD_BURST_MAX: usize = 64;
+/// Poll-loop idle sleep when no robot made progress.
+const IDLE_SLEEP: Duration = Duration::from_micros(100);
+
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub robots: usize,
+    /// Per-episode step cap (tasks with shorter horizons keep their own).
+    pub horizon: usize,
+    /// Variant assignment pool, round-robin over robots. The first entry
+    /// doubles as the hotspot drill's hot variant.
+    pub variants: Vec<String>,
+    pub seed: u64,
+    /// Per-request deadline budget; `Some` arms deadline triage and (if
+    /// the server's admission control is on) admission shedding.
+    pub deadline: Option<Duration>,
+    pub drills: Vec<Drill>,
+    /// Resubmits of one decode before the robot aborts as dropped.
+    pub max_retries: u32,
+    /// Registry variant replayed locally as the closed-loop reference.
+    pub reference: String,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            robots: 200,
+            horizon: 64,
+            variants: Vec::new(),
+            seed: 1,
+            deadline: None,
+            drills: Vec::new(),
+            max_retries: 64,
+            reference: "dense".to_string(),
+        }
+    }
+}
+
+/// Typed fleet-harness failures (configuration errors; serving errors
+/// are per-robot counters, never a `run_fleet` failure).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetError {
+    NoRobots,
+    NoVariants,
+    UnknownVariant(String),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::NoRobots => write!(f, "fleet needs at least one robot"),
+            FleetError::NoVariants => write!(f, "fleet needs at least one serving variant"),
+            FleetError::UnknownVariant(v) => {
+                write!(f, "variant '{v}' is not in the model registry")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// The heterogeneous episode mix: LIBERO object + spatial and the
+/// SimplerEnv-like suite (pick/place, drawers, two-stage tasks).
+pub fn fleet_task_pool() -> Vec<Task> {
+    let mut tasks = libero_suite("object");
+    tasks.extend(libero_suite("spatial"));
+    tasks.extend(simpler_suite());
+    tasks
+}
+
+/// Per-robot episode seed: decorrelated by the golden-ratio increment so
+/// neighboring robots don't share scene jitter.
+fn robot_seed(fleet_seed: u64, robot: usize) -> u64 {
+    fleet_seed.wrapping_add((robot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Replay one episode closed-loop on a local model, recording executed
+/// actions by step index — the divergence baseline.
+fn reference_trajectory(
+    model: &MiniVla,
+    task: &Task,
+    seed: u64,
+    horizon: usize,
+    obs_params: &ObsParams,
+) -> (Vec<Vec<f32>>, bool) {
+    let mut cursor = EpisodeCursor::new(task.clone(), seed, Some(horizon));
+    let mut actions: Vec<Vec<f32>> = Vec::new();
+    loop {
+        match cursor.advance(|_, a| actions.push(a.to_vec())) {
+            CursorState::Done => break,
+            CursorState::NeedsDecode => {
+                let obs = cursor.observation(model, obs_params);
+                let feat = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+                let chunk = model.decode(&feat, cursor.decode_rng());
+                cursor.push_chunk(chunk);
+            }
+        }
+    }
+    let success = cursor.outcome().map(|o| o.success).unwrap_or(false);
+    (actions, success)
+}
+
+/// Retry bookkeeping shared by submit-side and response-side failures:
+/// back off (clamped) or abort once the per-decode cap is spent.
+fn retry_or_abort(robot: &mut Robot, now: Instant, backoff_us: u64, max_retries: u32) -> Phase {
+    robot.retries_this_decode += 1;
+    robot.counters.retries += 1;
+    if robot.retries_this_decode > max_retries {
+        robot.dropped = true;
+        Phase::Done
+    } else {
+        Phase::BackOff {
+            until: now + Duration::from_micros(backoff_us.clamp(BACKOFF_MIN_US, BACKOFF_MAX_US)),
+        }
+    }
+}
+
+/// Submit the robot's pending decode. Every failure is a typed counter
+/// plus either a backoff or an abort — nothing is retried blind, nothing
+/// disappears.
+fn submit_decode(
+    robot: &mut Robot,
+    server: &PolicyServer,
+    cfg: &FleetConfig,
+    now: Instant,
+) -> Phase {
+    let obs = robot.pending_obs().expect("observation cached before submit").clone();
+    let mut req = ServeRequest::new(obs).with_variant(&robot.variant);
+    if let Some(d) = cfg.deadline {
+        req = req.with_deadline(d);
+    }
+    robot.counters.submits += 1;
+    match server.submit_async(req) {
+        Ok(handle) => Phase::Waiting(handle),
+        Err(ServeError::Overloaded { retry_after_us, .. }) => {
+            robot.counters.admission_sheds += 1;
+            // The server predicted how long past the deadline the queue
+            // runs — backing off exactly that long is the intelligent
+            // retry the satellite task asks for.
+            retry_or_abort(robot, now, retry_after_us, cfg.max_retries)
+        }
+        Err(ServeError::Stopped) | Err(ServeError::WorkerDropped) => {
+            robot.counters.errors += 1;
+            retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
+        }
+        Err(_) => {
+            // UnknownVariant / InvalidObservation / NoVariants: config
+            // errors that no retry fixes — abort loudly via the counters.
+            robot.counters.errors += 1;
+            robot.dropped = true;
+            Phase::Done
+        }
+    }
+}
+
+/// Drive the whole fleet to completion against a live server.
+pub fn run_fleet(
+    registry: &Arc<ModelRegistry>,
+    server: &PolicyServer,
+    cfg: &FleetConfig,
+    obs_params: &ObsParams,
+) -> Result<FleetReport, FleetError> {
+    if cfg.robots == 0 {
+        return Err(FleetError::NoRobots);
+    }
+    if cfg.variants.is_empty() {
+        return Err(FleetError::NoVariants);
+    }
+    for v in &cfg.variants {
+        if registry.get(v).is_none() {
+            return Err(FleetError::UnknownVariant(v.clone()));
+        }
+    }
+    let reference_model = registry
+        .get(&cfg.reference)
+        .ok_or_else(|| FleetError::UnknownVariant(cfg.reference.clone()))?;
+
+    let t_start = Instant::now();
+
+    // Build the fleet: round-robin variants over robots, tasks striped so
+    // every variant sees (close to) the same task distribution.
+    let tasks = fleet_task_pool();
+    let mut robots: Vec<Robot> = Vec::with_capacity(cfg.robots);
+    for i in 0..cfg.robots {
+        let seed = robot_seed(cfg.seed, i);
+        let variant = cfg.variants[i % cfg.variants.len()].clone();
+        let task = tasks[(i / cfg.variants.len()) % tasks.len()].clone();
+        let (ref_actions, ref_success) =
+            reference_trajectory(&reference_model, &task, seed, cfg.horizon, obs_params);
+        robots.push(Robot::new(i, variant, task, seed, cfg.horizon, ref_actions, ref_success));
+    }
+
+    // Progress-based drill triggers: responses delivered vs the
+    // upper-bound expectation (every robot runs its full horizon).
+    let chunk_len = reference_model.chunk_len().max(1);
+    let expected_responses = (cfg.robots as u64) * (cfg.horizon as u64).div_ceil(chunk_len as u64);
+    let mut scheduled = schedule(&cfg.drills);
+    let mut drill_report = DrillReport::default();
+    let mut gathering = false;
+
+    let mut latency: HashMap<String, LatencyStats> = HashMap::new();
+    let mut responses_total = 0u64;
+    let mut done_count = 0usize;
+
+    while done_count < robots.len() {
+        let mut progress = false;
+        let now = Instant::now();
+
+        for robot in robots.iter_mut() {
+            // Phase holds a ResponseHandle (not clonable), so the state
+            // transition takes ownership and writes the successor back.
+            let phase = std::mem::replace(&mut robot.phase, Phase::Done);
+            robot.phase = match phase {
+                Phase::Done => Phase::Done,
+                Phase::Gathered => Phase::Gathered,
+                Phase::Waiting(handle) => match handle.try_wait() {
+                    None => Phase::Waiting(handle),
+                    Some(Ok(rsp)) => {
+                        progress = true;
+                        responses_total += 1;
+                        robot.counters.responses_ok += 1;
+                        latency.entry(robot.variant.clone()).or_default().record(rsp.latency());
+                        robot.accept_chunk(rsp.actions);
+                        Phase::Ready
+                    }
+                    Some(Err(e)) => {
+                        progress = true;
+                        match e {
+                            ServeError::DeadlineExceeded { .. } => {
+                                robot.counters.deadline_misses += 1;
+                                retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
+                            }
+                            // Overloaded only occurs at submit; anything
+                            // else mid-flight is a transient worker-side
+                            // failure.
+                            _ => {
+                                robot.counters.errors += 1;
+                                retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
+                            }
+                        }
+                    }
+                },
+                Phase::BackOff { until } => {
+                    if now >= until {
+                        progress = true;
+                        if gathering {
+                            Phase::Gathered
+                        } else {
+                            submit_decode(robot, server, cfg, now)
+                        }
+                    } else {
+                        Phase::BackOff { until }
+                    }
+                }
+                Phase::Ready => match robot.advance() {
+                    CursorState::Done => {
+                        progress = true;
+                        Phase::Done
+                    }
+                    CursorState::NeedsDecode => {
+                        progress = true;
+                        robot.obs_for_decode(&reference_model, obs_params);
+                        if gathering {
+                            Phase::Gathered
+                        } else {
+                            submit_decode(robot, server, cfg, now)
+                        }
+                    }
+                },
+            };
+        }
+
+        done_count = robots.iter().filter(|r| r.finished()).count();
+
+        // Fire due drills.
+        let done_frac = done_count as f64 / robots.len() as f64;
+        let resp_frac = responses_total as f64 / expected_responses.max(1) as f64;
+        let prog = done_frac.max(resp_frac);
+        for s in &mut scheduled {
+            if s.fired || prog < s.at_progress {
+                continue;
+            }
+            s.fired = true;
+            match s.drill {
+                Drill::Overload => gathering = true,
+                Drill::Hotspot => {
+                    let hot = cfg.variants[0].clone();
+                    drill_report.hotspot_variant = Some(hot.clone());
+                    for r in robots.iter_mut() {
+                        if !r.finished() && r.id % 2 == 1 && r.variant != hot {
+                            r.variant = hot.clone();
+                            drill_report.hotspot_switched += 1;
+                        }
+                    }
+                }
+                Drill::WorkerLoss => {
+                    let live = server.live_workers();
+                    drill_report.workers_before_loss = live;
+                    let target = (live / 2).max(1);
+                    server.shrink_workers(target);
+                    drill_report.workers_after_loss = target;
+                }
+            }
+        }
+
+        // Release a gathered overload burst once enough robots parked
+        // (or every still-active robot is in the pen).
+        if gathering {
+            let active = robots.len() - done_count;
+            let parked: Vec<usize> = robots
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| matches!(r.phase, Phase::Gathered))
+                .map(|(i, _)| i)
+                .collect();
+            let target = active.min(OVERLOAD_BURST_MAX).max(1);
+            if !parked.is_empty() && parked.len() >= target {
+                let release_now = Instant::now();
+                for &idx in &parked {
+                    let robot = &mut robots[idx];
+                    robot.phase = submit_decode(robot, server, cfg, release_now);
+                }
+                drill_report.overload_bursts += 1;
+                drill_report.max_burst_size = drill_report.max_burst_size.max(parked.len() as u64);
+                gathering = false;
+                progress = true;
+                done_count = robots.iter().filter(|r| r.finished()).count();
+            }
+        }
+
+        if !progress && done_count < robots.len() {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+
+    // Aggregate per final variant assignment (the hotspot drill reports
+    // traffic where it actually went).
+    let mut row_order: Vec<String> = cfg.variants.clone();
+    for r in &robots {
+        if !row_order.contains(&r.variant) {
+            row_order.push(r.variant.clone());
+        }
+    }
+    let rows: Vec<FleetVariantRow> = row_order
+        .iter()
+        .map(|name| {
+            let members: Vec<&Robot> = robots.iter().filter(|r| &r.variant == name).collect();
+            FleetVariantRow::aggregate(name, &members, cfg.horizon, latency.get(name))
+        })
+        .collect();
+
+    Ok(FleetReport {
+        robots: cfg.robots,
+        horizon: cfg.horizon,
+        seed: cfg.seed,
+        reference: cfg.reference.clone(),
+        drills: cfg.drills.clone(),
+        live_workers_at_end: server.live_workers(),
+        total_responses: responses_total,
+        wall_secs: t_start.elapsed().as_secs_f64(),
+        rows,
+        drill_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_pool_is_heterogeneous() {
+        let tasks = fleet_task_pool();
+        assert!(tasks.len() >= 10);
+        let suites: std::collections::HashSet<&str> =
+            tasks.iter().map(|t| t.suite.as_str()).collect();
+        assert!(suites.len() >= 3, "{suites:?}");
+    }
+
+    #[test]
+    fn robot_seeds_decorrelate() {
+        let a = robot_seed(1, 0);
+        let b = robot_seed(1, 1);
+        assert_ne!(a, b);
+        assert_eq!(robot_seed(1, 7), robot_seed(1, 7));
+    }
+
+    #[test]
+    fn fleet_errors_render() {
+        assert!(FleetError::NoRobots.to_string().contains("robot"));
+        assert!(FleetError::UnknownVariant("x".into()).to_string().contains("'x'"));
+    }
+}

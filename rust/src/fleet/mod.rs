@@ -1,0 +1,42 @@
+//! Fleet-scale closed-loop replay harness.
+//!
+//! HBVLA's central claim is that binarization error *accumulates under
+//! long-horizon closed-loop execution* — single-episode evals and
+//! synthetic request streams never exercise that claim at serving scale.
+//! This subsystem does: a [`driver::run_fleet`] drives hundreds to
+//! thousands of concurrent simulated robots, each owning a seeded
+//! [`crate::sim::episode::EpisodeCursor`] over a heterogeneous task mix,
+//! stepping its environment locally and submitting observations to a
+//! shared [`crate::coordinator::server::PolicyServer`] with a per-robot
+//! variant assignment and deadline budget.
+//!
+//! Per variant, the harness tracks:
+//! - **success-rate retention** vs a locally-replayed dense reference of
+//!   the same seeds,
+//! - **action divergence vs horizon** — per-step ℓ2 between the served
+//!   trajectory and the dense closed-loop trajectory, binned by step
+//!   index ([`divergence`]),
+//! - shed / deadline-miss / drop rates and client-observed latency
+//!   percentiles (p50/p99/p99.9),
+//!
+//! emitted as a `fleet` section merged into the `hbvla-bench-v1` JSON
+//! report ([`report`]). Scripted **fault drills** ([`drill`]) exercise
+//! overload bursts, variant hot-spots and worker loss; the contract is
+//! graceful degradation — no hangs, typed errors only.
+//!
+//! Determinism: with the chunk action head, served decodes consume no
+//! server-side randomness and batched execution is bit-identical to
+//! sequential, so a fixed fleet seed reproduces identical per-robot
+//! trajectories (and fleet report counters) across worker counts.
+
+pub mod divergence;
+pub mod drill;
+pub mod driver;
+pub mod report;
+pub mod robot;
+
+pub use divergence::{DivergenceBin, DivergenceTracker, DIVERGENCE_BINS};
+pub use drill::{parse_drills, Drill, DrillReport};
+pub use driver::{run_fleet, FleetConfig, FleetError};
+pub use report::{merge_fleet_json, FleetReport, FleetVariantRow};
+pub use robot::{Fnv64, Robot, RobotCounters};

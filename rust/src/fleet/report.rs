@@ -1,0 +1,349 @@
+//! Fleet report: per-variant aggregation, human-readable rendering, and
+//! the machine-readable `fleet` section merged into the `hbvla-bench-v1`
+//! JSON report.
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::fleet::divergence::{DivergenceBin, DivergenceTracker};
+use crate::fleet::drill::{Drill, DrillReport};
+use crate::fleet::robot::{Fnv64, Robot};
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+/// One variant's fleet-wide outcome.
+#[derive(Clone, Debug)]
+pub struct FleetVariantRow {
+    pub variant: String,
+    pub robots: usize,
+    pub successes: u64,
+    /// Successes of the dense reference replays for the SAME robots
+    /// (same seeds) — the retention denominator.
+    pub reference_successes: u64,
+    /// `successes / reference_successes` (1.0 when the reference also
+    /// failed everywhere: no retention to lose).
+    pub success_retention: f64,
+    pub submits: u64,
+    pub responses_ok: u64,
+    pub retries: u64,
+    pub admission_sheds: u64,
+    pub deadline_misses: u64,
+    pub errors: u64,
+    /// Robots that aborted (retry cap / non-retryable error).
+    pub dropped: u64,
+    pub shed_rate: f64,
+    pub miss_rate: f64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    /// ℓ2-vs-dense-reference by step-index bin (error accumulation).
+    pub divergence: Vec<DivergenceBin>,
+    pub max_divergence: f64,
+    /// Order-independent variant digest: FNV over `(robot_id, robot
+    /// trajectory digest)` in robot-id order.
+    pub digest: u64,
+}
+
+impl FleetVariantRow {
+    /// Fold a variant's robots into one row. `latency` is the
+    /// driver-side client-observed stats for this variant (absent when
+    /// no response ever landed).
+    pub fn aggregate(
+        variant: &str,
+        members: &[&Robot],
+        horizon: usize,
+        latency: Option<&LatencyStats>,
+    ) -> Self {
+        let mut successes = 0u64;
+        let mut reference_successes = 0u64;
+        let mut submits = 0u64;
+        let mut responses_ok = 0u64;
+        let mut retries = 0u64;
+        let mut admission_sheds = 0u64;
+        let mut deadline_misses = 0u64;
+        let mut errors = 0u64;
+        let mut dropped = 0u64;
+        let mut div = DivergenceTracker::new(horizon);
+        let mut digest = Fnv64::new();
+        // Robot-id order makes the digest independent of poll order.
+        let mut ordered: Vec<&&Robot> = members.iter().collect();
+        ordered.sort_by_key(|r| r.id);
+        for r in ordered {
+            successes += r.success() as u64;
+            reference_successes += r.reference_success as u64;
+            submits += r.counters.submits;
+            responses_ok += r.counters.responses_ok;
+            retries += r.counters.retries;
+            admission_sheds += r.counters.admission_sheds;
+            deadline_misses += r.counters.deadline_misses;
+            errors += r.counters.errors;
+            dropped += r.dropped as u64;
+            div.merge(r.divergence());
+            digest.update_u64(r.id as u64);
+            digest.update_u64(r.trajectory_digest());
+        }
+        let rate = |n: u64| if submits > 0 { n as f64 / submits as f64 } else { 0.0 };
+        FleetVariantRow {
+            variant: variant.to_string(),
+            robots: members.len(),
+            successes,
+            reference_successes,
+            success_retention: if reference_successes > 0 {
+                successes as f64 / reference_successes as f64
+            } else {
+                1.0
+            },
+            submits,
+            responses_ok,
+            retries,
+            admission_sheds,
+            deadline_misses,
+            errors,
+            dropped,
+            shed_rate: rate(admission_sheds),
+            miss_rate: rate(deadline_misses),
+            mean_us: latency.map(|l| l.mean_us()).unwrap_or(0.0),
+            p50_us: latency.map(|l| l.p50_us()).unwrap_or(0),
+            p99_us: latency.map(|l| l.p99_us()).unwrap_or(0),
+            p999_us: latency.map(|l| l.p999_us()).unwrap_or(0),
+            divergence: div.bins(),
+            max_divergence: div.max_mean_l2(),
+            digest: digest.digest(),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let bins: Vec<String> = self
+            .divergence
+            .iter()
+            .map(|b| {
+                format!(
+                    "{{\"from\": {}, \"to\": {}, \"mean_l2\": {}, \"count\": {}}}",
+                    b.from,
+                    b.to,
+                    num(b.mean_l2),
+                    b.count
+                )
+            })
+            .collect();
+        format!(
+            "{{\"variant\": \"{}\", \"robots\": {}, \"successes\": {}, \
+             \"reference_successes\": {}, \"success_retention\": {}, \
+             \"requests\": {}, \"responses_ok\": {}, \"retries\": {}, \
+             \"admission_sheds\": {}, \"deadline_misses\": {}, \"errors\": {}, \
+             \"dropped\": {}, \"shed_rate\": {}, \"miss_rate\": {}, \
+             \"latency_us\": {{\"mean\": {}, \"p50\": {}, \"p99\": {}, \"p999\": {}}}, \
+             \"max_divergence\": {}, \"divergence\": [{}], \"digest\": \"{:016x}\"}}",
+            self.variant,
+            self.robots,
+            self.successes,
+            self.reference_successes,
+            num(self.success_retention),
+            self.submits,
+            self.responses_ok,
+            self.retries,
+            self.admission_sheds,
+            self.deadline_misses,
+            self.errors,
+            self.dropped,
+            num(self.shed_rate),
+            num(self.miss_rate),
+            num(self.mean_us),
+            self.p50_us,
+            self.p99_us,
+            self.p999_us,
+            num(self.max_divergence),
+            bins.join(", "),
+            self.digest
+        )
+    }
+}
+
+/// The whole run, one row per (final) variant assignment.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub robots: usize,
+    pub horizon: usize,
+    pub seed: u64,
+    pub reference: String,
+    pub drills: Vec<Drill>,
+    pub live_workers_at_end: usize,
+    pub total_responses: u64,
+    pub wall_secs: f64,
+    pub rows: Vec<FleetVariantRow>,
+    pub drill_report: DrillReport,
+}
+
+impl FleetReport {
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let drills: Vec<&str> = self.drills.iter().map(|d| d.label()).collect();
+        out.push_str(&format!(
+            "fleet: {} robots, horizon {}, seed {}, reference {}, drills [{}], {:.1}s, {} workers live, {} responses\n",
+            self.robots,
+            self.horizon,
+            self.seed,
+            self.reference,
+            drills.join(","),
+            self.wall_secs,
+            self.live_workers_at_end,
+            self.total_responses
+        ));
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>5} {:>5} {:>6} {:>7} {:>7} {:>6} {:>5} {:>5} {:>4} {:>5} {:>7} {:>7} {:>8} {:>9}\n",
+            "variant", "robots", "succ", "ref", "reten", "reqs", "ok", "retry", "shed", "miss",
+            "err", "drop", "p50us", "p99us", "p999us", "max_div"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<18} {:>6} {:>5} {:>5} {:>6.3} {:>7} {:>7} {:>6} {:>5} {:>5} {:>4} {:>5} {:>7} {:>7} {:>8} {:>9.4}\n",
+                r.variant,
+                r.robots,
+                r.successes,
+                r.reference_successes,
+                r.success_retention,
+                r.submits,
+                r.responses_ok,
+                r.retries,
+                r.admission_sheds,
+                r.deadline_misses,
+                r.errors,
+                r.dropped,
+                r.p50_us,
+                r.p99_us,
+                r.p999_us,
+                r.max_divergence
+            ));
+            let curve: Vec<String> = r
+                .divergence
+                .iter()
+                .map(|b| format!("[{}-{}) {:.4}", b.from, b.to, b.mean_l2))
+                .collect();
+            out.push_str(&format!("  divergence-vs-horizon: {}\n", curve.join("  ")));
+        }
+        let d = &self.drill_report;
+        if !self.drills.is_empty() {
+            out.push_str(&format!(
+                "drills: overload bursts={} (max {}), hotspot switched={}{}, workers {} -> {}\n",
+                d.overload_bursts,
+                d.max_burst_size,
+                d.hotspot_switched,
+                d.hotspot_variant.as_deref().map(|v| format!(" to {v}")).unwrap_or_default(),
+                d.workers_before_loss,
+                d.workers_after_loss
+            ));
+        }
+        out
+    }
+
+    /// The `fleet` JSON object (schema `hbvla-fleet-v1`) — standalone or
+    /// merged into a bench report via [`merge_fleet_json`].
+    pub fn to_json(&self) -> String {
+        let drills: Vec<String> =
+            self.drills.iter().map(|d| format!("\"{}\"", d.label())).collect();
+        let rows: Vec<String> = self.rows.iter().map(|r| r.to_json()).collect();
+        let d = &self.drill_report;
+        format!(
+            "{{\"schema\": \"hbvla-fleet-v1\", \"robots\": {}, \"horizon\": {}, \
+             \"seed\": {}, \"reference\": \"{}\", \"drills\": [{}], \
+             \"live_workers_at_end\": {}, \"total_responses\": {}, \"wall_secs\": {}, \
+             \"variants\": [{}], \
+             \"drill_report\": {{\"overload_bursts\": {}, \"max_burst_size\": {}, \
+             \"hotspot_switched\": {}, \"hotspot_variant\": {}, \
+             \"workers_before_loss\": {}, \"workers_after_loss\": {}}}}}",
+            self.robots,
+            self.horizon,
+            self.seed,
+            self.reference,
+            drills.join(", "),
+            self.live_workers_at_end,
+            self.total_responses,
+            num(self.wall_secs),
+            rows.join(", "),
+            d.overload_bursts,
+            d.max_burst_size,
+            d.hotspot_switched,
+            d.hotspot_variant
+                .as_deref()
+                .map_or_else(|| "null".to_string(), |v| format!("\"{v}\"")),
+            d.workers_before_loss,
+            d.workers_after_loss
+        )
+    }
+}
+
+/// Merge a fleet JSON object into an `hbvla-bench-v1` report string as a
+/// top-level `"fleet"` key (replacing any previous fleet section). The
+/// bench report is the hand-rolled writer's output — last key, two-space
+/// indent — so this is deliberately dumb string surgery, not a parser.
+pub fn merge_fleet_json(bench: &str, fleet_obj: &str) -> String {
+    let trimmed = bench.trim_end();
+    let Some(body) = trimmed.strip_suffix('}') else {
+        // Not a JSON object at all: emit a standalone wrapper.
+        return format!("{{\n  \"fleet\": {fleet_obj}\n}}\n");
+    };
+    // Drop a previous fleet section; it is always the key we appended
+    // last, so truncating at its comma removes exactly that section.
+    let body = match body.find(",\n  \"fleet\":") {
+        Some(i) => &body[..i],
+        None => body,
+    };
+    let body = body.trim_end();
+    format!("{body},\n  \"fleet\": {fleet_obj}\n}}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_appends_fleet_as_last_key() {
+        let bench = "{\n  \"schema\": \"hbvla-bench-v1\",\n  \"pr\": 7,\n  \"act_scale\": [1]\n}\n";
+        let merged = merge_fleet_json(bench, "{\"schema\": \"hbvla-fleet-v1\", \"robots\": 4}");
+        assert!(merged.contains("\"schema\": \"hbvla-bench-v1\""));
+        assert!(merged.ends_with("}\n"));
+        assert!(merged.contains(",\n  \"fleet\": {\"schema\": \"hbvla-fleet-v1\", \"robots\": 4}\n}"));
+        // Re-merging replaces, never duplicates.
+        let again = merge_fleet_json(&merged, "{\"schema\": \"hbvla-fleet-v1\", \"robots\": 8}");
+        assert_eq!(again.matches("\"fleet\":").count(), 1);
+        assert!(again.contains("\"robots\": 8"));
+        assert!(!again.contains("\"robots\": 4"));
+        assert!(again.contains("\"act_scale\": [1]"));
+    }
+
+    #[test]
+    fn merge_tolerates_non_json_input() {
+        let out = merge_fleet_json("not json", "{\"robots\": 1}");
+        assert!(out.contains("\"fleet\": {\"robots\": 1}"));
+        assert!(out.starts_with('{') && out.ends_with("}\n"));
+    }
+
+    #[test]
+    fn variant_row_digest_is_poll_order_independent() {
+        use crate::sim::tasks::libero_suite;
+        let task = &libero_suite("object")[0];
+        let mk = |id: usize| {
+            let mut r = Robot::new(id, "dense".into(), task.clone(), 7, 16, Vec::new(), true);
+            // Execute a few steps locally so the digest is non-trivial.
+            r.accept_chunk(vec![vec![0.1; 7]; 4]);
+            r.advance();
+            r
+        };
+        let (a, b) = (mk(0), mk(1));
+        let fwd = FleetVariantRow::aggregate("dense", &[&a, &b], 16, None);
+        let rev = FleetVariantRow::aggregate("dense", &[&b, &a], 16, None);
+        assert_eq!(fwd.digest, rev.digest);
+        assert_eq!(fwd.robots, 2);
+        // Zero reference successes -> retention defined as 1.0.
+        let c = Robot::new(2, "dense".into(), task.clone(), 8, 16, Vec::new(), false);
+        let row = FleetVariantRow::aggregate("dense", &[&c], 16, None);
+        assert_eq!(row.reference_successes, 0);
+        assert_eq!(row.success_retention, 1.0);
+    }
+}

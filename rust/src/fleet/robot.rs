@@ -1,0 +1,242 @@
+//! One simulated robot: a seeded closed-loop episode, a serving variant
+//! assignment, and the bookkeeping (digest, divergence, typed-error
+//! counters) the fleet report aggregates.
+
+use std::time::Instant;
+
+use crate::coordinator::server::ResponseHandle;
+use crate::fleet::divergence::DivergenceTracker;
+use crate::model::MiniVla;
+use crate::sim::episode::{CursorState, EpisodeCursor, EpisodeResult};
+use crate::sim::observe::{Observation, ObsParams};
+use crate::sim::tasks::Task;
+
+/// FNV-1a 64-bit over executed-action f32 bit patterns: a trajectory
+/// identity cheap enough to compute per step and stable across platforms
+/// (bit patterns, not formatted floats).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn update_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn update_f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.update_u64(x.to_bits() as u64);
+        }
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Where a robot is in its submit/serve cycle.
+pub enum Phase {
+    /// May advance its episode; submits when the queue runs dry.
+    Ready,
+    /// Parked by the overload drill, observation cached, submit withheld.
+    Gathered,
+    /// A request is in flight.
+    Waiting(ResponseHandle),
+    /// Backing off after a typed serving error; resubmits at `until`.
+    BackOff { until: Instant },
+    /// Episode over (outcome recorded) or aborted (dropped counted).
+    Done,
+}
+
+/// Typed-error accounting. The accounting invariant the worker-loss
+/// drill test pins: every submit attempt is either answered OK or lands
+/// in exactly one error counter —
+/// `submits == responses_ok + admission_sheds + deadline_misses + errors`
+/// once the fleet drains (nothing in flight, nothing silent).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobotCounters {
+    /// Submit attempts (including ones shed at admission).
+    pub submits: u64,
+    /// Served responses.
+    pub responses_ok: u64,
+    /// Shed at submit with `Overloaded`.
+    pub admission_sheds: u64,
+    /// Failed at dispatch with `DeadlineExceeded`.
+    pub deadline_misses: u64,
+    /// Every other typed error (`Stopped`, `WorkerDropped`, …).
+    pub errors: u64,
+    /// Resubmits of the same decode (after shed/miss/error).
+    pub retries: u64,
+}
+
+/// A fleet robot: episode cursor + serving assignment + stats.
+pub struct Robot {
+    pub id: usize,
+    /// Current serving assignment (the hotspot drill rewrites this).
+    pub variant: String,
+    pub phase: Phase,
+    cursor: EpisodeCursor,
+    /// The pending decode's observation. Built exactly once per decode
+    /// and REUSED on every retry — rebuilding would consume the episode
+    /// rng again and silently fork the trajectory off its seed.
+    pending_obs: Option<Observation>,
+    /// Dense closed-loop reference of the same seed: executed actions by
+    /// step index, and whether the reference episode succeeded.
+    reference_actions: Vec<Vec<f32>>,
+    pub reference_success: bool,
+    pub counters: RobotCounters,
+    /// Consecutive failures of the current decode (resets on success).
+    pub retries_this_decode: u32,
+    /// True if the episode was aborted (retry cap / non-retryable error).
+    pub dropped: bool,
+    digest: Fnv64,
+    divergence: DivergenceTracker,
+    outcome: Option<EpisodeResult>,
+}
+
+impl Robot {
+    pub fn new(
+        id: usize,
+        variant: String,
+        task: Task,
+        seed: u64,
+        horizon: usize,
+        reference_actions: Vec<Vec<f32>>,
+        reference_success: bool,
+    ) -> Self {
+        Robot {
+            id,
+            variant,
+            phase: Phase::Ready,
+            cursor: EpisodeCursor::new(task, seed, Some(horizon)),
+            pending_obs: None,
+            reference_actions,
+            reference_success,
+            counters: RobotCounters::default(),
+            retries_this_decode: 0,
+            dropped: false,
+            digest: Fnv64::new(),
+            divergence: DivergenceTracker::new(horizon),
+            outcome: None,
+        }
+    }
+
+    /// Execute queued actions, folding each into the trajectory digest
+    /// and the divergence-vs-reference bins.
+    pub fn advance(&mut self) -> CursorState {
+        let Robot { cursor, reference_actions, digest, divergence, .. } = self;
+        let state = cursor.advance(|step, action| {
+            digest.update_f32s(action);
+            if let Some(reference) = reference_actions.get(step) {
+                divergence.record(step, action, reference);
+            }
+        });
+        if state == CursorState::Done {
+            self.outcome = cursor.outcome();
+        }
+        state
+    }
+
+    /// The cached observation for the pending decode, building it (one
+    /// rng consumption) only if absent.
+    pub fn obs_for_decode(&mut self, model: &MiniVla, params: &ObsParams) -> &Observation {
+        if self.pending_obs.is_none() {
+            self.pending_obs = Some(self.cursor.observation(model, params));
+        }
+        self.pending_obs.as_ref().expect("just set")
+    }
+
+    /// The cached pending observation, if a decode is outstanding.
+    pub fn pending_obs(&self) -> Option<&Observation> {
+        self.pending_obs.as_ref()
+    }
+
+    /// A served chunk arrived: feed it to the episode and clear the
+    /// pending decode.
+    pub fn accept_chunk(&mut self, actions: Vec<Vec<f32>>) {
+        self.cursor.push_chunk(actions);
+        self.pending_obs = None;
+        self.retries_this_decode = 0;
+    }
+
+    /// Abort the episode (retry cap exhausted or non-retryable error):
+    /// counts as dropped, never as a success.
+    pub fn abort(&mut self) {
+        self.dropped = true;
+        self.phase = Phase::Done;
+    }
+
+    pub fn finished(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    pub fn success(&self) -> bool {
+        !self.dropped && self.outcome.as_ref().map(|o| o.success).unwrap_or(false)
+    }
+
+    pub fn steps_executed(&self) -> usize {
+        self.cursor.step_index()
+    }
+
+    pub fn task_name(&self) -> &str {
+        &self.cursor.task().name
+    }
+
+    pub fn trajectory_digest(&self) -> u64 {
+        self.digest.digest()
+    }
+
+    pub fn divergence(&self) -> &DivergenceTracker {
+        &self.divergence
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_order_sensitive_and_stable() {
+        let mut a = Fnv64::new();
+        a.update_f32s(&[1.0, 2.0]);
+        let mut b = Fnv64::new();
+        b.update_f32s(&[2.0, 1.0]);
+        assert_ne!(a.digest(), b.digest());
+        let mut c = Fnv64::new();
+        c.update_f32s(&[1.0, 2.0]);
+        assert_eq!(a.digest(), c.digest());
+        // ±0.0 have different bit patterns — digests must see that.
+        let mut p = Fnv64::new();
+        p.update_f32s(&[0.0]);
+        let mut n = Fnv64::new();
+        n.update_f32s(&[-0.0]);
+        assert_ne!(p.digest(), n.digest());
+    }
+
+    #[test]
+    fn fnv_matches_reference_vector() {
+        // FNV-1a 64 of the bytes of 0u64 (eight 0x00 bytes), from the
+        // canonical offset basis and prime.
+        let mut h = Fnv64::new();
+        h.update_u64(0);
+        let mut expect = 0xcbf2_9ce4_8422_2325u64;
+        for _ in 0..8 {
+            expect ^= 0;
+            expect = expect.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        assert_eq!(h.digest(), expect);
+    }
+}

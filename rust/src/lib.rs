@@ -30,6 +30,7 @@
 pub mod calib;
 pub mod coordinator;
 pub mod eval;
+pub mod fleet;
 pub mod haar;
 pub mod methods;
 pub mod model;

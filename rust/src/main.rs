@@ -8,6 +8,7 @@
 //! hbvla quantize --method hbvla                      # PTQ report
 //! hbvla perf                                         # §Perf measurements
 //! hbvla serve                                        # serving-router demo
+//! hbvla fleet                                        # fleet replay harness
 //! ```
 //!
 //! Budget flags: `--episodes N` (per task, default 50), `--demos N`
@@ -28,6 +29,13 @@
 //! with zero residual planes), and the INT8-activation twins
 //! (quantize → register → serve) and routes every request to the chosen
 //! one.
+//!
+//! `fleet` drives N simulated robots closed-loop against the policy
+//! server (`--robots N`, `--horizon N`, `--variants a,b,c`, `--reference
+//! NAME`, `--deadline-us U`, `--drill none|overload|hotspot|worker-loss|
+//! all`), tracking per-variant success retention, divergence-vs-horizon
+//! and shed/miss/latency stats; `--json PATH` merges the `fleet` section
+//! into the hbvla-bench-v1 report at PATH.
 
 use hbvla::eval::tables::EvalBudget;
 use hbvla::report::Table;
@@ -50,6 +58,64 @@ fn emit(tables: &[Table], md: bool) {
             println!("{}", t.render());
         }
     }
+}
+
+/// Register the standard serving-variant family on a registry: the dense
+/// checkpoint, the rtn/hbvla packed commits with their W1A8 twins, and
+/// the transform-exact HBVLA commit (`hbvla-exact`). Shared by `serve`
+/// and `fleet` so both subcommands expose the same variant menu.
+fn register_standard_variants(
+    registry: &std::sync::Arc<hbvla::coordinator::ModelRegistry>,
+    tb: &hbvla::eval::Testbed,
+    threads: usize,
+) {
+    use std::sync::Arc;
+    registry.register("dense", Arc::new(tb.model.clone())).expect("register dense");
+    for (variant, method_name) in [("rtn-packed", "rtn"), ("hbvla-packed", "hbvla")] {
+        let method = hbvla::methods::by_name(method_name).unwrap();
+        let rep = hbvla::coordinator::quantize_into_registry(
+            registry,
+            variant,
+            &tb.model,
+            &tb.calib,
+            method.as_ref(),
+            &hbvla::eval::paper_components(),
+            threads,
+        )
+        .expect("register variant");
+        println!(
+            "registered {variant:<13} {} packed layers, ×{:.1} smaller, \
+             deploy rel err {:.4}",
+            rep.packed_layers,
+            rep.realized_compression(),
+            rep.mean_deploy_rel_err
+        );
+        // W1A8 twin: same packed weights, Int8 activations.
+        let a8 =
+            hbvla::coordinator::register_a8_variant(registry, variant).expect("register a8 twin");
+        println!("registered {a8:<16} (W1A8: int8 activations on the same packed weights)");
+    }
+    // Transform-domain exact twin: serve the committed Haar-domain
+    // bitplanes directly (y = C·haar(Pᵀx)), zero residual planes.
+    let method = hbvla::methods::by_name("hbvla").unwrap();
+    let rep = hbvla::coordinator::quantize_exact_into_registry(
+        registry,
+        "hbvla-exact",
+        &tb.model,
+        &tb.calib,
+        method.as_ref(),
+        &hbvla::eval::paper_components(),
+        threads,
+    )
+    .expect("register exact variant");
+    println!(
+        "registered {:<13} {} transform-exact layers, ×{:.1} smaller, \
+         deploy rel err {:.4} (zero residual planes)",
+        "hbvla-exact",
+        rep.transform_layers,
+        rep.realized_compression(),
+        rep.mean_deploy_rel_err
+    );
 }
 
 fn main() {
@@ -126,54 +192,7 @@ fn main() {
             // checkpoint plus each PTQ commit; requests choose per-variant
             // (`--variant`, default hbvla-packed — the packed 1-bit path).
             let registry = Arc::new(ModelRegistry::new());
-            registry.register("dense", Arc::new(tb.model.clone())).expect("register dense");
-            for (variant, method_name) in [("rtn-packed", "rtn"), ("hbvla-packed", "hbvla")] {
-                let method = hbvla::methods::by_name(method_name).unwrap();
-                let rep = hbvla::coordinator::quantize_into_registry(
-                    &registry,
-                    variant,
-                    &tb.model,
-                    &tb.calib,
-                    method.as_ref(),
-                    &hbvla::eval::paper_components(),
-                    budget.threads,
-                )
-                .expect("register variant");
-                println!(
-                    "registered {variant:<13} {} packed layers, ×{:.1} smaller, \
-                     deploy rel err {:.4}",
-                    rep.packed_layers,
-                    rep.realized_compression(),
-                    rep.mean_deploy_rel_err
-                );
-                // W1A8 twin: same packed weights, Int8 activations.
-                let a8 = hbvla::coordinator::register_a8_variant(&registry, variant)
-                    .expect("register a8 twin");
-                println!("registered {a8:<16} (W1A8: int8 activations on the same packed weights)");
-            }
-            // Transform-domain exact twin: serve the committed Haar-domain
-            // bitplanes directly (y = C·haar(Pᵀx)), zero residual planes.
-            {
-                let method = hbvla::methods::by_name("hbvla").unwrap();
-                let rep = hbvla::coordinator::quantize_exact_into_registry(
-                    &registry,
-                    "hbvla-exact",
-                    &tb.model,
-                    &tb.calib,
-                    method.as_ref(),
-                    &hbvla::eval::paper_components(),
-                    budget.threads,
-                )
-                .expect("register exact variant");
-                println!(
-                    "registered {:<13} {} transform-exact layers, ×{:.1} smaller, \
-                     deploy rel err {:.4} (zero residual planes)",
-                    "hbvla-exact",
-                    rep.transform_layers,
-                    rep.realized_compression(),
-                    rep.mean_deploy_rel_err
-                );
-            }
+            register_standard_variants(&registry, &tb, budget.threads);
             let cfg = ServeConfig {
                 workers: args.usize_or("workers", 2),
                 max_batch: args.usize_or("max-batch", 8),
@@ -434,6 +453,87 @@ fn main() {
             println!("mean batch size: {:.2}", server.mean_batch_size());
             server.shutdown();
         }
+        Some("fleet") => {
+            use hbvla::coordinator::{AdmissionControl, ModelRegistry, PolicyServer, ServeConfig};
+            use hbvla::fleet::{merge_fleet_json, parse_drills, run_fleet, FleetConfig};
+            use std::sync::Arc;
+            let smoke = args.flag("smoke");
+            let tb = hbvla::eval::build_testbed(
+                hbvla::model::HeadKind::Chunk,
+                hbvla::sim::tasks::libero_suite("object"),
+                budget.n_demos.min(64),
+                budget.seed,
+            );
+            let registry = Arc::new(ModelRegistry::new());
+            register_standard_variants(&registry, &tb, budget.threads);
+            let drills = parse_drills(args.get_or("drill", "none")).unwrap_or_else(|| {
+                eprintln!("--drill expects none|overload|hotspot|worker-loss|all or a comma list");
+                std::process::exit(2);
+            });
+            let deadline_us = args.u64_or("deadline-us", 0);
+            let fleet_cfg = FleetConfig {
+                robots: args.usize_or("robots", if smoke { 16 } else { 200 }),
+                horizon: args.usize_or("horizon", if smoke { 12 } else { 64 }),
+                variants: args.list_or("variants", "dense,hbvla-packed,hbvla-packed-a8"),
+                seed: budget.seed,
+                deadline: if deadline_us > 0 {
+                    Some(std::time::Duration::from_micros(deadline_us))
+                } else {
+                    None
+                },
+                drills,
+                reference: args.get_or("reference", "dense").to_string(),
+                ..Default::default()
+            };
+            let serve_cfg = ServeConfig {
+                workers: args.usize_or("workers", 4),
+                max_batch: args.usize_or("max-batch", 8),
+                max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)),
+                // Deadline budgets arm admission control: the fleet then
+                // exercises the shed + retry_after_us path for real.
+                admission: if deadline_us > 0 {
+                    AdmissionControl::DeadlineAware { min_samples: 16 }
+                } else {
+                    AdmissionControl::Off
+                },
+            };
+            println!(
+                "fleet: {} robots, horizon {}, variants [{}], {} workers, drills [{}]",
+                fleet_cfg.robots,
+                fleet_cfg.horizon,
+                fleet_cfg.variants.join(","),
+                serve_cfg.workers,
+                fleet_cfg.drills.iter().map(|d| d.label()).collect::<Vec<_>>().join(",")
+            );
+            let server = PolicyServer::start(Arc::clone(&registry), serve_cfg);
+            let report = run_fleet(
+                &registry,
+                &server,
+                &fleet_cfg,
+                &hbvla::sim::observe::ObsParams::clean(),
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("fleet failed: {e}");
+                std::process::exit(2);
+            });
+            server.shutdown();
+            println!("{}", report.render());
+            // `--json PATH`: merge the fleet section into an existing
+            // hbvla-bench-v1 report at PATH (the perf baseline), or write
+            // a standalone wrapper if PATH doesn't hold one.
+            if let Some(path) = args.get("json") {
+                let fleet_obj = report.to_json();
+                let merged = match std::fs::read_to_string(path) {
+                    Ok(bench) if bench.contains("\"schema\": \"hbvla-bench-v1\"") => {
+                        merge_fleet_json(&bench, &fleet_obj)
+                    }
+                    _ => format!("{{\n  \"fleet\": {fleet_obj}\n}}\n"),
+                };
+                std::fs::write(path, merged)
+                    .unwrap_or_else(|e| panic!("write fleet json {path}: {e}"));
+                println!("wrote fleet report into {path}");
+            }
+        }
         Some("all") => {
             emit(&hbvla::eval::tables::table1_simpler(&budget), md);
             emit(&hbvla::eval::tables::table2_libero(&budget), md);
@@ -444,14 +544,18 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|all> \
+                "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|\
+                 fleet|all> \
                  [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
                  perf flags: [--json PATH] (machine-readable BENCH baseline)\n\
                  serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
                  rtn-packed-a8|hbvla-packed-a8] \
                  [--act-precision f32|int8] [--act-scale per-token|static] [--act-clip max|p999] \
                  [--attn-precision f32|int8] [--workers N] \
-                 [--max-batch N] [--max-wait-us U] [--requests N]"
+                 [--max-batch N] [--max-wait-us U] [--requests N]\n\
+                 fleet flags: [--robots N] [--horizon N] [--variants a,b,c] [--reference NAME] \
+                 [--deadline-us U] [--drill none|overload|hotspot|worker-loss|all|LIST] \
+                 [--workers N] [--max-batch N] [--max-wait-us U] [--json PATH]"
             );
             std::process::exit(2);
         }

@@ -1,10 +1,19 @@
 //! Closed-loop episode runners: policy evaluation and expert
 //! demonstration collection.
+//!
+//! The closed loop itself lives in [`EpisodeCursor`], an incremental
+//! state machine that separates *environment stepping* (local, cheap)
+//! from *policy decoding* (wherever the caller gets actions from: an
+//! in-process model here, a remote [`crate::coordinator::server::
+//! PolicyServer`] in the fleet harness). [`run_policy_episode`] is the
+//! cursor driven by a local model — byte-for-byte the same rng
+//! consumption order as always, so episode outcomes are unchanged.
 
 use crate::model::layers::Hook;
 use crate::model::MiniVla;
 use crate::sim::expert::expert_action;
 use crate::sim::observe::{observe, Observation, ObsParams};
+use crate::sim::scene::Scene;
 use crate::sim::tasks::Task;
 use crate::util::rng::Rng;
 
@@ -12,6 +21,118 @@ use crate::util::rng::Rng;
 pub struct EpisodeResult {
     pub success: bool,
     pub steps: usize,
+}
+
+/// What an [`EpisodeCursor`] needs next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CursorState {
+    /// The action queue is empty: build an observation with
+    /// [`EpisodeCursor::observation`], decode a chunk (locally or via a
+    /// server), hand it back through [`EpisodeCursor::push_chunk`].
+    NeedsDecode,
+    /// The episode ended; [`EpisodeCursor::outcome`] is `Some`.
+    Done,
+}
+
+/// Incremental closed-loop episode: owns the scene, the per-episode rng
+/// stream, and the pending action queue, but *not* the policy — the
+/// caller supplies decoded chunks, so the same state machine drives a
+/// local model, a serving router, or a replay. The rng consumption order
+/// (instantiate → per-decode observe → per-decode stochastic head) is
+/// identical to the classic inline loop, which is what makes a served
+/// episode bit-comparable to a local reference run of the same seed.
+#[derive(Clone, Debug)]
+pub struct EpisodeCursor {
+    task: Task,
+    scene: Scene,
+    rng: Rng,
+    /// Pending actions, reversed so `pop` yields them in decode order.
+    queue: Vec<Vec<f32>>,
+    step: usize,
+    /// Effective horizon (the task's, optionally capped by the caller).
+    horizon: usize,
+    outcome: Option<EpisodeResult>,
+}
+
+impl EpisodeCursor {
+    /// Start an episode. `horizon_cap` truncates long tasks (the fleet
+    /// harness bounds wall time with it); `None` runs the task's own
+    /// horizon, matching [`run_policy_episode`] exactly.
+    pub fn new(task: Task, seed: u64, horizon_cap: Option<usize>) -> Self {
+        let mut rng = Rng::with_stream(seed, 0xE9);
+        let scene = task.instantiate(&mut rng);
+        let horizon = horizon_cap.map_or(task.horizon, |h| h.min(task.horizon)).max(1);
+        EpisodeCursor { task, scene, rng, queue: Vec::new(), step: 0, horizon, outcome: None }
+    }
+
+    /// Execute queued actions until the episode ends or the queue runs
+    /// dry. `on_action` sees every *executed* action with its step index
+    /// (the divergence tracker hangs off this).
+    pub fn advance(&mut self, mut on_action: impl FnMut(usize, &[f32])) -> CursorState {
+        loop {
+            if self.outcome.is_some() {
+                return CursorState::Done;
+            }
+            if self.step >= self.horizon {
+                self.outcome = Some(EpisodeResult {
+                    success: self.task.success(&self.scene),
+                    steps: self.horizon,
+                });
+                return CursorState::Done;
+            }
+            if self.task.success(&self.scene) {
+                self.outcome = Some(EpisodeResult { success: true, steps: self.step });
+                return CursorState::Done;
+            }
+            let Some(action) = self.queue.pop() else {
+                return CursorState::NeedsDecode;
+            };
+            on_action(self.step, &action);
+            self.scene.step(&action);
+            self.step += 1;
+        }
+    }
+
+    /// The observation for the pending decode: the active stage's
+    /// instruction over the current scene. Consumes this episode's rng
+    /// (observation noise), exactly once per decode — callers must not
+    /// rebuild it on a retry (cache the returned value instead), or the
+    /// episode leaves the reference trajectory's noise stream.
+    pub fn observation(&mut self, model: &MiniVla, params: &ObsParams) -> Observation {
+        let stage = self.task.active_stage(&self.scene).unwrap_or(0);
+        let instr = self.task.stages[stage].instr();
+        observe(&self.scene, instr, self.task.horizon, model, params, &mut self.rng)
+    }
+
+    /// Hand a decoded action chunk to the episode (decode order; the
+    /// cursor reverses internally for `pop`).
+    pub fn push_chunk(&mut self, mut actions: Vec<Vec<f32>>) {
+        actions.reverse();
+        self.queue = actions;
+    }
+
+    /// The episode rng, positioned for a stochastic local decode — the
+    /// slot the classic loop consumed between observe and step.
+    pub fn decode_rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn task(&self) -> &Task {
+        &self.task
+    }
+
+    /// Steps executed so far.
+    pub fn step_index(&self) -> usize {
+        self.step
+    }
+
+    pub fn finished(&self) -> bool {
+        self.outcome.is_some()
+    }
+
+    pub fn outcome(&self) -> Option<EpisodeResult> {
+        self.outcome.clone()
+    }
 }
 
 /// Run the policy closed-loop on one episode. The observation parameters
@@ -37,25 +158,18 @@ pub fn run_policy_episode_hooked(
     seed: u64,
     hook: &mut Option<Hook>,
 ) -> EpisodeResult {
-    let mut rng = Rng::with_stream(seed, 0xE9);
-    let mut scene = task.instantiate(&mut rng);
-    let mut queue: Vec<Vec<f32>> = Vec::new();
-    for step in 0..task.horizon {
-        if task.success(&scene) {
-            return EpisodeResult { success: true, steps: step };
+    let mut cursor = EpisodeCursor::new(task.clone(), seed, None);
+    loop {
+        match cursor.advance(|_, _| {}) {
+            CursorState::Done => return cursor.outcome().expect("Done implies outcome"),
+            CursorState::NeedsDecode => {
+                let obs = cursor.observation(model, obs_params);
+                let feat = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, hook);
+                let chunk = model.decode(&feat, cursor.decode_rng());
+                cursor.push_chunk(chunk);
+            }
         }
-        if queue.is_empty() {
-            let stage = task.active_stage(&scene).unwrap_or(0);
-            let instr = task.stages[stage].instr();
-            let obs = observe(&scene, instr, task.horizon, model, obs_params, &mut rng);
-            let feat = model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, hook);
-            queue = model.decode(&feat, &mut rng);
-            queue.reverse(); // pop from the back
-        }
-        let action = queue.pop().unwrap();
-        scene.step(&action);
     }
-    EpisodeResult { success: task.success(&scene), steps: task.horizon }
 }
 
 /// One demonstration step: the observation the policy would have seen and
@@ -146,5 +260,94 @@ mod tests {
         let b = run_policy_episode(&model, task, &ObsParams::clean(), 9);
         assert_eq!(a.success, b.success);
         assert_eq!(a.steps, b.steps);
+    }
+
+    /// The cursor must consume rng in exactly the order the classic
+    /// inline loop did (instantiate → observe → decode, per chunk) —
+    /// this pins the refactor against the pre-cursor implementation.
+    #[test]
+    fn cursor_matches_legacy_inline_loop_bit_exactly() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        for (task, seed) in
+            [(&libero_suite("object")[1], 5u64), (&libero_suite("spatial")[2], 23u64)]
+        {
+            // Legacy loop, verbatim, recording executed actions.
+            let mut rng = Rng::with_stream(seed, 0xE9);
+            let mut scene = task.instantiate(&mut rng);
+            let mut queue: Vec<Vec<f32>> = Vec::new();
+            let mut legacy_actions: Vec<Vec<f32>> = Vec::new();
+            let mut legacy = None;
+            for step in 0..task.horizon {
+                if task.success(&scene) {
+                    legacy = Some(EpisodeResult { success: true, steps: step });
+                    break;
+                }
+                if queue.is_empty() {
+                    let stage = task.active_stage(&scene).unwrap_or(0);
+                    let instr = task.stages[stage].instr();
+                    let obs =
+                        observe(&scene, instr, task.horizon, &model, &ObsParams::clean(), &mut rng);
+                    let feat =
+                        model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+                    queue = model.decode(&feat, &mut rng);
+                    queue.reverse();
+                }
+                let action = queue.pop().unwrap();
+                legacy_actions.push(action.clone());
+                scene.step(&action);
+            }
+            let legacy = legacy.unwrap_or(EpisodeResult {
+                success: task.success(&scene),
+                steps: task.horizon,
+            });
+
+            // Cursor-driven run of the same seed.
+            let mut cursor = EpisodeCursor::new(task.clone(), seed, None);
+            let mut cursor_actions: Vec<Vec<f32>> = Vec::new();
+            loop {
+                match cursor.advance(|_, a| cursor_actions.push(a.to_vec())) {
+                    CursorState::Done => break,
+                    CursorState::NeedsDecode => {
+                        let obs = cursor.observation(&model, &ObsParams::clean());
+                        let feat =
+                            model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+                        let chunk = model.decode(&feat, cursor.decode_rng());
+                        cursor.push_chunk(chunk);
+                    }
+                }
+            }
+            let got = cursor.outcome().unwrap();
+            assert_eq!(got.success, legacy.success, "{}", task.name);
+            assert_eq!(got.steps, legacy.steps, "{}", task.name);
+            assert_eq!(cursor_actions, legacy_actions, "{}: executed actions", task.name);
+        }
+    }
+
+    #[test]
+    fn cursor_horizon_cap_truncates() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let task = libero_suite("object")[0].clone();
+        // Zero-init policy never succeeds, so the cap is always what ends
+        // the episode.
+        let mut cursor = EpisodeCursor::new(task, 3, Some(7));
+        let mut executed = 0usize;
+        loop {
+            match cursor.advance(|_, _| executed += 1) {
+                CursorState::Done => break,
+                CursorState::NeedsDecode => {
+                    let obs = cursor.observation(&model, &ObsParams::clean());
+                    let feat =
+                        model.features(&obs.visual_raw, obs.instr_id, &obs.proprio, &mut None);
+                    let chunk = model.decode(&feat, cursor.decode_rng());
+                    cursor.push_chunk(chunk);
+                }
+            }
+        }
+        let out = cursor.outcome().unwrap();
+        assert_eq!(out.steps, 7);
+        assert_eq!(executed, 7);
+        assert!(!out.success);
+        assert!(cursor.finished());
+        assert_eq!(cursor.step_index(), 7);
     }
 }

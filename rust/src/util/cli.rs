@@ -71,6 +71,17 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// A comma-separated list option (`--variants a,b,c`), empty tokens
+    /// dropped. Falls back to parsing `default` the same way.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.get_or(name, default)
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -106,6 +117,14 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--fast"]);
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["fleet", "--variants", "dense, hbvla-packed,,"]);
+        assert_eq!(a.list_or("variants", ""), vec!["dense", "hbvla-packed"]);
+        assert_eq!(a.list_or("drills", "x,y"), vec!["x", "y"]);
+        assert!(parse(&["fleet"]).list_or("variants", "").is_empty());
     }
 
     #[test]

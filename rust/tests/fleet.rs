@@ -1,0 +1,210 @@
+//! Fleet-harness integration: closed-loop determinism across worker
+//! counts, and fault drills degrading gracefully with typed errors only.
+//!
+//! The acceptance property from the chunk head's serving guarantee
+//! (batched ≡ sequential, decode consumes no server-side randomness):
+//! a fixed fleet seed must reproduce bit-identical per-robot trajectory
+//! digests and identical fleet report counters whether the server runs
+//! one worker or four — only latency numbers may move.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hbvla::coordinator::{quantize_into_registry, ModelRegistry, PolicyServer, ServeConfig};
+use hbvla::fleet::{run_fleet, Drill, FleetConfig, FleetError, FleetReport};
+use hbvla::methods::traits::Component;
+use hbvla::methods::HbVla;
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::sim::observe::ObsParams;
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Tiny chunk-head checkpoint with real head weights, plus its packed
+/// 1-bit commit — the minimal two-variant serving menu.
+fn fleet_registry() -> Arc<ModelRegistry> {
+    let mut base = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let mut rng = Rng::new(0xF1EE7);
+    let (hr, hc) = base.store.dims("head.main");
+    base.store.set("head.main", Matrix::gauss(hr, hc, 0.1, &mut rng));
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let comps = [Component::Vision, Component::Language, Component::ActionHead];
+    let rep = quantize_into_registry(
+        &registry,
+        "hbvla-packed",
+        &base,
+        &HashMap::new(),
+        &HbVla::new(),
+        &comps,
+        2,
+    )
+    .unwrap();
+    assert!(rep.packed_layers > 0, "{rep:?}");
+    registry
+}
+
+fn run_with_workers(
+    registry: &Arc<ModelRegistry>,
+    cfg: &FleetConfig,
+    workers: usize,
+) -> FleetReport {
+    let server = PolicyServer::start(
+        Arc::clone(registry),
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        },
+    );
+    let report = run_fleet(registry, &server, cfg, &ObsParams::clean()).unwrap();
+    server.shutdown();
+    report
+}
+
+/// Every submit is answered OK or lands in exactly one typed error
+/// counter — nothing silent, nothing lost.
+fn assert_accounting_closed(report: &FleetReport) {
+    let mut total_ok = 0;
+    for row in &report.rows {
+        assert_eq!(
+            row.submits,
+            row.responses_ok + row.admission_sheds + row.deadline_misses + row.errors,
+            "accounting leak in variant '{}': {row:?}",
+            row.variant
+        );
+        total_ok += row.responses_ok;
+    }
+    assert_eq!(total_ok, report.total_responses);
+    assert_eq!(report.rows.iter().map(|r| r.robots).sum::<usize>(), report.robots);
+}
+
+#[test]
+fn fixed_seed_reproduces_identical_reports_across_worker_counts() {
+    let registry = fleet_registry();
+    let cfg = FleetConfig {
+        robots: 6,
+        horizon: 12,
+        variants: vec!["dense".into(), "hbvla-packed".into()],
+        seed: 11,
+        ..Default::default()
+    };
+    let one = run_with_workers(&registry, &cfg, 1);
+    let four = run_with_workers(&registry, &cfg, 4);
+    assert_accounting_closed(&one);
+    assert_accounting_closed(&four);
+    assert_eq!(one.total_responses, four.total_responses);
+    assert_eq!(one.rows.len(), four.rows.len());
+    for (a, b) in one.rows.iter().zip(&four.rows) {
+        assert_eq!(a.variant, b.variant);
+        // Bit-identical per-robot trajectories => identical variant digest.
+        assert_eq!(a.digest, b.digest, "variant '{}' trajectories diverged", a.variant);
+        assert_eq!(a.successes, b.successes);
+        assert_eq!(a.reference_successes, b.reference_successes);
+        assert_eq!(a.submits, b.submits);
+        assert_eq!(a.responses_ok, b.responses_ok);
+        assert_eq!((a.retries, a.admission_sheds, a.deadline_misses), (0, 0, 0));
+        assert_eq!((b.retries, b.admission_sheds, b.deadline_misses), (0, 0, 0));
+        assert_eq!((a.errors, a.dropped), (0, 0));
+        assert_eq!((b.errors, b.dropped), (0, 0));
+        // Divergence sums fold in robot-id order on both sides: exact.
+        for (ba, bb) in a.divergence.iter().zip(&b.divergence) {
+            assert_eq!(ba.count, bb.count);
+            assert_eq!(ba.mean_l2, bb.mean_l2);
+        }
+        if a.variant == "dense" {
+            // Robots served by the reference variant replay the reference
+            // trajectory exactly: zero divergence in every bin.
+            assert_eq!(a.max_divergence, 0.0, "dense-vs-dense must be exact");
+            assert!(a.divergence.iter().all(|bin| bin.mean_l2 == 0.0));
+            assert_eq!(a.successes, a.reference_successes);
+        }
+        if a.variant == "hbvla-packed" {
+            assert!(
+                a.divergence.iter().map(|bin| bin.count).sum::<u64>() > 0,
+                "packed robots recorded no divergence samples"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_loss_drill_answers_every_request() {
+    let registry = fleet_registry();
+    let cfg = FleetConfig {
+        robots: 8,
+        horizon: 12,
+        variants: vec!["dense".into(), "hbvla-packed".into()],
+        seed: 23,
+        drills: vec![Drill::WorkerLoss],
+        ..Default::default()
+    };
+    let report = run_with_workers(&registry, &cfg, 4);
+    assert_accounting_closed(&report);
+    // The drill fired and halved capacity…
+    assert_eq!(report.drill_report.workers_before_loss, 4);
+    assert_eq!(report.drill_report.workers_after_loss, 2);
+    assert!(report.live_workers_at_end >= 1);
+    // …yet no request was silently dropped and no robot aborted: with no
+    // deadline in play every submit must come back served.
+    for row in &report.rows {
+        assert!(row.submits > 0);
+        assert_eq!(row.responses_ok, row.submits, "variant '{}' lost requests", row.variant);
+        assert_eq!((row.errors, row.retries, row.dropped), (0, 0, 0));
+    }
+}
+
+#[test]
+fn hotspot_and_overload_drills_complete_with_typed_errors_only() {
+    let registry = fleet_registry();
+    let cfg = FleetConfig {
+        robots: 8,
+        horizon: 12,
+        variants: vec!["dense".into(), "hbvla-packed".into()],
+        seed: 31,
+        // Hotspot first (fires at 1/3 progress, while everyone is still
+        // live), then the overload burst at 2/3.
+        drills: vec![Drill::Hotspot, Drill::Overload],
+        ..Default::default()
+    };
+    let report = run_with_workers(&registry, &cfg, 2);
+    assert_accounting_closed(&report);
+    let d = &report.drill_report;
+    // Hotspot: odd-id robots collapsed onto the first variant mid-run.
+    assert_eq!(d.hotspot_variant.as_deref(), Some("dense"));
+    assert!(d.hotspot_switched >= 1, "{d:?}");
+    // Even-id robots started on dense (4 of 8); each switch adds one.
+    let dense_row = report.rows.iter().find(|r| r.variant == "dense").unwrap();
+    assert_eq!(dense_row.robots as u64, 4 + d.hotspot_switched);
+    // Overload: at least one synchronized burst was released.
+    assert!(d.overload_bursts >= 1, "{d:?}");
+    assert!(d.max_burst_size >= 1);
+    // Graceful degradation: every robot still finished, nothing dropped.
+    for row in &report.rows {
+        assert_eq!(row.responses_ok, row.submits);
+        assert_eq!((row.errors, row.dropped), (0, 0));
+    }
+}
+
+#[test]
+fn fleet_config_errors_are_typed() {
+    let registry = fleet_registry();
+    let server = PolicyServer::start(Arc::clone(&registry), ServeConfig::default());
+    let params = ObsParams::clean();
+    let bad = FleetConfig {
+        robots: 2,
+        horizon: 4,
+        variants: vec!["no-such-variant".into()],
+        ..Default::default()
+    };
+    assert_eq!(
+        run_fleet(&registry, &server, &bad, &params).unwrap_err(),
+        FleetError::UnknownVariant("no-such-variant".into())
+    );
+    let none = FleetConfig { robots: 0, variants: vec!["dense".into()], ..Default::default() };
+    assert_eq!(run_fleet(&registry, &server, &none, &params).unwrap_err(), FleetError::NoRobots);
+    let empty = FleetConfig { robots: 2, variants: Vec::new(), ..Default::default() };
+    assert_eq!(run_fleet(&registry, &server, &empty, &params).unwrap_err(), FleetError::NoVariants);
+    server.shutdown();
+}

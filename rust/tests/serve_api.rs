@@ -194,7 +194,22 @@ fn deadline_aware_admission_sheds_at_submit_not_dispatch() {
     let err = server
         .submit(ServeRequest::new(obs.clone()).with_deadline(Duration::from_nanos(1)))
         .unwrap_err();
-    assert!(matches!(err, ServeError::Overloaded { queue_depth, .. } if queue_depth >= 1), "{err:?}");
+    match err {
+        ServeError::Overloaded { queue_depth, estimated_wait, retry_after_us } => {
+            assert!(queue_depth >= 1);
+            // The retry hint is the predicted overshoot past the deadline:
+            // at least 1µs (it IS overloaded), never more than the whole
+            // estimated queue wait (the deadline is non-negative).
+            assert!(retry_after_us >= 1, "retry hint must be actionable");
+            assert!(
+                u128::from(retry_after_us) <= estimated_wait.as_micros() + 1,
+                "retry_after_us {} exceeds estimated wait {:?}",
+                retry_after_us,
+                estimated_wait
+            );
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
     // A generous deadline is still admitted and served from the same queue.
     let lax = server
         .submit_async(ServeRequest::new(obs.clone()).with_deadline(Duration::from_secs(30)))
