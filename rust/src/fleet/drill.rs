@@ -10,9 +10,11 @@ pub enum Drill {
     /// then releases them back-to-back — a queue-depth spike that must
     /// surface as `Overloaded`/`DeadlineExceeded`, not as stalls.
     Overload,
-    /// Traffic skews to one variant mid-run: half the robots permanently
-    /// switch their assignment to the hot variant, collapsing the
-    /// server's variant mix.
+    /// Traffic skews to one variant mid-run: every other robot not
+    /// already on the hot variant (the first non-reference entry of the
+    /// variant menu — never the divergence anchor) permanently switches
+    /// to it, collapsing the server's variant mix. Rehomed robots keep
+    /// their pre-switch serving history attributed to the old variant.
     Hotspot,
     /// The server loses workers mid-run (`shrink_workers`): capacity
     /// halves, in-flight requests must still all be answered.

@@ -18,9 +18,10 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::server::{PolicyServer, ServeError, ServeRequest};
+use crate::fleet::divergence::DivergenceTracker;
 use crate::fleet::drill::{schedule, Drill, DrillReport};
 use crate::fleet::report::{FleetReport, FleetVariantRow};
-use crate::fleet::robot::{Phase, Robot};
+use crate::fleet::robot::{Phase, Robot, RobotCounters};
 use crate::model::MiniVla;
 use crate::sim::episode::{CursorState, EpisodeCursor};
 use crate::sim::observe::ObsParams;
@@ -41,8 +42,9 @@ pub struct FleetConfig {
     pub robots: usize,
     /// Per-episode step cap (tasks with shorter horizons keep their own).
     pub horizon: usize,
-    /// Variant assignment pool, round-robin over robots. The first entry
-    /// doubles as the hotspot drill's hot variant.
+    /// Variant assignment pool, round-robin over robots. The first
+    /// NON-reference entry doubles as the hotspot drill's hot variant
+    /// (so the drill never skews traffic onto the divergence anchor).
     pub variants: Vec<String>,
     pub seed: u64,
     /// Per-request deadline budget; `Some` arms deadline triage and (if
@@ -138,7 +140,7 @@ fn reference_trajectory(
 /// back off (clamped) or abort once the per-decode cap is spent.
 fn retry_or_abort(robot: &mut Robot, now: Instant, backoff_us: u64, max_retries: u32) -> Phase {
     robot.retries_this_decode += 1;
-    robot.counters.retries += 1;
+    robot.serving_counters_mut().retries += 1;
     if robot.retries_this_decode > max_retries {
         robot.dropped = true;
         Phase::Done
@@ -163,24 +165,24 @@ fn submit_decode(
     if let Some(d) = cfg.deadline {
         req = req.with_deadline(d);
     }
-    robot.counters.submits += 1;
+    robot.begin_submit();
     match server.submit_async(req) {
         Ok(handle) => Phase::Waiting(handle),
         Err(ServeError::Overloaded { retry_after_us, .. }) => {
-            robot.counters.admission_sheds += 1;
+            robot.serving_counters_mut().admission_sheds += 1;
             // The server predicted how long past the deadline the queue
             // runs — backing off exactly that long is the intelligent
             // retry the satellite task asks for.
             retry_or_abort(robot, now, retry_after_us, cfg.max_retries)
         }
         Err(ServeError::Stopped) | Err(ServeError::WorkerDropped) => {
-            robot.counters.errors += 1;
+            robot.serving_counters_mut().errors += 1;
             retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
         }
         Err(_) => {
             // UnknownVariant / InvalidObservation / NoVariants: config
             // errors that no retry fixes — abort loudly via the counters.
-            robot.counters.errors += 1;
+            robot.serving_counters_mut().errors += 1;
             robot.dropped = true;
             Phase::Done
         }
@@ -252,8 +254,14 @@ pub fn run_fleet(
                     Some(Ok(rsp)) => {
                         progress = true;
                         responses_total += 1;
-                        robot.counters.responses_ok += 1;
-                        latency.entry(robot.variant.clone()).or_default().record(rsp.latency());
+                        robot.serving_counters_mut().responses_ok += 1;
+                        // Keyed by the variant that served the request
+                        // (the submit-time target), so a mid-flight
+                        // rehome never misattributes the sample.
+                        latency
+                            .entry(robot.serving_variant().to_string())
+                            .or_default()
+                            .record(rsp.latency());
                         robot.accept_chunk(rsp.actions);
                         Phase::Ready
                     }
@@ -261,14 +269,14 @@ pub fn run_fleet(
                         progress = true;
                         match e {
                             ServeError::DeadlineExceeded { .. } => {
-                                robot.counters.deadline_misses += 1;
+                                robot.serving_counters_mut().deadline_misses += 1;
                                 retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
                             }
                             // Overloaded only occurs at submit; anything
                             // else mid-flight is a transient worker-side
                             // failure.
                             _ => {
-                                robot.counters.errors += 1;
+                                robot.serving_counters_mut().errors += 1;
                                 retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
                             }
                         }
@@ -318,12 +326,28 @@ pub fn run_fleet(
             match s.drill {
                 Drill::Overload => gathering = true,
                 Drill::Hotspot => {
-                    let hot = cfg.variants[0].clone();
+                    // The hot variant must not be the reference: the
+                    // reference row is the fleet's zero-divergence
+                    // anchor, and skewing extra traffic onto it would
+                    // defeat the drill. Falls back to variants[0] only
+                    // when the menu is reference-only (nothing to skew).
+                    let hot = cfg
+                        .variants
+                        .iter()
+                        .find(|v| **v != cfg.reference)
+                        .unwrap_or(&cfg.variants[0])
+                        .clone();
                     drill_report.hotspot_variant = Some(hot.clone());
+                    // Every other still-live robot not already on the
+                    // hot variant switches: half the off-hot fleet.
+                    let mut switch = false;
                     for r in robots.iter_mut() {
-                        if !r.finished() && r.id % 2 == 1 && r.variant != hot {
-                            r.variant = hot.clone();
-                            drill_report.hotspot_switched += 1;
+                        if !r.finished() && r.variant != hot {
+                            switch = !switch;
+                            if switch {
+                                r.rehome(hot.clone());
+                                drill_report.hotspot_switched += 1;
+                            }
                         }
                     }
                 }
@@ -367,19 +391,36 @@ pub fn run_fleet(
         }
     }
 
-    // Aggregate per final variant assignment (the hotspot drill reports
-    // traffic where it actually went).
+    // Aggregate: robot-level outcomes (membership, success, digest,
+    // drops) group by FINAL assignment; traffic stats (counters,
+    // divergence, latency) are attributed to the variant that actually
+    // SERVED them. A robot the hotspot drill rehomed leaves its
+    // pre-switch history on its old variant, so the reference row stays
+    // the zero-divergence anchor no matter which drills ran.
     let mut row_order: Vec<String> = cfg.variants.clone();
     for r in &robots {
         if !row_order.contains(&r.variant) {
             row_order.push(r.variant.clone());
+        }
+        for (v, _) in r.served() {
+            if !row_order.contains(v) {
+                row_order.push(v.clone());
+            }
         }
     }
     let rows: Vec<FleetVariantRow> = row_order
         .iter()
         .map(|name| {
             let members: Vec<&Robot> = robots.iter().filter(|r| &r.variant == name).collect();
-            FleetVariantRow::aggregate(name, &members, cfg.horizon, latency.get(name))
+            let mut traffic = RobotCounters::default();
+            let mut divergence = DivergenceTracker::new(cfg.horizon);
+            for r in &robots {
+                if let Some(s) = r.served_stats(name) {
+                    traffic.add(&s.counters);
+                    divergence.merge(&s.divergence);
+                }
+            }
+            FleetVariantRow::aggregate(name, &members, traffic, divergence, latency.get(name))
         })
         .collect();
 

@@ -39,4 +39,4 @@ pub use divergence::{DivergenceBin, DivergenceTracker, DIVERGENCE_BINS};
 pub use drill::{parse_drills, Drill, DrillReport};
 pub use driver::{run_fleet, FleetConfig, FleetError};
 pub use report::{merge_fleet_json, FleetReport, FleetVariantRow};
-pub use robot::{Fnv64, Robot, RobotCounters};
+pub use robot::{Fnv64, Robot, RobotCounters, ServedStats};

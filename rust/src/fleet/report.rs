@@ -5,7 +5,7 @@
 use crate::coordinator::metrics::LatencyStats;
 use crate::fleet::divergence::{DivergenceBin, DivergenceTracker};
 use crate::fleet::drill::{Drill, DrillReport};
-use crate::fleet::robot::{Fnv64, Robot};
+use crate::fleet::robot::{Fnv64, Robot, RobotCounters};
 
 fn num(v: f64) -> String {
     if v.is_finite() {
@@ -15,10 +15,38 @@ fn num(v: f64) -> String {
     }
 }
 
+/// Escape a string for inclusion inside a JSON string literal. Variant
+/// names are user-controlled (`--variants`); a quote, backslash or
+/// control character must not be able to corrupt the report.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// One variant's fleet-wide outcome.
+///
+/// Attribution: episode-level outcomes (`robots`, `successes`,
+/// `dropped`, `digest`) cover the robots whose FINAL assignment is this
+/// variant, while traffic stats (`submits`…`errors`, `divergence`,
+/// latency) cover every request/step this variant actually SERVED —
+/// including the pre-switch history of robots the hotspot drill later
+/// rehomed elsewhere. After a hotspot drill a drained variant can
+/// therefore legitimately show `robots: 0` alongside nonzero traffic.
 #[derive(Clone, Debug)]
 pub struct FleetVariantRow {
     pub variant: String,
+    /// Robots whose final assignment is this variant.
     pub robots: usize,
     pub successes: u64,
     /// Successes of the dense reference replays for the SAME robots
@@ -41,7 +69,8 @@ pub struct FleetVariantRow {
     pub p50_us: u64,
     pub p99_us: u64,
     pub p999_us: u64,
-    /// ℓ2-vs-dense-reference by step-index bin (error accumulation).
+    /// ℓ2-vs-dense-reference by step-index bin (error accumulation),
+    /// over the steps this variant served.
     pub divergence: Vec<DivergenceBin>,
     pub max_divergence: f64,
     /// Order-independent variant digest: FNV over `(robot_id, robot
@@ -50,25 +79,21 @@ pub struct FleetVariantRow {
 }
 
 impl FleetVariantRow {
-    /// Fold a variant's robots into one row. `latency` is the
-    /// driver-side client-observed stats for this variant (absent when
-    /// no response ever landed).
+    /// Fold one variant's row: `members` are the robots whose final
+    /// assignment is this variant (episode outcomes + digest), while
+    /// `traffic` and `divergence` are the driver's served-variant sums
+    /// for it and `latency` the client-observed stats of the responses
+    /// it served (absent when no response ever landed).
     pub fn aggregate(
         variant: &str,
         members: &[&Robot],
-        horizon: usize,
+        traffic: RobotCounters,
+        divergence: DivergenceTracker,
         latency: Option<&LatencyStats>,
     ) -> Self {
         let mut successes = 0u64;
         let mut reference_successes = 0u64;
-        let mut submits = 0u64;
-        let mut responses_ok = 0u64;
-        let mut retries = 0u64;
-        let mut admission_sheds = 0u64;
-        let mut deadline_misses = 0u64;
-        let mut errors = 0u64;
         let mut dropped = 0u64;
-        let mut div = DivergenceTracker::new(horizon);
         let mut digest = Fnv64::new();
         // Robot-id order makes the digest independent of poll order.
         let mut ordered: Vec<&&Robot> = members.iter().collect();
@@ -76,17 +101,11 @@ impl FleetVariantRow {
         for r in ordered {
             successes += r.success() as u64;
             reference_successes += r.reference_success as u64;
-            submits += r.counters.submits;
-            responses_ok += r.counters.responses_ok;
-            retries += r.counters.retries;
-            admission_sheds += r.counters.admission_sheds;
-            deadline_misses += r.counters.deadline_misses;
-            errors += r.counters.errors;
             dropped += r.dropped as u64;
-            div.merge(r.divergence());
             digest.update_u64(r.id as u64);
             digest.update_u64(r.trajectory_digest());
         }
+        let submits = traffic.submits;
         let rate = |n: u64| if submits > 0 { n as f64 / submits as f64 } else { 0.0 };
         FleetVariantRow {
             variant: variant.to_string(),
@@ -99,20 +118,20 @@ impl FleetVariantRow {
                 1.0
             },
             submits,
-            responses_ok,
-            retries,
-            admission_sheds,
-            deadline_misses,
-            errors,
+            responses_ok: traffic.responses_ok,
+            retries: traffic.retries,
+            admission_sheds: traffic.admission_sheds,
+            deadline_misses: traffic.deadline_misses,
+            errors: traffic.errors,
             dropped,
-            shed_rate: rate(admission_sheds),
-            miss_rate: rate(deadline_misses),
+            shed_rate: rate(traffic.admission_sheds),
+            miss_rate: rate(traffic.deadline_misses),
             mean_us: latency.map(|l| l.mean_us()).unwrap_or(0.0),
             p50_us: latency.map(|l| l.p50_us()).unwrap_or(0),
             p99_us: latency.map(|l| l.p99_us()).unwrap_or(0),
             p999_us: latency.map(|l| l.p999_us()).unwrap_or(0),
-            divergence: div.bins(),
-            max_divergence: div.max_mean_l2(),
+            divergence: divergence.bins(),
+            max_divergence: divergence.max_mean_l2(),
             digest: digest.digest(),
         }
     }
@@ -139,7 +158,7 @@ impl FleetVariantRow {
              \"dropped\": {}, \"shed_rate\": {}, \"miss_rate\": {}, \
              \"latency_us\": {{\"mean\": {}, \"p50\": {}, \"p99\": {}, \"p999\": {}}}, \
              \"max_divergence\": {}, \"divergence\": [{}], \"digest\": \"{:016x}\"}}",
-            self.variant,
+            esc(&self.variant),
             self.robots,
             self.successes,
             self.reference_successes,
@@ -164,7 +183,8 @@ impl FleetVariantRow {
     }
 }
 
-/// The whole run, one row per (final) variant assignment.
+/// The whole run, one row per variant (any variant that held an
+/// assignment or served traffic gets a row).
 #[derive(Clone, Debug)]
 pub struct FleetReport {
     pub robots: usize,
@@ -260,7 +280,7 @@ impl FleetReport {
             self.robots,
             self.horizon,
             self.seed,
-            self.reference,
+            esc(&self.reference),
             drills.join(", "),
             self.live_workers_at_end,
             self.total_responses,
@@ -271,7 +291,7 @@ impl FleetReport {
             d.hotspot_switched,
             d.hotspot_variant
                 .as_deref()
-                .map_or_else(|| "null".to_string(), |v| format!("\"{v}\"")),
+                .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v))),
             d.workers_before_loss,
             d.workers_after_loss
         )
@@ -335,15 +355,41 @@ mod tests {
             r.advance();
             r
         };
+        let mk_row = |robots: &[&Robot]| {
+            FleetVariantRow::aggregate(
+                "dense",
+                robots,
+                RobotCounters::default(),
+                DivergenceTracker::new(16),
+                None,
+            )
+        };
         let (a, b) = (mk(0), mk(1));
-        let fwd = FleetVariantRow::aggregate("dense", &[&a, &b], 16, None);
-        let rev = FleetVariantRow::aggregate("dense", &[&b, &a], 16, None);
+        let fwd = mk_row(&[&a, &b]);
+        let rev = mk_row(&[&b, &a]);
         assert_eq!(fwd.digest, rev.digest);
         assert_eq!(fwd.robots, 2);
         // Zero reference successes -> retention defined as 1.0.
         let c = Robot::new(2, "dense".into(), task.clone(), 8, 16, Vec::new(), false);
-        let row = FleetVariantRow::aggregate("dense", &[&c], 16, None);
+        let row = mk_row(&[&c]);
         assert_eq!(row.reference_successes, 0);
         assert_eq!(row.success_retention, 1.0);
+    }
+
+    #[test]
+    fn json_strings_are_escaped() {
+        assert_eq!(esc("plain-name"), "plain-name");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("tab\there\nnl\u{1}"), "tab\\there\\nnl\\u0001");
+        // A hostile --variants name must not break the report's JSON.
+        let row = FleetVariantRow::aggregate(
+            "evil\"variant\\",
+            &[],
+            RobotCounters::default(),
+            DivergenceTracker::new(8),
+            None,
+        );
+        let json = row.to_json();
+        assert!(json.contains("\"variant\": \"evil\\\"variant\\\\\""), "{json}");
     }
 }

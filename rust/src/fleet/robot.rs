@@ -82,13 +82,49 @@ pub struct RobotCounters {
     pub retries: u64,
 }
 
+impl RobotCounters {
+    /// Elementwise sum — folds per-robot counters into a variant row.
+    pub fn add(&mut self, other: &RobotCounters) {
+        self.submits += other.submits;
+        self.responses_ok += other.responses_ok;
+        self.admission_sheds += other.admission_sheds;
+        self.deadline_misses += other.deadline_misses;
+        self.errors += other.errors;
+        self.retries += other.retries;
+    }
+}
+
+/// One robot's traffic against one serving variant: request counters and
+/// the divergence of the steps that variant actually served. Kept per
+/// served variant (not per robot) so a robot the hotspot drill rehomes
+/// leaves its pre-switch history on the old variant instead of polluting
+/// the new one's row — in particular the reference row stays the
+/// zero-divergence anchor no matter which drills ran.
+#[derive(Clone, Debug)]
+pub struct ServedStats {
+    pub counters: RobotCounters,
+    pub divergence: DivergenceTracker,
+}
+
+impl ServedStats {
+    fn new(horizon: usize) -> Self {
+        ServedStats {
+            counters: RobotCounters::default(),
+            divergence: DivergenceTracker::new(horizon),
+        }
+    }
+}
+
 /// A fleet robot: episode cursor + serving assignment + stats.
 pub struct Robot {
     pub id: usize,
-    /// Current serving assignment (the hotspot drill rewrites this).
+    /// Current serving assignment: where the NEXT submit routes, and the
+    /// row this robot's episode-level outcome (success, digest, drop) is
+    /// reported under. The hotspot drill rewrites it via [`Robot::rehome`].
     pub variant: String,
     pub phase: Phase,
     cursor: EpisodeCursor,
+    horizon: usize,
     /// The pending decode's observation. Built exactly once per decode
     /// and REUSED on every retry — rebuilding would consume the episode
     /// rng again and silently fork the trajectory off its seed.
@@ -97,13 +133,20 @@ pub struct Robot {
     /// step index, and whether the reference episode succeeded.
     reference_actions: Vec<Vec<f32>>,
     pub reference_success: bool,
-    pub counters: RobotCounters,
+    /// Traffic stats keyed by the variant that actually served them:
+    /// counters by the variant targeted at submit time, divergence by
+    /// the variant that served the executed chunk.
+    served: Vec<(String, ServedStats)>,
+    /// Variant targeted by the pending/in-flight decode (set at submit,
+    /// so a mid-flight rehome never re-attributes the response).
+    active_variant: String,
+    /// Variant that served the chunk currently being executed.
+    chunk_variant: String,
     /// Consecutive failures of the current decode (resets on success).
     pub retries_this_decode: u32,
     /// True if the episode was aborted (retry cap / non-retryable error).
     pub dropped: bool,
     digest: Fnv64,
-    divergence: DivergenceTracker,
     outcome: Option<EpisodeResult>,
 }
 
@@ -119,25 +162,84 @@ impl Robot {
     ) -> Self {
         Robot {
             id,
+            active_variant: variant.clone(),
+            chunk_variant: variant.clone(),
             variant,
             phase: Phase::Ready,
             cursor: EpisodeCursor::new(task, seed, Some(horizon)),
+            horizon,
             pending_obs: None,
             reference_actions,
             reference_success,
-            counters: RobotCounters::default(),
+            served: Vec::new(),
             retries_this_decode: 0,
             dropped: false,
             digest: Fnv64::new(),
-            divergence: DivergenceTracker::new(horizon),
             outcome: None,
         }
     }
 
+    /// Find-or-insert the stats slot for a served variant.
+    fn stats_index(&mut self, variant: &str) -> usize {
+        match self.served.iter().position(|(v, _)| v == variant) {
+            Some(i) => i,
+            None => {
+                self.served.push((variant.to_string(), ServedStats::new(self.horizon)));
+                self.served.len() - 1
+            }
+        }
+    }
+
+    /// Route the pending decode to the current assignment and count the
+    /// submit attempt against it. Must precede every `submit_async`.
+    pub fn begin_submit(&mut self) {
+        if self.active_variant != self.variant {
+            self.active_variant = self.variant.clone();
+        }
+        self.serving_counters_mut().submits += 1;
+    }
+
+    /// The variant serving (or last targeted by) the pending decode.
+    pub fn serving_variant(&self) -> &str {
+        &self.active_variant
+    }
+
+    /// Counters of the variant serving the pending/in-flight decode —
+    /// where submit/response events are attributed, even if the robot
+    /// was rehomed while the request was in flight.
+    pub fn serving_counters_mut(&mut self) -> &mut RobotCounters {
+        let v = self.active_variant.clone();
+        let i = self.stats_index(&v);
+        &mut self.served[i].1.counters
+    }
+
+    /// Per-served-variant traffic stats, in first-served order.
+    pub fn served(&self) -> &[(String, ServedStats)] {
+        &self.served
+    }
+
+    /// Traffic stats for one served variant, if any traffic went there.
+    pub fn served_stats(&self, variant: &str) -> Option<&ServedStats> {
+        self.served.iter().find(|(v, _)| v == variant).map(|(_, s)| s)
+    }
+
+    /// Hotspot drill: permanently reassign this robot. Only future
+    /// submits route to the new variant — traffic already attributed
+    /// (including any in-flight request) stays with the variant that
+    /// served it.
+    pub fn rehome(&mut self, variant: String) {
+        self.variant = variant;
+    }
+
     /// Execute queued actions, folding each into the trajectory digest
-    /// and the divergence-vs-reference bins.
+    /// and the serving variant's divergence-vs-reference bins.
     pub fn advance(&mut self) -> CursorState {
-        let Robot { cursor, reference_actions, digest, divergence, .. } = self;
+        let idx = {
+            let v = self.chunk_variant.clone();
+            self.stats_index(&v)
+        };
+        let Robot { cursor, reference_actions, digest, served, .. } = self;
+        let divergence = &mut served[idx].1.divergence;
         let state = cursor.advance(|step, action| {
             digest.update_f32s(action);
             if let Some(reference) = reference_actions.get(step) {
@@ -165,8 +267,13 @@ impl Robot {
     }
 
     /// A served chunk arrived: feed it to the episode and clear the
-    /// pending decode.
+    /// pending decode. The chunk's steps will be attributed to the
+    /// variant that served it (the submit-time target), not to any
+    /// assignment a drill applied while the request was in flight.
     pub fn accept_chunk(&mut self, actions: Vec<Vec<f32>>) {
+        if self.chunk_variant != self.active_variant {
+            self.chunk_variant = self.active_variant.clone();
+        }
         self.cursor.push_chunk(actions);
         self.pending_obs = None;
         self.retries_this_decode = 0;
@@ -197,10 +304,6 @@ impl Robot {
 
     pub fn trajectory_digest(&self) -> u64 {
         self.digest.digest()
-    }
-
-    pub fn divergence(&self) -> &DivergenceTracker {
-        &self.divergence
     }
 }
 

@@ -171,12 +171,23 @@ fn hotspot_and_overload_drills_complete_with_typed_errors_only() {
     let report = run_with_workers(&registry, &cfg, 2);
     assert_accounting_closed(&report);
     let d = &report.drill_report;
-    // Hotspot: odd-id robots collapsed onto the first variant mid-run.
-    assert_eq!(d.hotspot_variant.as_deref(), Some("dense"));
+    // Hotspot: traffic collapsed onto the first NON-reference variant —
+    // never onto the reference, whose row anchors zero divergence.
+    assert_eq!(d.hotspot_variant.as_deref(), Some("hbvla-packed"));
     assert!(d.hotspot_switched >= 1, "{d:?}");
-    // Even-id robots started on dense (4 of 8); each switch adds one.
+    // 4 of 8 robots started on each variant; every switch moves one
+    // robot off dense and onto the hot packed variant.
     let dense_row = report.rows.iter().find(|r| r.variant == "dense").unwrap();
-    assert_eq!(dense_row.robots as u64, 4 + d.hotspot_switched);
+    let packed_row = report.rows.iter().find(|r| r.variant == "hbvla-packed").unwrap();
+    assert_eq!(packed_row.robots as u64, 4 + d.hotspot_switched);
+    assert_eq!(dense_row.robots as u64, 4 - d.hotspot_switched);
+    // Serving-variant attribution: rehomed robots' dense-served steps
+    // stay on the dense row (still exactly zero divergence — the
+    // anchor survives the drill), and their post-switch packed-served
+    // steps land on the packed row.
+    assert!(dense_row.submits > 0);
+    assert!(dense_row.divergence.iter().all(|b| b.mean_l2 == 0.0), "{dense_row:?}");
+    assert!(packed_row.divergence.iter().map(|b| b.count).sum::<u64>() > 0);
     // Overload: at least one synchronized burst was released.
     assert!(d.overload_bursts >= 1, "{d:?}");
     assert!(d.max_burst_size >= 1);
