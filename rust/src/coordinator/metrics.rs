@@ -4,6 +4,12 @@
 //! constant memory, so counts and sums are tracked exactly (u64 running
 //! totals) while percentile-bearing samples live in fixed-capacity rings
 //! covering the most recent window.
+//!
+//! Durations are recorded in NANOSECONDS internally. The public accessors
+//! stay in microseconds (rounded half-up), but sub-microsecond samples no
+//! longer truncate to 0 — on tiny models a whole batch can complete in
+//! hundreds of nanoseconds, and the old `as_micros()` path biased means
+//! and percentiles down by up to 1µs per sample.
 
 /// Samples retained for percentile estimation; counts/means stay exact
 /// beyond this window.
@@ -12,15 +18,24 @@ pub const LATENCY_WINDOW: usize = 4096;
 /// Recent batch sizes retained by [`BatchStats`].
 pub const BATCH_WINDOW: usize = 1024;
 
+/// Round a nanosecond sample to microseconds, half-up — `record_us(7)`
+/// reads back as exactly 7, and a 500ns sample reads as 1µs, not 0.
+#[inline]
+fn ns_to_us(ns: u64) -> u64 {
+    (ns + 500) / 1_000
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
-    /// Ring of the most recent samples (percentiles window).
+    /// Ring of the most recent samples, in nanoseconds. While not full it
+    /// is chronological from index 0; once full, `next` is the oldest
+    /// slot (the ring unrolls as `window[next..] ++ window[..next]`).
     window: Vec<u64>,
     /// Next ring slot once the window is full.
     next: usize,
     /// Exact totals over the whole run.
     count: u64,
-    sum_us: u64,
+    sum_ns: u64,
 }
 
 impl LatencyStats {
@@ -28,41 +43,67 @@ impl LatencyStats {
         Self::default()
     }
 
-    pub fn record_us(&mut self, us: u64) {
+    pub fn record_ns(&mut self, ns: u64) {
         self.count += 1;
-        self.sum_us += us;
-        self.push_window(us);
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.push_window(ns);
     }
 
-    fn push_window(&mut self, us: u64) {
+    pub fn record_us(&mut self, us: u64) {
+        self.record_ns(us.saturating_mul(1_000));
+    }
+
+    fn push_window(&mut self, ns: u64) {
         if self.window.len() < LATENCY_WINDOW {
-            self.window.push(us);
+            self.window.push(ns);
         } else {
-            self.window[self.next] = us;
+            self.window[self.next] = ns;
             self.next = (self.next + 1) % LATENCY_WINDOW;
         }
     }
 
     pub fn record(&mut self, d: std::time::Duration) {
-        self.record_us(d.as_micros() as u64);
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// The retained window unrolled oldest → newest. The ring cursor
+    /// `next` points at the oldest slot only once the window is full;
+    /// before that the window is already chronological from 0.
+    fn chronological(&self) -> Vec<u64> {
+        if self.window.len() < LATENCY_WINDOW || self.next == 0 {
+            return self.window.clone();
+        }
+        let mut out = Vec::with_capacity(self.window.len());
+        out.extend_from_slice(&self.window[self.next..]);
+        out.extend_from_slice(&self.window[..self.next]);
+        out
     }
 
     /// Merge another accumulator. Counts and sums add exactly; when the
     /// combined percentile windows exceed capacity, an evenly-spaced
     /// subsample keeps BOTH sources proportionally represented (naively
     /// pushing `other`'s window would overwrite this one's entirely).
+    ///
+    /// Both rings are unrolled chronologically BEFORE concatenation, so
+    /// the merged window is oldest-first from slot 0 and the reset ring
+    /// cursor is correct: post-merge `record*` calls overwrite the oldest
+    /// blended samples, preserving the "most recent window" invariant.
+    /// (The old code concatenated raw ring storage and then reset
+    /// `next = 0`, so later records clobbered from an arbitrary point in
+    /// the blend.)
     pub fn merge(&mut self, other: &LatencyStats) {
         self.count += other.count;
-        self.sum_us += other.sum_us;
-        let mut all = Vec::with_capacity(self.window.len() + other.window.len());
-        all.extend_from_slice(&self.window);
-        all.extend_from_slice(&other.window);
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        let mut all = self.chronological();
+        all.extend(other.chronological());
         if all.len() > LATENCY_WINDOW {
             let step = all.len() as f64 / LATENCY_WINDOW as f64;
             self.window = (0..LATENCY_WINDOW).map(|i| all[(i as f64 * step) as usize]).collect();
         } else {
             self.window = all;
         }
+        // Chronological with the oldest at 0: slot 0 is the correct
+        // overwrite point whether or not the merged window is full.
         self.next = 0;
     }
 
@@ -71,12 +112,32 @@ impl LatencyStats {
         self.count as usize
     }
 
-    /// Exact mean over every sample ever recorded.
+    /// Exact mean over every sample ever recorded (µs, from the exact
+    /// nanosecond sum — no per-sample truncation).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        self.sum_us as f64 / self.count as f64
+        self.sum_ns as f64 / 1_000.0 / self.count as f64
+    }
+
+    /// Nearest-rank percentiles over the retained window for a list of
+    /// quantiles, sharing ONE sort of the window. `summary()` and report
+    /// rows ask for p50/p99/p999 together — three separate
+    /// [`Self::percentile_us`] calls would clone+sort the 4096-sample
+    /// window three times.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
+        if self.window.is_empty() {
+            return vec![0; ps.len()];
+        }
+        let mut v = self.window.clone();
+        v.sort_unstable();
+        ps.iter()
+            .map(|&p| {
+                let rank = (p.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
+                ns_to_us(v[rank.clamp(1, v.len()) - 1])
+            })
+            .collect()
     }
 
     /// Nearest-rank percentile over the retained window (the most recent
@@ -84,13 +145,7 @@ impl LatencyStats {
     /// `p·n` samples ≤ it, so high quantiles (p99.9) report an observed
     /// value instead of an interpolated one.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.window.is_empty() {
-            return 0;
-        }
-        let mut v = self.window.clone();
-        v.sort_unstable();
-        let rank = (p.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
-        v[rank.clamp(1, v.len()) - 1]
+        self.percentiles_us(&[p])[0]
     }
 
     pub fn p50_us(&self) -> u64 {
@@ -106,13 +161,14 @@ impl LatencyStats {
     }
 
     pub fn summary(&self) -> String {
+        let p = self.percentiles_us(&[0.50, 0.99, 0.999]);
         format!(
             "n={} mean={:.1}us p50={}us p99={}us p999={}us",
             self.count(),
             self.mean_us(),
-            self.p50_us(),
-            self.p99_us(),
-            self.p999_us()
+            p[0],
+            p[1],
+            p[2]
         )
     }
 }
@@ -173,6 +229,40 @@ impl BatchStats {
     }
 }
 
+/// Per-shard dispatch accounting for the variant-affine sharded router:
+/// batch/group sizes dispatched from this shard's queue, plus how much of
+/// its backlog was carried away by work stealing. Indexed by the shard
+/// the requests were QUEUED on — `stolen_*` counts work other shards'
+/// idle workers took from it, which is exactly the load-imbalance signal
+/// the bench rows report.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Sizes of whole batches dispatched from this shard's queue
+    /// (including stolen groups, which dispatch as their own batch).
+    pub batches: BatchStats,
+    /// Sizes of same-variant groups dispatched from this shard — the
+    /// "mean same-variant batch size" metric of the mixed-traffic bench.
+    pub groups: BatchStats,
+    /// Whole same-variant groups stolen FROM this shard by idle workers
+    /// of other shards.
+    pub stolen_groups: u64,
+    /// Requests those stolen groups carried.
+    pub stolen_requests: u64,
+}
+
+impl ShardStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "batches={} mean_batch={:.2} mean_group={:.2} stolen_groups={} stolen_requests={}",
+            self.batches.count(),
+            self.batches.mean(),
+            self.groups.mean(),
+            self.stolen_groups,
+            self.stolen_requests
+        )
+    }
+}
+
 /// Per-variant serving metrics: end-to-end latency with its queue/compute
 /// split, request count, and deadline misses.
 #[derive(Clone, Debug, Default)]
@@ -183,6 +273,11 @@ pub struct VariantStats {
     pub queue: LatencyStats,
     /// Batch compute wall time attributed to each request.
     pub compute: LatencyStats,
+    /// Same-variant group sizes this variant's requests dispatched in —
+    /// the per-variant service-rate denominator of routed admission
+    /// (a variant served in big coalesced groups drains faster per
+    /// request than the global mean batch would suggest, and vice versa).
+    pub batches: BatchStats,
     pub requests: u64,
     pub deadline_misses: u64,
     /// Requests shed at submit by deadline-aware admission control
@@ -194,10 +289,11 @@ pub struct VariantStats {
 impl VariantStats {
     pub fn summary(&self) -> String {
         format!(
-            "requests={} misses={} sheds={} total[{}] queue[{}] compute[{}]",
+            "requests={} misses={} sheds={} mean_group={:.2} total[{}] queue[{}] compute[{}]",
             self.requests,
             self.deadline_misses,
             self.admission_sheds,
+            self.batches.mean(),
             self.total.summary(),
             self.queue.summary(),
             self.compute.summary()
@@ -224,7 +320,9 @@ mod tests {
 
     #[test]
     fn nearest_rank_percentiles() {
-        // 1000 samples 1..=1000: nearest-rank p is exactly sample ⌈p·n⌉.
+        // 1000 samples 1..=1000 µs: nearest-rank p is exactly sample
+        // ⌈p·n⌉ — the µs accessors stay exact on µs-granular input even
+        // though storage is nanoseconds.
         let mut s = LatencyStats::new();
         for i in 1..=1000 {
             s.record_us(i);
@@ -234,6 +332,8 @@ mod tests {
         assert_eq!(s.p999_us(), 999);
         assert_eq!(s.percentile_us(1.0), 1000);
         assert_eq!(s.percentile_us(0.0), 1);
+        // One shared sort returns the same values as the per-call path.
+        assert_eq!(s.percentiles_us(&[0.50, 0.99, 0.999]), vec![500, 990, 999]);
         // On a tiny window every quantile is an observed sample.
         let mut t = LatencyStats::new();
         t.record_us(7);
@@ -243,10 +343,28 @@ mod tests {
     }
 
     #[test]
+    fn sub_microsecond_samples_are_not_truncated_to_zero() {
+        // The old `as_micros()` path recorded these as 0, biasing the
+        // mean down by up to 1µs on tiny models.
+        let mut s = LatencyStats::new();
+        for _ in 0..100 {
+            s.record(std::time::Duration::from_nanos(500));
+        }
+        assert!((s.mean_us() - 0.5).abs() < 1e-9, "mean {}us", s.mean_us());
+        // Half-up rounding: 500ns reads back as 1µs, not 0.
+        assert_eq!(s.p50_us(), 1);
+        let mut t = LatencyStats::new();
+        t.record(std::time::Duration::from_nanos(499));
+        assert_eq!(t.p50_us(), 0);
+        assert!((t.mean_us() - 0.499).abs() < 1e-9);
+    }
+
+    #[test]
     fn empty_stats_safe() {
         let s = LatencyStats::new();
         assert_eq!(s.mean_us(), 0.0);
         assert_eq!(s.p99_us(), 0);
+        assert_eq!(s.percentiles_us(&[0.5, 0.99]), vec![0, 0]);
     }
 
     #[test]
@@ -296,6 +414,46 @@ mod tests {
     }
 
     #[test]
+    fn post_merge_records_overwrite_oldest_not_newest() {
+        // The merge cursor bug: merging used to reset `next = 0` over a
+        // non-chronological window, so later records clobbered an
+        // arbitrary blend point. Now the merged window is chronological
+        // and a full window of fresh samples replaces the blend exactly.
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        for i in 0..LATENCY_WINDOW {
+            // Drive `a` past the window so its ring cursor is mid-stream.
+            a.record_us(10);
+            a.record_us(10 + (i % 3) as u64);
+            b.record_us(1000);
+        }
+        a.merge(&b);
+        // Fresh samples after the merge displace the OLDEST blended
+        // entries first: after exactly LATENCY_WINDOW fresh records the
+        // window holds only fresh samples.
+        for _ in 0..LATENCY_WINDOW {
+            a.record_us(77);
+        }
+        assert_eq!(a.percentile_us(0.0), 77);
+        assert_eq!(a.percentile_us(1.0), 77);
+        // And after HALF a window of fresh samples, both populations are
+        // present — the blend was overwritten from the oldest end, not
+        // wiped wholesale.
+        let mut c = LatencyStats::new();
+        let mut d = LatencyStats::new();
+        for _ in 0..LATENCY_WINDOW {
+            c.record_us(10);
+            d.record_us(1000);
+        }
+        c.merge(&d);
+        for _ in 0..LATENCY_WINDOW / 2 {
+            c.record_us(77);
+        }
+        assert_eq!(c.percentile_us(1.0), 1000, "newest blended samples must survive");
+        assert_eq!(c.percentile_us(0.0), 10, "not-yet-overwritten blend must survive");
+    }
+
+    #[test]
     fn batch_stats_bounded_and_exact() {
         let mut b = BatchStats::new();
         for i in 0..(BATCH_WINDOW * 4) {
@@ -316,11 +474,26 @@ mod tests {
     }
 
     #[test]
+    fn shard_stats_summary_renders() {
+        let mut s = ShardStats::default();
+        s.batches.record(4);
+        s.groups.record(2);
+        s.groups.record(2);
+        s.stolen_groups = 1;
+        s.stolen_requests = 2;
+        let out = s.summary();
+        assert!(out.contains("mean_group=2.00"), "{out}");
+        assert!(out.contains("stolen_groups=1"), "{out}");
+    }
+
+    #[test]
     fn variant_stats_summary_renders() {
         let mut v = VariantStats::default();
         v.requests = 3;
         v.total.record_us(100);
+        v.batches.record(3);
         let s = v.summary();
         assert!(s.contains("requests=3"));
+        assert!(s.contains("mean_group=3.00"));
     }
 }

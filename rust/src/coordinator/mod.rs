@@ -7,8 +7,9 @@ pub mod registry;
 pub mod rollout;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
-pub use metrics::{BatchStats, LatencyStats, VariantStats};
+pub use metrics::{BatchStats, LatencyStats, ShardStats, VariantStats};
 pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
 pub use scheduler::{
@@ -16,6 +17,8 @@ pub use scheduler::{
     register_a8_variant, register_static_scale_variant, QuantJobReport,
 };
 pub use server::{
-    estimated_queue_wait_us, AdmissionControl, PolicyServer, ResponseHandle, ServeConfig,
-    ServeError, ServeRequest, ServeResponse, VariantSelector,
+    estimated_queue_wait_us, estimated_shard_wait_us, per_request_service_us, AdmissionControl,
+    PolicyServer, ResponseHandle, ServeConfig, ServeError, ServeRequest, ServeResponse,
+    VariantSelector,
 };
+pub use shard::shard_for;

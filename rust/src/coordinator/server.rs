@@ -18,6 +18,26 @@
 //! action-policy serving where each request is one policy step with a
 //! tight latency budget.
 //!
+//! Dispatch is **variant-affine sharded** (see [`crate::coordinator::shard`]):
+//! requests route by variant hash to one of `shards` queues, each with its
+//! own lock, and workers hold their batch-collection windows open without
+//! holding ANY lock — killing the convoy where every worker serialized on
+//! one `Mutex<Receiver>` for the whole `max_wait` window. Idle workers
+//! steal whole same-variant groups from the deepest foreign shard, and
+//! admission is routed: per-shard depth priced by per-variant service
+//! rates, so a slow variant's backlog no longer sheds a fast variant's
+//! requests. Batched forwards co-plan with the kernel thread pool
+//! ([`crate::util::threadpool::with_thread_cap`]): N concurrent
+//! dispatchers each take ~1/N of the pool's row-parallel width instead of
+//! all requesting full width and serializing on the idle-count heuristic.
+//!
+//! Bit-parity: stochastic decodes are keyed by each request's own
+//! submission `seq` ([`crate::util::rng::Rng::with_stream`]) and every
+//! kernel is bit-identical across thread counts, so WHICH shard, worker,
+//! window, or steal served a request never changes its actions — sharded
+//! serving is byte-identical to the sequential path, pinned by tests
+//! across worker and shard counts.
+//!
 //! The contract is typed end-to-end: responses carry which variant served
 //! the request and the queue/compute split; failures surface as
 //! [`ServeError`] — submitting to a stopped server is an error, never a
@@ -25,21 +45,29 @@
 //! clients that pipeline requests.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::metrics::{BatchStats, LatencyStats, VariantStats};
+use crate::coordinator::metrics::{BatchStats, LatencyStats, ShardStats, VariantStats};
 use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::shard::{shard_for, ShardQueue, WorkSignal};
 use crate::model::vla::ObsInput;
 use crate::model::MiniVla;
 use crate::sim::observe::Observation;
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub workers: usize,
+    /// Variant-affine dispatch shards. 0 = auto: one shard per worker.
+    /// With more workers than shards, shards get multiple collectors;
+    /// with more shards than workers, each worker adopts the orphaned
+    /// shards congruent to its index (plus work stealing), so every
+    /// shard always drains.
+    pub shards: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
     /// Deadline-aware admission control (see [`AdmissionControl`]).
@@ -50,6 +78,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             workers: 2,
+            shards: 0,
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             admission: AdmissionControl::Off,
@@ -67,20 +96,22 @@ pub enum AdmissionControl {
     /// Never shed at submit (deadline triage at dispatch only).
     #[default]
     Off,
-    /// Shed when queue depth × observed mean compute implies a miss:
-    /// est_wait = depth · mean_compute / (workers · mean_batch), using the
-    /// request's variant's compute statistics. Requests without deadlines
-    /// are always admitted; so is everything until the variant has served
-    /// `min_samples` requests (no shedding on cold stats).
+    /// Shed when the ROUTED estimate implies a miss: the depth of the
+    /// request's own shard, priced per queued variant at that variant's
+    /// observed per-request service rate (mean compute ÷ mean same-variant
+    /// group size), divided by the shard's live collector count. Requests
+    /// without deadlines are always admitted; so is everything until the
+    /// REQUEST's variant has `min_samples` served requests (no shedding on
+    /// cold stats — cold co-tenants in the mix are priced at the
+    /// requester's rate).
     DeadlineAware { min_samples: u64 },
 }
 
-/// The admission estimate: expected queue wait (µs) for a request arriving
-/// behind `depth` undispatched requests, given the observed mean per-batch
-/// compute, worker count and mean batch size. Mean compute is floored at
-/// 1 µs — compute is never free, and the floor keeps sub-µs models from
-/// disabling admission entirely. Pure, so the shed predicate is unit-
-/// testable without racing a live server.
+/// The legacy global admission estimate: expected queue wait (µs) for a
+/// request arriving behind `depth` undispatched requests, given one
+/// global mean compute / mean batch. Kept as the single-variant
+/// degenerate form of [`estimated_shard_wait_us`] (identical when the
+/// shard holds one variant) and for the bench's homogeneous reporting.
 pub fn estimated_queue_wait_us(
     depth: usize,
     mean_compute_us: f64,
@@ -88,6 +119,24 @@ pub fn estimated_queue_wait_us(
     mean_batch: f64,
 ) -> f64 {
     depth as f64 * mean_compute_us.max(1.0) / (workers.max(1) as f64 * mean_batch.max(1.0))
+}
+
+/// Per-request service cost (µs) of one variant: observed mean batched-
+/// forward compute divided by the variant's OWN mean same-variant group
+/// size — not the global mean batch, which let a fast variant's big
+/// batches mask a slow variant's cost (and vice versa). Compute is
+/// floored at 1 µs so sub-µs models can't disable admission.
+pub fn per_request_service_us(mean_compute_us: f64, mean_group: f64) -> f64 {
+    mean_compute_us.max(1.0) / mean_group.max(1.0)
+}
+
+/// The routed admission estimate: expected wait (µs) behind a shard whose
+/// pending mix is `(count, per_request_service_us)` per variant, drained
+/// by `workers` collectors. Pure, so the shed predicate is unit-testable
+/// without racing a live server.
+pub fn estimated_shard_wait_us(pending: &[(f64, f64)], workers: usize) -> f64 {
+    pending.iter().map(|&(count, per_req_us)| count * per_req_us).sum::<f64>()
+        / workers.max(1) as f64
 }
 
 /// Which registered variant a request asks for.
@@ -164,12 +213,12 @@ pub enum ServeError {
     WorkerDropped,
     /// The request out-waited its deadline in the queue.
     DeadlineExceeded { queued: Duration },
-    /// Shed at submit by deadline-aware admission: the queue depth times
-    /// the observed mean compute predicted a deadline miss.
-    /// `retry_after_us` is the predicted excess wait past the deadline —
-    /// the queue drains roughly linearly, so a client that backs off this
-    /// long before resubmitting should find an admittable queue instead of
-    /// hot-looping on `Overloaded`.
+    /// Shed at submit by deadline-aware admission: the routed per-shard
+    /// estimate predicted a deadline miss. `retry_after_us` is the
+    /// predicted excess wait past the deadline — the shard drains roughly
+    /// linearly, so a client that backs off this long before resubmitting
+    /// should find an admittable queue instead of hot-looping on
+    /// `Overloaded`.
     Overloaded { queue_depth: usize, estimated_wait: Duration, retry_after_us: u64 },
     /// The observation's shape doesn't match the serving interface.
     InvalidObservation { got: String },
@@ -202,16 +251,17 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-struct Request {
-    obs: Observation,
-    variant: String,
-    deadline: Option<Duration>,
-    submitted: Instant,
+pub(crate) struct Request {
+    pub(crate) obs: Observation,
+    pub(crate) variant: String,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) submitted: Instant,
     /// Global submission sequence number: the request's own noise-stream
     /// id, so stochastic decodes (diffusion head) never depend on which
-    /// requests happened to ride in the same batch.
-    seq: u64,
-    reply: Sender<Result<ServeResponse, ServeError>>,
+    /// requests happened to ride in the same batch — or which shard,
+    /// window, or steal dispatched them.
+    pub(crate) seq: u64,
+    pub(crate) reply: Sender<Result<ServeResponse, ServeError>>,
 }
 
 /// Handle to an in-flight request from [`PolicyServer::submit_async`].
@@ -245,44 +295,55 @@ impl ResponseHandle {
 pub struct PolicyServer {
     registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
-    tx: Mutex<Option<Sender<Request>>>,
+    n_shards: usize,
+    shards: Arc<Vec<ShardQueue>>,
+    signal: Arc<WorkSignal>,
     next_seq: AtomicU64,
-    /// Requests submitted but not yet pulled into a dispatched batch —
-    /// the depth term of deadline-aware admission.
-    queue_depth: Arc<std::sync::atomic::AtomicUsize>,
     /// Workers whose index is ≥ this value retire at their next idle tick
     /// or batch boundary (never mid-batch, so no reply is ever dropped).
-    target_workers: Arc<std::sync::atomic::AtomicUsize>,
+    target_workers: Arc<AtomicUsize>,
     /// Workers currently running their loop; the service-rate term of
     /// deadline-aware admission, so estimates track worker loss.
-    live_workers: Arc<std::sync::atomic::AtomicUsize>,
+    live_workers: Arc<AtomicUsize>,
     variant_stats: Arc<Mutex<HashMap<String, VariantStats>>>,
     batch_stats: Arc<Mutex<BatchStats>>,
+    shard_stats: Arc<Vec<Mutex<ShardStats>>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
-/// How long an idle worker blocks on the queue before re-checking the
-/// shrink target. Bounds worker-loss reaction time; long enough that the
-/// re-lock cost is noise next to any real batch.
+/// How long an idle worker parks on the work signal before re-checking
+/// the shrink target and foreign-shard steal opportunities. Bounds
+/// worker-loss reaction time; long enough that the re-scan cost is noise
+/// next to any real batch.
 const WORKER_IDLE_TICK: Duration = Duration::from_millis(2);
+
+/// Batched forwards currently executing across every server in the
+/// process — they all share ONE global kernel pool, so each dispatcher
+/// caps its row-parallel fan-out at ~pool/active instead of requesting
+/// full width and serializing on the pool's idle-count heuristic.
+static ACTIVE_DISPATCHERS: AtomicUsize = AtomicUsize::new(0);
 
 impl PolicyServer {
     pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Self {
-        let (tx, rx) = channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
+        let n_workers = cfg.workers.max(1);
+        let n_shards = if cfg.shards == 0 { n_workers } else { cfg.shards };
+        let shards: Arc<Vec<ShardQueue>> =
+            Arc::new((0..n_shards).map(|_| ShardQueue::new()).collect());
+        let shard_stats: Arc<Vec<Mutex<ShardStats>>> =
+            Arc::new((0..n_shards).map(|_| Mutex::new(ShardStats::default())).collect());
+        let signal = Arc::new(WorkSignal::new());
         let variant_stats = Arc::new(Mutex::new(HashMap::new()));
         let batch_stats = Arc::new(Mutex::new(BatchStats::new()));
-        let queue_depth = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let n_workers = cfg.workers.max(1);
-        let target_workers = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
-        let live_workers = Arc::new(std::sync::atomic::AtomicUsize::new(n_workers));
+        let target_workers = Arc::new(AtomicUsize::new(n_workers));
+        let live_workers = Arc::new(AtomicUsize::new(n_workers));
         let mut handles = Vec::new();
         for idx in 0..n_workers {
-            let rx = Arc::clone(&rx);
+            let shards = Arc::clone(&shards);
+            let signal = Arc::clone(&signal);
             let registry = Arc::clone(&registry);
             let variant_stats = Arc::clone(&variant_stats);
             let batch_stats = Arc::clone(&batch_stats);
-            let queue_depth = Arc::clone(&queue_depth);
+            let shard_stats = Arc::clone(&shard_stats);
             let target_workers = Arc::clone(&target_workers);
             let live_workers = Arc::clone(&live_workers);
             let cfg = cfg.clone();
@@ -290,11 +351,12 @@ impl PolicyServer {
                 worker_loop(
                     idx,
                     &cfg,
-                    &rx,
+                    &shards,
+                    &signal,
                     &registry,
                     &variant_stats,
                     &batch_stats,
-                    &queue_depth,
+                    &shard_stats,
                     &target_workers,
                 );
                 live_workers.fetch_sub(1, Ordering::Relaxed);
@@ -303,13 +365,15 @@ impl PolicyServer {
         PolicyServer {
             registry,
             cfg,
-            tx: Mutex::new(Some(tx)),
+            n_shards,
+            shards,
+            signal,
             next_seq: AtomicU64::new(0),
-            queue_depth,
             target_workers,
             live_workers,
             variant_stats,
             batch_stats,
+            shard_stats,
             handles: Mutex::new(handles),
         }
     }
@@ -317,8 +381,9 @@ impl PolicyServer {
     /// Worker-loss drill / degraded operation: retire workers down to
     /// `target` (floored at 1 — the server never becomes headless). A
     /// retiring worker finishes its in-flight batch and replies to every
-    /// request in it; shrink can only lose *capacity*, never requests.
-    /// Growing back is not supported — restart the server instead.
+    /// request in it; shrink can only lose *capacity*, never requests —
+    /// survivors adopt the retired workers' shards (affine re-stride plus
+    /// stealing). Growing back is not supported — restart the server.
     pub fn shrink_workers(&self, target: usize) {
         let target = target.clamp(1, self.cfg.workers.max(1));
         self.target_workers.fetch_min(target, Ordering::Relaxed);
@@ -330,40 +395,78 @@ impl PolicyServer {
         self.live_workers.load(Ordering::Relaxed)
     }
 
-    /// Requests submitted but not yet pulled into a dispatched batch.
-    pub fn queue_depth(&self) -> usize {
-        self.queue_depth.load(Ordering::Relaxed)
+    /// Dispatch shards (resolved: `cfg.shards`, or the worker count when
+    /// configured 0/auto).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
     }
 
-    /// Deadline-aware admission gate: `Err(Overloaded)` when the observed
-    /// service rate predicts `deadline` cannot be met from the back of the
-    /// current queue. Conservative on cold stats — sheds nothing until the
-    /// variant has `min_samples` served requests.
+    /// Requests submitted but not yet past a closed batch-collection
+    /// window, summed over shards.
+    pub fn queue_depth(&self) -> usize {
+        self.shards.iter().map(|s| s.depth()).sum()
+    }
+
+    /// Live collectors responsible for a shard. Workers are affine —
+    /// worker `idx` homes on shard `idx % n_shards` — and when fewer
+    /// workers than shards are live, each survivor adopts the shards
+    /// congruent to its index, so the count is floored at 1 (stealing
+    /// drains any shard eventually regardless).
+    fn shard_workers(&self, shard: usize) -> usize {
+        let live = self.live_workers().max(1);
+        if live >= self.n_shards {
+            (0..live).filter(|i| i % self.n_shards == shard).count().max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Deadline-aware admission gate: `Err(Overloaded)` when the ROUTED
+    /// estimate — the request's own shard's pending mix, priced at
+    /// per-variant service rates — predicts `deadline` cannot be met from
+    /// the back of that shard's queue. Other shards' backlogs are
+    /// invisible here: a slow variant drowning its own shard no longer
+    /// sheds requests for a fast variant on an idle shard. Conservative
+    /// on cold stats — sheds nothing until the request's variant has
+    /// `min_samples` served requests.
     fn admit(&self, variant: &str, deadline: Duration) -> Result<(), ServeError> {
         let AdmissionControl::DeadlineAware { min_samples } = self.cfg.admission else {
             return Ok(());
         };
-        let depth = self.queue_depth.load(Ordering::Relaxed);
+        let shard = shard_for(variant, self.n_shards);
+        let depth = self.shards[shard].depth();
         if depth == 0 {
             return Ok(());
         }
-        let mean_compute_us = {
+        let pending = self.shards[shard].pending_snapshot();
+        let est_us = {
             let g = self.variant_stats.lock().unwrap();
-            match g.get(variant) {
-                Some(v) if v.compute.count() as u64 >= min_samples => v.compute.mean_us(),
+            let own = match g.get(variant) {
+                Some(v) if v.compute.count() as u64 >= min_samples => v,
                 _ => return Ok(()),
-            }
+            };
+            let own_rate = per_request_service_us(own.compute.mean_us(), own.batches.mean());
+            let mix: Vec<(f64, f64)> = pending
+                .iter()
+                .map(|(name, count)| {
+                    let rate = match g.get(name.as_str()) {
+                        Some(v) if v.compute.count() as u64 >= min_samples => {
+                            per_request_service_us(v.compute.mean_us(), v.batches.mean())
+                        }
+                        // A cold co-tenant is priced at the requester's
+                        // rate — better than silently pricing it free.
+                        _ => own_rate,
+                    };
+                    (*count as f64, rate)
+                })
+                .collect();
+            estimated_shard_wait_us(&mix, self.shard_workers(shard))
         };
-        let mean_batch = self.batch_stats.lock().unwrap().mean();
-        // Live workers, not the configured count: after a worker-loss
-        // drill the service rate really is lower and estimates must say so.
-        let workers = self.live_workers().max(1);
-        let est_us = estimated_queue_wait_us(depth, mean_compute_us, workers, mean_batch);
         let deadline_us = deadline.as_secs_f64() * 1e6;
         if est_us > deadline_us {
             let mut g = self.variant_stats.lock().unwrap();
             g.entry(variant.to_string()).or_default().admission_sheds += 1;
-            // The queue drains ~linearly at the estimated service rate, so
+            // The shard drains ~linearly at the estimated service rate, so
             // once the predicted excess past the deadline has elapsed the
             // same deadline should clear admission. Floored at 1 µs so a
             // backoff loop always makes forward progress.
@@ -421,11 +524,13 @@ impl PolicyServer {
                 ),
             });
         }
-        // Deadline-aware admission: shed at the door when the queue
-        // already implies a miss (cheaper than queueing + triaging).
+        // Routed deadline-aware admission: shed at the door when the
+        // request's OWN shard already implies a miss (cheaper than
+        // queueing + triaging).
         if let Some(d) = req.deadline {
             self.admit(&variant, d)?;
         }
+        let shard = shard_for(&variant, self.n_shards);
         let (reply_tx, reply_rx) = channel();
         let inner = Request {
             obs: req.obs,
@@ -435,23 +540,13 @@ impl PolicyServer {
             seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
             reply: reply_tx,
         };
-        // Count the request BEFORE it can reach a worker: a worker that
-        // dequeued it must always observe our increment, or its decrement
-        // would saturate at 0 and leave the depth permanently inflated
-        // (spurious Overloaded sheds on an idle server). A failed send
-        // takes the increment back — the request never queued.
-        self.queue_depth.fetch_add(1, Ordering::Relaxed);
-        let sent = {
-            let guard = self.tx.lock().unwrap();
-            match guard.as_ref() {
-                Some(tx) => tx.send(inner).is_ok(),
-                None => false,
-            }
-        };
-        if !sent {
-            self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        // Push counts the request into the shard's admission depth under
+        // the shard lock (no separate increment to roll back); a closed
+        // shard hands the request back — the server has stopped.
+        if self.shards[shard].push(inner).is_err() {
             return Err(ServeError::Stopped);
         }
+        self.signal.notify();
         Ok(ResponseHandle { rx: reply_rx })
     }
 
@@ -484,12 +579,37 @@ impl PolicyServer {
         self.batch_stats.lock().unwrap().mean()
     }
 
-    /// Shut down: close the submit queue and join workers. Explicit,
-    /// idempotent, and safe to race with in-flight `submit` calls — later
-    /// submits get [`ServeError::Stopped`] instead of panicking.
+    /// Mean same-variant group size over every dispatched request — the
+    /// number the batched packed GEMM actually sees (a mixed batch of 8
+    /// split 3 ways computes like three small batches, not one big one).
+    pub fn mean_group_size(&self) -> f64 {
+        let g = self.variant_stats.lock().unwrap();
+        let (mut requests, mut groups) = (0u64, 0u64);
+        for v in g.values() {
+            requests += v.batches.requests();
+            groups += v.batches.count();
+        }
+        if groups == 0 {
+            0.0
+        } else {
+            requests as f64 / groups as f64
+        }
+    }
+
+    /// Per-shard dispatch statistics, indexed by shard.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shard_stats.iter().map(|s| s.lock().unwrap().clone()).collect()
+    }
+
+    /// Shut down: close every shard and join workers. Requests already
+    /// accepted are still drained and answered. Explicit, idempotent, and
+    /// safe to race with in-flight `submit` calls — later submits get
+    /// [`ServeError::Stopped`] instead of panicking.
     pub fn shutdown(&self) {
-        let tx = self.tx.lock().unwrap().take();
-        drop(tx);
+        for s in self.shards.iter() {
+            s.close();
+        }
+        self.signal.notify();
         let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
@@ -507,128 +627,223 @@ impl Drop for PolicyServer {
 fn worker_loop(
     idx: usize,
     cfg: &ServeConfig,
-    rx: &Mutex<Receiver<Request>>,
+    shards: &[ShardQueue],
+    signal: &WorkSignal,
     registry: &ModelRegistry,
     variant_stats: &Mutex<HashMap<String, VariantStats>>,
     batch_stats: &Mutex<BatchStats>,
-    queue_depth: &std::sync::atomic::AtomicUsize,
-    target_workers: &std::sync::atomic::AtomicUsize,
+    shard_stats: &[Mutex<ShardStats>],
+    target_workers: &AtomicUsize,
 ) {
+    let n_shards = shards.len();
     loop {
         // Retirement check between batches only: a retiring worker never
-        // abandons requests it already dequeued.
-        if idx >= target_workers.load(Ordering::Relaxed) {
+        // abandons requests it already pulled.
+        let target = target_workers.load(Ordering::Relaxed);
+        if idx >= target {
             break;
         }
-        // Collect a batch: wait for the first request (bounded by the idle
-        // tick so the shrink target is re-checked — and the rx lock
-        // RELEASED, letting the surviving workers rotate in), then drain
-        // up to max_batch within max_wait.
-        let mut batch: Vec<Request> = Vec::new();
-        {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(WORKER_IDLE_TICK) {
-                Ok(r) => batch.push(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        // Affine serve set: worker idx homes on shard idx % n_shards.
+        // When fewer workers than shards are live (small configs, or
+        // after a worker-loss drill), each survivor adopts the shards
+        // congruent to its index — every shard keeps an owner, so a hot
+        // orphan can't starve behind busy foreign owners' steal checks.
+        let stride = target.min(n_shards).max(1);
+        let seen = signal.generation();
+        let mut opened: Option<(usize, Vec<Request>)> = None;
+        let mut s = idx % stride;
+        while s < n_shards {
+            let got = shards[s].pop_upto(cfg.max_batch);
+            if !got.is_empty() {
+                opened = Some((s, got));
+                break;
             }
+            s += stride;
+        }
+        let mut stolen = false;
+        if opened.is_none() {
+            // Idle: steal the whole front same-variant group from the
+            // deepest foreign shard. Whole groups only — a steal must
+            // never dilute anyone's same-variant batch density.
+            let mut victim = None;
+            let mut best = 0usize;
+            for v in 0..n_shards {
+                if v % stride == idx % stride {
+                    continue;
+                }
+                let len = shards[v].queue_len();
+                if len > best {
+                    best = len;
+                    victim = Some(v);
+                }
+            }
+            if let Some(v) = victim {
+                let group = shards[v].steal_group(cfg.max_batch);
+                if !group.is_empty() {
+                    opened = Some((v, group));
+                    stolen = true;
+                }
+            }
+        }
+        let (src, mut batch) = match opened {
+            Some(x) => x,
+            None => {
+                // Nothing anywhere. After close no new work can appear,
+                // so closed-and-drained everywhere is a monotone exit
+                // condition; otherwise park until a submit bumps the
+                // signal (or the idle tick re-checks the shrink target).
+                if shards.iter().all(|sh| sh.closed_and_empty()) {
+                    break;
+                }
+                signal.wait_past(seen, WORKER_IDLE_TICK);
+                continue;
+            }
+        };
+        if !stolen {
+            // Hold the batch window open WITHOUT holding any lock: other
+            // workers keep collecting concurrently from this and every
+            // other shard — this is the convoy fix. Stolen groups skip
+            // the window entirely (they dispatch as-is).
             let wait_deadline = Instant::now() + cfg.max_wait;
+            let mut seen = signal.generation();
             while batch.len() < cfg.max_batch {
+                let more = shards[src].pop_upto(cfg.max_batch - batch.len());
+                let progressed = !more.is_empty();
+                batch.extend(more);
+                if batch.len() >= cfg.max_batch {
+                    break;
+                }
+                if progressed {
+                    continue;
+                }
                 let left = wait_deadline.saturating_duration_since(Instant::now());
                 if left.is_zero() {
                     break;
                 }
-                match guard.recv_timeout(left) {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
-                }
+                seen = signal.wait_past(seen, left);
+            }
+            // Window closed: these requests leave the admission depth.
+            // (A stolen group's depth was released at steal time.)
+            shards[src].finish_batch(batch.iter().map(|r| r.variant.as_str()));
+        }
+        batch_stats.lock().unwrap().record(batch.len());
+        {
+            let mut ss = shard_stats[src].lock().unwrap();
+            ss.batches.record(batch.len());
+            if stolen {
+                ss.stolen_groups += 1;
+                ss.stolen_requests += batch.len() as u64;
             }
         }
-        // These requests are now dispatching — they no longer queue behind
-        // the door for admission purposes. Every dequeued request's
-        // increment happened before its send (see `submit_async`), so the
-        // counter can never underflow here.
-        queue_depth.fetch_sub(batch.len(), Ordering::Relaxed);
-        batch_stats.lock().unwrap().record(batch.len());
 
         // Group by variant, preserving arrival order within each group.
+        // Under variant-affine routing most batches are one group already;
+        // mixed groups appear when variants collide on a shard.
         let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
-        for req in batch {
+        for req in batch.drain(..) {
             match groups.iter_mut().find(|(name, _)| *name == req.variant) {
                 Some((_, g)) => g.push(req),
                 None => groups.push((req.variant.clone(), vec![req])),
             }
         }
-
         for (name, reqs) in groups {
-            // Per-group dispatch stamp: in a mixed batch, later groups
-            // queue behind earlier groups' compute — their queue time and
-            // deadline triage must include it.
-            let group_dispatch = Instant::now();
-            // Deadline triage before spending compute.
-            let mut live: Vec<Request> = Vec::new();
-            for req in reqs {
-                let queued = group_dispatch.saturating_duration_since(req.submitted);
-                if let Some(d) = req.deadline {
-                    if queued > d {
-                        let mut g = variant_stats.lock().unwrap();
-                        g.entry(name.clone()).or_default().deadline_misses += 1;
-                        let _ = req.reply.send(Err(ServeError::DeadlineExceeded { queued }));
-                        continue;
-                    }
-                }
-                live.push(req);
-            }
-            if live.is_empty() {
+            shard_stats[src].lock().unwrap().groups.record(reqs.len());
+            dispatch_group(&name, reqs, registry, variant_stats);
+        }
+    }
+}
+
+/// Triage, execute, and reply to one same-variant group through a single
+/// batched forward.
+fn dispatch_group(
+    name: &str,
+    reqs: Vec<Request>,
+    registry: &ModelRegistry,
+    variant_stats: &Mutex<HashMap<String, VariantStats>>,
+) {
+    // Per-group dispatch stamp: in a mixed batch, later groups queue
+    // behind earlier groups' compute — their queue time and deadline
+    // triage must include it.
+    let group_dispatch = Instant::now();
+    // Deadline triage before spending compute.
+    let mut live: Vec<Request> = Vec::new();
+    for req in reqs {
+        let queued = group_dispatch.saturating_duration_since(req.submitted);
+        if let Some(d) = req.deadline {
+            if queued > d {
+                let mut g = variant_stats.lock().unwrap();
+                g.entry(name.to_string()).or_default().deadline_misses += 1;
+                let _ = req.reply.send(Err(ServeError::DeadlineExceeded { queued }));
                 continue;
             }
-            // The variant can have been replaced since submit; a removal
-            // cannot happen (the registry only replaces), but guard anyway.
-            let model = match registry.get(&name) {
-                Some(m) => m,
-                None => {
-                    for req in live {
-                        let _ = req.reply.send(Err(ServeError::UnknownVariant(name.clone())));
-                    }
-                    continue;
-                }
-            };
-            // One batched forward for the whole same-variant group: the
-            // packed variants execute the multi-token packed GEMM here.
-            let t0 = Instant::now();
-            let inputs: Vec<ObsInput> = live
-                .iter()
-                .map(|r| ObsInput {
-                    visual_raw: &r.obs.visual_raw,
-                    instr_id: r.obs.instr_id,
-                    proprio: &r.obs.proprio,
-                })
-                .collect();
-            let feats = model.features_batch(&inputs);
-            drop(inputs);
-            // Noise streams keyed by each request's own submission seq:
-            // batch composition never changes a served stochastic action.
-            let mut rngs: Vec<Rng> =
-                live.iter().map(|r| Rng::with_stream(0x5E4E_D1F, r.seq)).collect();
-            let actions = model.decode_batch(&feats, &mut rngs);
-            let compute = t0.elapsed();
-
-            let mut g = variant_stats.lock().unwrap();
-            let stats = g.entry(name.clone()).or_default();
-            for (req, act) in live.into_iter().zip(actions) {
-                let queue_time = group_dispatch.saturating_duration_since(req.submitted);
-                stats.requests += 1;
-                stats.queue.record(queue_time);
-                stats.compute.record(compute);
-                stats.total.record(req.submitted.elapsed());
-                let _ = req.reply.send(Ok(ServeResponse {
-                    actions: act,
-                    variant_served: name.clone(),
-                    queue_time,
-                    compute_time: compute,
-                }));
-            }
         }
+        live.push(req);
+    }
+    if live.is_empty() {
+        return;
+    }
+    // The variant can have been replaced since submit; a removal cannot
+    // happen (the registry only replaces), but guard anyway.
+    let model = match registry.get(name) {
+        Some(m) => m,
+        None => {
+            for req in live {
+                let _ = req.reply.send(Err(ServeError::UnknownVariant(name.to_string())));
+            }
+            return;
+        }
+    };
+    // One batched forward for the whole same-variant group: the packed
+    // variants execute the multi-token packed GEMM here. Pool-aware:
+    // with N groups in flight process-wide, each forward takes ~1/N of
+    // the kernel pool's row-parallel width — co-planned parallelism
+    // instead of N full-width requests serializing on the pool. Capping
+    // never changes results (kernels are bit-identical at any width).
+    struct Slot;
+    impl Drop for Slot {
+        fn drop(&mut self) {
+            ACTIVE_DISPATCHERS.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    let active = ACTIVE_DISPATCHERS.fetch_add(1, Ordering::Relaxed) + 1;
+    let _slot = Slot;
+    let cap = threadpool::pool_threads().div_ceil(active);
+    let t0 = Instant::now();
+    let actions = threadpool::with_thread_cap(cap, || {
+        let inputs: Vec<ObsInput> = live
+            .iter()
+            .map(|r| ObsInput {
+                visual_raw: &r.obs.visual_raw,
+                instr_id: r.obs.instr_id,
+                proprio: &r.obs.proprio,
+            })
+            .collect();
+        let feats = model.features_batch(&inputs);
+        // Noise streams keyed by each request's own submission seq: batch
+        // composition never changes a served stochastic action.
+        let mut rngs: Vec<Rng> =
+            live.iter().map(|r| Rng::with_stream(0x5E4E_D1F, r.seq)).collect();
+        model.decode_batch(&feats, &mut rngs)
+    });
+    let compute = t0.elapsed();
+
+    let mut g = variant_stats.lock().unwrap();
+    let stats = g.entry(name.to_string()).or_default();
+    // The variant's own served-group size: denominator of its
+    // per-request service rate in routed admission.
+    stats.batches.record(live.len());
+    for (req, act) in live.into_iter().zip(actions) {
+        let queue_time = group_dispatch.saturating_duration_since(req.submitted);
+        stats.requests += 1;
+        stats.queue.record(queue_time);
+        stats.compute.record(compute);
+        stats.total.record(req.submitted.elapsed());
+        let _ = req.reply.send(Ok(ServeResponse {
+            actions: act,
+            variant_served: name.to_string(),
+            queue_time,
+            compute_time: compute,
+        }));
     }
 }
 
@@ -764,6 +979,69 @@ mod tests {
     }
 
     #[test]
+    fn more_shards_than_workers_still_serves_every_shard() {
+        // workers=1, shards=4: the lone worker adopts every shard
+        // (affine re-stride), so liveness never depends on stealing.
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig { workers: 1, shards: 4, ..Default::default() },
+        );
+        assert_eq!(server.n_shards(), 4);
+        for _ in 0..6 {
+            let rsp = server.submit(ServeRequest::new(obs.clone())).unwrap();
+            assert_eq!(rsp.variant_served, "dense");
+        }
+        assert_eq!(server.latency_stats().count(), 6);
+        assert_eq!(server.shard_stats().len(), 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shard_queue_steal_takes_whole_front_group_and_releases_depth() {
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let mk = |variant: &str, seq: u64| {
+            let (reply, _rx) = channel();
+            Request {
+                obs: obs.clone(),
+                variant: variant.to_string(),
+                deadline: None,
+                submitted: Instant::now(),
+                seq,
+                reply,
+            }
+        };
+        let q = ShardQueue::new();
+        q.push(mk("x", 0)).map_err(|_| ()).unwrap();
+        q.push(mk("y", 1)).map_err(|_| ()).unwrap();
+        q.push(mk("x", 2)).map_err(|_| ()).unwrap();
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.queue_len(), 3);
+        let mut pending = q.pending_snapshot();
+        pending.sort();
+        assert_eq!(pending, vec![("x".to_string(), 2), ("y".to_string(), 1)]);
+        // Steal = the WHOLE front group: both "x" requests, arrival order,
+        // skipping the interleaved "y"; depth released at steal time.
+        let group = q.steal_group(8);
+        assert_eq!(group.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(group.iter().all(|r| r.variant == "x"));
+        assert_eq!(q.depth(), 1);
+        // Popping into a window does NOT release depth; finish_batch does.
+        let batch = q.pop_upto(8);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.depth(), 1);
+        q.finish_batch(batch.iter().map(|r| r.variant.as_str()));
+        assert_eq!(q.depth(), 0);
+        assert!(q.pending_snapshot().is_empty());
+        // Closed shards refuse new work (the caller maps this to Stopped).
+        q.close();
+        assert!(q.push(mk("x", 3)).is_err());
+        assert!(q.closed_and_empty());
+    }
+
+    #[test]
     fn unknown_variant_is_an_error_not_a_panic() {
         let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
         let obs = sample_obs(&model);
@@ -817,6 +1095,25 @@ mod tests {
     }
 
     #[test]
+    fn routed_admission_estimate_formula() {
+        // Per-variant service rate: compute ÷ the variant's OWN group
+        // size, floored exactly like the legacy formula.
+        assert_eq!(per_request_service_us(100.0, 4.0), 25.0);
+        assert_eq!(per_request_service_us(0.0, 4.0), 0.25); // compute floor
+        assert_eq!(per_request_service_us(100.0, 0.0), 100.0); // group floor
+        // The shard estimate prices each variant at its own rate and
+        // divides by the shard's collectors.
+        assert_eq!(estimated_shard_wait_us(&[], 2), 0.0);
+        assert_eq!(estimated_shard_wait_us(&[(8.0, 25.0)], 2), 100.0);
+        assert_eq!(estimated_shard_wait_us(&[(8.0, 25.0), (2.0, 400.0)], 2), 500.0);
+        assert_eq!(estimated_shard_wait_us(&[(4.0, 1.0)], 0), 4.0); // clamped divisor
+        // Single-variant shards reduce EXACTLY to the legacy estimate.
+        let legacy = estimated_queue_wait_us(8, 100.0, 2, 4.0);
+        let routed = estimated_shard_wait_us(&[(8.0, per_request_service_us(100.0, 4.0))], 2);
+        assert_eq!(legacy, routed);
+    }
+
+    #[test]
     fn admission_sheds_deadline_request_under_queue_pressure() {
         let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
         let obs = sample_obs(&model);
@@ -830,6 +1127,7 @@ mod tests {
                 max_batch: 64,
                 max_wait: Duration::from_millis(500),
                 admission: AdmissionControl::DeadlineAware { min_samples: 4 },
+                ..Default::default()
             },
         );
         // Cold stats: deadline-bearing requests are admitted (and served)
@@ -888,8 +1186,9 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert_eq!(server.live_workers(), 1);
-        // The survivor still serves, and shrink never goes below 1 —
-        // nor back up (growth is a restart, not a runtime op).
+        // The survivor still serves (adopting every shard), and shrink
+        // never goes below 1 — nor back up (growth is a restart, not a
+        // runtime op).
         server.shrink_workers(0);
         server.shrink_workers(8);
         for _ in 0..6 {

@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 /// PR index stamped into the machine-readable bench baseline — bump this
 /// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
 /// tooling keyed on the schema's own `pr` field stays truthful.
-pub const BENCH_PR: u32 = 7;
+pub const BENCH_PR: u32 = 8;
 
 pub struct PerfReport {
     /// Run parameters (recorded so `BENCH_*.json` baselines are
@@ -42,6 +42,9 @@ pub struct PerfReport {
     pub serve_p99_us: u64,
     pub serve_p999_us: u64,
     pub serve_qps: f64,
+    /// Dispatch shards of the serving-latency run (resolved: auto = one
+    /// per worker), recorded so baselines say which router shape ran.
+    pub serve_shards: usize,
     pub packed_gemv_gflops: f64,
     pub dense_gemv_gflops: f64,
     pub packed_gemm_gflops: f64,
@@ -101,6 +104,31 @@ pub struct PerfReport {
     /// f32 vs INT8 attention core on the W1A8 commit: end-to-end
     /// tokens/s and closed-form action MSE vs the FP policy.
     pub attn_rows: Vec<AttnPrecRow>,
+    /// Mixed-variant serving under the single-queue shape (`shards: 1`)
+    /// vs the variant-affine sharded shape, same worker count and
+    /// traffic — the dispatch-convoy fix the PR-8 baseline tracks via
+    /// mean same-variant group size and tail latency.
+    pub mixed_traffic: Vec<MixedTrafficRow>,
+}
+
+/// One row of the mixed-traffic table: 3-variant round-robin load from
+/// concurrent clients against one router shape.
+pub struct MixedTrafficRow {
+    /// `single-queue` (shards pinned to 1) or `sharded` (one per worker).
+    pub mode: String,
+    pub workers: usize,
+    pub shards: usize,
+    pub requests: usize,
+    pub responses_ok: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Mean dispatched batch size (any variant mix).
+    pub mean_batch: f64,
+    /// Mean same-variant group size — what the batched packed GEMM
+    /// actually sees; the number sharding exists to raise.
+    pub mean_group: f64,
+    /// Whole-group steals across all shards (0 in single-queue mode).
+    pub stolen_groups: u64,
 }
 
 /// One row of the SIMD-lane table: the forced-lane W1A8 GEMV/GEMM
@@ -148,12 +176,13 @@ impl PerfReport {
         format!(
             "quantization: {:.1} layers/s ({:.2} Mweights/s)\n\
              rollout:      {:.1} episodes/s\n\
-             serving:      p50={}us p99={}us p999={}us throughput={:.0} req/s\n\
+             serving:      p50={}us p99={}us p999={}us throughput={:.0} req/s shards={}\n\
              packed GEMV:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), memory ×{:.1} smaller\n\
              packed GEMM:  {:.2} GFLOP/s (dense {:.2} GFLOP/s), 16-token batch\n\
              {}\n\
              {}\n\
              end-to-end forward (dense twin vs 1-plane packed commit):\n\
+             {}\n\
              {}\n\
              {}\n\
              {}\n\
@@ -167,6 +196,7 @@ impl PerfReport {
             self.serve_p99_us,
             self.serve_p999_us,
             self.serve_qps,
+            self.serve_shards,
             self.packed_gemv_gflops,
             self.dense_gemv_gflops,
             self.packed_mem_ratio,
@@ -179,8 +209,34 @@ impl PerfReport {
             self.attn_table(),
             self.batched_serve_table(),
             self.exact_table(),
-            self.act_scale_table()
+            self.act_scale_table(),
+            self.mixed_table()
         )
+    }
+
+    /// The PR-8 mixed-traffic table: single-queue vs variant-affine
+    /// sharded dispatch under identical 3-variant concurrent load.
+    pub fn mixed_table(&self) -> String {
+        let mut s = String::from(
+            "mixed-variant serving (single-queue vs variant-affine sharded dispatch):\n\
+             \x20 mode          wrk shards    reqs     ok   p50us   p99us  mean_batch  mean_group  steals\n",
+        );
+        for r in &self.mixed_traffic {
+            s.push_str(&format!(
+                "  {:<12} {:>4} {:>6} {:>7} {:>6} {:>7} {:>7} {:>11.2} {:>11.2} {:>7}\n",
+                r.mode,
+                r.workers,
+                r.shards,
+                r.requests,
+                r.responses_ok,
+                r.p50_us,
+                r.p99_us,
+                r.mean_batch,
+                r.mean_group,
+                r.stolen_groups
+            ));
+        }
+        s
     }
 
     /// The PR-6 wide-lane table: the forced-lane W1A8 sliced kernel at
@@ -335,6 +391,27 @@ impl PerfReport {
                 )
             })
             .collect();
+        let mixed: Vec<String> = self
+            .mixed_traffic
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"mode\":\"{}\",\"workers\":{},\"shards\":{},\"requests\":{},\
+                     \"responses_ok\":{},\"p50_us\":{},\"p99_us\":{},\"mean_batch\":{},\
+                     \"mean_group\":{},\"stolen_groups\":{}}}",
+                    r.mode,
+                    r.workers,
+                    r.shards,
+                    r.requests,
+                    r.responses_ok,
+                    r.p50_us,
+                    r.p99_us,
+                    num(r.mean_batch),
+                    num(r.mean_group),
+                    r.stolen_groups
+                )
+            })
+            .collect();
         format!(
             "{{\n\
              \x20 \"schema\": \"hbvla-bench-v1\",\n\
@@ -344,7 +421,7 @@ impl PerfReport {
              \x20 \"smoke\": {},\n\
              \x20 \"quant\": {{\"layers_per_s\": {}, \"mweights_per_s\": {}}},\n\
              \x20 \"rollout_eps_per_s\": {},\n\
-             \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \"qps\": {}}},\n\
+             \x20 \"serve\": {{\"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \"qps\": {}, \"shards\": {}}},\n\
              \x20 \"gemv_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
              \x20 \"gemm_gflops\": {{\"dense\": {}, \"packed_f32\": {}, \"packed_i8_sliced\": {}, \"packed_i8_extract\": {}}},\n\
              \x20 \"simd_lane_active\": \"{}\",\n\
@@ -355,7 +432,8 @@ impl PerfReport {
              \x20 \"attn_precision\": [{}],\n\
              \x20 \"batched_serve\": [{}],\n\
              \x20 \"hbvla_deploy\": {{\"repacked_tok_s\": {}, \"exact_tok_s\": {}, \"repacked_bytes\": {}, \"exact_bytes\": {}, \"repacked_action_mse\": {}, \"exact_action_mse\": {}}},\n\
-             \x20 \"act_scale\": [{}]\n\
+             \x20 \"act_scale\": [{}],\n\
+             \x20 \"mixed_traffic\": [{}]\n\
              }}\n",
             self.threads,
             self.seed,
@@ -367,6 +445,7 @@ impl PerfReport {
             self.serve_p99_us,
             self.serve_p999_us,
             num(self.serve_qps),
+            self.serve_shards,
             num(self.dense_gemv_gflops),
             num(self.packed_gemv_gflops),
             num(self.packed_gemv_i8_gflops),
@@ -393,7 +472,8 @@ impl PerfReport {
             self.hbvla_exact_bytes,
             num(self.hbvla_repacked_action_mse),
             num(self.hbvla_exact_action_mse),
-            act_scale.join(",")
+            act_scale.join(","),
+            mixed.join(",")
         )
     }
 
@@ -534,7 +614,11 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
     }
     let serve_secs = t2.elapsed().as_secs_f64();
     let stats = server.latency_stats();
-    let (p50, p99, p999) = (stats.p50_us(), stats.p99_us(), stats.p999_us());
+    // One sort serves all three ranks (the summary-path fix, applied here
+    // too).
+    let pcts = stats.percentiles_us(&[0.50, 0.99, 0.999]);
+    let (p50, p99, p999) = (pcts[0], pcts[1], pcts[2]);
+    let serve_shards = server.n_shards();
     server.shutdown();
 
     // --- packed vs dense GEMV ---
@@ -806,6 +890,30 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         act_scale_rows.push(measure_scale_modes("hbvla-exact", &hb_exact, clip));
     }
 
+    // --- mixed-variant traffic: single-queue vs variant-affine sharded ---
+    // Identical 3-variant round-robin load from concurrent clients against
+    // both router shapes at the same worker count. The variant names are
+    // chosen to spread across all the sharded run's shards (FNV-1a mod 4:
+    // dense→0, rtn-packed→2, hbvla-packed-a8→3), so the comparison shows
+    // the affinity effect, not a hash-collision accident.
+    let mix_registry = Arc::new(ModelRegistry::new());
+    mix_registry.register("dense", Arc::new(dense_model.clone())).expect("register dense");
+    mix_registry
+        .register("rtn-packed", Arc::new(packed_model.clone()))
+        .expect("register rtn-packed");
+    mix_registry
+        .register(
+            "hbvla-packed-a8",
+            Arc::new(hb_repacked.clone().with_act_precision(crate::model::ActPrecision::Int8)),
+        )
+        .expect("register hbvla-packed-a8");
+    let mix_variants = ["dense", "rtn-packed", "hbvla-packed-a8"];
+    let mix_requests = if smoke { 120 } else { 480 };
+    let mixed_traffic = vec![
+        mixed_traffic_row(&mix_registry, &obs, &mix_variants, "single-queue", 4, 1, mix_requests),
+        mixed_traffic_row(&mix_registry, &obs, &mix_variants, "sharded", 4, 4, mix_requests),
+    ];
+
     PerfReport {
         threads,
         seed,
@@ -817,6 +925,7 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         serve_p99_us: p99,
         serve_p999_us: p999,
         serve_qps: n_req as f64 / serve_secs,
+        serve_shards,
         packed_gemv_gflops: flops / packed_secs / 1e9,
         dense_gemv_gflops: flops / dense_secs / 1e9,
         packed_gemm_gflops: gemm_flops / packed_gemm_secs / 1e9,
@@ -844,7 +953,79 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         simd_lane_active,
         simd_lanes,
         attn_rows,
+        mixed_traffic,
     }
+}
+
+/// Drive one router shape with 3-variant round-robin traffic from 4
+/// concurrent clients (async waves, so submits from different variants
+/// interleave in arrival order) and fold the row the mixed-traffic table
+/// reports.
+fn mixed_traffic_row(
+    registry: &Arc<ModelRegistry>,
+    obs: &Observation,
+    variants: &[&str],
+    mode: &str,
+    workers: usize,
+    shards: usize,
+    n_req: usize,
+) -> MixedTrafficRow {
+    let server = PolicyServer::start(
+        Arc::clone(registry),
+        ServeConfig {
+            workers,
+            shards,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_micros(300),
+            ..Default::default()
+        },
+    );
+    let clients = 4usize;
+    let per_client = n_req / clients;
+    let ok = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let ok = &ok;
+            s.spawn(move || {
+                let wave = 8usize;
+                let mut sent = 0usize;
+                while sent < per_client {
+                    let n = wave.min(per_client - sent);
+                    let handles: Vec<_> = (0..n)
+                        .map(|k| {
+                            let v = variants[(c + sent + k) % variants.len()];
+                            server
+                                .submit_async(ServeRequest::new(obs.clone()).with_variant(v))
+                                .expect("mixed-traffic submit")
+                        })
+                        .collect();
+                    for h in handles {
+                        if h.wait().is_ok() {
+                            ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    sent += n;
+                }
+            });
+        }
+    });
+    let p = server.latency_stats().percentiles_us(&[0.50, 0.99]);
+    let stolen_groups: u64 = server.shard_stats().iter().map(|s| s.stolen_groups).sum();
+    let row = MixedTrafficRow {
+        mode: mode.to_string(),
+        workers,
+        shards: server.n_shards(),
+        requests: per_client * clients,
+        responses_ok: ok.load(std::sync::atomic::Ordering::Relaxed),
+        p50_us: p[0],
+        p99_us: p[1],
+        mean_batch: server.mean_batch_size(),
+        mean_group: server.mean_group_size(),
+        stolen_groups,
+    };
+    server.shutdown();
+    row
 }
 
 /// Measure one batch size: trunk+decode tokens/s for the per-request loop

@@ -136,8 +136,28 @@ fn reference_trajectory(
     (actions, success)
 }
 
+/// Deterministic per-robot backoff jitter: splitmix64-style hash of
+/// (robot id, attempt number), bounded to half the base backoff.
+///
+/// Without this, every robot shed by the same overload burst computed
+/// the SAME backoff and re-arrived as the same synchronized burst —
+/// lockstep retry storms that re-triggered admission shedding for
+/// rounds. The jitter depends only on (robot, attempt), never on wall
+/// time or thread count, so fleet reports stay bit-identical across
+/// `--workers` settings; only the retry *timing* decorrelates.
+fn backoff_jitter_us(robot_id: usize, attempt: u32, base_us: u64) -> u64 {
+    let mut z = (robot_id as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((attempt as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z % (base_us / 2 + 1)
+}
+
 /// Retry bookkeeping shared by submit-side and response-side failures:
-/// back off (clamped) or abort once the per-decode cap is spent.
+/// back off (clamped base + deterministic per-robot jitter) or abort
+/// once the per-decode cap is spent.
 fn retry_or_abort(robot: &mut Robot, now: Instant, backoff_us: u64, max_retries: u32) -> Phase {
     robot.retries_this_decode += 1;
     robot.serving_counters_mut().retries += 1;
@@ -145,9 +165,9 @@ fn retry_or_abort(robot: &mut Robot, now: Instant, backoff_us: u64, max_retries:
         robot.dropped = true;
         Phase::Done
     } else {
-        Phase::BackOff {
-            until: now + Duration::from_micros(backoff_us.clamp(BACKOFF_MIN_US, BACKOFF_MAX_US)),
-        }
+        let base = backoff_us.clamp(BACKOFF_MIN_US, BACKOFF_MAX_US);
+        let jitter = backoff_jitter_us(robot.id, robot.retries_this_decode, base);
+        Phase::BackOff { until: now + Duration::from_micros(base + jitter) }
     }
 }
 
@@ -457,6 +477,32 @@ mod tests {
         let b = robot_seed(1, 1);
         assert_ne!(a, b);
         assert_eq!(robot_seed(1, 7), robot_seed(1, 7));
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_and_bounded() {
+        for base in [BACKOFF_MIN_US, 500, BACKOFF_MAX_US] {
+            for robot in 0..32usize {
+                for attempt in 1..8u32 {
+                    let j = backoff_jitter_us(robot, attempt, base);
+                    assert_eq!(j, backoff_jitter_us(robot, attempt, base));
+                    assert!(j <= base / 2, "jitter {j} exceeds half of base {base}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_jitter_decorrelates_robots_and_attempts() {
+        // The lockstep-storm fix: robots shed by the same burst must not
+        // share a backoff. Distinct-value counts over a burst of 64.
+        let burst: std::collections::HashSet<u64> =
+            (0..64usize).map(|r| backoff_jitter_us(r, 1, BACKOFF_MAX_US)).collect();
+        assert!(burst.len() >= 48, "only {} distinct jitters across 64 robots", burst.len());
+        // And one robot's successive attempts spread too.
+        let attempts: std::collections::HashSet<u64> =
+            (1..9u32).map(|a| backoff_jitter_us(7, a, BACKOFF_MAX_US)).collect();
+        assert!(attempts.len() >= 6, "attempts collapsed: {attempts:?}");
     }
 
     #[test]

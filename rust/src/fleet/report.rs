@@ -107,6 +107,9 @@ impl FleetVariantRow {
         }
         let submits = traffic.submits;
         let rate = |n: u64| if submits > 0 { n as f64 / submits as f64 } else { 0.0 };
+        // One sort serves all three ranks (was three clone+sort passes).
+        let pcts = latency.map(|l| l.percentiles_us(&[0.50, 0.99, 0.999]));
+        let pct = |i: usize| pcts.as_ref().map(|p| p[i]).unwrap_or(0);
         FleetVariantRow {
             variant: variant.to_string(),
             robots: members.len(),
@@ -127,9 +130,9 @@ impl FleetVariantRow {
             shed_rate: rate(traffic.admission_sheds),
             miss_rate: rate(traffic.deadline_misses),
             mean_us: latency.map(|l| l.mean_us()).unwrap_or(0.0),
-            p50_us: latency.map(|l| l.p50_us()).unwrap_or(0),
-            p99_us: latency.map(|l| l.p99_us()).unwrap_or(0),
-            p999_us: latency.map(|l| l.p999_us()).unwrap_or(0),
+            p50_us: pct(0),
+            p99_us: pct(1),
+            p999_us: pct(2),
             divergence: divergence.bins(),
             max_divergence: divergence.max_mean_l2(),
             digest: digest.digest(),

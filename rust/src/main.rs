@@ -22,7 +22,8 @@
 //! skip the per-token max sweep on the hot path), `--act-clip max|p999`
 //! (how the static calibration clips the observed range), `--attn-precision
 //! f32|int8` (attention-core override; W1A8 twins default to INT8
-//! attention), `--workers N`,
+//! attention), `--workers N`, `--shards N` (variant-affine dispatch
+//! shards; 0 = one per worker),
 //! `--max-batch N`, `--max-wait-us U`, `--requests N` — the demo registers
 //! the dense checkpoint, both packed commits, the transform-domain exact
 //! HBVLA commit (`hbvla-exact`: serves the committed Haar-domain bitplanes
@@ -195,6 +196,8 @@ fn main() {
             register_standard_variants(&registry, &tb, budget.threads);
             let cfg = ServeConfig {
                 workers: args.usize_or("workers", 2),
+                // 0 = auto (one variant-affine dispatch shard per worker).
+                shards: args.usize_or("shards", 0),
                 max_batch: args.usize_or("max-batch", 8),
                 max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 500)),
                 ..Default::default()
@@ -409,11 +412,14 @@ fn main() {
                     budget.threads
                 );
             }
+            let server = PolicyServer::start(Arc::clone(&registry), cfg.clone());
             println!(
-                "serving variant '{variant}' with {} workers, max batch {}, max wait {:?}",
-                cfg.workers, cfg.max_batch, cfg.max_wait
+                "serving variant '{variant}' with {} workers, {} shards, max batch {}, max wait {:?}",
+                cfg.workers,
+                server.n_shards(),
+                cfg.max_batch,
+                cfg.max_wait
             );
-            let server = PolicyServer::start(Arc::clone(&registry), cfg);
             let mut rng = hbvla::util::rng::Rng::new(budget.seed);
             let task = &tb.tasks[0];
             let scene = task.instantiate(&mut rng);
@@ -487,6 +493,7 @@ fn main() {
             };
             let serve_cfg = ServeConfig {
                 workers: args.usize_or("workers", 4),
+                shards: args.usize_or("shards", 0),
                 max_batch: args.usize_or("max-batch", 8),
                 max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)),
                 // Deadline budgets arm admission control: the fleet then
@@ -551,11 +558,11 @@ fn main() {
                  serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
                  rtn-packed-a8|hbvla-packed-a8] \
                  [--act-precision f32|int8] [--act-scale per-token|static] [--act-clip max|p999] \
-                 [--attn-precision f32|int8] [--workers N] \
+                 [--attn-precision f32|int8] [--workers N] [--shards N] \
                  [--max-batch N] [--max-wait-us U] [--requests N]\n\
                  fleet flags: [--robots N] [--horizon N] [--variants a,b,c] [--reference NAME] \
                  [--deadline-us U] [--drill none|overload|hotspot|worker-loss|all|LIST] \
-                 [--workers N] [--max-batch N] [--max-wait-us U] [--json PATH]"
+                 [--workers N] [--shards N] [--max-batch N] [--max-wait-us U] [--json PATH]"
             );
             std::process::exit(2);
         }

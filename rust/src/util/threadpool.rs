@@ -122,6 +122,41 @@ pub fn in_pool_worker() -> bool {
     IN_POOL_WORKER.with(|f| f.get())
 }
 
+thread_local! {
+    /// Per-thread fan-out cap for `parallel_for` (0 = uncapped). Set by
+    /// [`with_thread_cap`] so concurrent batch dispatchers can co-plan:
+    /// N serving workers each computing a batched forward divide the pool
+    /// instead of all requesting full-width row-parallelism and
+    /// serializing on the idle-count heuristic.
+    static THREAD_CAP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Run `f` with every `parallel_for` issued from THIS thread capped at
+/// `cap` helpers+caller (nested caps take the minimum; the previous cap
+/// is restored on exit, even across panics). Capping only narrows the
+/// fan-out, so results stay bit-identical — kernels partition output
+/// elements deterministically at any thread count.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let cap = cap.max(1);
+    let _restore = Restore(THREAD_CAP.with(|c| {
+        let prev = c.get();
+        c.set(if prev == 0 { cap } else { prev.min(cap) });
+        prev
+    }));
+    f()
+}
+
+/// The current thread's fan-out cap (0 = uncapped). Exposed for tests.
+pub fn thread_cap() -> usize {
+    THREAD_CAP.with(|c| c.get())
+}
+
 /// Run `f(i)` for i in 0..n across at most `threads` workers of the
 /// persistent pool (plus the calling thread), blocking until all items
 /// complete. Items are pulled dynamically (work stealing by atomic
@@ -134,7 +169,11 @@ where
     if n == 0 {
         return;
     }
-    let threads = threads.max(1).min(n);
+    let mut threads = threads.max(1).min(n);
+    let cap = THREAD_CAP.with(|c| c.get());
+    if cap > 0 {
+        threads = threads.min(cap);
+    }
     if threads == 1 || in_pool_worker() {
         for i in 0..n {
             f(i);
@@ -454,6 +493,42 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn thread_cap_scopes_nest_and_restore() {
+        assert_eq!(thread_cap(), 0, "uncapped by default");
+        let out = with_thread_cap(4, || {
+            assert_eq!(thread_cap(), 4);
+            // Nested scopes take the minimum; widening is refused.
+            with_thread_cap(2, || assert_eq!(thread_cap(), 2));
+            with_thread_cap(8, || assert_eq!(thread_cap(), 4));
+            assert_eq!(thread_cap(), 4);
+            7
+        });
+        assert_eq!(out, 7);
+        assert_eq!(thread_cap(), 0, "cap restored on exit");
+        // Restored even when the closure panics.
+        let r = std::panic::catch_unwind(|| with_thread_cap(3, || panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(thread_cap(), 0);
+    }
+
+    #[test]
+    fn thread_cap_one_forces_serial_but_covers_all() {
+        let hits = AtomicU64::new(0);
+        let peak = AtomicU64::new(0);
+        let live = AtomicU64::new(0);
+        with_thread_cap(1, || {
+            parallel_for(200, 8, |i| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                live.fetch_sub(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 200 * 201 / 2);
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "cap=1 must run serially");
     }
 
     #[test]

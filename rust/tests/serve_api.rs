@@ -180,6 +180,7 @@ fn deadline_aware_admission_sheds_at_submit_not_dispatch() {
             max_batch: 64,
             max_wait: Duration::from_millis(500),
             admission: AdmissionControl::DeadlineAware { min_samples: 4 },
+            ..Default::default()
         },
     );
     let obs = sample_obs(&base, 21);

@@ -1,0 +1,204 @@
+//! Sharded-dispatch integration: the variant-affine sharded router must
+//! be BYTE-IDENTICAL to sequential serving — which shard, worker, batch
+//! window, or steal dispatched a request can never change its actions —
+//! and routed admission must stop the cross-variant skew where one
+//! variant's backlog shed another variant's requests.
+//!
+//! Shard placements are pinned by `shard_for` (pure FNV-1a over the
+//! variant name): "dense" → shard 0 and "packed" → shard 1 under both 2
+//! and 4 shards, and "fast" / "slow" land on different shards of 2 — so
+//! these tests exercise real multi-shard routing, not a hash-collision
+//! degenerate case.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hbvla::coordinator::{
+    quantize_into_registry, shard_for, AdmissionControl, ModelRegistry, PolicyServer, ServeConfig,
+    ServeError, ServeRequest,
+};
+use hbvla::methods::traits::Component;
+use hbvla::methods::HbVla;
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::sim::observe::{observe, ObsParams, Observation};
+use hbvla::sim::tasks::libero_suite;
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Tiny chunk-head checkpoint with real head weights.
+fn base_model() -> MiniVla {
+    let mut m = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let mut rng = Rng::new(0xF00D);
+    let (hr, hc) = m.store.dims("head.main");
+    m.store.set("head.main", Matrix::gauss(hr, hc, 0.1, &mut rng));
+    m
+}
+
+fn sample_obs(model: &MiniVla, seed: u64) -> Observation {
+    let task = &libero_suite("object")[0];
+    let mut rng = Rng::new(seed);
+    let scene = task.instantiate(&mut rng);
+    observe(&scene, task.stages[0].instr(), 100, model, &ObsParams::clean(), &mut rng)
+}
+
+#[test]
+fn actions_and_variants_bit_identical_across_workers_and_shards() {
+    let base = base_model();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let calib = HashMap::new();
+    let comps = [Component::Vision, Component::Language, Component::ActionHead];
+    quantize_into_registry(&registry, "packed", &base, &calib, &HbVla::new(), &comps, 2).unwrap();
+    // The two variants live on different shards in every sharded config.
+    assert_ne!(shard_for("dense", 2), shard_for("packed", 2));
+    assert_ne!(shard_for("dense", 4), shard_for("packed", 4));
+
+    let names = ["dense", "packed"];
+    let obs: Vec<Observation> = (0..12).map(|k| sample_obs(&base, 900 + k)).collect();
+    // Sequential per-model reference (the Chunk head decode is
+    // deterministic, so the reference needs no serving machinery at all).
+    let reference: Vec<Vec<Vec<f32>>> = obs
+        .iter()
+        .enumerate()
+        .map(|(k, o)| {
+            let m = registry.get(names[k % 2]).unwrap();
+            let f = m.features(&o.visual_raw, o.instr_id, &o.proprio, &mut None);
+            m.decode(&f, &mut Rng::new(0))
+        })
+        .collect();
+
+    let mut first: Option<Vec<(String, Vec<Vec<f32>>)>> = None;
+    for workers in [1usize, 4] {
+        for shards in [1usize, 2, 4] {
+            let server = PolicyServer::start(
+                Arc::clone(&registry),
+                ServeConfig {
+                    workers,
+                    shards,
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+            );
+            assert_eq!(server.n_shards(), shards);
+            // One interleaved async burst: batches, windows, and steals
+            // compose differently per config — the answers must not.
+            let handles: Vec<_> = obs
+                .iter()
+                .enumerate()
+                .map(|(k, o)| {
+                    server
+                        .submit_async(ServeRequest::new(o.clone()).with_variant(names[k % 2]))
+                        .unwrap()
+                })
+                .collect();
+            let got: Vec<(String, Vec<Vec<f32>>)> = handles
+                .into_iter()
+                .map(|h| {
+                    let r = h.wait().unwrap();
+                    (r.variant_served, r.actions)
+                })
+                .collect();
+            for (k, (v, a)) in got.iter().enumerate() {
+                assert_eq!(v, names[k % 2], "workers={workers} shards={shards} request {k}");
+                assert_eq!(
+                    a, &reference[k],
+                    "workers={workers} shards={shards} request {k}: sharded serving \
+                     diverged from the sequential forward"
+                );
+            }
+            match &first {
+                None => first = Some(got),
+                Some(f) => assert_eq!(
+                    f, &got,
+                    "workers={workers} shards={shards} differs from the first config"
+                ),
+            }
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn slow_variant_backlog_does_not_shed_fast_variant_requests() {
+    // The cross-variant admission skew this PR fixes: under the old
+    // GLOBAL-depth admission, a backlog on one (slow) variant raised the
+    // global estimate and shed deadline-bearing requests for a DIFFERENT
+    // variant whose own queue was idle. Routed admission prices only the
+    // request's own shard, so the fast variant must be admitted (its
+    // worst case is a deadline miss at dispatch — a triage outcome, never
+    // an admission shed) while the slow variant is still shed.
+    let base = base_model();
+    let registry = Arc::new(ModelRegistry::new());
+    // Same checkpoint under two names: the skew is queue-state, not
+    // model-speed — distinct shards are all the scenario needs.
+    registry.register("fast", Arc::new(base.clone())).unwrap();
+    registry.register("slow", Arc::new(base.clone())).unwrap();
+    assert_ne!(shard_for("fast", 2), shard_for("slow", 2));
+
+    // One worker so the backlog cannot be drained (or stolen) mid-test;
+    // max_batch 4 so warmup waves close on count, deterministically.
+    let server = PolicyServer::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            workers: 1,
+            shards: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            admission: AdmissionControl::DeadlineAware { min_samples: 4 },
+        },
+    );
+    let obs = sample_obs(&base, 21);
+    // Warm BOTH variants' service-rate statistics (cold stats never shed).
+    for variant in ["fast", "slow"] {
+        let wave: Vec<_> = (0..4)
+            .map(|_| {
+                server
+                    .submit_async(ServeRequest::new(obs.clone()).with_variant(variant))
+                    .unwrap()
+            })
+            .collect();
+        for h in wave {
+            h.wait().unwrap();
+        }
+    }
+    // Backlog the slow shard: 5 async requests; the first window closes on
+    // count and dispatches, but the remainder holds slow-shard depth ≥ 1
+    // for the whole 50 ms window — eons next to the probes below.
+    let backlog: Vec<_> = (0..5)
+        .map(|_| server.submit_async(ServeRequest::new(obs.clone()).with_variant("slow")).unwrap())
+        .collect();
+
+    // Probe 1: the SLOW variant behind its own backlog is shed.
+    let deadline = Duration::from_nanos(1);
+    let err = server
+        .submit(ServeRequest::new(obs.clone()).with_variant("slow").with_deadline(deadline))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServeError::Overloaded { .. }),
+        "slow variant behind its own backlog must shed, got {err:?}"
+    );
+
+    // Probe 2 — the regression: the FAST variant's shard is idle, so the
+    // same impossible deadline must be ADMITTED (global-depth admission
+    // shed it here). Its fate downstream is deadline triage, not a shed.
+    let fast_probe = server
+        .submit_async(ServeRequest::new(obs.clone()).with_variant("fast").with_deadline(deadline))
+        .expect("fast variant on an idle shard must be admitted despite the slow backlog");
+
+    // Drain everything; the fast probe's only acceptable failure is the
+    // dispatch-time deadline miss.
+    match fast_probe.wait() {
+        Err(ServeError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded for a 1ns deadline, got {other:?}"),
+    }
+    for h in backlog {
+        h.wait().unwrap();
+    }
+    let per = server.variant_stats();
+    assert_eq!(per["slow"].admission_sheds, 1, "slow probe shed at submit");
+    assert_eq!(per["fast"].admission_sheds, 0, "fast variant must never shed for slow backlog");
+    assert_eq!(per["fast"].deadline_misses, 1, "fast probe triaged at dispatch");
+    server.shutdown();
+}
