@@ -1,24 +1,30 @@
 //! The L3 coordinator: layer-parallel PTQ scheduling, parallel closed-loop
-//! rollout, and a multi-model batched policy-serving router
-//! (vLLM-router-like) fed by a variant registry.
+//! rollout, a multi-model batched policy-serving router
+//! (vLLM-router-like) fed by a variant registry, and the multi-host front
+//! door (length-prefixed wire protocol + placement-hashed router) that
+//! spans N `PolicyServer` processes.
 
 pub mod metrics;
 pub mod registry;
 pub mod rollout;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
+pub mod wire;
 
 pub use metrics::{BatchStats, LatencyStats, ShardStats, VariantStats};
 pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
+pub use router::{estimated_host_wait_us, Router, RouterConfig, WireHost};
 pub use scheduler::{
     quantize_exact_into_registry, quantize_into_registry, quantize_model, quantize_model_exact,
     register_a8_variant, register_static_scale_variant, QuantJobReport,
 };
 pub use server::{
-    estimated_queue_wait_us, estimated_shard_wait_us, per_request_service_us, AdmissionControl,
-    PolicyServer, ResponseHandle, ServeConfig, ServeError, ServeRequest, ServeResponse,
-    VariantSelector,
+    affine_shard_workers, estimated_queue_wait_us, estimated_shard_wait_us,
+    per_request_service_us, AdmissionControl, PolicyServer, ResponseHandle, ServeConfig,
+    ServeError, ServeRequest, ServeResponse, VariantSelector,
 };
 pub use shard::shard_for;
+pub use wire::{HostHealth, WireError, MAX_FRAME_BYTES};

@@ -45,7 +45,7 @@
 //! clients that pipeline requests.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -137,6 +137,31 @@ pub fn per_request_service_us(mean_compute_us: f64, mean_group: f64) -> f64 {
 pub fn estimated_shard_wait_us(pending: &[(f64, f64)], workers: usize) -> f64 {
     pending.iter().map(|&(count, per_req_us)| count * per_req_us).sum::<f64>()
         / workers.max(1) as f64
+}
+
+/// Live collectors affine to `shard`, from the ACTUAL per-index liveness
+/// flags. Workers are affine — worker `i` homes on shard `i % n_shards` —
+/// but they retire (shrink, panic) at their own pace, so the surviving
+/// index set is NOT a prefix `0..live`: counting `(0..live)` hallucinated
+/// collectors on low shards and erased them on high shards whenever a
+/// high-index worker outlived a low-index one. When fewer workers than
+/// shards survive, each survivor adopts the orphaned shards congruent to
+/// its index, so the count floors at 1 (stealing drains any shard
+/// eventually regardless). Pure, for regression tests over arbitrary
+/// liveness patterns.
+pub fn affine_shard_workers(alive: &[bool], n_shards: usize, shard: usize) -> usize {
+    let n_shards = n_shards.max(1);
+    let live = alive.iter().filter(|&&a| a).count();
+    if live >= n_shards {
+        alive
+            .iter()
+            .enumerate()
+            .filter(|&(i, &a)| a && i % n_shards == shard)
+            .count()
+            .max(1)
+    } else {
+        1
+    }
 }
 
 /// Which registered variant a request asks for.
@@ -270,6 +295,13 @@ pub struct ResponseHandle {
 }
 
 impl ResponseHandle {
+    /// A handle over an externally-owned reply channel — the router front
+    /// door completes routed requests through the same handle type local
+    /// clients poll, so fleet code is agnostic to where a request ran.
+    pub(crate) fn new(rx: Receiver<Result<ServeResponse, ServeError>>) -> Self {
+        ResponseHandle { rx }
+    }
+
     /// Block until the response (or error) arrives.
     pub fn wait(self) -> Result<ServeResponse, ServeError> {
         self.rx.recv().unwrap_or(Err(ServeError::WorkerDropped))
@@ -302,9 +334,14 @@ pub struct PolicyServer {
     /// Workers whose index is ≥ this value retire at their next idle tick
     /// or batch boundary (never mid-batch, so no reply is ever dropped).
     target_workers: Arc<AtomicUsize>,
-    /// Workers currently running their loop; the service-rate term of
-    /// deadline-aware admission, so estimates track worker loss.
-    live_workers: Arc<AtomicUsize>,
+    /// Per-index liveness flags (cleared by a drop guard, so a panicking
+    /// worker is counted dead too). The service-rate term of
+    /// deadline-aware admission reads WHICH indices are live, not just
+    /// how many: workers retire at their own pace (idle tick / batch
+    /// boundary), so the surviving index set is not a prefix during a
+    /// shrink transition — a count-only view drifted per-shard affine
+    /// divisors after a worker-loss drill.
+    worker_alive: Arc<Vec<AtomicBool>>,
     variant_stats: Arc<Mutex<HashMap<String, VariantStats>>>,
     batch_stats: Arc<Mutex<BatchStats>>,
     shard_stats: Arc<Vec<Mutex<ShardStats>>>,
@@ -335,7 +372,8 @@ impl PolicyServer {
         let variant_stats = Arc::new(Mutex::new(HashMap::new()));
         let batch_stats = Arc::new(Mutex::new(BatchStats::new()));
         let target_workers = Arc::new(AtomicUsize::new(n_workers));
-        let live_workers = Arc::new(AtomicUsize::new(n_workers));
+        let worker_alive: Arc<Vec<AtomicBool>> =
+            Arc::new((0..n_workers).map(|_| AtomicBool::new(true)).collect());
         let mut handles = Vec::new();
         for idx in 0..n_workers {
             let shards = Arc::clone(&shards);
@@ -345,9 +383,19 @@ impl PolicyServer {
             let batch_stats = Arc::clone(&batch_stats);
             let shard_stats = Arc::clone(&shard_stats);
             let target_workers = Arc::clone(&target_workers);
-            let live_workers = Arc::clone(&live_workers);
+            let worker_alive = Arc::clone(&worker_alive);
             let cfg = cfg.clone();
             handles.push(std::thread::spawn(move || {
+                // Drop guard, not a trailing store: the flag clears even
+                // if the worker panics, so admission never divides by
+                // capacity that no longer exists.
+                struct AliveGuard<'a>(&'a AtomicBool);
+                impl Drop for AliveGuard<'_> {
+                    fn drop(&mut self) {
+                        self.0.store(false, Ordering::Relaxed);
+                    }
+                }
+                let _guard = AliveGuard(&worker_alive[idx]);
                 worker_loop(
                     idx,
                     &cfg,
@@ -359,7 +407,6 @@ impl PolicyServer {
                     &shard_stats,
                     &target_workers,
                 );
-                live_workers.fetch_sub(1, Ordering::Relaxed);
             }));
         }
         PolicyServer {
@@ -370,7 +417,7 @@ impl PolicyServer {
             signal,
             next_seq: AtomicU64::new(0),
             target_workers,
-            live_workers,
+            worker_alive,
             variant_stats,
             batch_stats,
             shard_stats,
@@ -392,7 +439,7 @@ impl PolicyServer {
     /// Workers currently running their dispatch loop (tracks
     /// [`Self::shrink_workers`] with a latency of one idle tick / batch).
     pub fn live_workers(&self) -> usize {
-        self.live_workers.load(Ordering::Relaxed)
+        self.worker_alive.iter().filter(|a| a.load(Ordering::Relaxed)).count()
     }
 
     /// Dispatch shards (resolved: `cfg.shards`, or the worker count when
@@ -407,18 +454,35 @@ impl PolicyServer {
         self.shards.iter().map(|s| s.depth()).sum()
     }
 
-    /// Live collectors responsible for a shard. Workers are affine —
-    /// worker `idx` homes on shard `idx % n_shards` — and when fewer
-    /// workers than shards are live, each survivor adopts the shards
-    /// congruent to its index, so the count is floored at 1 (stealing
-    /// drains any shard eventually regardless).
+    /// Live collectors responsible for a shard, from the ACTUAL live
+    /// index set (see [`affine_shard_workers`]).
     fn shard_workers(&self, shard: usize) -> usize {
-        let live = self.live_workers().max(1);
-        if live >= self.n_shards {
-            (0..live).filter(|i| i % self.n_shards == shard).count().max(1)
-        } else {
-            1
+        let alive: Vec<bool> =
+            self.worker_alive.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        affine_shard_workers(&alive, self.n_shards, shard)
+    }
+
+    /// Live collector count per shard — the admission divisors, exposed
+    /// for tests and operational introspection.
+    pub fn shard_worker_counts(&self) -> Vec<usize> {
+        let alive: Vec<bool> =
+            self.worker_alive.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        (0..self.n_shards).map(|s| affine_shard_workers(&alive, self.n_shards, s)).collect()
+    }
+
+    /// Pending (undispatched) request counts per variant, summed over
+    /// shards — the host-health payload routed admission prices remote
+    /// requests against.
+    pub fn pending_by_variant(&self) -> Vec<(String, u64)> {
+        let mut agg: HashMap<String, u64> = HashMap::new();
+        for s in self.shards.iter() {
+            for (name, count) in s.pending_snapshot() {
+                *agg.entry(name).or_insert(0) += count as u64;
+            }
         }
+        let mut out: Vec<(String, u64)> = agg.into_iter().collect();
+        out.sort();
+        out
     }
 
     /// Deadline-aware admission gate: `Err(Overloaded)` when the ROUTED
@@ -507,6 +571,27 @@ impl PolicyServer {
     /// serving interface — a malformed request is a typed error at submit,
     /// never a worker panic that would take down its whole batch.
     pub fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+        self.submit_async_inner(req, None)
+    }
+
+    /// Routed serving entry point: submit with a caller-assigned noise-
+    /// stream sequence number. The router front door owns the global seq
+    /// counter so WHICH host serves a request never changes its stochastic
+    /// actions — a host-side server must use the router's seq, not mint
+    /// its own.
+    pub fn submit_async_with_seq(
+        &self,
+        req: ServeRequest,
+        seq: u64,
+    ) -> Result<ResponseHandle, ServeError> {
+        self.submit_async_inner(req, Some(seq))
+    }
+
+    fn submit_async_inner(
+        &self,
+        req: ServeRequest,
+        seq: Option<u64>,
+    ) -> Result<ResponseHandle, ServeError> {
         let (variant, model) = self.resolve(&req.variant)?;
         let cfg = &model.cfg;
         if req.obs.visual_raw.rows != cfg.d_vis_in
@@ -537,7 +622,7 @@ impl PolicyServer {
             variant,
             deadline: req.deadline,
             submitted: Instant::now(),
-            seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
+            seq: seq.unwrap_or_else(|| self.next_seq.fetch_add(1, Ordering::Relaxed)),
             reply: reply_tx,
         };
         // Push counts the request into the shard's admission depth under
@@ -1196,6 +1281,106 @@ mod tests {
         }
         assert_eq!(server.live_workers(), 1);
         assert_eq!(server.latency_stats().count(), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn affine_shard_workers_counts_actual_live_indices() {
+        // Non-prefix survival: worker 0 retired (or panicked) while
+        // workers 1..3 live, 2 shards. The live indices are {1, 2, 3}:
+        // shard 0 is served by worker 2 only; shard 1 by workers 1 and 3.
+        let alive = [false, true, true, true];
+        assert_eq!(affine_shard_workers(&alive, 2, 0), 1);
+        assert_eq!(affine_shard_workers(&alive, 2, 1), 2);
+        // The old `(0..live)` formula assumed survivors were the prefix
+        // {0, 1, 2} and got it exactly backwards (2 and 1).
+        let live = alive.iter().filter(|&&a| a).count();
+        assert_eq!((0..live).filter(|i| i % 2 == 0).count(), 2);
+        assert_eq!((0..live).filter(|i| i % 2 == 1).count(), 1);
+        // All live: the affine striding count.
+        let all = [true; 4];
+        assert_eq!(affine_shard_workers(&all, 2, 0), 2);
+        assert_eq!(affine_shard_workers(&all, 2, 1), 2);
+        // Fewer live workers than shards: survivors adopt orphaned
+        // shards, every divisor floors at 1.
+        let one = [true, false, false, false];
+        for shard in 0..4 {
+            assert_eq!(affine_shard_workers(&one, 4, shard), 1);
+        }
+        // Degenerate inputs stay clamped, never zero.
+        assert_eq!(affine_shard_workers(&[false, false], 2, 0), 1);
+        assert_eq!(affine_shard_workers(&[], 0, 0), 1);
+    }
+
+    #[test]
+    fn shrink_under_more_shards_than_workers_keeps_admission_divisors_sane() {
+        // The satellite regression: shards > workers, then a worker-loss
+        // drill. Per-shard admission divisors must track the ACTUAL live
+        // set (never exceeding it, never zero), and the survivor must
+        // still serve every shard.
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(
+            single_registry(model),
+            ServeConfig { workers: 2, shards: 4, ..Default::default() },
+        );
+        assert_eq!(server.live_workers(), 2);
+        // Before the drill: 2 live workers over 4 shards → every shard's
+        // divisor is the floor, 1.
+        assert_eq!(server.shard_worker_counts(), vec![1, 1, 1, 1]);
+        server.shrink_workers(1);
+        for _ in 0..200 {
+            if server.live_workers() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(server.live_workers(), 1);
+        let counts = server.shard_worker_counts();
+        assert_eq!(counts.len(), 4);
+        for (shard, &c) in counts.iter().enumerate() {
+            assert_eq!(c, 1, "shard {shard} divisor drifted to {c} after worker loss");
+        }
+        for _ in 0..6 {
+            server.submit(ServeRequest::new(obs.clone())).unwrap();
+        }
+        assert_eq!(server.latency_stats().count(), 6);
+        server.shutdown();
+        // After shutdown every flag is down and the counts stay clamped.
+        assert_eq!(server.live_workers(), 0);
+        assert_eq!(server.shard_worker_counts(), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn caller_assigned_seq_pins_stochastic_actions() {
+        // The routed-parity primitive: a Diffusion head decodes through
+        // its noise stream, keyed by the request seq. Two submissions with
+        // the SAME caller-assigned seq must produce bit-identical actions
+        // regardless of interleaved traffic consuming the server's own
+        // counter.
+        let model = MiniVla::new(VlaConfig::tiny(HeadKind::Diffusion));
+        let obs = sample_obs(&model);
+        let server = PolicyServer::start(single_registry(model), ServeConfig::default());
+        let a = server
+            .submit_async_with_seq(ServeRequest::new(obs.clone()), 7)
+            .unwrap()
+            .wait()
+            .unwrap();
+        // Interleaved auto-seq traffic (would shift a server-minted seq).
+        for _ in 0..3 {
+            server.submit(ServeRequest::new(obs.clone())).unwrap();
+        }
+        let b = server
+            .submit_async_with_seq(ServeRequest::new(obs.clone()), 7)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(a.actions.len(), b.actions.len());
+        for (ca, cb) in a.actions.iter().zip(&b.actions) {
+            for (x, y) in ca.iter().zip(cb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seq-pinned actions must be bit-equal");
+            }
+        }
         server.shutdown();
     }
 

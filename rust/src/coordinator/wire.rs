@@ -1,0 +1,662 @@
+//! Length-prefixed binary wire protocol for multi-host serving.
+//!
+//! The typed serving contract ([`ServeRequest`] / [`ServeResponse`] /
+//! [`ServeError`]) crosses process boundaries here: a [`Frame`] is a
+//! `u32` little-endian body length followed by a one-byte tag and the
+//! tag's payload. The crate stays dep-free — encoding is hand-rolled
+//! over `std::io`, floats travel as IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`, the same convention as the fleet digests), so
+//! an observation decoded on a host is bit-identical to the one the
+//! client serialized and routed serving can honor the bit-parity
+//! invariant end to end.
+//!
+//! Robustness contract: decoding NEVER panics. Truncated frames,
+//! oversize length prefixes and garbage bytes all surface as typed
+//! [`WireError`]s — a host drops the offending connection; the router
+//! marks the host lost and re-homes its variants. [`FrameReader`] is the
+//! incremental decoder both ends share: feed it whatever the socket
+//! returned, drain complete frames.
+//!
+//! Requests carry a router-assigned `seq` — the noise-stream id of
+//! stochastic decodes. The FRONT DOOR owns the sequence numbers, so
+//! WHICH host serves a request never changes its actions (the same
+//! argument that makes in-process sharding bit-identical, lifted across
+//! the wire).
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::server::{ServeError, ServeRequest, ServeResponse, VariantSelector};
+use crate::sim::observe::Observation;
+use crate::tensor::matrix::Matrix;
+
+/// Hard cap on one frame's body. Observations at MiniVLA scale are a few
+/// hundred KiB; 64 MiB leaves headroom for large batch responses while
+/// keeping a hostile length prefix from allocating the machine away.
+pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
+
+/// Typed wire failures — every malformed input lands here, never in a
+/// panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The body ended before the field being decoded.
+    Truncated { context: &'static str },
+    /// Length prefix beyond [`MAX_FRAME_BYTES`].
+    Oversize { len: u64 },
+    /// Unknown frame tag byte.
+    BadTag(u8),
+    /// Unknown [`ServeError`] code byte.
+    BadErrorCode(u8),
+    /// A string field holds invalid UTF-8.
+    BadString,
+    /// A count field implies a structurally impossible payload (e.g.
+    /// matrix dims whose product overflows or exceeds the frame).
+    BadShape { context: &'static str },
+    /// Trailing bytes after a complete body — framing desync.
+    TrailingBytes { extra: usize },
+    /// The peer closed the connection at a frame boundary (clean EOF).
+    Closed,
+    /// Transport-level I/O failure.
+    Io(io::ErrorKind),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { context } => write!(f, "truncated frame in {context}"),
+            WireError::Oversize { len } => {
+                write!(f, "length prefix {len} exceeds frame cap {MAX_FRAME_BYTES}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t:#04x}"),
+            WireError::BadErrorCode(c) => write!(f, "unknown serve-error code {c:#04x}"),
+            WireError::BadString => write!(f, "invalid UTF-8 in string field"),
+            WireError::BadShape { context } => write!(f, "impossible shape in {context}"),
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after frame body")
+            }
+            WireError::Closed => write!(f, "peer closed the connection"),
+            WireError::Io(kind) => write!(f, "transport error: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e.kind())
+    }
+}
+
+/// One host's health snapshot: queue depth, live collectors, and the
+/// observed per-variant service rates + pending mix. Piggybacked on
+/// every response/error frame and sent standalone on connect (and in
+/// reply to [`Frame::Ping`]), so the router prices a deadline request
+/// against its target host without a network round trip.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HostHealth {
+    /// Requests submitted but not yet past a closed batch window.
+    pub depth: u64,
+    /// Workers currently running their dispatch loop.
+    pub live_workers: u32,
+    /// Per-variant pending request counts (summed over the host's
+    /// shards) at snapshot time.
+    pub pending: Vec<(String, u64)>,
+    /// Per-variant `(per_request_service_us, samples)` — the same rate
+    /// the host's own routed admission uses.
+    pub rates: Vec<(String, f64, u64)>,
+}
+
+/// Everything that crosses the wire. `id` correlates a response to its
+/// request on a pipelined connection (responses may return out of
+/// order); `seq` is the router-assigned noise-stream id.
+#[derive(Debug)]
+pub enum Frame {
+    Request { id: u64, seq: u64, req: ServeRequest },
+    Response { id: u64, rsp: ServeResponse, health: HostHealth },
+    Error { id: u64, err: ServeError, health: HostHealth },
+    /// Standalone health heartbeat (on connect, and answering a ping).
+    Health(HostHealth),
+    Ping,
+    /// Control: retire the host's workers down to `target` (the fleet's
+    /// worker-loss drill, across the wire).
+    Shrink { target: u32 },
+}
+
+const TAG_REQUEST: u8 = 1;
+const TAG_RESPONSE: u8 = 2;
+const TAG_ERROR: u8 = 3;
+const TAG_HEALTH: u8 = 4;
+const TAG_PING: u8 = 5;
+const TAG_SHRINK: u8 = 6;
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// `Duration` as exact nanoseconds (u64: ~584 years of range).
+fn put_duration(out: &mut Vec<u8>, d: Duration) {
+    put_u64(out, d.as_nanos() as u64);
+}
+
+fn put_opt_duration(out: &mut Vec<u8>, d: Option<Duration>) {
+    match d {
+        None => out.push(0),
+        Some(d) => {
+            out.push(1);
+            put_duration(out, d);
+        }
+    }
+}
+
+fn put_health(out: &mut Vec<u8>, h: &HostHealth) {
+    put_u64(out, h.depth);
+    put_u32(out, h.live_workers);
+    put_u32(out, h.pending.len() as u32);
+    for (name, count) in &h.pending {
+        put_str(out, name);
+        put_u64(out, *count);
+    }
+    put_u32(out, h.rates.len() as u32);
+    for (name, rate_us, samples) in &h.rates {
+        put_str(out, name);
+        put_f64(out, *rate_us);
+        put_u64(out, *samples);
+    }
+}
+
+fn put_serve_error(out: &mut Vec<u8>, e: &ServeError) {
+    match e {
+        ServeError::UnknownVariant(name) => {
+            out.push(1);
+            put_str(out, name);
+        }
+        ServeError::NoVariants => out.push(2),
+        ServeError::Stopped => out.push(3),
+        ServeError::WorkerDropped => out.push(4),
+        ServeError::DeadlineExceeded { queued } => {
+            out.push(5);
+            put_duration(out, *queued);
+        }
+        ServeError::Overloaded { queue_depth, estimated_wait, retry_after_us } => {
+            out.push(6);
+            put_u64(out, *queue_depth as u64);
+            put_duration(out, *estimated_wait);
+            put_u64(out, *retry_after_us);
+        }
+        ServeError::InvalidObservation { got } => {
+            out.push(7);
+            put_str(out, got);
+        }
+    }
+}
+
+/// Encode one frame BODY (tag + payload, no length prefix) — the unit
+/// the property tests round-trip.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Request { id, seq, req } => {
+            out.push(TAG_REQUEST);
+            put_u64(&mut out, *id);
+            put_u64(&mut out, *seq);
+            match &req.variant {
+                VariantSelector::Default => out.push(0),
+                VariantSelector::Named(name) => {
+                    out.push(1);
+                    put_str(&mut out, name);
+                }
+            }
+            put_opt_duration(&mut out, req.deadline);
+            put_u64(&mut out, req.obs.instr_id as u64);
+            put_f32s(&mut out, &req.obs.proprio);
+            put_u32(&mut out, req.obs.visual_raw.rows as u32);
+            put_u32(&mut out, req.obs.visual_raw.cols as u32);
+            for &x in &req.obs.visual_raw.data {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        Frame::Response { id, rsp, health } => {
+            out.push(TAG_RESPONSE);
+            put_u64(&mut out, *id);
+            put_str(&mut out, &rsp.variant_served);
+            put_duration(&mut out, rsp.queue_time);
+            put_duration(&mut out, rsp.compute_time);
+            put_u32(&mut out, rsp.actions.len() as u32);
+            for step in &rsp.actions {
+                put_f32s(&mut out, step);
+            }
+            put_health(&mut out, health);
+        }
+        Frame::Error { id, err, health } => {
+            out.push(TAG_ERROR);
+            put_u64(&mut out, *id);
+            put_serve_error(&mut out, err);
+            put_health(&mut out, health);
+        }
+        Frame::Health(h) => {
+            out.push(TAG_HEALTH);
+            put_health(&mut out, h);
+        }
+        Frame::Ping => out.push(TAG_PING),
+        Frame::Shrink { target } => {
+            out.push(TAG_SHRINK);
+            put_u32(&mut out, *target);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked reader over one frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated { context });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, context: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, context)?[0])
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, context)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, context)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, context: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(context)?))
+    }
+
+    /// A count that must be coverable by the REMAINING bytes at
+    /// `min_elem_bytes` each — rejects hostile counts before allocating.
+    fn count(&mut self, min_elem_bytes: usize, context: &'static str) -> Result<usize, WireError> {
+        let n = self.u32(context)? as usize;
+        if n.saturating_mul(min_elem_bytes) > self.buf.len() - self.pos {
+            return Err(WireError::BadShape { context });
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self, context: &'static str) -> Result<String, WireError> {
+        let n = self.count(1, context)?;
+        let bytes = self.take(n, context)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadString)
+    }
+
+    fn f32s(&mut self, context: &'static str) -> Result<Vec<f32>, WireError> {
+        let n = self.count(4, context)?;
+        let bytes = self.take(n * 4, context)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn duration(&mut self, context: &'static str) -> Result<Duration, WireError> {
+        Ok(Duration::from_nanos(self.u64(context)?))
+    }
+
+    fn opt_duration(&mut self, context: &'static str) -> Result<Option<Duration>, WireError> {
+        match self.u8(context)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.duration(context)?)),
+            _ => Err(WireError::BadShape { context }),
+        }
+    }
+
+    fn health(&mut self) -> Result<HostHealth, WireError> {
+        let depth = self.u64("health.depth")?;
+        let live_workers = self.u32("health.live_workers")?;
+        let n_pending = self.count(4 + 8, "health.pending")?;
+        let mut pending = Vec::with_capacity(n_pending);
+        for _ in 0..n_pending {
+            let name = self.string("health.pending.name")?;
+            let count = self.u64("health.pending.count")?;
+            pending.push((name, count));
+        }
+        let n_rates = self.count(4 + 8 + 8, "health.rates")?;
+        let mut rates = Vec::with_capacity(n_rates);
+        for _ in 0..n_rates {
+            let name = self.string("health.rates.name")?;
+            let rate = self.f64("health.rates.rate")?;
+            let samples = self.u64("health.rates.samples")?;
+            rates.push((name, rate, samples));
+        }
+        Ok(HostHealth { depth, live_workers, pending, rates })
+    }
+
+    fn serve_error(&mut self) -> Result<ServeError, WireError> {
+        match self.u8("error.code")? {
+            1 => Ok(ServeError::UnknownVariant(self.string("error.variant")?)),
+            2 => Ok(ServeError::NoVariants),
+            3 => Ok(ServeError::Stopped),
+            4 => Ok(ServeError::WorkerDropped),
+            5 => Ok(ServeError::DeadlineExceeded { queued: self.duration("error.queued")? }),
+            6 => Ok(ServeError::Overloaded {
+                queue_depth: self.u64("error.depth")? as usize,
+                estimated_wait: self.duration("error.wait")?,
+                retry_after_us: self.u64("error.retry")?,
+            }),
+            7 => Ok(ServeError::InvalidObservation { got: self.string("error.got")? }),
+            c => Err(WireError::BadErrorCode(c)),
+        }
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::TrailingBytes { extra: self.buf.len() - self.pos })
+        }
+    }
+}
+
+/// Decode one frame body. Total — every byte string returns a [`Frame`]
+/// or a typed [`WireError`]; nothing panics.
+pub fn decode_frame(body: &[u8]) -> Result<Frame, WireError> {
+    let mut r = Reader::new(body);
+    let frame = match r.u8("tag")? {
+        TAG_REQUEST => {
+            let id = r.u64("request.id")?;
+            let seq = r.u64("request.seq")?;
+            let variant = match r.u8("request.selector")? {
+                0 => VariantSelector::Default,
+                1 => VariantSelector::Named(r.string("request.variant")?),
+                _ => return Err(WireError::BadShape { context: "request.selector" }),
+            };
+            let deadline = r.opt_duration("request.deadline")?;
+            let instr_id = r.u64("request.instr_id")? as usize;
+            let proprio = r.f32s("request.proprio")?;
+            let rows = r.u32("request.visual.rows")? as usize;
+            let cols = r.u32("request.visual.cols")? as usize;
+            let n = rows
+                .checked_mul(cols)
+                .filter(|&n| n.saturating_mul(4) <= body.len())
+                .ok_or(WireError::BadShape { context: "request.visual" })?;
+            let bytes = r.take(n * 4, "request.visual.data")?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            let visual_raw = Matrix::from_vec(rows, cols, data);
+            Frame::Request {
+                id,
+                seq,
+                req: ServeRequest {
+                    obs: Observation { visual_raw, instr_id, proprio },
+                    variant,
+                    deadline,
+                },
+            }
+        }
+        TAG_RESPONSE => {
+            let id = r.u64("response.id")?;
+            let variant_served = r.string("response.variant")?;
+            let queue_time = r.duration("response.queue")?;
+            let compute_time = r.duration("response.compute")?;
+            let n = r.count(4, "response.actions")?;
+            let mut actions = Vec::with_capacity(n);
+            for _ in 0..n {
+                actions.push(r.f32s("response.actions.step")?);
+            }
+            let health = r.health()?;
+            Frame::Response {
+                id,
+                rsp: ServeResponse { actions, variant_served, queue_time, compute_time },
+                health,
+            }
+        }
+        TAG_ERROR => {
+            let id = r.u64("error.id")?;
+            let err = r.serve_error()?;
+            let health = r.health()?;
+            Frame::Error { id, err, health }
+        }
+        TAG_HEALTH => Frame::Health(r.health()?),
+        TAG_PING => Frame::Ping,
+        TAG_SHRINK => Frame::Shrink { target: r.u32("shrink.target")? },
+        t => return Err(WireError::BadTag(t)),
+    };
+    r.done()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one length-prefixed frame. The body is assembled first so the
+/// write is a single syscall-sized buffer (no interleaving between
+/// concurrent writers beyond the caller's lock).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let body = encode_frame(frame);
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&body);
+    w.write_all(&buf)
+}
+
+/// Incremental frame decoder: feed raw socket bytes with [`Self::extend`],
+/// drain complete frames with [`Self::next_frame`]. Both ends of every
+/// connection use this, so partial reads and pipelined frames need no
+/// special casing at the socket loop.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Consumed prefix (compacted lazily to amortize the memmove).
+    start: usize,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn pending(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+
+    /// The next complete frame, `Ok(None)` if more bytes are needed. A
+    /// decode error poisons the stream (framing is lost) — the caller
+    /// must drop the connection.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        let pending = self.pending();
+        if pending.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(pending[..4].try_into().unwrap());
+        if len > MAX_FRAME_BYTES {
+            return Err(WireError::Oversize { len: len as u64 });
+        }
+        let len = len as usize;
+        if pending.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = decode_frame(&pending[4..4 + len])?;
+        self.start += 4 + len;
+        if self.start >= self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 64 * 1024 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+/// Blocking read of one frame from a stream. Clean EOF at a frame
+/// boundary is [`WireError::Closed`]; EOF mid-frame is `Truncated`.
+pub fn read_frame(r: &mut impl Read, reader: &mut FrameReader) -> Result<Frame, WireError> {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if let Some(frame) = reader.next_frame()? {
+            return Ok(frame);
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                return if reader.pending().is_empty() {
+                    Err(WireError::Closed)
+                } else {
+                    Err(WireError::Truncated { context: "eof mid-frame" })
+                };
+            }
+            Ok(n) => reader.extend(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health() -> HostHealth {
+        HostHealth {
+            depth: 7,
+            live_workers: 3,
+            pending: vec![("dense".into(), 4), ("hbvla-packed".into(), 3)],
+            rates: vec![("dense".into(), 123.5, 40), ("hbvla-packed".into(), 88.25, 17)],
+        }
+    }
+
+    #[test]
+    fn health_and_control_frames_round_trip() {
+        let h = health();
+        match decode_frame(&encode_frame(&Frame::Health(h.clone()))).unwrap() {
+            Frame::Health(got) => assert_eq!(got, h),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(decode_frame(&encode_frame(&Frame::Ping)).unwrap(), Frame::Ping));
+        match decode_frame(&encode_frame(&Frame::Shrink { target: 2 })).unwrap() {
+            Frame::Shrink { target } => assert_eq!(target, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_frames_round_trip_every_code() {
+        let errs = [
+            ServeError::UnknownVariant("evil\"name\\\n".into()),
+            ServeError::NoVariants,
+            ServeError::Stopped,
+            ServeError::WorkerDropped,
+            ServeError::DeadlineExceeded { queued: Duration::from_nanos(1_234_567) },
+            ServeError::Overloaded {
+                queue_depth: 42,
+                estimated_wait: Duration::from_micros(999),
+                retry_after_us: 512,
+            },
+            ServeError::InvalidObservation { got: "visual 3x4, proprio 9, instr 1".into() },
+        ];
+        for err in errs {
+            let f = Frame::Error { id: 9, err: err.clone(), health: health() };
+            match decode_frame(&encode_frame(&f)).unwrap() {
+                Frame::Error { id, err: got, health: h } => {
+                    assert_eq!(id, 9);
+                    assert_eq!(got, err);
+                    assert_eq!(h, health());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_handles_byte_at_a_time_and_pipelining() {
+        let a = encode_frame(&Frame::Ping);
+        let b = encode_frame(&Frame::Shrink { target: 1 });
+        let mut stream = Vec::new();
+        for body in [&a, &b] {
+            stream.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            stream.extend_from_slice(body);
+        }
+        // Dripped one byte at a time, frames pop exactly when complete.
+        let mut fr = FrameReader::new();
+        let mut got = Vec::new();
+        for &byte in &stream {
+            fr.extend(&[byte]);
+            while let Some(f) = fr.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert!(matches!(got[0], Frame::Ping));
+        assert!(matches!(got[1], Frame::Shrink { target: 1 }));
+        // Or both at once (pipelined).
+        let mut fr = FrameReader::new();
+        fr.extend(&stream);
+        assert!(matches!(fr.next_frame().unwrap(), Some(Frame::Ping)));
+        assert!(matches!(fr.next_frame().unwrap(), Some(Frame::Shrink { target: 1 })));
+        assert!(fr.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_typed() {
+        let mut fr = FrameReader::new();
+        fr.extend(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        assert_eq!(
+            fr.next_frame().unwrap_err(),
+            WireError::Oversize { len: (MAX_FRAME_BYTES + 1) as u64 }
+        );
+    }
+
+    #[test]
+    fn hostile_counts_do_not_allocate() {
+        // A Response claiming u32::MAX action steps in a 32-byte body
+        // must fail as BadShape, not attempt a giant Vec::with_capacity.
+        let mut body = vec![TAG_RESPONSE];
+        put_u64(&mut body, 1); // id
+        put_str(&mut body, "v");
+        put_u64(&mut body, 0); // queue ns
+        put_u64(&mut body, 0); // compute ns
+        put_u32(&mut body, u32::MAX); // actions count — hostile
+        assert_eq!(
+            decode_frame(&body).unwrap_err(),
+            WireError::BadShape { context: "response.actions" }
+        );
+    }
+}

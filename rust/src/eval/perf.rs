@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 /// PR index stamped into the machine-readable bench baseline — bump this
 /// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
 /// tooling keyed on the schema's own `pr` field stays truthful.
-pub const BENCH_PR: u32 = 8;
+pub const BENCH_PR: u32 = 9;
 
 pub struct PerfReport {
     /// Run parameters (recorded so `BENCH_*.json` baselines are
@@ -109,6 +109,27 @@ pub struct PerfReport {
     /// traffic — the dispatch-convoy fix the PR-8 baseline tracks via
     /// mean same-variant group size and tail latency.
     pub mixed_traffic: Vec<MixedTrafficRow>,
+    /// Multi-host serving through the wire router: the same mixed
+    /// traffic against 1/2/4 loopback hosts (every request crosses TCP +
+    /// the placement-hashed router) — the scale-out trajectory the PR-9
+    /// baseline tracks. The 4-host aggregate must beat single-host.
+    pub multi_host: Vec<MultiHostRow>,
+}
+
+/// One row of the multi-host table: mixed-variant traffic routed over N
+/// loopback wire hosts (2 workers each).
+pub struct MultiHostRow {
+    pub hosts: usize,
+    pub requests: usize,
+    pub responses_ok: u64,
+    pub sheds: u64,
+    pub errors: u64,
+    /// Served tokens per second aggregated across hosts
+    /// (`responses_ok × seq_len / wall`).
+    pub tok_s: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub shed_rate: f64,
 }
 
 /// One row of the mixed-traffic table: 3-variant round-robin load from
@@ -188,6 +209,7 @@ impl PerfReport {
              {}\n\
              {}\n\
              {}\n\
+             {}\n\
              {}",
             self.quant_layers_per_sec,
             self.quant_weights_per_sec / 1e6,
@@ -210,8 +232,33 @@ impl PerfReport {
             self.batched_serve_table(),
             self.exact_table(),
             self.act_scale_table(),
-            self.mixed_table()
+            self.mixed_table(),
+            self.multi_host_table()
         )
+    }
+
+    /// The PR-9 multi-host table: the same mixed traffic routed across
+    /// 1/2/4 loopback wire hosts.
+    pub fn multi_host_table(&self) -> String {
+        let mut s = String::from(
+            "multi-host serving (wire router over N loopback hosts, 2 workers each):\n\
+             \x20 hosts    reqs      ok   sheds    errs       tok/s   p50us   p99us  shed_rate\n",
+        );
+        for r in &self.multi_host {
+            s.push_str(&format!(
+                "  {:>5} {:>7} {:>7} {:>7} {:>7} {:>11.0} {:>7} {:>7} {:>10.4}\n",
+                r.hosts,
+                r.requests,
+                r.responses_ok,
+                r.sheds,
+                r.errors,
+                r.tok_s,
+                r.p50_us,
+                r.p99_us,
+                r.shed_rate
+            ));
+        }
+        s
     }
 
     /// The PR-8 mixed-traffic table: single-queue vs variant-affine
@@ -391,6 +438,25 @@ impl PerfReport {
                 )
             })
             .collect();
+        let multi_host: Vec<String> = self
+            .multi_host
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"hosts\":{},\"requests\":{},\"responses_ok\":{},\"sheds\":{},\
+                     \"errors\":{},\"tok_s\":{},\"p50_us\":{},\"p99_us\":{},\"shed_rate\":{}}}",
+                    r.hosts,
+                    r.requests,
+                    r.responses_ok,
+                    r.sheds,
+                    r.errors,
+                    num(r.tok_s),
+                    r.p50_us,
+                    r.p99_us,
+                    num(r.shed_rate)
+                )
+            })
+            .collect();
         let mixed: Vec<String> = self
             .mixed_traffic
             .iter()
@@ -433,7 +499,8 @@ impl PerfReport {
              \x20 \"batched_serve\": [{}],\n\
              \x20 \"hbvla_deploy\": {{\"repacked_tok_s\": {}, \"exact_tok_s\": {}, \"repacked_bytes\": {}, \"exact_bytes\": {}, \"repacked_action_mse\": {}, \"exact_action_mse\": {}}},\n\
              \x20 \"act_scale\": [{}],\n\
-             \x20 \"mixed_traffic\": [{}]\n\
+             \x20 \"mixed_traffic\": [{}],\n\
+             \x20 \"multi_host\": [{}]\n\
              }}\n",
             self.threads,
             self.seed,
@@ -473,7 +540,8 @@ impl PerfReport {
             num(self.hbvla_repacked_action_mse),
             num(self.hbvla_exact_action_mse),
             act_scale.join(","),
-            mixed.join(",")
+            mixed.join(","),
+            multi_host.join(",")
         )
     }
 
@@ -914,6 +982,18 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         mixed_traffic_row(&mix_registry, &obs, &mix_variants, "sharded", 4, 4, mix_requests),
     ];
 
+    // --- multi-host serving: the same mix through the wire router ---
+    // 1/2/4 loopback hosts (2 workers each) behind one placement-hashed
+    // router; every request crosses real TCP. Aggregate capacity grows
+    // with hosts, so the 4-host tok/s row must beat single-host — that
+    // ratio is the scale-out win the PR-9 baseline archives.
+    let mh_requests = if smoke { 96 } else { 384 };
+    let seq_len = tb.model.cfg.seq_len();
+    let multi_host = [1usize, 2, 4]
+        .iter()
+        .map(|&h| multi_host_row(&mix_registry, &obs, &mix_variants, h, seq_len, mh_requests))
+        .collect();
+
     PerfReport {
         threads,
         seed,
@@ -954,6 +1034,101 @@ pub fn run_perf_opts(threads: usize, seed: u64, smoke: bool) -> PerfReport {
         simd_lanes,
         attn_rows,
         mixed_traffic,
+        multi_host,
+    }
+}
+
+/// Drive one loopback cluster size with the mixed round-robin traffic
+/// from 4 concurrent clients through the router, and fold the row the
+/// multi-host table reports. A generous deadline arms the full routed
+/// admission path (host-health-priced shedding) without tripping it on
+/// healthy hosts.
+fn multi_host_row(
+    registry: &Arc<ModelRegistry>,
+    obs: &Observation,
+    variants: &[&str],
+    hosts: usize,
+    seq_len: usize,
+    n_req: usize,
+) -> MultiHostRow {
+    use crate::coordinator::router::LocalCluster;
+    use crate::coordinator::server::AdmissionControl;
+    use crate::coordinator::{LatencyStats, RouterConfig};
+    let serve_cfg = ServeConfig {
+        workers: 2,
+        shards: 0,
+        max_batch: 8,
+        max_wait: std::time::Duration::from_micros(300),
+        admission: AdmissionControl::DeadlineAware { min_samples: 16 },
+    };
+    let router_cfg = RouterConfig { admission: AdmissionControl::DeadlineAware { min_samples: 16 } };
+    let cluster = LocalCluster::spawn(Arc::clone(registry), serve_cfg, hosts, router_cfg)
+        .expect("spawn loopback cluster");
+    let deadline = std::time::Duration::from_millis(50);
+    let clients = 4usize;
+    let per_client = n_req / clients;
+    let ok = std::sync::atomic::AtomicU64::new(0);
+    let sheds = std::sync::atomic::AtomicU64::new(0);
+    let errors = std::sync::atomic::AtomicU64::new(0);
+    let latency = std::sync::Mutex::new(LatencyStats::default());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let router = &cluster.router;
+            let (ok, sheds, errors, latency) = (&ok, &sheds, &errors, &latency);
+            s.spawn(move || {
+                let wave = 8usize;
+                let mut sent = 0usize;
+                while sent < per_client {
+                    let n = wave.min(per_client - sent);
+                    let mut handles = Vec::with_capacity(n);
+                    for k in 0..n {
+                        let v = variants[(c + sent + k) % variants.len()];
+                        let req = ServeRequest::new(obs.clone())
+                            .with_variant(v)
+                            .with_deadline(deadline);
+                        match router.submit_async(req) {
+                            Ok(h) => handles.push(h),
+                            Err(crate::coordinator::ServeError::Overloaded { .. }) => {
+                                sheds.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    for h in handles {
+                        match h.wait() {
+                            Ok(rsp) => {
+                                ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                latency.lock().unwrap().record(rsp.latency());
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    sent += n;
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let p = latency.lock().unwrap().percentiles_us(&[0.50, 0.99]);
+    cluster.shutdown();
+    let requests = per_client * clients;
+    let responses_ok = ok.load(std::sync::atomic::Ordering::Relaxed);
+    let shed_count = sheds.load(std::sync::atomic::Ordering::Relaxed);
+    MultiHostRow {
+        hosts,
+        requests,
+        responses_ok,
+        sheds: shed_count,
+        errors: errors.load(std::sync::atomic::Ordering::Relaxed),
+        tok_s: responses_ok as f64 * seq_len as f64 / wall.max(1e-9),
+        p50_us: p[0],
+        p99_us: p[1],
+        shed_rate: shed_count as f64 / requests.max(1) as f64,
     }
 }
 

@@ -2,7 +2,7 @@
 //! is live, verifying graceful degradation (typed errors only — never a
 //! hang, never a panic, never a silently-dropped request).
 
-/// The three fault families the harness can inject mid-run.
+/// The fault families the harness can inject mid-run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Drill {
     /// N robots synchronize their submits into one burst: the driver
@@ -19,6 +19,13 @@ pub enum Drill {
     /// The server loses workers mid-run (`shrink_workers`): capacity
     /// halves, in-flight requests must still all be answered.
     WorkerLoss,
+    /// Multi-host fleets only: a live host is killed mid-run. In-flight
+    /// requests on it surface as typed `WorkerDropped`, the router
+    /// re-homes its variants along the placement probe sequence, and the
+    /// fleet must drain with zero hangs. Requires a client with more
+    /// than one host (`fleet --hosts N`); a single-process fleet rejects
+    /// it at config parse.
+    HostLoss,
 }
 
 impl Drill {
@@ -27,12 +34,15 @@ impl Drill {
             Drill::Overload => "overload",
             Drill::Hotspot => "hotspot",
             Drill::WorkerLoss => "worker-loss",
+            Drill::HostLoss => "host-loss",
         }
     }
 }
 
 /// Parse a `--drill` spec: `none`, `overload`, `hotspot`, `worker-loss`,
-/// `all`, or a comma list of the named drills. `None` = unknown token.
+/// `host-loss`, `all`, or a comma list of the named drills. `None` =
+/// unknown token. `all` stays the three single-process drills —
+/// `host-loss` is opted into explicitly because it needs `--hosts`.
 pub fn parse_drills(spec: &str) -> Option<Vec<Drill>> {
     let spec = spec.trim().to_ascii_lowercase();
     if spec.is_empty() || spec == "none" {
@@ -47,6 +57,7 @@ pub fn parse_drills(spec: &str) -> Option<Vec<Drill>> {
             "overload" => Drill::Overload,
             "hotspot" => Drill::Hotspot,
             "worker-loss" | "workerloss" | "worker_loss" => Drill::WorkerLoss,
+            "host-loss" | "hostloss" | "host_loss" => Drill::HostLoss,
             _ => return None,
         };
         if !out.contains(&d) {
@@ -70,6 +81,11 @@ pub struct DrillReport {
     /// (after = the shrink target; convergence is asserted by tests).
     pub workers_before_loss: usize,
     pub workers_after_loss: usize,
+    /// Live hosts observed immediately before / after the host-loss
+    /// drill, and the address of the host it killed (multi-host fleets).
+    pub hosts_before_loss: usize,
+    pub hosts_after_loss: usize,
+    pub host_killed: Option<String>,
 }
 
 /// One drill armed at a progress trigger point.
@@ -118,6 +134,11 @@ mod tests {
         // Duplicates collapse; unknown tokens are a typed parse failure.
         assert_eq!(parse_drills("overload,overload"), Some(vec![Drill::Overload]));
         assert_eq!(parse_drills("chaos-monkey"), None);
+        // host-loss is explicit opt-in — never part of `all` (it needs a
+        // multi-host client).
+        assert_eq!(parse_drills("host-loss"), Some(vec![Drill::HostLoss]));
+        assert_eq!(parse_drills("host_loss,overload"), Some(vec![Drill::HostLoss, Drill::Overload]));
+        assert!(!parse_drills("all").unwrap().contains(&Drill::HostLoss));
     }
 
     #[test]

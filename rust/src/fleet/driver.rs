@@ -1,7 +1,9 @@
 //! The fleet driver: builds N seeded robots over a heterogeneous task
 //! mix, replays their dense references locally, then drives every robot
-//! against a shared [`PolicyServer`] until all episodes finish — while a
-//! drill scheduler injects scripted faults at fixed progress points.
+//! against a shared serving surface — an in-process [`PolicyServer`] or
+//! a multi-host [`LocalCluster`] behind the wire router — until all
+//! episodes finish, while a drill scheduler injects scripted faults at
+//! fixed progress points.
 //!
 //! The driver is a single-threaded poll loop over robot state machines;
 //! all concurrency lives server-side. That keeps the client determinism
@@ -17,7 +19,8 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::registry::ModelRegistry;
-use crate::coordinator::server::{PolicyServer, ServeError, ServeRequest};
+use crate::coordinator::router::LocalCluster;
+use crate::coordinator::server::{PolicyServer, ResponseHandle, ServeError, ServeRequest};
 use crate::fleet::divergence::DivergenceTracker;
 use crate::fleet::drill::{schedule, Drill, DrillReport};
 use crate::fleet::report::{FleetReport, FleetVariantRow};
@@ -55,6 +58,11 @@ pub struct FleetConfig {
     pub max_retries: u32,
     /// Registry variant replayed locally as the closed-loop reference.
     pub reference: String,
+    /// Robot control period (`fleet --control-hz`): each robot starts at
+    /// most one decode per period, parking early arrivals in
+    /// [`Phase::Paced`]. Retries of an already-started decode bypass the
+    /// pace (the decode is late, not early). `None` = free-running.
+    pub control_period: Option<Duration>,
 }
 
 impl Default for FleetConfig {
@@ -68,7 +76,68 @@ impl Default for FleetConfig {
             drills: Vec::new(),
             max_retries: 64,
             reference: "dense".to_string(),
+            control_period: None,
         }
+    }
+}
+
+/// The serving surface the fleet drives. One robot loop, two backends:
+/// the in-process [`PolicyServer`] (direct function calls) and the
+/// multi-host [`LocalCluster`] (every request crosses the wire router).
+/// The trait is exactly the submit/health/fault surface the driver
+/// touches, so fleet semantics — typed errors, accounting invariants,
+/// drill behavior — are backend-independent by construction.
+pub trait FleetClient {
+    fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError>;
+    fn live_workers(&self) -> usize;
+    fn shrink_workers(&self, target: usize);
+    /// Live host processes behind this client (1 for in-process serving).
+    fn live_hosts(&self) -> usize {
+        1
+    }
+    /// Kill one live host (the `host-loss` drill primitive), returning
+    /// its address. `None` when there is no host to spare.
+    fn kill_host(&self) -> Option<String> {
+        None
+    }
+}
+
+impl FleetClient for PolicyServer {
+    fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+        PolicyServer::submit_async(self, req)
+    }
+
+    fn live_workers(&self) -> usize {
+        PolicyServer::live_workers(self)
+    }
+
+    fn shrink_workers(&self, target: usize) {
+        PolicyServer::shrink_workers(self, target);
+    }
+}
+
+impl FleetClient for LocalCluster {
+    fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+        self.router.submit_async(req)
+    }
+
+    fn live_workers(&self) -> usize {
+        self.router.live_workers()
+    }
+
+    fn shrink_workers(&self, target: usize) {
+        // The worker-loss drill asks for a FLEET-wide target; spread it
+        // evenly so every live host keeps at least one worker.
+        let hosts = self.live_hosts().max(1);
+        self.router.broadcast_shrink((target / hosts).max(1));
+    }
+
+    fn live_hosts(&self) -> usize {
+        LocalCluster::live_hosts(self)
+    }
+
+    fn kill_host(&self) -> Option<String> {
+        LocalCluster::kill_host(self)
     }
 }
 
@@ -79,6 +148,8 @@ pub enum FleetError {
     NoRobots,
     NoVariants,
     UnknownVariant(String),
+    /// `--drill host-loss` against a client without a host to spare.
+    DrillNeedsHosts,
 }
 
 impl std::fmt::Display for FleetError {
@@ -88,6 +159,9 @@ impl std::fmt::Display for FleetError {
             FleetError::NoVariants => write!(f, "fleet needs at least one serving variant"),
             FleetError::UnknownVariant(v) => {
                 write!(f, "variant '{v}' is not in the model registry")
+            }
+            FleetError::DrillNeedsHosts => {
+                write!(f, "the host-loss drill needs a multi-host fleet (--hosts >= 2)")
             }
         }
     }
@@ -174,9 +248,9 @@ fn retry_or_abort(robot: &mut Robot, now: Instant, backoff_us: u64, max_retries:
 /// Submit the robot's pending decode. Every failure is a typed counter
 /// plus either a backoff or an abort — nothing is retried blind, nothing
 /// disappears.
-fn submit_decode(
+fn submit_decode<C: FleetClient>(
     robot: &mut Robot,
-    server: &PolicyServer,
+    client: &C,
     cfg: &FleetConfig,
     now: Instant,
 ) -> Phase {
@@ -186,7 +260,7 @@ fn submit_decode(
         req = req.with_deadline(d);
     }
     robot.begin_submit();
-    match server.submit_async(req) {
+    match client.submit_async(req) {
         Ok(handle) => Phase::Waiting(handle),
         Err(ServeError::Overloaded { retry_after_us, .. }) => {
             robot.serving_counters_mut().admission_sheds += 1;
@@ -209,10 +283,22 @@ fn submit_decode(
     }
 }
 
-/// Drive the whole fleet to completion against a live server.
+/// Drive the whole fleet to completion against an in-process server.
+/// (Thin wrapper over [`run_fleet_on`]; multi-host fleets pass a
+/// [`LocalCluster`] there instead.)
 pub fn run_fleet(
     registry: &Arc<ModelRegistry>,
     server: &PolicyServer,
+    cfg: &FleetConfig,
+    obs_params: &ObsParams,
+) -> Result<FleetReport, FleetError> {
+    run_fleet_on(registry, server, cfg, obs_params)
+}
+
+/// Drive the whole fleet to completion against any [`FleetClient`].
+pub fn run_fleet_on<C: FleetClient>(
+    registry: &Arc<ModelRegistry>,
+    client: &C,
     cfg: &FleetConfig,
     obs_params: &ObsParams,
 ) -> Result<FleetReport, FleetError> {
@@ -221,6 +307,9 @@ pub fn run_fleet(
     }
     if cfg.variants.is_empty() {
         return Err(FleetError::NoVariants);
+    }
+    if cfg.drills.contains(&Drill::HostLoss) && client.live_hosts() < 2 {
+        return Err(FleetError::DrillNeedsHosts);
     }
     for v in &cfg.variants {
         if registry.get(v).is_none() {
@@ -253,6 +342,11 @@ pub fn run_fleet(
     let mut scheduled = schedule(&cfg.drills);
     let mut drill_report = DrillReport::default();
     let mut gathering = false;
+
+    // Per-robot control-period deadline (indexed by robot id): the
+    // earliest instant the robot may START its next decode. All due at
+    // t_start so the first decode is never delayed.
+    let mut next_due: Vec<Instant> = vec![t_start; cfg.robots];
 
     let mut latency: HashMap<String, LatencyStats> = HashMap::new();
     let mut responses_total = 0u64;
@@ -308,10 +402,28 @@ pub fn run_fleet(
                         if gathering {
                             Phase::Gathered
                         } else {
-                            submit_decode(robot, server, cfg, now)
+                            // Retries bypass the control pace: the decode
+                            // already started its period when it first
+                            // submitted, it is late, not early.
+                            submit_decode(robot, client, cfg, now)
                         }
                     } else {
                         Phase::BackOff { until }
+                    }
+                }
+                Phase::Paced { until } => {
+                    if now >= until {
+                        progress = true;
+                        if gathering {
+                            Phase::Gathered
+                        } else {
+                            if let Some(period) = cfg.control_period {
+                                next_due[robot.id] = now + period;
+                            }
+                            submit_decode(robot, client, cfg, now)
+                        }
+                    } else {
+                        Phase::Paced { until }
                     }
                 }
                 Phase::Ready => match robot.advance() {
@@ -325,7 +437,16 @@ pub fn run_fleet(
                         if gathering {
                             Phase::Gathered
                         } else {
-                            submit_decode(robot, server, cfg, now)
+                            match cfg.control_period {
+                                Some(_) if now < next_due[robot.id] => {
+                                    Phase::Paced { until: next_due[robot.id] }
+                                }
+                                Some(period) => {
+                                    next_due[robot.id] = now + period;
+                                    submit_decode(robot, client, cfg, now)
+                                }
+                                None => submit_decode(robot, client, cfg, now),
+                            }
                         }
                     }
                 },
@@ -372,11 +493,16 @@ pub fn run_fleet(
                     }
                 }
                 Drill::WorkerLoss => {
-                    let live = server.live_workers();
+                    let live = client.live_workers();
                     drill_report.workers_before_loss = live;
                     let target = (live / 2).max(1);
-                    server.shrink_workers(target);
+                    client.shrink_workers(target);
                     drill_report.workers_after_loss = target;
+                }
+                Drill::HostLoss => {
+                    drill_report.hosts_before_loss = client.live_hosts();
+                    drill_report.host_killed = client.kill_host();
+                    drill_report.hosts_after_loss = client.live_hosts();
                 }
             }
         }
@@ -396,7 +522,13 @@ pub fn run_fleet(
                 let release_now = Instant::now();
                 for &idx in &parked {
                     let robot = &mut robots[idx];
-                    robot.phase = submit_decode(robot, server, cfg, release_now);
+                    // A burst release is itself a control tick: the next
+                    // decode paces off it rather than submitting twice in
+                    // one period.
+                    if let Some(period) = cfg.control_period {
+                        next_due[robot.id] = release_now + period;
+                    }
+                    robot.phase = submit_decode(robot, client, cfg, release_now);
                 }
                 drill_report.overload_bursts += 1;
                 drill_report.max_burst_size = drill_report.max_burst_size.max(parked.len() as u64);
@@ -450,7 +582,7 @@ pub fn run_fleet(
         seed: cfg.seed,
         reference: cfg.reference.clone(),
         drills: cfg.drills.clone(),
-        live_workers_at_end: server.live_workers(),
+        live_workers_at_end: client.live_workers(),
         total_responses: responses_total,
         wall_secs: t_start.elapsed().as_secs_f64(),
         rows,
@@ -509,5 +641,6 @@ mod tests {
     fn fleet_errors_render() {
         assert!(FleetError::NoRobots.to_string().contains("robot"));
         assert!(FleetError::UnknownVariant("x".into()).to_string().contains("'x'"));
+        assert!(FleetError::DrillNeedsHosts.to_string().contains("--hosts"));
     }
 }

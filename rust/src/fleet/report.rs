@@ -253,13 +253,20 @@ impl FleetReport {
         let d = &self.drill_report;
         if !self.drills.is_empty() {
             out.push_str(&format!(
-                "drills: overload bursts={} (max {}), hotspot switched={}{}, workers {} -> {}\n",
+                "drills: overload bursts={} (max {}), hotspot switched={}{}, workers {} -> {}{}\n",
                 d.overload_bursts,
                 d.max_burst_size,
                 d.hotspot_switched,
                 d.hotspot_variant.as_deref().map(|v| format!(" to {v}")).unwrap_or_default(),
                 d.workers_before_loss,
-                d.workers_after_loss
+                d.workers_after_loss,
+                d.host_killed
+                    .as_deref()
+                    .map(|h| format!(
+                        ", hosts {} -> {} (killed {h})",
+                        d.hosts_before_loss, d.hosts_after_loss
+                    ))
+                    .unwrap_or_default()
             ));
         }
         out
@@ -279,7 +286,9 @@ impl FleetReport {
              \"variants\": [{}], \
              \"drill_report\": {{\"overload_bursts\": {}, \"max_burst_size\": {}, \
              \"hotspot_switched\": {}, \"hotspot_variant\": {}, \
-             \"workers_before_loss\": {}, \"workers_after_loss\": {}}}}}",
+             \"workers_before_loss\": {}, \"workers_after_loss\": {}, \
+             \"hosts_before_loss\": {}, \"hosts_after_loss\": {}, \
+             \"host_killed\": {}}}}}",
             self.robots,
             self.horizon,
             self.seed,
@@ -296,7 +305,12 @@ impl FleetReport {
                 .as_deref()
                 .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v))),
             d.workers_before_loss,
-            d.workers_after_loss
+            d.workers_after_loss,
+            d.hosts_before_loss,
+            d.hosts_after_loss,
+            d.host_killed
+                .as_deref()
+                .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v)))
         )
     }
 }

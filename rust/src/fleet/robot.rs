@@ -57,6 +57,11 @@ pub enum Phase {
     Waiting(ResponseHandle),
     /// Backing off after a typed serving error; resubmits at `until`.
     BackOff { until: Instant },
+    /// Holding a fresh decode until the robot's next control-period tick
+    /// (`fleet --control-hz`): the observation is cached, the submit is
+    /// withheld until `until`. Unlike `BackOff` this is pacing, not
+    /// error recovery — it touches no retry bookkeeping.
+    Paced { until: Instant },
     /// Episode over (outcome recorded) or aborted (dropped counted).
     Done,
 }

@@ -8,6 +8,8 @@
 //! hbvla quantize --method hbvla                      # PTQ report
 //! hbvla perf                                         # §Perf measurements
 //! hbvla serve                                        # serving-router demo
+//! hbvla serve --listen ADDR                          # one wire host (TCP)
+//! hbvla route --hosts N                              # router over N host processes
 //! hbvla fleet                                        # fleet replay harness
 //! ```
 //!
@@ -34,9 +36,16 @@
 //! `fleet` drives N simulated robots closed-loop against the policy
 //! server (`--robots N`, `--horizon N`, `--variants a,b,c`, `--reference
 //! NAME`, `--deadline-us U`, `--drill none|overload|hotspot|worker-loss|
-//! all`), tracking per-variant success retention, divergence-vs-horizon
-//! and shed/miss/latency stats; `--json PATH` merges the `fleet` section
-//! into the hbvla-bench-v1 report at PATH.
+//! host-loss|all`), tracking per-variant success retention,
+//! divergence-vs-horizon and shed/miss/latency stats; `--json PATH`
+//! merges the `fleet` section into the hbvla-bench-v1 report at PATH.
+//! `--hosts N` routes all fleet traffic across N loopback wire hosts
+//! behind the placement-hashed router (arming the `host-loss` drill);
+//! `--control-hz F` paces each robot to F decode starts per second.
+//!
+//! `route` is the same front door over TRUE process isolation: it spawns
+//! `--hosts N` children of this binary in `serve --listen` mode, connects
+//! a router to all of them, and drives `--requests N` across hosts.
 
 use hbvla::eval::tables::EvalBudget;
 use hbvla::report::Table;
@@ -412,6 +421,27 @@ fn main() {
                     budget.threads
                 );
             }
+            // `--listen ADDR` turns `serve` into a wire host: expose this
+            // process's `PolicyServer` on a TCP socket speaking the
+            // length-prefixed frame protocol and block until stdin closes
+            // (the `route` front door spawns these as children, parses
+            // the printed handshake line, and owns their lifetime).
+            if let Some(listen) = args.get("listen") {
+                let host =
+                    hbvla::coordinator::WireHost::spawn(Arc::clone(&registry), cfg.clone(), listen)
+                        .unwrap_or_else(|e| panic!("bind {listen}: {e}"));
+                println!("hbvla-host listening on {}", host.addr());
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match std::io::BufRead::read_line(&mut std::io::stdin().lock(), &mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                }
+                host.shutdown();
+                return;
+            }
             let server = PolicyServer::start(Arc::clone(&registry), cfg.clone());
             println!(
                 "serving variant '{variant}' with {} workers, {} shards, max batch {}, max wait {:?}",
@@ -459,9 +489,178 @@ fn main() {
             println!("mean batch size: {:.2}", server.mean_batch_size());
             server.shutdown();
         }
+        Some("route") => {
+            // The multi-host front door over TRUE process isolation: N
+            // `serve --listen` children of this same binary, one Router
+            // connected to all of them, traffic spanning hosts. (The
+            // loopback in-process equivalent is `fleet --hosts N`.)
+            use hbvla::coordinator::metrics::LatencyStats;
+            use hbvla::coordinator::{AdmissionControl, Router, RouterConfig, ServeRequest};
+            use std::io::BufRead;
+            let smoke = args.flag("smoke");
+            let n_hosts = args.usize_or("hosts", 2).max(1);
+            let exe = std::env::current_exe().expect("current_exe");
+            let mut children = Vec::new();
+            for i in 0..n_hosts {
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("serve")
+                    .arg("--listen")
+                    .arg("127.0.0.1:0")
+                    .arg("--workers")
+                    .arg(args.usize_or("workers", 2).to_string())
+                    .arg("--shards")
+                    .arg(args.usize_or("shards", 0).to_string())
+                    .arg("--max-batch")
+                    .arg(args.usize_or("max-batch", 8).to_string())
+                    .arg("--max-wait-us")
+                    .arg(args.u64_or("max-wait-us", 200).to_string())
+                    .arg("--seed")
+                    .arg(budget.seed.to_string())
+                    .arg("--demos")
+                    .arg(budget.n_demos.to_string())
+                    .arg("--threads")
+                    .arg(budget.threads.to_string());
+                if smoke {
+                    cmd.arg("--smoke");
+                }
+                cmd.stdin(std::process::Stdio::piped())
+                    .stdout(std::process::Stdio::piped())
+                    .stderr(std::process::Stdio::inherit());
+                children.push(cmd.spawn().unwrap_or_else(|e| panic!("spawn host {i}: {e}")));
+            }
+            // Each child prints registration progress, then the parseable
+            // `hbvla-host listening on ADDR` handshake. Keep draining
+            // stdout afterwards so no child ever blocks on a full pipe.
+            let mut addrs = Vec::new();
+            let mut drains = Vec::new();
+            for (i, child) in children.iter_mut().enumerate() {
+                let stdout = child.stdout.take().expect("child stdout");
+                let mut reader = std::io::BufReader::new(stdout);
+                let mut line = String::new();
+                let addr = loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) => panic!("host {i} exited before its listen handshake"),
+                        Err(e) => panic!("host {i} stdout: {e}"),
+                        Ok(_) => {}
+                    }
+                    if let Some(rest) = line.trim().strip_prefix("hbvla-host listening on ") {
+                        break rest.to_string();
+                    }
+                };
+                println!("host {i}: {addr}");
+                addrs.push(addr);
+                drains.push(std::thread::spawn(move || {
+                    let mut sink = String::new();
+                    while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                        sink.clear();
+                    }
+                }));
+            }
+            let deadline_us = args.u64_or("deadline-us", 0);
+            let router_cfg = RouterConfig {
+                admission: if deadline_us > 0 {
+                    AdmissionControl::DeadlineAware { min_samples: 16 }
+                } else {
+                    AdmissionControl::Off
+                },
+            };
+            let router = Router::connect(&addrs, router_cfg)
+                .unwrap_or_else(|e| panic!("router connect: {e}"));
+            // Local testbed only supplies observations + the variant
+            // menu; every decode happens host-side across the wire.
+            let tb = hbvla::eval::build_testbed(
+                hbvla::model::HeadKind::Chunk,
+                hbvla::sim::tasks::libero_suite("object"),
+                budget.n_demos.min(64),
+                budget.seed,
+            );
+            let variants = args.list_or("variants", "dense,hbvla-packed,hbvla-packed-a8");
+            let mut rng = hbvla::util::rng::Rng::new(budget.seed);
+            let task = &tb.tasks[0];
+            let scene = task.instantiate(&mut rng);
+            let obs = hbvla::sim::observe::observe(
+                &scene,
+                task.stages[0].instr(),
+                100,
+                &tb.model,
+                &hbvla::sim::observe::ObsParams::clean(),
+                &mut rng,
+            );
+            let n = args.usize_or("requests", if smoke { 96 } else { 512 });
+            let wave = 16usize;
+            let mut lat = LatencyStats::default();
+            let (mut ok, mut sheds, mut errors, mut submitted) = (0u64, 0u64, 0u64, 0usize);
+            let t0 = std::time::Instant::now();
+            while submitted < n {
+                let k = wave.min(n - submitted);
+                let mut handles = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let mut req = ServeRequest::new(obs.clone())
+                        .with_variant(&variants[submitted % variants.len()]);
+                    if deadline_us > 0 {
+                        req = req.with_deadline(std::time::Duration::from_micros(deadline_us));
+                    }
+                    submitted += 1;
+                    match router.submit_async(req) {
+                        Ok(h) => handles.push(h),
+                        Err(hbvla::coordinator::ServeError::Overloaded { .. }) => sheds += 1,
+                        Err(_) => errors += 1,
+                    }
+                }
+                for h in handles {
+                    match h.wait() {
+                        Ok(rsp) => {
+                            ok += 1;
+                            lat.record(rsp.latency());
+                        }
+                        Err(_) => errors += 1,
+                    }
+                }
+            }
+            let el = t0.elapsed().as_secs_f64();
+            let pcts = lat.percentiles_us(&[0.50, 0.99]);
+            println!(
+                "routed {ok}/{n} requests over {} hosts in {el:.3}s ({:.0} req/s), \
+                 shed {sheds}, errors {errors}, p50 {}us, p99 {}us",
+                router.live_hosts(),
+                ok as f64 / el.max(1e-9),
+                pcts[0],
+                pcts[1]
+            );
+            for (addr, alive) in router.host_addrs() {
+                println!("  host {addr}: {}", if alive { "live" } else { "dead" });
+            }
+            router.shutdown();
+            for mut child in children {
+                // Closing the piped stdin is the children's shutdown
+                // signal; kill is the backstop if one ignores it.
+                drop(child.stdin.take());
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if std::time::Instant::now() < deadline => {
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            for d in drains {
+                let _ = d.join();
+            }
+        }
         Some("fleet") => {
-            use hbvla::coordinator::{AdmissionControl, ModelRegistry, PolicyServer, ServeConfig};
-            use hbvla::fleet::{merge_fleet_json, parse_drills, run_fleet, FleetConfig};
+            use hbvla::coordinator::router::LocalCluster;
+            use hbvla::coordinator::{
+                AdmissionControl, ModelRegistry, PolicyServer, RouterConfig, ServeConfig,
+            };
+            use hbvla::fleet::{merge_fleet_json, parse_drills, run_fleet_on, FleetConfig};
             use std::sync::Arc;
             let smoke = args.flag("smoke");
             let tb = hbvla::eval::build_testbed(
@@ -473,10 +672,21 @@ fn main() {
             let registry = Arc::new(ModelRegistry::new());
             register_standard_variants(&registry, &tb, budget.threads);
             let drills = parse_drills(args.get_or("drill", "none")).unwrap_or_else(|| {
-                eprintln!("--drill expects none|overload|hotspot|worker-loss|all or a comma list");
+                eprintln!(
+                    "--drill expects none|overload|hotspot|worker-loss|host-loss|all \
+                     or a comma list"
+                );
                 std::process::exit(2);
             });
             let deadline_us = args.u64_or("deadline-us", 0);
+            // `--control-hz F` paces each robot to at most F decode
+            // starts per second; 0 (the default) is free-running.
+            let control_hz = args.f64_or("control-hz", 0.0);
+            if control_hz < 0.0 || !control_hz.is_finite() {
+                eprintln!("--control-hz expects a finite rate >= 0, got {control_hz}");
+                std::process::exit(2);
+            }
+            let n_hosts = args.usize_or("hosts", 1);
             let fleet_cfg = FleetConfig {
                 robots: args.usize_or("robots", if smoke { 16 } else { 200 }),
                 horizon: args.usize_or("horizon", if smoke { 12 } else { 64 }),
@@ -489,6 +699,11 @@ fn main() {
                 },
                 drills,
                 reference: args.get_or("reference", "dense").to_string(),
+                control_period: if control_hz > 0.0 {
+                    Some(std::time::Duration::from_secs_f64(1.0 / control_hz))
+                } else {
+                    None
+                },
                 ..Default::default()
             };
             let serve_cfg = ServeConfig {
@@ -505,25 +720,40 @@ fn main() {
                 },
             };
             println!(
-                "fleet: {} robots, horizon {}, variants [{}], {} workers, drills [{}]",
+                "fleet: {} robots, horizon {}, variants [{}], {} workers, {} host(s), drills [{}]",
                 fleet_cfg.robots,
                 fleet_cfg.horizon,
                 fleet_cfg.variants.join(","),
                 serve_cfg.workers,
+                n_hosts.max(1),
                 fleet_cfg.drills.iter().map(|d| d.label()).collect::<Vec<_>>().join(",")
             );
-            let server = PolicyServer::start(Arc::clone(&registry), serve_cfg);
-            let report = run_fleet(
-                &registry,
-                &server,
-                &fleet_cfg,
-                &hbvla::sim::observe::ObsParams::clean(),
-            )
+            let obs_params = hbvla::sim::observe::ObsParams::clean();
+            // `--hosts N` (N >= 2) routes every fleet request across the
+            // wire: N loopback hosts behind the placement-hashed router,
+            // with the same admission policy router-side.
+            let report = if n_hosts >= 2 {
+                let router_cfg = RouterConfig { admission: serve_cfg.admission };
+                let cluster = LocalCluster::spawn(
+                    Arc::clone(&registry),
+                    serve_cfg,
+                    n_hosts,
+                    router_cfg,
+                )
+                .unwrap_or_else(|e| panic!("spawn {n_hosts}-host cluster: {e}"));
+                let report = run_fleet_on(&registry, &cluster, &fleet_cfg, &obs_params);
+                cluster.shutdown();
+                report
+            } else {
+                let server = PolicyServer::start(Arc::clone(&registry), serve_cfg);
+                let report = run_fleet_on(&registry, &server, &fleet_cfg, &obs_params);
+                server.shutdown();
+                report
+            }
             .unwrap_or_else(|e| {
                 eprintln!("fleet failed: {e}");
                 std::process::exit(2);
             });
-            server.shutdown();
             println!("{}", report.render());
             // `--json PATH`: merge the fleet section into an existing
             // hbvla-bench-v1 report at PATH (the perf baseline), or write
@@ -552,16 +782,20 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: hbvla <table1|table2|table3|table4|fig1|fig3|fig4|quantize|perf|serve|\
-                 fleet|all> \
+                 route|fleet|all> \
                  [--episodes N] [--demos N] [--seed S] [--threads T] [--method M] [--md] [--smoke]\n\
                  perf flags: [--json PATH] (machine-readable BENCH baseline)\n\
                  serve flags: [--variant dense|rtn-packed|hbvla-packed|hbvla-exact|\
                  rtn-packed-a8|hbvla-packed-a8] \
                  [--act-precision f32|int8] [--act-scale per-token|static] [--act-clip max|p999] \
                  [--attn-precision f32|int8] [--workers N] [--shards N] \
-                 [--max-batch N] [--max-wait-us U] [--requests N]\n\
+                 [--max-batch N] [--max-wait-us U] [--requests N] \
+                 [--listen ADDR] (wire-host mode)\n\
+                 route flags: [--hosts N] [--requests N] [--variants a,b,c] [--deadline-us U] \
+                 [--workers N] [--shards N] [--max-batch N] [--max-wait-us U]\n\
                  fleet flags: [--robots N] [--horizon N] [--variants a,b,c] [--reference NAME] \
-                 [--deadline-us U] [--drill none|overload|hotspot|worker-loss|all|LIST] \
+                 [--deadline-us U] [--drill none|overload|hotspot|worker-loss|host-loss|all|LIST] \
+                 [--hosts N] [--control-hz F] \
                  [--workers N] [--shards N] [--max-batch N] [--max-wait-us U] [--json PATH]"
             );
             std::process::exit(2);
