@@ -16,7 +16,9 @@ pub mod wire;
 pub use metrics::{BatchStats, LatencyStats, ShardStats, VariantStats};
 pub use registry::{ModelRegistry, RegistryError};
 pub use rollout::{eval_tasks, RolloutConfig, SuiteResult};
-pub use router::{estimated_host_wait_us, Router, RouterConfig, WireHost};
+pub use router::{
+    estimated_host_wait_us, HostCounters, LocalCluster, Router, RouterConfig, WireHost,
+};
 pub use scheduler::{
     quantize_exact_into_registry, quantize_into_registry, quantize_model, quantize_model_exact,
     register_a8_variant, register_static_scale_variant, QuantJobReport,
@@ -27,4 +29,4 @@ pub use server::{
     ServeError, ServeRequest, ServeResponse, VariantSelector,
 };
 pub use shard::shard_for;
-pub use wire::{HostHealth, WireError, MAX_FRAME_BYTES};
+pub use wire::{HostHealth, WireError, MAX_FRAME_BYTES, PROTOCOL_VERSION};

@@ -65,6 +65,11 @@ struct Inner {
     /// Insertion-ordered (name, model) pairs; names are unique.
     variants: Vec<(String, Arc<MiniVla>)>,
     default: Option<String>,
+    /// Bumped on every replace/remove — an epoch-counted handle
+    /// (`get_with_epoch`) lets a dispatcher detect a hot-swap: in-flight
+    /// batches finish on the `Arc` they already hold (old weights), new
+    /// submits resolve the new epoch's mapping.
+    epoch: u64,
 }
 
 /// Thread-safe registry of named model variants sharing one serving
@@ -92,7 +97,10 @@ impl ModelRegistry {
             }
         }
         match g.variants.iter_mut().find(|(n, _)| n == name) {
-            Some(slot) => slot.1 = model,
+            Some(slot) => {
+                slot.1 = model;
+                g.epoch += 1;
+            }
             None => g.variants.push((name.to_string(), model)),
         }
         if g.default.is_none() {
@@ -101,10 +109,46 @@ impl ModelRegistry {
         Ok(())
     }
 
+    /// Atomically deregister a variant (the hot-swap "kill" primitive).
+    /// In-flight batches keep the `Arc<MiniVla>` they resolved at
+    /// dispatch and finish on the old weights; every later resolve —
+    /// new submits AND queued groups that re-resolve at dispatch — fails
+    /// with a typed [`crate::coordinator::ServeError::UnknownVariant`].
+    /// If the removed variant was the default, the default re-points at
+    /// the first remaining variant (or clears when none remain).
+    pub fn remove(&self, name: &str) -> Result<Arc<MiniVla>, RegistryError> {
+        let mut g = self.inner.lock().unwrap();
+        let idx = g
+            .variants
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| RegistryError::UnknownVariant { variant: name.to_string() })?;
+        let (_, model) = g.variants.remove(idx);
+        if g.default.as_deref() == Some(name) {
+            g.default = g.variants.first().map(|(n, _)| n.clone());
+        }
+        g.epoch += 1;
+        Ok(model)
+    }
+
     /// Look up a variant by name.
     pub fn get(&self, name: &str) -> Option<Arc<MiniVla>> {
         let g = self.inner.lock().unwrap();
         g.variants.iter().find(|(n, _)| n == name).map(|(_, m)| Arc::clone(m))
+    }
+
+    /// Look up a variant together with the registry epoch the handle was
+    /// minted at — stale if [`ModelRegistry::epoch`] has moved since.
+    pub fn get_with_epoch(&self, name: &str) -> Option<(Arc<MiniVla>, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.variants.iter().find(|(n, _)| n == name).map(|(_, m)| (Arc::clone(m), g.epoch))
+    }
+
+    /// Mutation epoch: bumped on every variant replace or remove (new
+    /// registrations under a fresh name don't invalidate any handle, so
+    /// they leave it alone).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
     }
 
     /// The default variant's name (first registered unless overridden).
@@ -171,6 +215,42 @@ mod tests {
         r.register("m", Arc::clone(&replacement)).unwrap();
         assert_eq!(r.len(), 1);
         assert_eq!(r.get("m").unwrap().cfg.seed, 9);
+    }
+
+    #[test]
+    fn remove_is_atomic_epoch_counted_and_repoints_default() {
+        let r = ModelRegistry::new();
+        assert_eq!(r.epoch(), 0);
+        r.register("dense", tiny_model(1)).unwrap();
+        r.register("packed", tiny_model(2)).unwrap();
+        assert_eq!(r.epoch(), 0, "fresh names do not invalidate handles");
+
+        // A handle minted before the swap stays on the old weights.
+        let (held, epoch_at_mint) = r.get_with_epoch("packed").unwrap();
+        assert_eq!(held.cfg.seed, 2);
+
+        // Removing the DEFAULT re-points it at the first survivor.
+        let removed = r.remove("dense").unwrap();
+        assert_eq!(removed.cfg.seed, 1);
+        assert_eq!(r.default_variant().as_deref(), Some("packed"));
+        assert_eq!(r.epoch(), 1);
+
+        // Replace bumps the epoch too; the held Arc is now detectably
+        // stale but still serves the old weights (in-flight contract).
+        r.register("packed", tiny_model(9)).unwrap();
+        assert!(r.epoch() > epoch_at_mint);
+        assert_eq!(held.cfg.seed, 2);
+        assert_eq!(r.get("packed").unwrap().cfg.seed, 9);
+
+        // Removing the last variant clears the default; unknown names
+        // fail typed.
+        r.remove("packed").unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.default_variant(), None);
+        assert_eq!(
+            r.remove("packed").unwrap_err(),
+            RegistryError::UnknownVariant { variant: "packed".to_string() }
+        );
     }
 
     #[test]

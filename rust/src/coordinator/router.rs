@@ -20,11 +20,26 @@
 //! snapshots lag (single-front-door topology; multiple routers would each
 //! see only their own contribution).
 //!
-//! Failure semantics: a lost connection marks the host dead, drains its
-//! in-flight requests with typed [`ServeError::WorkerDropped`] — never a
-//! hang — and subsequent submissions re-home. A host that receives a
-//! malformed frame drops that CONNECTION and keeps serving others; the
-//! router treats its end of the drop identically to a host loss.
+//! Failure semantics — the serving plane self-heals. A lost connection
+//! marks the host dead and fails its in-flight work over to the next
+//! live replica of each request's variant (same seq — see below), or
+//! with a typed [`ServeError::WorkerDropped`] when no replica exists —
+//! never a hang. A reconnect supervisor keeps re-dialing every dead
+//! address with deterministic per-(host, attempt) jittered exponential
+//! backoff (the same splitmix discipline as the fleet's robot retries);
+//! a successful re-dial re-arms the slot after a `Hello` handshake
+//! (protocol version + host identity) that rejects mismatched or stale
+//! peers with a typed [`WireError`] instead of decoding garbage. A host
+//! that receives a malformed frame drops that CONNECTION and keeps
+//! serving others; the router treats its end of the drop identically to
+//! a host loss.
+//!
+//! Replication: [`RouterConfig::replicas`] = r places each variant on
+//! its home host plus the next r-1 probe-order hosts; submissions pick
+//! the least-loaded live replica (router-local in-flight depth priced at
+//! the host's reported service rate), and failover re-submits to the
+//! next live, untried replica REUSING the router-minted seq — so a
+//! failed-over decode is bit-identical to the no-fault run.
 //!
 //! Bit-parity carries across the wire: the router owns the global
 //! submission `seq` (the noise-stream id) and transmits it in each
@@ -39,7 +54,7 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::server::{
@@ -47,14 +62,55 @@ use crate::coordinator::server::{
     ServeError, ServeRequest, ServeResponse, VariantSelector,
 };
 use crate::coordinator::shard::shard_for;
-use crate::coordinator::wire::{write_frame, Frame, FrameReader, HostHealth};
+use crate::coordinator::wire::{
+    write_frame, Frame, FrameReader, HostHealth, WireError, PROTOCOL_VERSION,
+};
+use crate::util::rng::backoff_jitter_us;
 
 /// How often host-side socket loops re-check the stop flag while idle.
 const HOST_POLL: Duration = Duration::from_millis(5);
 /// Host writer idle sleep between pending-handle scans.
 const WRITER_IDLE: Duration = Duration::from_micros(100);
+/// Initial-dial retry budget: `route` child processes race their bind,
+/// so `Router::connect` retries each address with bounded backoff
+/// instead of failing fast on the first refused connection.
+const DIAL_ATTEMPTS: u32 = 30;
+const DIAL_BASE_US: u64 = 2_000;
+const DIAL_CAP_US: u64 = 200_000;
+/// Re-dial (dead-slot reconnect) backoff schedule — slower than the
+/// initial dial: a dead host is expected to stay dead for a while.
+const REDIAL_BASE_US: u64 = 10_000;
+const REDIAL_CAP_US: u64 = 500_000;
+/// Reconnect-supervisor scan period (it only dials when a dead slot's
+/// backoff deadline has passed).
+const RECONNECT_POLL: Duration = Duration::from_millis(2);
+/// How long the handshake waits for the peer's Hello before rejecting
+/// it typed — a silent or garbage peer must not wedge a dial.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Exponential backoff base for `attempt`, capped.
+fn backoff_us(attempt: u32, base: u64, cap: u64) -> u64 {
+    (base << attempt.min(16)).min(cap)
+}
 
 // ------------------------------------------------------------------ host
+
+/// Process-wide host-identity counter: every spawned [`WireHost`] gets a
+/// distinct id even when several live in one process (LocalCluster).
+static HOST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Mint a host identity: a splitmix-style mix of (pid, per-process
+/// counter), so ids are unique across `route` child processes AND across
+/// in-process respawns of the same address — a restarted host presents a
+/// NEW identity, which is how the router tells a rejoin from a stale
+/// connection.
+fn mint_host_id() -> u64 {
+    let raw = ((std::process::id() as u64) << 32) | HOST_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut z = raw.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
 
 /// Build a host's health snapshot from its server's public telemetry.
 fn health_of(server: &PolicyServer) -> HostHealth {
@@ -91,6 +147,7 @@ struct ConnShared {
 pub struct WireHost {
     server: Arc<PolicyServer>,
     addr: SocketAddr,
+    host_id: u64,
     stop: Arc<AtomicBool>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -109,7 +166,8 @@ impl WireHost {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let threads = Mutex::new(Vec::new());
-        let host = WireHost { server, addr, stop, threads };
+        let host_id = mint_host_id();
+        let host = WireHost { server, addr, host_id, stop, threads };
         let server = Arc::clone(&host.server);
         let stop_flag = Arc::clone(&host.stop);
         let accept = std::thread::spawn(move || {
@@ -120,7 +178,7 @@ impl WireHost {
                         let server = Arc::clone(&server);
                         let stop = Arc::clone(&stop_flag);
                         conns.push(std::thread::spawn(move || {
-                            serve_connection(stream, &server, &stop);
+                            serve_connection(stream, &server, &stop, host_id);
                         }));
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -147,6 +205,11 @@ impl WireHost {
         &self.server
     }
 
+    /// This host's wire identity (greeted in the Hello handshake).
+    pub fn host_id(&self) -> u64 {
+        self.host_id
+    }
+
     /// Stop accepting, tear down live connections (their in-flight
     /// requests surface router-side as [`ServeError::WorkerDropped`]),
     /// and shut the server down. Idempotent.
@@ -169,12 +232,22 @@ impl Drop for WireHost {
 /// Host side of one client connection: a reader (frames in → local
 /// submissions) paired with a writer (completed handles → frames out).
 /// A wire error drops THIS connection only — the host keeps serving.
-fn serve_connection(stream: TcpStream, server: &Arc<PolicyServer>, stop: &Arc<AtomicBool>) {
+fn serve_connection(
+    stream: TcpStream,
+    server: &Arc<PolicyServer>,
+    stop: &Arc<AtomicBool>,
+    host_id: u64,
+) {
     let _ = stream.set_nodelay(true);
+    // Greet FIRST with the handshake (protocol version + host identity),
+    // then the health snapshot — the router rejects anything else.
     let shared = Arc::new(ConnShared {
         alive: AtomicBool::new(true),
         pending: Mutex::new(Vec::new()),
-        outbox: Mutex::new(vec![Frame::Health(health_of(server))]),
+        outbox: Mutex::new(vec![
+            Frame::Hello { version: PROTOCOL_VERSION, host_id },
+            Frame::Health(health_of(server)),
+        ]),
     });
     let writer = {
         let stream = match stream.try_clone() {
@@ -251,8 +324,11 @@ fn handle_client_frame(frame: Frame, shared: &ConnShared, server: &Arc<PolicySer
             server.shrink_workers(target as usize);
             true
         }
-        // Response/Error/Health only flow host → router.
-        Frame::Response { .. } | Frame::Error { .. } | Frame::Health(_) => false,
+        // Response/Error/Health only flow host → router, and Hello only
+        // host → client: a client greeting US is a confused peer.
+        Frame::Response { .. } | Frame::Error { .. } | Frame::Health(_) | Frame::Hello { .. } => {
+            false
+        }
     }
 }
 
@@ -348,99 +424,171 @@ pub fn estimated_host_wait_us(
     Some(total / live_workers.max(1) as f64)
 }
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct RouterConfig {
     /// Deadline-aware admission at the front door, priced against the
     /// target host (same policy enum as the in-process server).
     pub admission: AdmissionControl,
+    /// How many hosts serve each variant: its home host plus the next
+    /// `replicas - 1` along the probe order (clamped to the cluster
+    /// size). 1 — the default — is PR-9 single placement; higher values
+    /// enable transparent per-request failover when a replica drops a
+    /// request mid-flight.
+    pub replicas: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { admission: AdmissionControl::default(), replicas: 1 }
+    }
 }
 
 struct Inflight {
     variant: String,
+    /// The router-minted noise-stream id — REUSED verbatim on failover,
+    /// so a re-submitted request decodes bit-identically to the no-fault
+    /// run.
+    seq: u64,
+    /// The original request, retained so a dropped host's in-flight work
+    /// can be re-submitted to the next live replica.
+    req: ServeRequest,
+    /// Host indices this request was already written to (failover never
+    /// revisits one).
+    tried: Vec<usize>,
     tx: Sender<Result<ServeResponse, ServeError>>,
 }
+
+/// Progress-mark sentinel for "never happened".
+const SEQ_NEVER: u64 = u64::MAX;
 
 struct HostSlot {
     addr: String,
     alive: AtomicBool,
+    /// Peer identity from the Hello handshake (changes when the host
+    /// process restarts — how a rejoin is told apart from a stale peer).
+    host_id: AtomicU64,
     writer: Mutex<TcpStream>,
     inflight: Mutex<HashMap<u64, Inflight>>,
     health: Mutex<HostHealth>,
+    /// Dial attempts against this address, failures included (initial
+    /// connect + every reconnect probe).
+    dial_attempts: AtomicU64,
+    /// Successful re-dials after a death — the rejoin count.
+    redials: AtomicU64,
+    /// Requests this host dropped that were failed over to a replica.
+    failovers: AtomicU64,
+    /// Progress marks: the global seq counter's value when this host
+    /// last died / last rejoined ([`SEQ_NEVER`] = never).
+    last_death_seq: AtomicU64,
+    last_rejoin_seq: AtomicU64,
 }
 
 impl HostSlot {
-    /// Mark dead and fail every in-flight request with a typed error —
-    /// the zero-hangs half of the re-homing contract.
-    fn drain_dead(&self) {
-        self.alive.store(false, Ordering::Relaxed);
-        let drained: Vec<Inflight> =
-            self.inflight.lock().unwrap().drain().map(|(_, v)| v).collect();
-        for inflight in drained {
-            let _ = inflight.tx.send(Err(ServeError::WorkerDropped));
+    fn fresh(addr: String, stream: TcpStream, host_id: u64, dial_attempts: u64) -> HostSlot {
+        HostSlot {
+            addr,
+            alive: AtomicBool::new(true),
+            host_id: AtomicU64::new(host_id),
+            writer: Mutex::new(stream),
+            inflight: Mutex::new(HashMap::new()),
+            health: Mutex::new(HostHealth::default()),
+            dial_attempts: AtomicU64::new(dial_attempts),
+            redials: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            last_death_seq: AtomicU64::new(SEQ_NEVER),
+            last_rejoin_seq: AtomicU64::new(SEQ_NEVER),
         }
     }
 }
 
-/// The front door over N hosts. `submit`/`submit_async` mirror
-/// [`PolicyServer`]'s API (same [`ResponseHandle`]), so clients and the
-/// fleet harness are agnostic to whether they're talking to a process or
-/// a cluster.
-pub struct Router {
+/// Per-host self-healing counters, for summaries and the bench JSON.
+#[derive(Clone, Debug)]
+pub struct HostCounters {
+    pub addr: String,
+    pub alive: bool,
+    pub dial_attempts: u64,
+    pub redials: u64,
+    pub failovers: u64,
+    /// Global-seq progress marks of the last death / rejoin (`None` =
+    /// never happened).
+    pub last_death_seq: Option<u64>,
+    pub last_rejoin_seq: Option<u64>,
+}
+
+/// Read the peer's greeting: the FIRST frame must be a
+/// [`Frame::Hello`] with our protocol version. Returns the peer's host
+/// identity plus the [`FrameReader`] holding whatever arrived behind the
+/// Hello (typically the greeting Health frame) — the reader thread picks
+/// up from there, so no bytes are lost. A silent, closing, or
+/// wrong-version peer fails typed; the read timeout is cleared before
+/// returning.
+fn expect_hello(stream: &TcpStream) -> Result<(u64, FrameReader), WireError> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut fr = FrameReader::new();
+    let mut chunk = [0u8; 4096];
+    let result = loop {
+        match fr.next_frame() {
+            Ok(Some(Frame::Hello { version, host_id })) => {
+                if version == PROTOCOL_VERSION {
+                    break Ok((host_id, fr));
+                }
+                break Err(WireError::VersionMismatch { peer: version, local: PROTOCOL_VERSION });
+            }
+            Ok(Some(_)) => {
+                break Err(WireError::BadHandshake { context: "first frame was not hello" })
+            }
+            Ok(None) => {}
+            Err(e) => break Err(e),
+        }
+        match (&*stream).read(&mut chunk) {
+            Ok(0) => break Err(WireError::BadHandshake { context: "peer closed before hello" }),
+            Ok(n) => fr.extend(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                break Err(WireError::BadHandshake { context: "no hello before timeout" })
+            }
+            Err(e) => break Err(e.into()),
+        }
+    };
+    let _ = stream.set_read_timeout(None);
+    result
+}
+
+/// One dial + handshake against a host address. Handshake failures
+/// (silent peer, version mismatch, non-Hello greeting) surface as
+/// `InvalidData` io errors carrying the typed [`WireError`].
+fn dial_and_greet(addr: &str) -> io::Result<(TcpStream, u64, FrameReader)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let (host_id, fr) =
+        expect_hello(&stream).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    Ok((stream, host_id, fr))
+}
+
+/// The replica window: the `replicas` probe-order positions starting at
+/// `home` (clamped to the cluster size). Pure, so the placement math is
+/// unit-testable without sockets.
+fn replica_window_of(home: usize, n: usize, replicas: usize) -> Vec<usize> {
+    let n = n.max(1);
+    (0..replicas.clamp(1, n)).map(|i| (home + i) % n).collect()
+}
+
+/// Shared core behind [`Router`]: the host slots plus everything the
+/// reader threads and the reconnect supervisor need to self-heal without
+/// borrowing the `Router` itself.
+struct RouterShared {
     hosts: Vec<Arc<HostSlot>>,
     cfg: RouterConfig,
     next_id: AtomicU64,
     next_seq: AtomicU64,
+    stop: AtomicBool,
     readers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
-impl Router {
-    /// Connect to every host address. Fails if ANY host is unreachable —
-    /// a router that silently started degraded would skew placement.
-    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(
-        addrs: &[A],
-        cfg: RouterConfig,
-    ) -> io::Result<Router> {
-        let mut hosts = Vec::with_capacity(addrs.len());
-        let mut readers = Vec::with_capacity(addrs.len());
-        for addr in addrs {
-            let stream = TcpStream::connect(addr)?;
-            stream.set_nodelay(true)?;
-            let reader_stream = stream.try_clone()?;
-            let slot = Arc::new(HostSlot {
-                addr: addr.to_string(),
-                alive: AtomicBool::new(true),
-                writer: Mutex::new(stream),
-                inflight: Mutex::new(HashMap::new()),
-                health: Mutex::new(HostHealth::default()),
-            });
-            let slot2 = Arc::clone(&slot);
-            readers.push(std::thread::spawn(move || router_read_loop(reader_stream, &slot2)));
-            hosts.push(slot);
-        }
-        Ok(Router { hosts, cfg, next_id: AtomicU64::new(0), next_seq: AtomicU64::new(0), readers: Mutex::new(readers) })
-    }
-
-    pub fn n_hosts(&self) -> usize {
-        self.hosts.len()
-    }
-
-    /// Hosts whose connection is currently up.
-    pub fn live_hosts(&self) -> usize {
-        self.hosts.iter().filter(|h| h.alive.load(Ordering::Relaxed)).count()
-    }
-
-    /// Last reported health per host (`None` for dead hosts).
-    pub fn host_health(&self) -> Vec<Option<HostHealth>> {
-        self.hosts
-            .iter()
-            .map(|h| {
-                h.alive
-                    .load(Ordering::Relaxed)
-                    .then(|| h.health.lock().unwrap().clone())
-            })
-            .collect()
-    }
-
+impl RouterShared {
     /// The placement probe sequence for a variant: home host first
     /// (`shard_for` over the FULL host list, so placement is stable
     /// across loss), then successors mod N — the first LIVE entry wins.
@@ -449,6 +597,63 @@ impl Router {
         let n = self.hosts.len();
         let home = shard_for(variant_key, n.max(1));
         (0..n).map(move |i| (home + i) % n)
+    }
+
+    /// The hosts a variant is replicated on (its home plus the next
+    /// `replicas - 1` along the probe order).
+    fn replica_window(&self, variant_key: &str) -> Vec<usize> {
+        let n = self.hosts.len();
+        replica_window_of(shard_for(variant_key, n.max(1)), n, self.cfg.replicas)
+    }
+
+    /// Pick the submission target: the least-loaded LIVE replica, scored
+    /// as router-local in-flight depth × the host's reported service rate
+    /// for this variant ÷ its live workers. Rates only enter when EVERY
+    /// candidate has one (consistent units); ties break toward the
+    /// earlier probe position, so a single-replica or cold cluster
+    /// degrades to exactly the PR-9 home-first placement. When the whole
+    /// window is dead, falls back to the first live host anywhere on the
+    /// probe sequence (re-homing).
+    fn best_replica(&self, variant_key: &str) -> Option<usize> {
+        let live: Vec<usize> = self
+            .replica_window(variant_key)
+            .into_iter()
+            .filter(|&i| self.hosts[i].alive.load(Ordering::Relaxed))
+            .collect();
+        match live.len() {
+            0 => self.probe_order(variant_key).find(|&i| self.hosts[i].alive.load(Ordering::Relaxed)),
+            1 => Some(live[0]),
+            _ => {
+                let rates: Vec<Option<f64>> = live
+                    .iter()
+                    .map(|&i| {
+                        let h = self.hosts[i].health.lock().unwrap();
+                        h.rates
+                            .iter()
+                            .find(|(name, _, samples)| name == variant_key && *samples > 0)
+                            .map(|(_, rate, _)| *rate)
+                    })
+                    .collect();
+                let all_warm = rates.iter().all(|r| r.is_some());
+                let mut best = live[0];
+                let mut best_score = f64::INFINITY;
+                for (k, &i) in live.iter().enumerate() {
+                    let host = &self.hosts[i];
+                    let depth = host.inflight.lock().unwrap().len() as f64;
+                    let rate = if all_warm { rates[k].unwrap() } else { 1.0 };
+                    let workers = host.health.lock().unwrap().live_workers.max(1) as f64;
+                    let score = depth * rate / workers;
+                    // Strict `<` keeps the FIRST minimal candidate — the
+                    // earlier probe position — on ties (`Iterator::min_by`
+                    // would keep the last).
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                Some(best)
+            }
+        }
     }
 
     /// Router-side admission against the target host (see
@@ -489,59 +694,317 @@ impl Router {
         Ok(())
     }
 
-    /// Route one request: place by variant hash, shed at the front door
-    /// if the target host's estimate implies a deadline miss, then write
-    /// the frame — falling through the probe sequence on dead hosts.
-    pub fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+    /// Route one request: place on the best live replica, shed at the
+    /// front door if that host's estimate implies a deadline miss, then
+    /// write the frame — falling through the probe sequence on dead
+    /// hosts. The seq is minted AFTER admission (a shed never perturbs
+    /// the noise stream) and travels with the request through any
+    /// failover.
+    fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
         let variant_key = match &req.variant {
             VariantSelector::Named(name) => name.clone(),
             VariantSelector::Default => String::new(),
         };
-        // Admission prices the HOME host (the first live probe) before a
-        // seq is consumed, mirroring the in-process order: a shed
-        // request never perturbs the noise-stream sequence.
-        let target = self
-            .probe_order(&variant_key)
-            .find(|&i| self.hosts[i].alive.load(Ordering::Relaxed));
-        let Some(target) = target else {
+        let Some(target) = self.best_replica(&variant_key) else {
             return Err(ServeError::Stopped);
         };
         if let Some(d) = req.deadline {
             self.admit(&self.hosts[target], &variant_key, d)?;
         }
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        let frame_req = req;
-        // Probe from the target onward (skipping the liveness re-check on
-        // the first): a write failure marks the host dead, drains it, and
-        // re-homes THIS request to the next live host.
+        let (tx, rx) = channel();
         let n = self.hosts.len();
-        let start = target;
         for step in 0..n {
-            let i = (start + step) % n;
+            let i = (target + step) % n;
             let host = &self.hosts[i];
             if !host.alive.load(Ordering::Relaxed) {
                 continue;
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            let (tx, rx) = channel();
-            host.inflight
-                .lock()
-                .unwrap()
-                .insert(id, Inflight { variant: variant_key.clone(), tx });
-            let frame = Frame::Request { id, seq, req: frame_req.clone() };
+            host.inflight.lock().unwrap().insert(
+                id,
+                Inflight {
+                    variant: variant_key.clone(),
+                    seq,
+                    req: req.clone(),
+                    tried: vec![i],
+                    tx: tx.clone(),
+                },
+            );
+            let frame = Frame::Request { id, seq, req: req.clone() };
             let ok = {
                 let mut w = host.writer.lock().unwrap();
                 write_frame(&mut *w, &frame).is_ok()
             };
             if ok {
+                // The write can land in a socket whose peer died after the
+                // death-drain already ran — our entry would be orphaned
+                // and the handle would hang. Re-check liveness: if the
+                // host died, reclaim our own entry (present ⇒ we still
+                // own it, keep probing; absent ⇒ the drain owns it and
+                // failover is already queued on this same channel).
+                if !host.alive.load(Ordering::Relaxed)
+                    && host.inflight.lock().unwrap().remove(&id).is_some()
+                {
+                    continue;
+                }
                 return Ok(ResponseHandle::new(rx));
             }
-            // Remove our own entry first so the retry doesn't receive
-            // this host's WorkerDropped, then drain the rest.
+            // Remove our own entry first so the probe retry doesn't
+            // receive this host's failover/WorkerDropped, then drain.
             host.inflight.lock().unwrap().remove(&id);
-            host.drain_dead();
+            self.handle_host_death(i);
         }
         Err(ServeError::Stopped)
+    }
+
+    /// Mark a host dead (recording the progress mark once per death) and
+    /// fail its in-flight work over to live replicas — or with a typed
+    /// error when none exist. The zero-hangs half of the re-homing
+    /// contract.
+    fn handle_host_death(&self, idx: usize) {
+        let host = &self.hosts[idx];
+        if host.alive.swap(false, Ordering::Relaxed) {
+            host.last_death_seq.store(self.next_seq.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        let drained: Vec<Inflight> =
+            host.inflight.lock().unwrap().drain().map(|(_, v)| v).collect();
+        for inf in drained {
+            self.failover_or_fail(idx, inf);
+        }
+    }
+
+    /// Re-submit a dropped request to the next live, untried replica —
+    /// REUSING its seq, so the decode is bit-identical to the no-fault
+    /// run — or deliver a typed [`ServeError::WorkerDropped`] when the
+    /// window is exhausted (or the router is stopping).
+    fn failover_or_fail(&self, from: usize, mut inf: Inflight) {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                let _ = inf.tx.send(Err(ServeError::WorkerDropped));
+                return;
+            }
+            let next = self.replica_window(&inf.variant).into_iter().find(|&i| {
+                self.hosts[i].alive.load(Ordering::Relaxed) && !inf.tried.contains(&i)
+            });
+            let Some(next) = next else {
+                let _ = inf.tx.send(Err(ServeError::WorkerDropped));
+                return;
+            };
+            inf.tried.push(next);
+            self.hosts[from].failovers.fetch_add(1, Ordering::Relaxed);
+            let host = &self.hosts[next];
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            host.inflight.lock().unwrap().insert(
+                id,
+                Inflight {
+                    variant: inf.variant.clone(),
+                    seq: inf.seq,
+                    req: inf.req.clone(),
+                    tried: inf.tried.clone(),
+                    tx: inf.tx.clone(),
+                },
+            );
+            let frame = Frame::Request { id, seq: inf.seq, req: inf.req.clone() };
+            let ok = {
+                let mut w = host.writer.lock().unwrap();
+                write_frame(&mut *w, &frame).is_ok()
+            };
+            if ok {
+                // Same orphan race as submit: reclaim ⇒ keep failing
+                // over; absent ⇒ the new host's drain owns the entry.
+                if !host.alive.load(Ordering::Relaxed) {
+                    match host.inflight.lock().unwrap().remove(&id) {
+                        Some(reclaimed) => {
+                            inf = reclaimed;
+                            continue;
+                        }
+                        None => return,
+                    }
+                }
+                return;
+            }
+            host.inflight.lock().unwrap().remove(&id);
+            // Bounded mutual recursion: each level marks a DISTINCT host
+            // dead, so depth ≤ n_hosts.
+            self.handle_host_death(next);
+        }
+    }
+
+    /// Re-arm a dead slot with a freshly greeted connection: new writer,
+    /// reset health (the peer's greeting Health follows in `fr`), new
+    /// identity, counters — and only THEN flip `alive`, so no submission
+    /// races a half-armed slot.
+    fn rearm_slot(
+        self: &Arc<Self>,
+        idx: usize,
+        stream: TcpStream,
+        host_id: u64,
+        fr: FrameReader,
+    ) -> io::Result<()> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let reader_stream = stream.try_clone()?;
+        let host = &self.hosts[idx];
+        *host.writer.lock().unwrap() = stream;
+        *host.health.lock().unwrap() = HostHealth::default();
+        host.host_id.store(host_id, Ordering::Relaxed);
+        host.redials.fetch_add(1, Ordering::Relaxed);
+        host.last_rejoin_seq.store(self.next_seq.load(Ordering::Relaxed), Ordering::Relaxed);
+        host.alive.store(true, Ordering::Relaxed);
+        let shared = Arc::clone(self);
+        let handle =
+            std::thread::spawn(move || router_read_loop(reader_stream, &shared, idx, fr));
+        self.readers.lock().unwrap().push(handle);
+        Ok(())
+    }
+}
+
+/// The reconnect supervisor: keeps re-dialing every dead slot's address
+/// with jittered exponential backoff (deterministic per (host, attempt)
+/// — no reconnect stampede), handshakes each success, and re-arms the
+/// slot. A peer whose identity matches another LIVE slot is stale
+/// (cross-wired address) and is dropped; the dial retries later.
+fn reconnect_loop(shared: &Arc<RouterShared>) {
+    let n = shared.hosts.len();
+    let mut attempts = vec![0u32; n];
+    let mut next_try = vec![Instant::now(); n];
+    while !shared.stop.load(Ordering::Relaxed) {
+        for idx in 0..n {
+            let host = &shared.hosts[idx];
+            if host.alive.load(Ordering::Relaxed) {
+                attempts[idx] = 0;
+                continue;
+            }
+            if Instant::now() < next_try[idx] {
+                continue;
+            }
+            host.dial_attempts.fetch_add(1, Ordering::Relaxed);
+            let rearmed = match dial_and_greet(&host.addr) {
+                Ok((stream, host_id, fr)) => {
+                    let stale = shared.hosts.iter().enumerate().any(|(j, h)| {
+                        j != idx
+                            && h.alive.load(Ordering::Relaxed)
+                            && h.host_id.load(Ordering::Relaxed) == host_id
+                    });
+                    !stale && shared.rearm_slot(idx, stream, host_id, fr).is_ok()
+                }
+                Err(_) => false,
+            };
+            if rearmed {
+                attempts[idx] = 0;
+            } else {
+                attempts[idx] = attempts[idx].saturating_add(1);
+                let base = backoff_us(attempts[idx], REDIAL_BASE_US, REDIAL_CAP_US);
+                let wait = base + backoff_jitter_us(idx as u64, attempts[idx], base);
+                next_try[idx] = Instant::now() + Duration::from_micros(wait);
+            }
+        }
+        std::thread::sleep(RECONNECT_POLL);
+    }
+}
+
+/// The front door over N hosts. `submit`/`submit_async` mirror
+/// [`PolicyServer`]'s API (same [`ResponseHandle`]), so clients and the
+/// fleet harness are agnostic to whether they're talking to a process or
+/// a cluster.
+pub struct Router {
+    shared: Arc<RouterShared>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Router {
+    /// Connect to every host address. Each initial dial retries with the
+    /// same bounded jittered backoff as reconnects (`route` children race
+    /// their binds), but still fails if ANY host never comes up — a
+    /// router that silently started degraded would skew placement. Also
+    /// rejects two addresses answering with the SAME host identity
+    /// (typed [`WireError::StalePeer`]): that is one host wearing two
+    /// slots, which would double its placement weight.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(
+        addrs: &[A],
+        cfg: RouterConfig,
+    ) -> io::Result<Router> {
+        let mut dialed: Vec<(String, TcpStream, u64, FrameReader, u64)> =
+            Vec::with_capacity(addrs.len());
+        for (idx, addr) in addrs.iter().enumerate() {
+            let addr = addr.to_string();
+            let mut attempts: u64 = 0;
+            let (stream, host_id, fr) = loop {
+                attempts += 1;
+                match dial_and_greet(&addr) {
+                    Ok(conn) => break conn,
+                    Err(e) => {
+                        if attempts >= DIAL_ATTEMPTS as u64 {
+                            return Err(e);
+                        }
+                        let base = backoff_us(attempts as u32 - 1, DIAL_BASE_US, DIAL_CAP_US);
+                        let wait = base + backoff_jitter_us(idx as u64, attempts as u32, base);
+                        std::thread::sleep(Duration::from_micros(wait));
+                    }
+                }
+            };
+            if dialed.iter().any(|(_, _, existing, _, _)| *existing == host_id) {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    WireError::StalePeer { host_id },
+                ));
+            }
+            dialed.push((addr, stream, host_id, fr, attempts));
+        }
+        let mut hosts = Vec::with_capacity(dialed.len());
+        let mut reader_parts = Vec::with_capacity(dialed.len());
+        for (addr, stream, host_id, fr, attempts) in dialed {
+            let reader_stream = stream.try_clone()?;
+            hosts.push(Arc::new(HostSlot::fresh(addr, stream, host_id, attempts)));
+            reader_parts.push((reader_stream, fr));
+        }
+        let shared = Arc::new(RouterShared {
+            hosts,
+            cfg,
+            next_id: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            readers: Mutex::new(Vec::new()),
+        });
+        for (idx, (stream, fr)) in reader_parts.into_iter().enumerate() {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::spawn(move || router_read_loop(stream, &sh, idx, fr));
+            shared.readers.lock().unwrap().push(handle);
+        }
+        let supervisor = {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || reconnect_loop(&sh))
+        };
+        Ok(Router { shared, supervisor: Mutex::new(Some(supervisor)) })
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.shared.hosts.len()
+    }
+
+    /// Hosts whose connection is currently up.
+    pub fn live_hosts(&self) -> usize {
+        self.shared.hosts.iter().filter(|h| h.alive.load(Ordering::Relaxed)).count()
+    }
+
+    /// Last reported health per host (`None` for dead hosts).
+    pub fn host_health(&self) -> Vec<Option<HostHealth>> {
+        self.shared
+            .hosts
+            .iter()
+            .map(|h| {
+                h.alive
+                    .load(Ordering::Relaxed)
+                    .then(|| h.health.lock().unwrap().clone())
+            })
+            .collect()
+    }
+
+    /// See [`RouterShared::submit_async`].
+    pub fn submit_async(&self, req: ServeRequest) -> Result<ResponseHandle, ServeError> {
+        self.shared.submit_async(req)
     }
 
     /// Route and block for the response.
@@ -552,14 +1015,16 @@ impl Router {
     /// Ask every live host to retire workers down to `target` — the
     /// worker-loss drill across the wire.
     pub fn broadcast_shrink(&self, target: usize) {
-        for host in &self.hosts {
+        for (idx, host) in self.shared.hosts.iter().enumerate() {
             if !host.alive.load(Ordering::Relaxed) {
                 continue;
             }
-            let mut w = host.writer.lock().unwrap();
-            if write_frame(&mut *w, &Frame::Shrink { target: target as u32 }).is_err() {
-                drop(w);
-                host.drain_dead();
+            let failed = {
+                let mut w = host.writer.lock().unwrap();
+                write_frame(&mut *w, &Frame::Shrink { target: target as u32 }).is_err()
+            };
+            if failed {
+                self.shared.handle_host_death(idx);
             }
         }
     }
@@ -569,7 +1034,7 @@ impl Router {
     pub fn live_workers(&self) -> usize {
         let mut total = 0usize;
         let mut live = 0usize;
-        for host in &self.hosts {
+        for host in &self.shared.hosts {
             if host.alive.load(Ordering::Relaxed) {
                 live += 1;
                 total += host.health.lock().unwrap().live_workers as usize;
@@ -578,28 +1043,76 @@ impl Router {
         total.max(live)
     }
 
-    /// Sever every connection and fail all in-flight requests with typed
-    /// errors. Hosts are NOT shut down — they belong to their processes.
+    /// Stop self-healing, sever every connection, and fail all in-flight
+    /// requests with typed errors. Ordering matters: the supervisor is
+    /// joined FIRST so no slot re-arms after its writer is severed (a
+    /// late re-armed reader would block the final join forever). Hosts
+    /// are NOT shut down — they belong to their processes.
     pub fn shutdown(&self) {
-        for host in &self.hosts {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(sup) = self.supervisor.lock().unwrap().take() {
+            let _ = sup.join();
+        }
+        for (idx, host) in self.shared.hosts.iter().enumerate() {
             {
                 let w = host.writer.lock().unwrap();
                 let _ = w.shutdown(Shutdown::Both);
             }
-            host.drain_dead();
+            self.shared.handle_host_death(idx);
         }
-        let readers: Vec<_> = self.readers.lock().unwrap().drain(..).collect();
+        let readers: Vec<_> = self.shared.readers.lock().unwrap().drain(..).collect();
         for r in readers {
             let _ = r.join();
         }
     }
 
-    /// The address list, with liveness (for reporting).
-    pub fn host_addrs(&self) -> Vec<(String, bool)> {
-        self.hosts
+    /// The address list with liveness and cumulative dial attempts (for
+    /// reporting — `route` prints these per host).
+    pub fn host_addrs(&self) -> Vec<(String, bool, u64)> {
+        self.shared
+            .hosts
             .iter()
-            .map(|h| (h.addr.clone(), h.alive.load(Ordering::Relaxed)))
+            .map(|h| {
+                (
+                    h.addr.clone(),
+                    h.alive.load(Ordering::Relaxed),
+                    h.dial_attempts.load(Ordering::Relaxed),
+                )
+            })
             .collect()
+    }
+
+    /// Per-host self-healing counters (summaries + bench JSON).
+    pub fn host_counters(&self) -> Vec<HostCounters> {
+        self.shared
+            .hosts
+            .iter()
+            .map(|h| {
+                let mark = |a: &AtomicU64| {
+                    let v = a.load(Ordering::Relaxed);
+                    (v != SEQ_NEVER).then_some(v)
+                };
+                HostCounters {
+                    addr: h.addr.clone(),
+                    alive: h.alive.load(Ordering::Relaxed),
+                    dial_attempts: h.dial_attempts.load(Ordering::Relaxed),
+                    redials: h.redials.load(Ordering::Relaxed),
+                    failovers: h.failovers.load(Ordering::Relaxed),
+                    last_death_seq: mark(&h.last_death_seq),
+                    last_rejoin_seq: mark(&h.last_rejoin_seq),
+                }
+            })
+            .collect()
+    }
+
+    /// Total successful re-dials (rejoins) across all hosts.
+    pub fn redials_total(&self) -> u64 {
+        self.shared.hosts.iter().map(|h| h.redials.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total requests failed over to a replica across all hosts.
+    pub fn failovers_total(&self) -> u64 {
+        self.shared.hosts.iter().map(|h| h.failovers.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -610,10 +1123,20 @@ impl Drop for Router {
 }
 
 /// Router's per-host reader: completes in-flight requests and absorbs
-/// health. EOF or any wire error ⇒ the host is lost — drain with typed
-/// errors so no caller ever hangs on a dead host.
-fn router_read_loop(mut stream: TcpStream, slot: &HostSlot) {
-    let mut fr = FrameReader::new();
+/// health. Starts from the handshake's leftover [`FrameReader`] so the
+/// greeting Health frame is never lost. EOF or any wire error ⇒ the host
+/// is lost — its in-flight work fails over (or errors typed) so no
+/// caller ever hangs; the reconnect supervisor takes it from there. A
+/// host-side [`ServeError::WorkerDropped`] (the host's own workers died
+/// mid-request) also fails over: the connection is fine but the request
+/// was dropped, which is exactly what replicas are for.
+fn router_read_loop(
+    mut stream: TcpStream,
+    shared: &Arc<RouterShared>,
+    idx: usize,
+    mut fr: FrameReader,
+) {
+    let slot = &shared.hosts[idx];
     let mut chunk = [0u8; 16 * 1024];
     loop {
         match fr.next_frame() {
@@ -628,15 +1151,24 @@ fn router_read_loop(mut stream: TcpStream, slot: &HostSlot) {
                     Frame::Error { id, err, health } => {
                         *slot.health.lock().unwrap() = health;
                         if let Some(inflight) = slot.inflight.lock().unwrap().remove(&id) {
-                            let _ = inflight.tx.send(Err(err));
+                            if matches!(err, ServeError::WorkerDropped) {
+                                shared.failover_or_fail(idx, inflight);
+                            } else {
+                                let _ = inflight.tx.send(Err(err));
+                            }
                         }
                     }
                     Frame::Health(health) => {
                         *slot.health.lock().unwrap() = health;
                     }
-                    // Request/Ping/Shrink only flow router → host.
-                    Frame::Request { .. } | Frame::Ping | Frame::Shrink { .. } => {
-                        slot.drain_dead();
+                    // Request/Ping/Shrink only flow router → host, and
+                    // Hello was consumed by the handshake — a second one
+                    // mid-stream is a protocol violation.
+                    Frame::Request { .. }
+                    | Frame::Ping
+                    | Frame::Shrink { .. }
+                    | Frame::Hello { .. } => {
+                        shared.handle_host_death(idx);
                         return;
                     }
                 }
@@ -644,19 +1176,19 @@ fn router_read_loop(mut stream: TcpStream, slot: &HostSlot) {
             }
             Ok(None) => {}
             Err(_) => {
-                slot.drain_dead();
+                shared.handle_host_death(idx);
                 return;
             }
         }
         match stream.read(&mut chunk) {
             Ok(0) => {
-                slot.drain_dead();
+                shared.handle_host_death(idx);
                 return;
             }
             Ok(n) => fr.extend(&chunk[..n]),
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(_) => {
-                slot.drain_dead();
+                shared.handle_host_death(idx);
                 return;
             }
         }
@@ -671,6 +1203,11 @@ fn router_read_loop(mut stream: TcpStream, slot: &HostSlot) {
 /// elided (the `route` CLI subcommand spawns true child processes).
 pub struct LocalCluster {
     hosts: Mutex<Vec<Option<WireHost>>>,
+    /// Retained so a killed host can be revived on its original address
+    /// (the rejoin drill primitive).
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    addrs: Vec<String>,
     pub router: Router,
 }
 
@@ -686,7 +1223,13 @@ impl LocalCluster {
             .collect::<io::Result<_>>()?;
         let addrs: Vec<String> = hosts.iter().map(|h| h.addr().to_string()).collect();
         let router = Router::connect(&addrs, router_cfg)?;
-        Ok(LocalCluster { hosts: Mutex::new(hosts.into_iter().map(Some).collect()), router })
+        Ok(LocalCluster {
+            hosts: Mutex::new(hosts.into_iter().map(Some).collect()),
+            registry,
+            cfg,
+            addrs,
+            router,
+        })
     }
 
     /// Kill one live host (never the last), returning its address — the
@@ -704,6 +1247,28 @@ impl LocalCluster {
         let addr = host.addr().to_string();
         host.shutdown();
         Some(addr)
+    }
+
+    /// Respawn the first killed host on its ORIGINAL address (std's
+    /// listener sets SO_REUSEADDR, so the exact rebind works), returning
+    /// that address. The router's reconnect supervisor re-dials it and
+    /// snaps re-homed variants back — the caller only restarts the
+    /// process-equivalent. The revived host presents a fresh identity in
+    /// its Hello, which is what lets the router trust it.
+    pub fn revive_host(&self) -> Option<String> {
+        let mut hosts = self.hosts.lock().unwrap();
+        let idx = hosts.iter().position(|h| h.is_none())?;
+        let host =
+            WireHost::spawn(Arc::clone(&self.registry), self.cfg.clone(), &self.addrs[idx]).ok()?;
+        let addr = host.addr().to_string();
+        hosts[idx] = Some(host);
+        Some(addr)
+    }
+
+    /// The registry every host serves from (shared, so hot-swaps are
+    /// visible cluster-wide — the variant-kill drill uses this).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     pub fn live_hosts(&self) -> usize {
@@ -765,5 +1330,34 @@ mod tests {
         assert_eq!(order[0], home);
         let unique: std::collections::HashSet<_> = order.iter().collect();
         assert_eq!(unique.len(), 4, "probe order must cover every host once");
+    }
+
+    #[test]
+    fn replica_window_is_probe_prefix_and_clamps() {
+        // The window is the first `replicas` probe positions…
+        assert_eq!(replica_window_of(2, 4, 1), vec![2]);
+        assert_eq!(replica_window_of(2, 4, 2), vec![2, 3]);
+        assert_eq!(replica_window_of(3, 4, 3), vec![3, 0, 1]);
+        // …clamped to the cluster size, and floored at one replica.
+        assert_eq!(replica_window_of(1, 3, 99), vec![1, 2, 0]);
+        assert_eq!(replica_window_of(0, 2, 0), vec![0]);
+        assert_eq!(replica_window_of(0, 1, 5), vec![0]);
+    }
+
+    #[test]
+    fn dial_backoff_is_exponential_capped_and_jitter_bounded() {
+        assert_eq!(backoff_us(0, DIAL_BASE_US, DIAL_CAP_US), DIAL_BASE_US);
+        assert_eq!(backoff_us(1, DIAL_BASE_US, DIAL_CAP_US), 2 * DIAL_BASE_US);
+        assert_eq!(backoff_us(63, DIAL_BASE_US, DIAL_CAP_US), DIAL_CAP_US);
+        for attempt in 0..64 {
+            assert!(backoff_us(attempt, REDIAL_BASE_US, REDIAL_CAP_US) <= REDIAL_CAP_US);
+        }
+        // Jitter is deterministic per (host, attempt) and bounded by
+        // half the base — the fleet's retry discipline, shared.
+        for attempt in 0..32 {
+            let j = backoff_jitter_us(3, attempt, 1000);
+            assert_eq!(j, backoff_jitter_us(3, attempt, 1000));
+            assert!(j <= 500);
+        }
     }
 }

@@ -867,8 +867,10 @@ fn dispatch_group(
     if live.is_empty() {
         return;
     }
-    // The variant can have been replaced since submit; a removal cannot
-    // happen (the registry only replaces), but guard anyway.
+    // The variant can have been replaced — or REMOVED (registry
+    // hot-swap / the variant-kill drill) — since submit: re-resolving at
+    // dispatch means a removed variant fails the whole queued group with
+    // a typed error instead of serving deregistered weights.
     let model = match registry.get(name) {
         Some(m) => m,
         None => {

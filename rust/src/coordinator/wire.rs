@@ -35,6 +35,13 @@ use crate::tensor::matrix::Matrix;
 /// keeping a hostile length prefix from allocating the machine away.
 pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
 
+/// Wire protocol version, exchanged in the [`Frame::Hello`] handshake.
+/// A host greets every connection with `Hello{version, host_id}` before
+/// anything else; a router that sees a different version (or no Hello at
+/// all) rejects the peer with a typed [`WireError`] instead of decoding
+/// garbage from a stale or foreign process.
+pub const PROTOCOL_VERSION: u8 = 1;
+
 /// Typed wire failures — every malformed input lands here, never in a
 /// panic.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -58,6 +65,14 @@ pub enum WireError {
     Closed,
     /// Transport-level I/O failure.
     Io(io::ErrorKind),
+    /// The connection handshake went wrong: the peer's first frame was
+    /// not a [`Frame::Hello`], or it never arrived.
+    BadHandshake { context: &'static str },
+    /// The peer speaks a different [`PROTOCOL_VERSION`].
+    VersionMismatch { peer: u8, local: u8 },
+    /// The peer's Hello carried a host identity that is already live on
+    /// another connection — a stale or duplicated host, not a rejoin.
+    StalePeer { host_id: u64 },
 }
 
 impl std::fmt::Display for WireError {
@@ -76,6 +91,13 @@ impl std::fmt::Display for WireError {
             }
             WireError::Closed => write!(f, "peer closed the connection"),
             WireError::Io(kind) => write!(f, "transport error: {kind:?}"),
+            WireError::BadHandshake { context } => write!(f, "bad handshake: {context}"),
+            WireError::VersionMismatch { peer, local } => {
+                write!(f, "peer speaks protocol v{peer}, this end speaks v{local}")
+            }
+            WireError::StalePeer { host_id } => {
+                write!(f, "stale peer: host identity {host_id:#018x} is already connected")
+            }
         }
     }
 }
@@ -121,6 +143,11 @@ pub enum Frame {
     /// Control: retire the host's workers down to `target` (the fleet's
     /// worker-loss drill, across the wire).
     Shrink { target: u32 },
+    /// Handshake greeting — the FIRST frame a host sends on every
+    /// accepted connection. `host_id` identifies the host process (it
+    /// survives reconnects, changes on restart), so a router re-dialing
+    /// a dead address can tell a rejoined host from a stale peer.
+    Hello { version: u8, host_id: u64 },
 }
 
 const TAG_REQUEST: u8 = 1;
@@ -129,6 +156,7 @@ const TAG_ERROR: u8 = 3;
 const TAG_HEALTH: u8 = 4;
 const TAG_PING: u8 = 5;
 const TAG_SHRINK: u8 = 6;
+const TAG_HELLO: u8 = 7;
 
 // ---------------------------------------------------------------- encode
 
@@ -264,6 +292,11 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
         Frame::Shrink { target } => {
             out.push(TAG_SHRINK);
             put_u32(&mut out, *target);
+        }
+        Frame::Hello { version, host_id } => {
+            out.push(TAG_HELLO);
+            out.push(*version);
+            put_u64(&mut out, *host_id);
         }
     }
     out
@@ -455,6 +488,9 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame, WireError> {
         TAG_HEALTH => Frame::Health(r.health()?),
         TAG_PING => Frame::Ping,
         TAG_SHRINK => Frame::Shrink { target: r.u32("shrink.target")? },
+        TAG_HELLO => {
+            Frame::Hello { version: r.u8("hello.version")?, host_id: r.u64("hello.host_id")? }
+        }
         t => return Err(WireError::BadTag(t)),
     };
     r.done()?;
@@ -575,6 +611,14 @@ mod tests {
             Frame::Shrink { target } => assert_eq!(target, 2),
             other => panic!("{other:?}"),
         }
+        let hello = Frame::Hello { version: PROTOCOL_VERSION, host_id: 0xDEAD_BEEF_CAFE_F00D };
+        match decode_frame(&encode_frame(&hello)).unwrap() {
+            Frame::Hello { version, host_id } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert_eq!(host_id, 0xDEAD_BEEF_CAFE_F00D);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -642,6 +686,94 @@ mod tests {
             fr.next_frame().unwrap_err(),
             WireError::Oversize { len: (MAX_FRAME_BYTES + 1) as u64 }
         );
+    }
+
+    /// A peer restart leaves a stale half-frame in the reader while the
+    /// NEW peer's bytes land right behind it. The reader must surface a
+    /// typed error once the stale framing resolves into garbage — never
+    /// a panic, never a silently misparsed frame — and a fresh reader on
+    /// the new peer's byte stream must resync cleanly.
+    #[test]
+    fn stale_half_frame_after_peer_restart_errors_typed_then_resyncs() {
+        // Old peer died 10 bytes into a 44-byte frame whose first body
+        // byte is an invalid tag — the stale prefix can only ever decode
+        // to a typed error, whatever lands behind it.
+        let mut stale = Vec::new();
+        stale.extend_from_slice(&44u32.to_le_bytes());
+        stale.push(0xFF); // bad tag
+        stale.extend_from_slice(&[0u8; 5]); // 10 of 48 wire bytes arrived
+
+        // The new peer (restarted host) greets with Hello + Health.
+        let mut fresh = Vec::new();
+        for frame in [
+            Frame::Hello { version: PROTOCOL_VERSION, host_id: 7 },
+            Frame::Health(health()),
+        ] {
+            let body = encode_frame(&frame);
+            fresh.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            fresh.extend_from_slice(&body);
+        }
+        assert!(fresh.len() >= 38, "need enough new-peer bytes to complete the stale frame");
+
+        // Interleaved into ONE reader (the reconnect-without-reset bug):
+        // the stale length prefix swallows new-peer bytes until the
+        // claimed 44-byte body completes, then decode fails typed.
+        let mut fr = FrameReader::new();
+        fr.extend(&stale);
+        assert!(fr.next_frame().unwrap().is_none(), "half frame must not decode");
+        let mut outcome = Ok(None);
+        for &b in &fresh {
+            fr.extend(&[b]);
+            outcome = fr.next_frame();
+            if outcome.is_err() {
+                break;
+            }
+            assert!(
+                matches!(outcome, Ok(None)),
+                "stale framing must never yield a parsed frame: {outcome:?}"
+            );
+        }
+        assert_eq!(outcome.unwrap_err(), WireError::BadTag(0xFF));
+
+        // The contract after a poisoned stream: drop the connection and
+        // start a FRESH reader on the new peer's bytes — clean resync,
+        // dripped a byte at a time like a real reconnect race.
+        let mut fr = FrameReader::new();
+        let mut got = Vec::new();
+        for &b in &fresh {
+            fr.extend(&[b]);
+            while let Some(f) = fr.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert!(matches!(got[0], Frame::Hello { version: PROTOCOL_VERSION, host_id: 7 }));
+        match &got[1] {
+            Frame::Health(h) => assert_eq!(*h, health()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Same reconnect shape, but the stale prefix claims a body LONGER
+    /// than everything the new peer sends: the reader must keep
+    /// reporting "incomplete" (no misparse) until the caller times out
+    /// and resets — and an oversize stale prefix fails immediately.
+    #[test]
+    fn stale_prefix_longer_than_new_stream_never_misparses() {
+        let hello = encode_frame(&Frame::Hello { version: PROTOCOL_VERSION, host_id: 3 });
+        let mut fr = FrameReader::new();
+        fr.extend(&(10_000u32).to_le_bytes()); // stale: claims 10 KB body
+        fr.extend(&[TAG_HELLO, PROTOCOL_VERSION]); // old peer died here
+        fr.extend(&(hello.len() as u32).to_le_bytes());
+        fr.extend(&hello);
+        // All of the new peer's bytes are swallowed into the stale body;
+        // the reader reports incomplete, never a frame.
+        assert!(fr.next_frame().unwrap().is_none());
+
+        let mut fr = FrameReader::new();
+        fr.extend(&(MAX_FRAME_BYTES + 7).to_le_bytes()); // stale + hostile
+        fr.extend(&hello);
+        assert!(matches!(fr.next_frame(), Err(WireError::Oversize { .. })));
     }
 
     #[test]

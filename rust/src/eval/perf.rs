@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 /// PR index stamped into the machine-readable bench baseline — bump this
 /// alongside the `BENCH_PR<N>.json` filename CI archives, so trajectory
 /// tooling keyed on the schema's own `pr` field stays truthful.
-pub const BENCH_PR: u32 = 9;
+pub const BENCH_PR: u32 = 10;
 
 pub struct PerfReport {
     /// Run parameters (recorded so `BENCH_*.json` baselines are
@@ -130,6 +130,13 @@ pub struct MultiHostRow {
     pub p50_us: u64,
     pub p99_us: u64,
     pub shed_rate: f64,
+    /// Host rejoins observed by the router's reconnect supervisor during
+    /// the run (0 on a fault-free bench; the column exists so chaos runs
+    /// and the fleet drills share one schema).
+    pub redials: u64,
+    /// Requests transparently re-submitted to a replica after a host
+    /// drop (0 on a fault-free bench).
+    pub failovers: u64,
 }
 
 /// One row of the mixed-traffic table: 3-variant round-robin load from
@@ -242,11 +249,11 @@ impl PerfReport {
     pub fn multi_host_table(&self) -> String {
         let mut s = String::from(
             "multi-host serving (wire router over N loopback hosts, 2 workers each):\n\
-             \x20 hosts    reqs      ok   sheds    errs       tok/s   p50us   p99us  shed_rate\n",
+             \x20 hosts    reqs      ok   sheds    errs       tok/s   p50us   p99us  shed_rate  redial  failov\n",
         );
         for r in &self.multi_host {
             s.push_str(&format!(
-                "  {:>5} {:>7} {:>7} {:>7} {:>7} {:>11.0} {:>7} {:>7} {:>10.4}\n",
+                "  {:>5} {:>7} {:>7} {:>7} {:>7} {:>11.0} {:>7} {:>7} {:>10.4} {:>7} {:>7}\n",
                 r.hosts,
                 r.requests,
                 r.responses_ok,
@@ -255,7 +262,9 @@ impl PerfReport {
                 r.tok_s,
                 r.p50_us,
                 r.p99_us,
-                r.shed_rate
+                r.shed_rate,
+                r.redials,
+                r.failovers
             ));
         }
         s
@@ -444,7 +453,8 @@ impl PerfReport {
             .map(|r| {
                 format!(
                     "{{\"hosts\":{},\"requests\":{},\"responses_ok\":{},\"sheds\":{},\
-                     \"errors\":{},\"tok_s\":{},\"p50_us\":{},\"p99_us\":{},\"shed_rate\":{}}}",
+                     \"errors\":{},\"tok_s\":{},\"p50_us\":{},\"p99_us\":{},\"shed_rate\":{},\
+                     \"redials\":{},\"failovers\":{}}}",
                     r.hosts,
                     r.requests,
                     r.responses_ok,
@@ -453,7 +463,9 @@ impl PerfReport {
                     num(r.tok_s),
                     r.p50_us,
                     r.p99_us,
-                    num(r.shed_rate)
+                    num(r.shed_rate),
+                    r.redials,
+                    r.failovers
                 )
             })
             .collect();
@@ -1061,7 +1073,10 @@ fn multi_host_row(
         max_wait: std::time::Duration::from_micros(300),
         admission: AdmissionControl::DeadlineAware { min_samples: 16 },
     };
-    let router_cfg = RouterConfig { admission: AdmissionControl::DeadlineAware { min_samples: 16 } };
+    let router_cfg = RouterConfig {
+        admission: AdmissionControl::DeadlineAware { min_samples: 16 },
+        replicas: 1,
+    };
     let cluster = LocalCluster::spawn(Arc::clone(registry), serve_cfg, hosts, router_cfg)
         .expect("spawn loopback cluster");
     let deadline = std::time::Duration::from_millis(50);
@@ -1115,6 +1130,9 @@ fn multi_host_row(
     });
     let wall = t0.elapsed().as_secs_f64();
     let p = latency.lock().unwrap().percentiles_us(&[0.50, 0.99]);
+    // Self-heal counters must be read before shutdown severs the slots.
+    let redials = cluster.router.redials_total();
+    let failovers = cluster.router.failovers_total();
     cluster.shutdown();
     let requests = per_client * clients;
     let responses_ok = ok.load(std::sync::atomic::Ordering::Relaxed);
@@ -1129,6 +1147,8 @@ fn multi_host_row(
         p50_us: p[0],
         p99_us: p[1],
         shed_rate: shed_count as f64 / requests.max(1) as f64,
+        redials,
+        failovers,
     }
 }
 

@@ -20,12 +20,20 @@ pub enum Drill {
     /// halves, in-flight requests must still all be answered.
     WorkerLoss,
     /// Multi-host fleets only: a live host is killed mid-run. In-flight
-    /// requests on it surface as typed `WorkerDropped`, the router
+    /// requests on it surface as typed `WorkerDropped` (or fail over to a
+    /// replica when the router runs with `--replicas > 1`), the router
     /// re-homes its variants along the placement probe sequence, and the
     /// fleet must drain with zero hangs. Requires a client with more
     /// than one host (`fleet --hosts N`); a single-process fleet rejects
     /// it at config parse.
     HostLoss,
+    /// A hot model variant is DEREGISTERED mid-run (registry hot-swap's
+    /// remove path): in-flight batches finish on the weights they hold,
+    /// every later resolve fails with a typed `UnknownVariant`, and the
+    /// fleet's accounting invariant must still close — no panics, no
+    /// hangs. The victim is the first non-reference variant (never the
+    /// divergence anchor). Works at every deployment shape.
+    VariantKill,
 }
 
 impl Drill {
@@ -35,21 +43,53 @@ impl Drill {
             Drill::Hotspot => "hotspot",
             Drill::WorkerLoss => "worker-loss",
             Drill::HostLoss => "host-loss",
+            Drill::VariantKill => "variant-kill",
         }
     }
 }
 
-/// Parse a `--drill` spec: `none`, `overload`, `hotspot`, `worker-loss`,
-/// `host-loss`, `all`, or a comma list of the named drills. `None` =
-/// unknown token. `all` stays the three single-process drills —
-/// `host-loss` is opted into explicitly because it needs `--hosts`.
-pub fn parse_drills(spec: &str) -> Option<Vec<Drill>> {
+/// Why a `--drill` spec was rejected — typed, so the CLI can explain the
+/// failure instead of silently dropping a drill.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DrillParseError {
+    /// A token named no known drill.
+    Unknown(String),
+    /// The drill is real but invalid for this deployment shape (e.g.
+    /// `host-loss` on a single-process fleet).
+    NeedsHosts(Drill),
+}
+
+impl std::fmt::Display for DrillParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DrillParseError::Unknown(tok) => write!(f, "unknown drill '{tok}'"),
+            DrillParseError::NeedsHosts(d) => {
+                write!(f, "drill '{}' needs a multi-host fleet (--hosts 2 or more)", d.label())
+            }
+        }
+    }
+}
+
+impl std::error::Error for DrillParseError {}
+
+/// Parse a `--drill` spec against the deployment shape (`hosts` = live
+/// host count; single-process fleets pass 1): `none`, a drill name, a
+/// comma list, or `all`. `all` expands to EVERY drill valid at this
+/// shape — `host-loss` joins it when the fleet is multi-host, and is a
+/// typed [`DrillParseError::NeedsHosts`] (never a silent omission) when
+/// named explicitly without one.
+pub fn parse_drills(spec: &str, hosts: usize) -> Result<Vec<Drill>, DrillParseError> {
     let spec = spec.trim().to_ascii_lowercase();
     if spec.is_empty() || spec == "none" {
-        return Some(Vec::new());
+        return Ok(Vec::new());
     }
     if spec == "all" {
-        return Some(vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss]);
+        let mut all = vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss];
+        if hosts >= 2 {
+            all.push(Drill::HostLoss);
+        }
+        all.push(Drill::VariantKill);
+        return Ok(all);
     }
     let mut out = Vec::new();
     for tok in spec.split(',') {
@@ -58,13 +98,17 @@ pub fn parse_drills(spec: &str) -> Option<Vec<Drill>> {
             "hotspot" => Drill::Hotspot,
             "worker-loss" | "workerloss" | "worker_loss" => Drill::WorkerLoss,
             "host-loss" | "hostloss" | "host_loss" => Drill::HostLoss,
-            _ => return None,
+            "variant-kill" | "variantkill" | "variant_kill" => Drill::VariantKill,
+            other => return Err(DrillParseError::Unknown(other.to_string())),
         };
+        if d == Drill::HostLoss && hosts < 2 {
+            return Err(DrillParseError::NeedsHosts(d));
+        }
         if !out.contains(&d) {
             out.push(d);
         }
     }
-    Some(out)
+    Ok(out)
 }
 
 /// What actually happened when the drills fired — rendered into the
@@ -86,6 +130,11 @@ pub struct DrillReport {
     pub hosts_before_loss: usize,
     pub hosts_after_loss: usize,
     pub host_killed: Option<String>,
+    /// The variant the variant-kill drill deregistered (`None` = drill
+    /// not run or nothing killable), and the registry size around it.
+    pub variant_killed: Option<String>,
+    pub variants_before_kill: usize,
+    pub variants_after_kill: usize,
 }
 
 /// One drill armed at a progress trigger point.
@@ -120,25 +169,65 @@ mod tests {
 
     #[test]
     fn parses_specs() {
-        assert_eq!(parse_drills("none"), Some(vec![]));
-        assert_eq!(parse_drills(""), Some(vec![]));
-        assert_eq!(parse_drills("overload"), Some(vec![Drill::Overload]));
+        assert_eq!(parse_drills("none", 1), Ok(vec![]));
+        assert_eq!(parse_drills("", 1), Ok(vec![]));
+        assert_eq!(parse_drills("overload", 1), Ok(vec![Drill::Overload]));
         assert_eq!(
-            parse_drills("all"),
-            Some(vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss])
-        );
-        assert_eq!(
-            parse_drills("worker-loss,hotspot"),
-            Some(vec![Drill::WorkerLoss, Drill::Hotspot])
+            parse_drills("worker-loss,hotspot", 1),
+            Ok(vec![Drill::WorkerLoss, Drill::Hotspot])
         );
         // Duplicates collapse; unknown tokens are a typed parse failure.
-        assert_eq!(parse_drills("overload,overload"), Some(vec![Drill::Overload]));
-        assert_eq!(parse_drills("chaos-monkey"), None);
-        // host-loss is explicit opt-in — never part of `all` (it needs a
-        // multi-host client).
-        assert_eq!(parse_drills("host-loss"), Some(vec![Drill::HostLoss]));
-        assert_eq!(parse_drills("host_loss,overload"), Some(vec![Drill::HostLoss, Drill::Overload]));
-        assert!(!parse_drills("all").unwrap().contains(&Drill::HostLoss));
+        assert_eq!(parse_drills("overload,overload", 1), Ok(vec![Drill::Overload]));
+        assert_eq!(
+            parse_drills("chaos-monkey", 1),
+            Err(DrillParseError::Unknown("chaos-monkey".to_string()))
+        );
+        assert_eq!(parse_drills("variant-kill", 1), Ok(vec![Drill::VariantKill]));
+        assert_eq!(
+            parse_drills("variant_kill,overload", 1),
+            Ok(vec![Drill::VariantKill, Drill::Overload])
+        );
+    }
+
+    #[test]
+    fn all_expands_to_every_drill_valid_for_the_shape() {
+        // Single-process: every single-process drill — including the new
+        // variant-kill — but NOT host-loss (no hosts to kill).
+        assert_eq!(
+            parse_drills("all", 1),
+            Ok(vec![Drill::Overload, Drill::Hotspot, Drill::WorkerLoss, Drill::VariantKill])
+        );
+        // Multi-host: host-loss joins the expansion instead of being
+        // silently omitted.
+        assert_eq!(
+            parse_drills("all", 3),
+            Ok(vec![
+                Drill::Overload,
+                Drill::Hotspot,
+                Drill::WorkerLoss,
+                Drill::HostLoss,
+                Drill::VariantKill,
+            ])
+        );
+    }
+
+    #[test]
+    fn host_loss_without_hosts_is_a_typed_error_not_an_omission() {
+        assert_eq!(
+            parse_drills("host-loss", 1),
+            Err(DrillParseError::NeedsHosts(Drill::HostLoss))
+        );
+        assert_eq!(
+            parse_drills("overload,host-loss", 1),
+            Err(DrillParseError::NeedsHosts(Drill::HostLoss))
+        );
+        assert_eq!(parse_drills("host-loss", 2), Ok(vec![Drill::HostLoss]));
+        assert_eq!(
+            parse_drills("host_loss,overload", 2),
+            Ok(vec![Drill::HostLoss, Drill::Overload])
+        );
+        let msg = DrillParseError::NeedsHosts(Drill::HostLoss).to_string();
+        assert!(msg.contains("host-loss") && msg.contains("--hosts"), "{msg}");
     }
 
     #[test]

@@ -100,6 +100,11 @@ pub trait FleetClient {
     fn kill_host(&self) -> Option<String> {
         None
     }
+    /// Self-healing counters from the routing layer: `(redials,
+    /// failovers)`. In-process serving has no router, so zeros.
+    fn self_heal_counters(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 impl FleetClient for PolicyServer {
@@ -138,6 +143,10 @@ impl FleetClient for LocalCluster {
 
     fn kill_host(&self) -> Option<String> {
         LocalCluster::kill_host(self)
+    }
+
+    fn self_heal_counters(&self) -> (u64, u64) {
+        (self.router.redials_total(), self.router.failovers_total())
     }
 }
 
@@ -218,15 +227,11 @@ fn reference_trajectory(
 /// lockstep retry storms that re-triggered admission shedding for
 /// rounds. The jitter depends only on (robot, attempt), never on wall
 /// time or thread count, so fleet reports stay bit-identical across
-/// `--workers` settings; only the retry *timing* decorrelates.
+/// `--workers` settings; only the retry *timing* decorrelates. The mix
+/// itself lives in [`crate::util::rng::backoff_jitter_us`] — the
+/// router's host re-dials share the exact same discipline.
 fn backoff_jitter_us(robot_id: usize, attempt: u32, base_us: u64) -> u64 {
-    let mut z = (robot_id as u64)
-        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add((attempt as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^= z >> 31;
-    z % (base_us / 2 + 1)
+    crate::util::rng::backoff_jitter_us(robot_id as u64, attempt, base_us)
 }
 
 /// Retry bookkeeping shared by submit-side and response-side failures:
@@ -386,6 +391,15 @@ pub fn run_fleet_on<C: FleetClient>(
                                 robot.serving_counters_mut().deadline_misses += 1;
                                 retry_or_abort(robot, now, ERROR_BACKOFF_US, cfg.max_retries)
                             }
+                            // The variant-kill drill deregistered this
+                            // robot's variant mid-flight: no retry fixes
+                            // it — drop loudly instead of burning the
+                            // whole retry budget on typed failures.
+                            ServeError::UnknownVariant(_) => {
+                                robot.serving_counters_mut().errors += 1;
+                                robot.dropped = true;
+                                Phase::Done
+                            }
                             // Overloaded only occurs at submit; anything
                             // else mid-flight is a transient worker-side
                             // failure.
@@ -504,6 +518,19 @@ pub fn run_fleet_on<C: FleetClient>(
                     drill_report.host_killed = client.kill_host();
                     drill_report.hosts_after_loss = client.live_hosts();
                 }
+                Drill::VariantKill => {
+                    // Victim: the first non-reference variant — killing
+                    // the divergence anchor would take the reference
+                    // replay's variant out from under every row.
+                    drill_report.variants_before_kill = registry.len();
+                    let victim = cfg.variants.iter().find(|v| **v != cfg.reference).cloned();
+                    if let Some(victim) = victim {
+                        if registry.remove(&victim).is_ok() {
+                            drill_report.variant_killed = Some(victim);
+                        }
+                    }
+                    drill_report.variants_after_kill = registry.len();
+                }
             }
         }
 
@@ -576,6 +603,7 @@ pub fn run_fleet_on<C: FleetClient>(
         })
         .collect();
 
+    let (router_redials, router_failovers) = client.self_heal_counters();
     Ok(FleetReport {
         robots: cfg.robots,
         horizon: cfg.horizon,
@@ -585,6 +613,8 @@ pub fn run_fleet_on<C: FleetClient>(
         live_workers_at_end: client.live_workers(),
         total_responses: responses_total,
         wall_secs: t_start.elapsed().as_secs_f64(),
+        router_redials,
+        router_failovers,
         rows,
         drill_report,
     })

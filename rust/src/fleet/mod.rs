@@ -21,9 +21,10 @@
 //!
 //! emitted as a `fleet` section merged into the `hbvla-bench-v1` JSON
 //! report ([`report`]). Scripted **fault drills** ([`drill`]) exercise
-//! overload bursts, variant hot-spots, worker loss and (on multi-host
-//! fleets) whole-host loss; the contract is graceful degradation — no
-//! hangs, typed errors only.
+//! overload bursts, variant hot-spots, worker loss, mid-run variant
+//! deregistration (registry hot-swap) and (on multi-host fleets)
+//! whole-host loss; the contract is graceful degradation — no hangs,
+//! typed errors only.
 //!
 //! The serving surface is abstracted behind [`driver::FleetClient`]: the
 //! same robot loop drives an in-process `PolicyServer` or a
@@ -42,7 +43,7 @@ pub mod report;
 pub mod robot;
 
 pub use divergence::{DivergenceBin, DivergenceTracker, DIVERGENCE_BINS};
-pub use drill::{parse_drills, Drill, DrillReport};
+pub use drill::{parse_drills, Drill, DrillParseError, DrillReport};
 pub use driver::{run_fleet, run_fleet_on, FleetClient, FleetConfig, FleetError};
 pub use report::{merge_fleet_json, FleetReport, FleetVariantRow};
 pub use robot::{Fnv64, Robot, RobotCounters, ServedStats};

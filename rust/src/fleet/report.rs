@@ -198,6 +198,10 @@ pub struct FleetReport {
     pub live_workers_at_end: usize,
     pub total_responses: u64,
     pub wall_secs: f64,
+    /// Routing-layer self-healing over the run: successful host re-dials
+    /// and requests failed over to a replica (zeros for in-process runs).
+    pub router_redials: u64,
+    pub router_failovers: u64,
     pub rows: Vec<FleetVariantRow>,
     pub drill_report: DrillReport,
 }
@@ -268,6 +272,18 @@ impl FleetReport {
                     ))
                     .unwrap_or_default()
             ));
+            if let Some(v) = d.variant_killed.as_deref() {
+                out.push_str(&format!(
+                    "  variant-kill: deregistered {v} mid-run, variants {} -> {}\n",
+                    d.variants_before_kill, d.variants_after_kill
+                ));
+            }
+        }
+        if self.router_redials > 0 || self.router_failovers > 0 {
+            out.push_str(&format!(
+                "self-heal: {} host rejoins, {} requests failed over\n",
+                self.router_redials, self.router_failovers
+            ));
         }
         out
     }
@@ -283,12 +299,15 @@ impl FleetReport {
             "{{\"schema\": \"hbvla-fleet-v1\", \"robots\": {}, \"horizon\": {}, \
              \"seed\": {}, \"reference\": \"{}\", \"drills\": [{}], \
              \"live_workers_at_end\": {}, \"total_responses\": {}, \"wall_secs\": {}, \
+             \"router\": {{\"redials\": {}, \"failovers\": {}}}, \
              \"variants\": [{}], \
              \"drill_report\": {{\"overload_bursts\": {}, \"max_burst_size\": {}, \
              \"hotspot_switched\": {}, \"hotspot_variant\": {}, \
              \"workers_before_loss\": {}, \"workers_after_loss\": {}, \
              \"hosts_before_loss\": {}, \"hosts_after_loss\": {}, \
-             \"host_killed\": {}}}}}",
+             \"host_killed\": {}, \
+             \"variant_kill\": {{\"variant\": {}, \"variants_before\": {}, \
+             \"variants_after\": {}}}}}}}",
             self.robots,
             self.horizon,
             self.seed,
@@ -297,6 +316,8 @@ impl FleetReport {
             self.live_workers_at_end,
             self.total_responses,
             num(self.wall_secs),
+            self.router_redials,
+            self.router_failovers,
             rows.join(", "),
             d.overload_bursts,
             d.max_burst_size,
@@ -310,7 +331,12 @@ impl FleetReport {
             d.hosts_after_loss,
             d.host_killed
                 .as_deref()
-                .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v)))
+                .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v))),
+            d.variant_killed
+                .as_deref()
+                .map_or_else(|| "null".to_string(), |v| format!("\"{}\"", esc(v))),
+            d.variants_before_kill,
+            d.variants_after_kill
         )
     }
 }

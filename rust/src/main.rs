@@ -36,12 +36,15 @@
 //! `fleet` drives N simulated robots closed-loop against the policy
 //! server (`--robots N`, `--horizon N`, `--variants a,b,c`, `--reference
 //! NAME`, `--deadline-us U`, `--drill none|overload|hotspot|worker-loss|
-//! host-loss|all`), tracking per-variant success retention,
+//! host-loss|variant-kill|all` — `all` expands to every drill valid for
+//! the deployment shape), tracking per-variant success retention,
 //! divergence-vs-horizon and shed/miss/latency stats; `--json PATH`
 //! merges the `fleet` section into the hbvla-bench-v1 report at PATH.
 //! `--hosts N` routes all fleet traffic across N loopback wire hosts
 //! behind the placement-hashed router (arming the `host-loss` drill);
-//! `--control-hz F` paces each robot to F decode starts per second.
+//! `--replicas R` places each variant on R probe-order hosts with
+//! transparent per-request failover; `--control-hz F` paces each robot
+//! to F decode starts per second.
 //!
 //! `route` is the same front door over TRUE process isolation: it spawns
 //! `--hosts N` children of this binary in `serve --listen` mode, connects
@@ -431,6 +434,13 @@ fn main() {
                     hbvla::coordinator::WireHost::spawn(Arc::clone(&registry), cfg.clone(), listen)
                         .unwrap_or_else(|e| panic!("bind {listen}: {e}"));
                 println!("hbvla-host listening on {}", host.addr());
+                // Second line on purpose: `route` prefix-parses the
+                // handshake line above, so identity goes after it.
+                println!(
+                    "hbvla-host identity {:#018x}, protocol v{}",
+                    host.host_id(),
+                    hbvla::coordinator::PROTOCOL_VERSION
+                );
                 let mut line = String::new();
                 loop {
                     line.clear();
@@ -564,6 +574,7 @@ fn main() {
                 } else {
                     AdmissionControl::Off
                 },
+                replicas: args.usize_or("replicas", 1).max(1),
             };
             let router = Router::connect(&addrs, router_cfg)
                 .unwrap_or_else(|e| panic!("router connect: {e}"));
@@ -622,14 +633,30 @@ fn main() {
             let pcts = lat.percentiles_us(&[0.50, 0.99]);
             println!(
                 "routed {ok}/{n} requests over {} hosts in {el:.3}s ({:.0} req/s), \
-                 shed {sheds}, errors {errors}, p50 {}us, p99 {}us",
+                 shed {sheds}, errors {errors}, p50 {}us, p99 {}us, \
+                 rejoins {}, failovers {}",
                 router.live_hosts(),
                 ok as f64 / el.max(1e-9),
                 pcts[0],
-                pcts[1]
+                pcts[1],
+                router.redials_total(),
+                router.failovers_total()
             );
-            for (addr, alive) in router.host_addrs() {
-                println!("  host {addr}: {}", if alive { "live" } else { "dead" });
+            for hc in router.host_counters() {
+                let mark = |m: Option<u64>| {
+                    m.map(|s| format!("seq {s}")).unwrap_or_else(|| "never".to_string())
+                };
+                println!(
+                    "  host {}: {}, dials {}, redials {}, failovers {}, \
+                     last death {}, last rejoin {}",
+                    hc.addr,
+                    if hc.alive { "live" } else { "dead" },
+                    hc.dial_attempts,
+                    hc.redials,
+                    hc.failovers,
+                    mark(hc.last_death_seq),
+                    mark(hc.last_rejoin_seq)
+                );
             }
             router.shutdown();
             for mut child in children {
@@ -671,13 +698,18 @@ fn main() {
             );
             let registry = Arc::new(ModelRegistry::new());
             register_standard_variants(&registry, &tb, budget.threads);
-            let drills = parse_drills(args.get_or("drill", "none")).unwrap_or_else(|| {
-                eprintln!(
-                    "--drill expects none|overload|hotspot|worker-loss|host-loss|all \
-                     or a comma list"
-                );
-                std::process::exit(2);
-            });
+            // Drill validity depends on the deployment shape (`host-loss`
+            // needs hosts), so the host count is parsed first and `all`
+            // expands against it — rejections are typed, never silent.
+            let n_hosts = args.usize_or("hosts", 1);
+            let drills = parse_drills(args.get_or("drill", "none"), n_hosts.max(1))
+                .unwrap_or_else(|e| {
+                    eprintln!(
+                        "--drill: {e} (expects none|overload|hotspot|worker-loss|host-loss|\
+                         variant-kill|all or a comma list)"
+                    );
+                    std::process::exit(2);
+                });
             let deadline_us = args.u64_or("deadline-us", 0);
             // `--control-hz F` paces each robot to at most F decode
             // starts per second; 0 (the default) is free-running.
@@ -686,7 +718,6 @@ fn main() {
                 eprintln!("--control-hz expects a finite rate >= 0, got {control_hz}");
                 std::process::exit(2);
             }
-            let n_hosts = args.usize_or("hosts", 1);
             let fleet_cfg = FleetConfig {
                 robots: args.usize_or("robots", if smoke { 16 } else { 200 }),
                 horizon: args.usize_or("horizon", if smoke { 12 } else { 64 }),
@@ -733,7 +764,10 @@ fn main() {
             // wire: N loopback hosts behind the placement-hashed router,
             // with the same admission policy router-side.
             let report = if n_hosts >= 2 {
-                let router_cfg = RouterConfig { admission: serve_cfg.admission };
+                let router_cfg = RouterConfig {
+                    admission: serve_cfg.admission,
+                    replicas: args.usize_or("replicas", 1).max(1),
+                };
                 let cluster = LocalCluster::spawn(
                     Arc::clone(&registry),
                     serve_cfg,
@@ -791,11 +825,12 @@ fn main() {
                  [--attn-precision f32|int8] [--workers N] [--shards N] \
                  [--max-batch N] [--max-wait-us U] [--requests N] \
                  [--listen ADDR] (wire-host mode)\n\
-                 route flags: [--hosts N] [--requests N] [--variants a,b,c] [--deadline-us U] \
-                 [--workers N] [--shards N] [--max-batch N] [--max-wait-us U]\n\
+                 route flags: [--hosts N] [--replicas R] [--requests N] [--variants a,b,c] \
+                 [--deadline-us U] [--workers N] [--shards N] [--max-batch N] [--max-wait-us U]\n\
                  fleet flags: [--robots N] [--horizon N] [--variants a,b,c] [--reference NAME] \
-                 [--deadline-us U] [--drill none|overload|hotspot|worker-loss|host-loss|all|LIST] \
-                 [--hosts N] [--control-hz F] \
+                 [--deadline-us U] \
+                 [--drill none|overload|hotspot|worker-loss|host-loss|variant-kill|all|LIST] \
+                 [--hosts N] [--replicas R] [--control-hz F] \
                  [--workers N] [--shards N] [--max-batch N] [--max-wait-us U] [--json PATH]"
             );
             std::process::exit(2);

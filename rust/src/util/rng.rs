@@ -17,6 +17,23 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Deterministic, decorrelated backoff jitter shared by every retry
+/// loop in the system (fleet robot retries, router host re-dials): one
+/// splitmix-style mix of `(key, attempt)` folded into `[0, base_us/2]`.
+/// Same key and attempt → same jitter (reproducible runs); different
+/// keys or attempts → decorrelated jitter (no retry lockstep, no
+/// reconnect stampede).
+#[inline]
+pub fn backoff_jitter_us(key: u64, attempt: u32, base_us: u64) -> u64 {
+    let mut z = key
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((attempt as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z % (base_us / 2 + 1)
+}
+
 /// PCG64 XSL-RR generator. 128-bit state / 128-bit stream, 64-bit output.
 #[derive(Clone, Debug)]
 pub struct Rng {

@@ -1,0 +1,303 @@
+//! Self-healing multi-host serving: the PR-10 contract wall.
+//!
+//! Three pinned guarantees (ISSUE PR 10), each asserted at worker counts
+//! 1 and 4 so self-healing never leans on scheduling luck:
+//!
+//! 1. **Rejoin**: kill a loopback host, serve on the survivor, revive
+//!    the host on its original address — the router's reconnect
+//!    supervisor re-dials, the handshake re-arms the slot, placement
+//!    snaps variants home, and every action served before, during and
+//!    after the outage is bit-identical to a direct in-process forward.
+//! 2. **Replica failover**: with `replicas: 2`, killing a host mid-wave
+//!    loses NOTHING — every in-flight handle resolves `Ok`, re-served on
+//!    the surviving replica under the same router-minted seq, so the
+//!    action vectors equal the no-fault direct run bit-for-bit.
+//! 3. **Registry hot-swap**: the `variant-kill` drill deregisters a hot
+//!    variant mid-run; the fleet ends with the accounting invariant
+//!    intact and typed `UnknownVariant` errors only — no hangs, no
+//!    panics, and the reference variant's rows stay clean.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hbvla::coordinator::router::LocalCluster;
+use hbvla::coordinator::{
+    quantize_into_registry, ModelRegistry, PolicyServer, RouterConfig, ServeConfig, ServeRequest,
+    ServeResponse,
+};
+use hbvla::fleet::{run_fleet, Drill, FleetConfig, FleetReport};
+use hbvla::methods::traits::Component;
+use hbvla::methods::HbVla;
+use hbvla::model::{HeadKind, MiniVla, VlaConfig};
+use hbvla::sim::observe::{observe, ObsParams, Observation};
+use hbvla::sim::tasks::libero_suite;
+use hbvla::tensor::Matrix;
+use hbvla::util::rng::Rng;
+
+/// Tiny chunk-head checkpoint plus its packed 1-bit commit — the minimal
+/// two-variant menu, mirroring tests/multi_host.rs.
+fn fleet_registry() -> Arc<ModelRegistry> {
+    let mut base = MiniVla::new(VlaConfig::tiny(HeadKind::Chunk));
+    let mut rng = Rng::new(0xF1EE7);
+    let (hr, hc) = base.store.dims("head.main");
+    base.store.set("head.main", Matrix::gauss(hr, hc, 0.1, &mut rng));
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("dense", Arc::new(base.clone())).unwrap();
+    let comps = [Component::Vision, Component::Language, Component::ActionHead];
+    let rep = quantize_into_registry(
+        &registry,
+        "hbvla-packed",
+        &base,
+        &HashMap::new(),
+        &HbVla::new(),
+        &comps,
+        2,
+    )
+    .unwrap();
+    assert!(rep.packed_layers > 0, "{rep:?}");
+    registry
+}
+
+fn sample_obs(model: &MiniVla, seed: u64) -> Observation {
+    let task = &libero_suite("object")[0];
+    let mut rng = Rng::new(seed);
+    let scene = task.instantiate(&mut rng);
+    observe(&scene, task.stages[0].instr(), 100, model, &ObsParams::clean(), &mut rng)
+}
+
+fn serve_cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        ..Default::default()
+    }
+}
+
+fn assert_bit_identical(direct: &ServeResponse, routed: &ServeResponse, label: &str) {
+    assert_eq!(direct.variant_served, routed.variant_served, "{label}: variant moved");
+    assert_eq!(direct.actions.len(), routed.actions.len(), "{label}: chunk length moved");
+    for (da, ra) in direct.actions.iter().zip(&routed.actions) {
+        assert_eq!(da.len(), ra.len());
+        for (x, y) in da.iter().zip(ra) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: actions diverged");
+        }
+    }
+}
+
+/// Every submit is answered OK or lands in exactly one typed error
+/// counter — nothing silent, nothing lost (same closure as tests/fleet.rs).
+fn assert_accounting_closed(report: &FleetReport) {
+    let mut total_ok = 0;
+    for row in &report.rows {
+        assert_eq!(
+            row.submits,
+            row.responses_ok + row.admission_sheds + row.deadline_misses + row.errors,
+            "accounting leak in variant '{}': {row:?}",
+            row.variant
+        );
+        total_ok += row.responses_ok;
+    }
+    assert_eq!(total_ok, report.total_responses);
+    assert_eq!(report.rows.iter().map(|r| r.robots).sum::<usize>(), report.robots);
+}
+
+fn alternating_requests(model: &MiniVla, base_seed: u64, n: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| {
+            let v = if i % 2 == 0 { "dense" } else { "hbvla-packed" };
+            ServeRequest::new(sample_obs(model, base_seed + i as u64)).with_variant(v)
+        })
+        .collect()
+}
+
+fn wait_for_live(cluster: &LocalCluster, want: usize, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.router.live_hosts() != want && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(cluster.router.live_hosts(), want, "router never observed {what}");
+}
+
+// -------------------------------------------------------------- rejoin
+
+#[test]
+fn killed_host_rejoins_and_actions_stay_bit_identical() {
+    for workers in [1usize, 4] {
+        let registry = fleet_registry();
+        let model = registry.get("dense").unwrap();
+        let requests = alternating_requests(&model, 300, 12);
+
+        let server = PolicyServer::start(Arc::clone(&registry), serve_cfg(workers));
+        let direct: Vec<ServeResponse> =
+            requests.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
+        server.shutdown();
+
+        let cluster = LocalCluster::spawn(
+            Arc::clone(&registry),
+            serve_cfg(workers),
+            2,
+            RouterConfig::default(),
+        )
+        .unwrap();
+
+        // Phase 1: healthy cluster, both hosts serving their homes.
+        for (i, req) in requests[..4].iter().enumerate() {
+            let routed = cluster.router.submit(req.clone()).unwrap();
+            assert_bit_identical(&direct[i], &routed, &format!("workers={workers} pre-kill {i}"));
+        }
+
+        // Phase 2: kill a host; once the router notices, every variant
+        // re-homes onto the survivor and actions do not move a bit.
+        let killed = cluster.kill_host().expect("kill_host refused with 2 live hosts");
+        wait_for_live(&cluster, 1, "the host death");
+        for (i, req) in requests[4..8].iter().enumerate() {
+            let routed = cluster.router.submit(req.clone()).unwrap();
+            assert_bit_identical(
+                &direct[4 + i],
+                &routed,
+                &format!("workers={workers} during-outage {i}"),
+            );
+        }
+
+        // Phase 3: revive the host on its ORIGINAL address. The only way
+        // live_hosts returns to 2 is the reconnect supervisor re-dialing
+        // and completing the hello handshake — so waiting proves rejoin.
+        let revived = cluster.revive_host().expect("no dead slot to revive");
+        assert_eq!(revived, killed, "revive did not reuse the killed host's address");
+        wait_for_live(&cluster, 2, "the rejoin");
+        assert!(cluster.router.redials_total() >= 1, "rejoin without a recorded redial");
+        let rejoined = cluster
+            .router
+            .host_counters()
+            .into_iter()
+            .find(|c| c.redials >= 1)
+            .expect("no host slot recorded the redial");
+        assert_eq!(rejoined.addr, killed);
+        assert!(rejoined.alive);
+        assert!(rejoined.last_death_seq.is_some(), "death progress mark missing");
+        assert!(rejoined.last_rejoin_seq.is_some(), "rejoin progress mark missing");
+
+        for (i, req) in requests[8..].iter().enumerate() {
+            let routed = cluster.router.submit(req.clone()).unwrap();
+            assert_bit_identical(
+                &direct[8 + i],
+                &routed,
+                &format!("workers={workers} post-rejoin {i}"),
+            );
+        }
+        cluster.shutdown();
+    }
+}
+
+// ------------------------------------------------------------ failover
+
+#[test]
+fn replica_failover_mid_kill_loses_nothing_and_stays_bit_identical() {
+    for workers in [1usize, 4] {
+        let registry = fleet_registry();
+        let model = registry.get("dense").unwrap();
+        let requests = alternating_requests(&model, 400, 36);
+
+        let server = PolicyServer::start(Arc::clone(&registry), serve_cfg(workers));
+        let direct: Vec<ServeResponse> =
+            requests.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
+        server.shutdown();
+
+        let cluster = LocalCluster::spawn(
+            Arc::clone(&registry),
+            serve_cfg(workers),
+            2,
+            RouterConfig { replicas: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        // A whole wave in flight across both replicas, then the kill.
+        // Queue depth spreads the wave over both hosts (best_replica
+        // scores by local inflight depth), so the victim holds live work.
+        let handles: Vec<_> = requests[..32]
+            .iter()
+            .map(|req| cluster.router.submit_async(req.clone()).unwrap())
+            .collect();
+        cluster.kill_host().expect("kill_host refused with 2 live hosts");
+
+        // Zero hung handles, zero losses: requests caught on the dying
+        // host fail over to the surviving replica under the SAME seq, so
+        // every action vector equals the no-fault direct run.
+        for (i, h) in handles.into_iter().enumerate() {
+            let routed = h.wait().unwrap_or_else(|e| {
+                panic!("workers={workers} request {i} lost to the kill: {e:?}")
+            });
+            assert_bit_identical(&direct[i], &routed, &format!("workers={workers} failover {i}"));
+        }
+        assert!(
+            cluster.router.failovers_total() >= 1,
+            "a mid-wave host kill recorded no failovers (workers={workers})"
+        );
+
+        // The survivor keeps serving fresh submits after the dust settles.
+        wait_for_live(&cluster, 1, "the host death");
+        for (i, req) in requests[32..].iter().enumerate() {
+            let routed = cluster.router.submit(req.clone()).unwrap();
+            assert_bit_identical(
+                &direct[32 + i],
+                &routed,
+                &format!("workers={workers} post-failover {i}"),
+            );
+        }
+        cluster.shutdown();
+    }
+}
+
+// ------------------------------------------------------- variant-kill
+
+#[test]
+fn variant_kill_drill_ends_typed_with_accounting_intact() {
+    for workers in [1usize, 4] {
+        // Fresh registry per run: the drill really deregisters the variant.
+        let registry = fleet_registry();
+        let epoch_before = registry.epoch();
+        let server = PolicyServer::start(Arc::clone(&registry), serve_cfg(workers));
+        let cfg = FleetConfig {
+            robots: 8,
+            horizon: 12,
+            variants: vec!["dense".into(), "hbvla-packed".into()],
+            seed: 71,
+            drills: vec![Drill::VariantKill],
+            ..Default::default()
+        };
+        let report = run_fleet(&registry, &server, &cfg, &ObsParams::clean()).unwrap();
+        server.shutdown();
+
+        // The invariant the drill exists to prove: every submit landed in
+        // exactly one typed counter — no hangs, no silent losses.
+        assert_accounting_closed(&report);
+
+        let d = &report.drill_report;
+        assert_eq!(d.variant_killed.as_deref(), Some("hbvla-packed"), "{d:?}");
+        assert_eq!(d.variants_before_kill, 2, "{d:?}");
+        assert_eq!(d.variants_after_kill, 1, "{d:?}");
+        assert!(
+            registry.get("hbvla-packed").is_none(),
+            "victim still resolvable after the drill (workers={workers})"
+        );
+        assert!(
+            registry.epoch() > epoch_before,
+            "hot-swap remove did not bump the registry epoch"
+        );
+
+        // Victim robots die loudly mid-run with typed errors; the
+        // reference variant's rows stay spotless.
+        let victim = report.rows.iter().find(|r| r.variant == "hbvla-packed").unwrap();
+        assert!(victim.responses_ok > 0, "drill fired before the victim ever served: {victim:?}");
+        assert!(victim.errors >= 1, "no typed errors despite the mid-run kill: {victim:?}");
+        assert!(victim.dropped >= 1, "no robot dropped despite losing its variant: {victim:?}");
+        let dense = report.rows.iter().find(|r| r.variant == "dense").unwrap();
+        assert_eq!((dense.errors, dense.dropped), (0, 0), "{dense:?}");
+        assert!(dense.responses_ok > 0);
+
+        // In-process serving has no router: self-heal counters stay zero.
+        assert_eq!((report.router_redials, report.router_failovers), (0, 0));
+    }
+}
